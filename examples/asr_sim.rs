@@ -1,0 +1,44 @@
+//! ASR-role workload (the LibriSpeech/TED-LIUM/CV16 rows of Table 1):
+//! WER for all three verification methods plus the native-oracle backend.
+//!
+//! ```bash
+//! cargo run --release --example asr_sim -- 12
+//! ```
+
+use anyhow::Result;
+use specd::engine::Backend;
+use specd::sampling::Method;
+use specd::tables::{run_method, EvalContext};
+use specd::util::stats::rel_improvement_pct;
+use specd::workload::{make_tasks, TaskKind};
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let ctx = EvalContext::open_default(n)?;
+    let tasks = make_tasks(&ctx.corpus, TaskKind::Asr, n, 103);
+    println!("asr_sim: {n} transcription-continuation examples (WER, lower is better)\n");
+
+    let runs = [
+        ("baseline/hlo", run_method(&ctx, &tasks, Method::Baseline, Backend::Hlo, 5, false)?),
+        ("exact/hlo", run_method(&ctx, &tasks, Method::Exact, Backend::Hlo, 5, false)?),
+        ("exact/native", run_method(&ctx, &tasks, Method::Exact, Backend::Native, 5, false)?),
+        ("sigmoid/hlo", run_method(&ctx, &tasks, Method::sigmoid(-1e3, 1e3), Backend::Hlo, 5, false)?),
+    ];
+    let base_prof = runs[0].1.profiling_total;
+    println!("{:<14} {:>6} {:>12} {:>10} {:>8}", "method", "WER", "Δ%prof", "tok/step", "accept");
+    for (name, run) in &runs {
+        println!(
+            "{name:<14} {:>6.2} {:>11.1}% {:>10.2} {:>7.1}%",
+            run.metric,
+            rel_improvement_pct(base_prof, run.profiling_total),
+            run.emitted_tokens as f64 / run.steps.max(1) as f64,
+            run.acceptance_rate * 100.0,
+        );
+    }
+    assert_eq!(runs[0].1.metric, runs[1].1.metric, "exact must tie baseline");
+    println!("\nexact == baseline WER verified ✓");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Figure 3/4/5 driver: sweep pinned γ and emit CSV for per-step
+//! verification time and peak memory, measured + simulated.
+//!
+//! ```bash
+//! cargo run --release --example gamma_sweep -- 4 > results/gamma_sweep.csv
+//! ```
+
+use anyhow::Result;
+use specd::engine::Backend;
+use specd::sampling::Method;
+use specd::simulator::{peak_memory_bytes, simulate_step, DeviceProfile, SimConfig};
+use specd::tables::{run_method, EvalContext};
+use specd::workload::{make_tasks, TaskKind};
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let ctx = EvalContext::open_default(n)?;
+    let dev = DeviceProfile::by_name("a100").unwrap();
+    let tasks = make_tasks(&ctx.corpus, TaskKind::Summarize, n, 202);
+    let methods = [
+        ("baseline", Method::Baseline),
+        ("exact", Method::Exact),
+        ("sigmoid", Method::sigmoid(-1e4, 1e4)),
+    ];
+    println!(
+        "gamma,method,meas_verify_ms,meas_peak_mb,sim_step_ms_llama7b,sim_peak_gb_llama7b,accept"
+    );
+    for gamma in [1usize, 2, 3, 5, 8, 10, 15, 20] {
+        for (name, method) in methods {
+            let run = run_method(&ctx, &tasks, method, Backend::Hlo, gamma, true)?;
+            let sim_cfg = SimConfig {
+                batch: 1,
+                gamma,
+                vocab: 32_000,
+                dtype_bytes: 4,
+            };
+            let sim = simulate_step(dev, sim_cfg, method);
+            let sim_mem = peak_memory_bytes(sim_cfg, 7.0e9, 1.3e9, 2.0);
+            println!(
+                "{gamma},{name},{:.4},{:.2},{:.3},{:.3},{:.3}",
+                run.per_step_verify.mean * 1e3,
+                run.peak_mem_bytes as f64 / 1e6,
+                sim.step_time * 1e3,
+                sim_mem / 1e9,
+                run.acceptance_rate,
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifacts, build an engine, generate text
+//! with the paper's exact optimized verification, and print the
+//! speculative-decoding statistics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use specd::engine::{Backend, Engine, EngineConfig, Mode};
+use specd::runtime::Runtime;
+use specd::sampling::Method;
+use specd::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    // 1. open the artifacts directory (lazy-compiles executables via PJRT)
+    let runtime = Arc::new(Runtime::open_default()?);
+    println!(
+        "loaded manifest: vocab={} seq={} artifacts={}",
+        runtime.manifest.vocab_size,
+        runtime.manifest.seq_len,
+        runtime.manifest.entries.len()
+    );
+
+    // 2. tokenizer written by the python build
+    let tok = Tokenizer::load(&specd::artifacts_dir().join("tokenizer.json"))?;
+
+    // 3. engine with the paper's exact fused verification kernel
+    let mut engine = Engine::new(
+        runtime.clone(),
+        EngineConfig {
+            method: Method::Exact,
+            backend: Backend::Hlo,
+            mode: Mode::Speculative,
+            ..EngineConfig::default()
+        },
+    )?;
+
+    // 4. generate
+    let prompts = [
+        ("The scheduler accepts the drafted tokens", 64usize),
+        ("A worker thread verifies", 48usize),
+    ];
+    let out = engine.generate_text(&tok, &prompts, 0.5)?;
+    for ((prompt, _), (text, r)) in prompts.iter().zip(&out) {
+        println!("\nprompt : {prompt}");
+        println!("output : {text}");
+        println!(
+            "stats  : {} tokens in {} steps ({:.2} tok/step), accept {:.1}%, {:.0}ms",
+            r.token_ids.len(),
+            r.steps,
+            r.tokens_per_step(),
+            r.acceptance_rate() * 100.0,
+            r.latency * 1e3
+        );
+    }
+
+    // 5. where the time went (the paper's profiling methodology)
+    println!("\nprofile:\n{}", runtime.profiler.render());
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! End-to-end serving driver (DESIGN.md's required e2e validation).
+//!
+//! Starts the TCP server over the build-time-trained models, fires a
+//! batch of concurrent client requests at it, and reports
+//! latency/throughput — then repeats with speculation disabled
+//! (autoregressive target-only) to show the speculative speedup, and with
+//! the sigmoid method to show the paper's fastest configuration.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_demo
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use specd::engine::{Backend, Engine, EngineConfig, Mode};
+use specd::runtime::Runtime;
+use specd::sampling::Method;
+use specd::server::service::Client;
+use specd::server::{Server, ServerConfig};
+use specd::tokenizer::Tokenizer;
+use specd::util::stats::Series;
+
+const PROMPTS: &[&str] = &[
+    "The scheduler accepts the drafted tokens",
+    "A worker thread verifies a probability tile",
+    "The request router batches the next request",
+    "The profiler tracks the partial sums",
+    "The memory pool loads the logits",
+    "A streaming client emits the bonus token",
+    "The batch planner schedules the decode queue",
+    "The verification kernel reduces the residual",
+];
+const MAX_NEW: usize = 48;
+const ROUNDS: usize = 2;
+
+fn run_config(label: &str, method: Method, mode: Mode) -> Result<(f64, f64, f64)> {
+    let runtime = Arc::new(Runtime::open_default()?);
+    let tokenizer = Tokenizer::load(&specd::artifacts_dir().join("tokenizer.json"))?;
+    let engine = Engine::new(
+        runtime.clone(),
+        EngineConfig {
+            method,
+            backend: Backend::Hlo,
+            mode,
+            ..EngineConfig::default()
+        },
+    )?;
+    let server = Arc::new(Server::start(
+        engine,
+        tokenizer,
+        ServerConfig { addr: "127.0.0.1:0".into() },
+    )?);
+    let addr = server.addr().to_string();
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_forever();
+        });
+    }
+
+    let started = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for (i, prompt) in PROMPTS.iter().enumerate() {
+        let addr = addr.clone();
+        let prompt = prompt.to_string();
+        handles.push(std::thread::spawn(move || -> Result<Vec<(f64, usize)>> {
+            let mut client = Client::connect(&addr)?;
+            let mut out = Vec::new();
+            for round in 0..ROUNDS {
+                let resp = client.request((i * 10 + round) as u64, &prompt, MAX_NEW, 0.7)?;
+                anyhow::ensure!(resp.get("error").is_none(), "server error: {}", resp.dump());
+                out.push((
+                    resp.get("latency_ms").unwrap().as_f64().unwrap(),
+                    resp.get("tokens").unwrap().as_usize().unwrap(),
+                ));
+            }
+            Ok(out)
+        }));
+    }
+    let mut latency = Series::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        for (lat_ms, toks) in h.join().unwrap()? {
+            latency.push(lat_ms);
+            tokens += toks;
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let tput = tokens as f64 / wall;
+    println!(
+        "{label:<28} {:>3} reqs  p50 {:>8.1}ms  p99 {:>8.1}ms  {:>7.1} tok/s  ({} tokens in {:.2}s)",
+        latency.len(),
+        latency.percentile(50.0),
+        latency.percentile(99.0),
+        tput,
+        tokens,
+        wall
+    );
+    server.shutdown();
+    Ok((latency.percentile(50.0), latency.percentile(99.0), tput))
+}
+
+fn main() -> Result<()> {
+    println!(
+        "serve_demo: {} concurrent clients × {} rounds, {} new tokens each\n",
+        PROMPTS.len(),
+        ROUNDS,
+        MAX_NEW
+    );
+    let (_, _, tput_ar) = run_config(
+        "autoregressive (no spec)",
+        Method::Exact,
+        Mode::Autoregressive,
+    )?;
+    let (_, _, tput_base) = run_config(
+        "speculative baseline",
+        Method::Baseline,
+        Mode::Speculative,
+    )?;
+    let (_, _, tput_exact) =
+        run_config("speculative exact", Method::Exact, Mode::Speculative)?;
+    let (_, _, tput_sig) = run_config(
+        "speculative sigmoid",
+        Method::sigmoid(-1e3, 1e3),
+        Mode::Speculative,
+    )?;
+    println!(
+        "\nspeculative speedup over autoregressive: baseline {:.2}x, exact {:.2}x, sigmoid {:.2}x",
+        tput_base / tput_ar,
+        tput_exact / tput_ar,
+        tput_sig / tput_ar
+    );
+    Ok(())
+}

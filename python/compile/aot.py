@@ -1,0 +1,266 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts + manifest.json.
+
+This is the only place python touches the system. ``make artifacts`` runs
+it once; the rust coordinator (L3) then loads every executable it needs
+from ``artifacts/`` via PJRT and never calls back into python.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact family (DESIGN.md §4):
+  draft_step_<pair>_b<B>    (tokens, lens, u, temp) -> (next_tok, logits)
+  target_step_<pair>_b<B>   same, target model (plain autoregressive mode)
+  target_score_<pair>_b<B>  (tokens, lens) -> logits at last GMAX+1 positions
+  verify_<method>_b<B>_g<G>_v<V>  fused verification (see verify_graph.py)
+
+Verify graphs are model-independent (they consume logits), so the engine
+set (V = model vocab) is complemented by kernel-bench sets at the paper's
+vocabulary scale (V = 4096 / 32768) without retraining anything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as m
+from compile import train
+from compile.verify_graph import make_sample_fn, make_verify_fn
+
+GMAX = 20  # target_score always returns GMAX+1 positions; rust slices
+ENGINE_BATCHES = (1, 4)
+ENGINE_GAMMAS = tuple(range(1, GMAX + 1))
+BENCH_SPECS = (  # (V, B, gammas) at paper-scale vocabularies
+    (4096, 1, (1, 2, 3, 5, 8, 10, 15, 20)),
+    (32768, 1, (1, 2, 3, 5, 8, 10, 15, 20)),
+)
+PAIRS = {"base": ("target-base", "draft-base"),
+         "large": ("target-large", "draft-large")}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: model weights are baked into the graph; the
+    # default elides them as `constant({...})`, which the rust-side HLO
+    # parser would reject.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _iospec(avals) -> List[List]:
+    return [[str(a.dtype), list(a.shape)] for a in avals]
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out_dir = out_dir
+        self.force = force
+        self.entries: List[dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def lower(self, name: str, fn: Callable, in_specs: Sequence, meta: dict) -> None:
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        if self.force or not os.path.exists(path):
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            status = f"{len(text)/1e6:.2f}MB in {time.time()-t0:.2f}s"
+        else:
+            status = "cached"
+        entry = dict(meta)
+        entry.update(
+            name=name,
+            file=f"{name}.hlo.txt",
+            inputs=_iospec(in_specs),
+            outputs=_iospec(list(out_avals)),
+        )
+        self.entries.append(entry)
+        print(f"[aot] {name}: {status}")
+
+
+def build_model_artifacts(b: Builder, tok: train.CharTokenizer,
+                          param_paths: Dict[str, str], batches: Sequence[int],
+                          pairs: Dict[str, Tuple[str, str]]) -> None:
+    sample = make_sample_fn()
+    for pair, (tname, dname) in pairs.items():
+        tcfg, dcfg = m.PRESETS[tname], m.PRESETS[dname]
+        tparams = train.load_params(param_paths[tname], tcfg)
+        dparams = train.load_params(param_paths[dname], dcfg)
+        s, v = tcfg.max_seq, tcfg.vocab_size
+
+        for bsz in batches:
+            tok_spec = spec((bsz, s), jnp.int32)
+            len_spec = spec((bsz,), jnp.int32)
+            u_spec = spec((bsz,), jnp.float32)
+
+            def step_fn(params, cfg):
+                def fn(tokens, lens, u, temp):
+                    logits = m.next_logits(params, cfg, tokens, lens)
+                    return sample(logits, u, temp), logits
+                return fn
+
+            b.lower(
+                f"draft_step_{pair}_b{bsz}",
+                step_fn(dparams, dcfg),
+                (tok_spec, len_spec, u_spec, u_spec),
+                dict(kind="draft_step", pair=pair, b=bsz, s=s, v=v),
+            )
+            b.lower(
+                f"target_step_{pair}_b{bsz}",
+                step_fn(tparams, tcfg),
+                (tok_spec, len_spec, u_spec, u_spec),
+                dict(kind="target_step", pair=pair, b=bsz, s=s, v=v),
+            )
+
+            def score_fn(tokens, lens):
+                return (m.logits_at(tparams, tcfg, tokens, lens, GMAX + 1),)
+
+            b.lower(
+                f"target_score_{pair}_b{bsz}",
+                score_fn,
+                (tok_spec, len_spec),
+                dict(kind="target_score", pair=pair, b=bsz, s=s, v=v, gmax=GMAX),
+            )
+
+            # self-speculative drafting (§A.7): draft by running only the
+            # first half of the *target* model's layers — no separate draft
+            # network, same verification afterwards.
+            half = max(1, tcfg.n_layers // 2)
+
+            def self_step_fn(tokens, lens, u, temp, _half=half):
+                full = m.forward(tparams, tcfg, tokens, lens, num_layers=_half)
+                idx = jnp.maximum(lens - 1, 0)
+                logits = jnp.take_along_axis(full, idx[:, None, None], axis=1)[:, 0, :]
+                return sample(logits, u, temp), logits
+
+            b.lower(
+                f"draft_self_step_{pair}_b{bsz}",
+                self_step_fn,
+                (tok_spec, len_spec, u_spec, u_spec),
+                dict(kind="draft_self_step", pair=pair, b=bsz, s=s, v=v,
+                     skip_to_layers=half),
+            )
+
+
+def build_verify_artifacts(b: Builder, v: int, bsz: int,
+                           gammas: Sequence[int], tile: int = 1024,
+                           methods: Sequence[str] = ("baseline", "exact",
+                                                     "sigmoid", "sigmoid16"),
+                           name_suffix: str = "") -> None:
+    for g in gammas:
+        zp = spec((bsz, g + 1, v), jnp.float32)
+        zq = spec((bsz, g, v), jnp.float32)
+        dr = spec((bsz, g), jnp.int32)
+        ua = spec((bsz, g), jnp.float32)
+        ub = spec((bsz,), jnp.float32)
+        ab = spec((2,), jnp.float32)
+        for method in methods:
+            takes_ab = method.startswith("sigmoid")
+            fn = make_verify_fn(method, tile=tile, interpret=True)
+            ins = (zp, zq, dr, ua, ub, ub) + ((ab,) if takes_ab else ())
+            b.lower(
+                f"verify_{method}_b{bsz}_g{g}_v{v}{name_suffix}",
+                fn,
+                ins,
+                dict(kind="verify", method=method, b=bsz, g=g, v=v,
+                     tile=min(tile, v),
+                     alpha_beta_runtime=takes_ab),
+            )
+
+
+def build_all(out_dir: str, corpus: str, quick: bool = False,
+              force: bool = False, train_steps: int = 400) -> dict:
+    t0 = time.time()
+    pairs = PAIRS if not quick else {"base": PAIRS["base"]}
+    pairs_to_train = tuple(
+        (name, train_steps if not quick else 40)
+        for pair in pairs.values()
+        for name in pair
+    )
+    tok, param_paths, curves = train.ensure_trained(
+        out_dir, corpus, pairs=pairs_to_train, force=force)
+
+    b = Builder(out_dir, force=force)
+    batches = (1,) if quick else ENGINE_BATCHES
+    build_model_artifacts(b, tok, param_paths, batches, pairs)
+    vmodel = tok.vocab_size
+    gammas = (1, 2, 5) if quick else ENGINE_GAMMAS
+    for bsz in batches:
+        build_verify_artifacts(b, vmodel, bsz, gammas)
+    bench = ((4096, 1, (1, 5)),) if quick else BENCH_SPECS
+    for v, bsz, gs in bench:
+        build_verify_artifacts(b, v, bsz, gs)
+    # tile-size ablation (DESIGN §5): the paper fixes n = 1024 (max
+    # threads/block); these variants let the kernel bench compare tilings.
+    if not quick:
+        for t in (128, 256, 512):
+            build_verify_artifacts(b, 32768, 1, (5,), tile=t,
+                                   methods=("exact",), name_suffix=f"_t{t}")
+
+    manifest = {
+        "version": 1,
+        "vocab_size": tok.vocab_size,
+        "seq_len": m.PRESETS["target-base"].max_seq,
+        "gmax": GMAX,
+        "pairs": {
+            pair: {
+                "target": tname,
+                "draft": dname,
+                "target_params": m.PRESETS[tname].param_count(),
+                "draft_params": m.PRESETS[dname].param_count(),
+            }
+            for pair, (tname, dname) in pairs.items()
+        },
+        "loss_curves": curves,
+        "artifacts": b.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(b.entries)} artifacts + manifest "
+          f"in {time.time()-t0:.1f}s")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--corpus", default="../data/corpus.txt")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced artifact set for CI/tests")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=400)
+    args = ap.parse_args()
+    if not os.path.exists(args.corpus):
+        from compile import gen_corpus
+        os.makedirs(os.path.dirname(args.corpus) or ".", exist_ok=True)
+        with open(args.corpus, "w") as f:
+            f.write(gen_corpus.generate(300_000))
+        print(f"[aot] generated corpus at {args.corpus}")
+    build_all(args.out, args.corpus, quick=args.quick, force=args.force,
+              train_steps=args.train_steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the Pallas verification kernels.
+
+Untiled, straight-line implementations of the quantities in §3.1 Eqs. 1-3.
+Every Pallas kernel output is asserted against these in
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes/dtypes); the
+rust-side oracle (``rust/src/sampling``) mirrors the same math so the three
+implementations triangulate each other.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax(z: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable softmax over the last axis (Eq. 4)."""
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def sigmoid_approx(z: jnp.ndarray, alpha: float, beta: float) -> jnp.ndarray:
+    """Element-wise softmax approximation (Eq. 5)."""
+    return jax.nn.sigmoid((z - alpha) / (beta - alpha))
+
+
+def ref_verify(p: jnp.ndarray, q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for ``verify_tiles_exact``: (tau, a, b) from probabilities."""
+    safe_q = jnp.where(q > 0.0, q, 1.0)
+    tau = jnp.where(q > 0.0, jnp.minimum(1.0, p / safe_q), 1.0)
+    a = jnp.maximum(p - q, 0.0)
+    b = jnp.sum(a, axis=-1)
+    return tau, a, b
+
+
+def ref_verify_sigmoid(
+    z_p: jnp.ndarray, z_q: jnp.ndarray, alpha: float, beta: float
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for ``verify_tiles_sigmoid``: same math on approximated probs."""
+    return ref_verify(sigmoid_approx(z_p, alpha, beta), sigmoid_approx(z_q, alpha, beta))
+
+
+def inverse_cdf_sample(weights: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Draw from an *unnormalised* weight vector by inverse CDF.
+
+    weights: (..., V) non-negative; u: (...) uniforms in [0, 1).
+    Returns i32 (...) token ids. Avoids the paper's step-3 division
+    entirely: the threshold is u * sum(weights) on the raw cumulative sum.
+    Zero-mass rows fall back to argmax(weights) (== 0 for all-zero rows).
+    """
+    cdf = jnp.cumsum(weights, axis=-1)
+    total = cdf[..., -1]
+    thresh = u * total
+    tok = jnp.sum((cdf <= thresh[..., None]).astype(jnp.int32), axis=-1)
+    tok = jnp.minimum(tok, weights.shape[-1] - 1)
+    return jnp.where(total > 0.0, tok, jnp.argmax(weights, axis=-1).astype(jnp.int32))

@@ -1,0 +1,185 @@
+"""L1: Pallas kernels for fused speculative-sampling verification.
+
+Implements the paper's two kernels (§3.2):
+
+* ``verify_tiles_exact``  — Fig. 1: inputs are the *probability* matrices
+  p, q of shape (B, G, V). The vocabulary axis is partitioned into K =
+  ceil(V/n) tiles; each grid step (b, g, k) stages one (1, 1, n) tile of p
+  and q into VMEM (the TPU analogue of the paper's SRAM staging), computes
+  the element-wise intermediates
+
+      tau(x) = min(1, p(x)/q(x))        (Eq. 1, over the whole tile)
+      f(x)   = p(x) - q(x)              (Eq. 2)
+      a(x)   = max(0, f(x))             (Eq. 3 numerator)
+
+  and the per-tile partial reduction b_k = sum_x a(x) (Eq. 3 denominator),
+  writing tau, a back to HBM and b_k to a (B, G, K) partial-sum output.
+  The cross-tile aggregation of b and the final division/resampling happen
+  outside the kernel, exactly as in the paper's step 3.
+
+* ``verify_tiles_sigmoid`` — Fig. 2: inputs are the raw *logits* z_p, z_q;
+  the kernel additionally applies the element-wise softmax approximation
+
+      p_hat(x) = sigmoid((z_p(x) - alpha) / (beta - alpha))     (Eq. 5)
+
+  fused with the same tau/f/a/b_k computation, removing softmax's global
+  max/sum reductions from the pipeline. alpha/beta arrive as a (2,)
+  runtime parameter vector so one compiled artifact serves the whole
+  Table 2 scaling sweep.
+
+Hardware adaptation (DESIGN.md §2): the CUDA thread-block over a 1024-wide
+vocabulary slice becomes a Pallas ``BlockSpec`` block of n=1024 on the
+vocab axis; HBM→SRAM staging becomes the implicit HBM→VMEM copy of the
+block; the intra-block parallel reduction (Harris 2007) becomes a vector
+``jnp.sum`` over the VMEM-resident tile. Kernels are lowered with
+``interpret=True`` — CPU PJRT cannot execute Mosaic custom-calls — so the
+tiling is validated structurally + numerically here and costed for real
+hardware by ``rust/src/simulator``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 1024  # = paper's n: max threads/block on A100
+
+
+def _pad_vocab(x: jnp.ndarray, tile: int) -> jnp.ndarray:
+    v = x.shape[-1]
+    k = -(-v // tile)
+    pad = k * tile - v
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def _exact_kernel(p_ref, q_ref, tau_ref, a_ref, bk_ref):
+    """One (b, g, k) grid step over a (1, 1, n) vocab tile (steps 1-3, Fig 1)."""
+    p = p_ref[...]
+    q = q_ref[...]
+    # tau = min(1, p/q); tokens with q == 0 can never be drafted, so their
+    # ratio is defined as 1 (always-accept) to keep the tile NaN-free.
+    safe_q = jnp.where(q > 0.0, q, 1.0)
+    tau = jnp.where(q > 0.0, jnp.minimum(1.0, p / safe_q), 1.0)
+    f = p - q
+    a = jnp.maximum(f, 0.0)
+    tau_ref[...] = tau
+    a_ref[...] = a
+    # per-tile partial reduction (paper's b_k, computed in SRAM/VMEM)
+    bk_ref[...] = jnp.sum(a, axis=-1, keepdims=True)
+
+
+def _sigmoid_kernel(params_ref, zp_ref, zq_ref, tau_ref, a_ref, bk_ref):
+    """Fig. 2 variant: fuse the sigmoid softmax-approximation into the tile."""
+    alpha = params_ref[0]
+    beta = params_ref[1]
+    inv = 1.0 / (beta - alpha)
+    p = jax.nn.sigmoid((zp_ref[...] - alpha) * inv)
+    q = jax.nn.sigmoid((zq_ref[...] - alpha) * inv)
+    # sigmoid output is (0, 1) but can underflow to 0 in f32 — same guard.
+    safe_q = jnp.where(q > 0.0, q, 1.0)
+    tau = jnp.where(q > 0.0, jnp.minimum(1.0, p / safe_q), 1.0)
+    f = p - q
+    a = jnp.maximum(f, 0.0)
+    tau_ref[...] = tau
+    a_ref[...] = a
+    bk_ref[...] = jnp.sum(a, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def verify_tiles_exact(
+    p: jnp.ndarray,
+    q: jnp.ndarray,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused exact verification tiles.
+
+    p, q: f32 (B, G, V) probability matrices.
+    Returns (tau (B,G,V), a (B,G,V), b (B,G)) with b already aggregated
+    across tiles (the paper's step-3 HBM aggregation — a K-length sum).
+    """
+    assert p.shape == q.shape and p.ndim == 3
+    b_, g_, v = p.shape
+    n = min(tile, v)
+    pp, qp = _pad_vocab(p, n), _pad_vocab(q, n)
+    k = pp.shape[-1] // n
+    # Perf iteration 1 (EXPERIMENTS.md §Perf): one grid step per (batch,
+    # vocab-tile) processing ALL γ rows — a (1, γ, n) VMEM block instead of
+    # (1, 1, n). On TPU this is the natural (sublane, lane) = (γ, n) tile;
+    # under interpret-mode CPU lowering it cuts the per-grid-step
+    # dynamic-update-slice traffic by γ× (measured 60ms → 12ms at γ=5,
+    # V=32768). γ ≤ 20 keeps the block ≤ 21·1024·4B ≈ 86KiB of VMEM.
+    grid = (b_, k)
+    vec_spec = pl.BlockSpec((1, g_, n), lambda i, t: (i, 0, t))
+    bk_spec = pl.BlockSpec((1, g_, 1), lambda i, t: (i, 0, t))
+    tau, a, bk = pl.pallas_call(
+        _exact_kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec],
+        out_specs=[vec_spec, vec_spec, bk_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(pp.shape, pp.dtype),
+            jax.ShapeDtypeStruct(pp.shape, pp.dtype),
+            jax.ShapeDtypeStruct((b_, g_, k), pp.dtype),
+        ],
+        interpret=interpret,
+    )(pp, qp)
+    return tau[..., :v], a[..., :v], jnp.sum(bk, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def verify_tiles_sigmoid(
+    z_p: jnp.ndarray,
+    z_q: jnp.ndarray,
+    alpha_beta: jnp.ndarray,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused sigmoid-approximated verification tiles.
+
+    z_p, z_q: f32 (B, G, V) *logit* matrices; alpha_beta: f32 (2,) = (α, β).
+    Returns (tau_hat, a_hat, b_hat) analogous to ``verify_tiles_exact``.
+    Padding lanes are benign: sigmoid(pad 0) is equal for p/q, so a = 0 and
+    the padded lanes contribute nothing to b; they are sliced off anyway.
+    """
+    assert z_p.shape == z_q.shape and z_p.ndim == 3
+    b_, g_, v = z_p.shape
+    n = min(tile, v)
+    zpp, zqp = _pad_vocab(z_p, n), _pad_vocab(z_q, n)
+    k = zpp.shape[-1] // n
+    # same (1, γ, n) blocking as the exact kernel (perf iteration 1)
+    grid = (b_, k)
+    par_spec = pl.BlockSpec((2,), lambda i, t: (0,))
+    vec_spec = pl.BlockSpec((1, g_, n), lambda i, t: (i, 0, t))
+    bk_spec = pl.BlockSpec((1, g_, 1), lambda i, t: (i, 0, t))
+    tau, a, bk = pl.pallas_call(
+        _sigmoid_kernel,
+        grid=grid,
+        in_specs=[par_spec, vec_spec, vec_spec],
+        out_specs=[vec_spec, vec_spec, bk_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(zpp.shape, zpp.dtype),
+            jax.ShapeDtypeStruct(zpp.shape, zpp.dtype),
+            jax.ShapeDtypeStruct((b_, g_, k), zpp.dtype),
+        ],
+        interpret=interpret,
+    )(alpha_beta.astype(z_p.dtype), zpp, zqp)
+    return tau[..., :v], a[..., :v], jnp.sum(bk, axis=-1)
+
+
+def vmem_bytes(gamma: int, tile: int = DEFAULT_TILE, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (perf model, DESIGN §7).
+
+    Since perf iteration 1 a grid step holds (1, γ, n) tiles: two inputs,
+    two outputs, plus the (γ, 1) partial sums. Grows linearly in γ but at
+    γ=20, n=1024, f32 stays ≈ 82KiB×4 ≈ well inside one SM/SMEM budget of
+    192KiB when counted against the paper's fp16 tiles (γ·n·2B·4 ≈ 164KiB)
+    — the same occupancy argument as the paper's n = 1024 choice.
+    """
+    return (2 + 2) * gamma * tile * dtype_bytes + gamma * dtype_bytes

@@ -1,0 +1,177 @@
+"""L2: char-level transformer LMs (draft + target) in pure JAX.
+
+Substitutes for the paper's Whisper/Llama2/Qwen/Gemma pairs (see
+DESIGN.md §3): speculative sampling only consumes target/draft logits, so
+two decoder-only transformers of different depth/width trained on the same
+corpus reproduce the acceptance dynamics that drive the paper's numbers.
+
+Pure-function style (params are pytrees of jnp arrays) so `aot.py` can
+close over trained params and bake them into the lowered HLO as constants.
+Architecture follows the Llama2 recipe scaled down: RMSNorm pre-norm,
+SwiGLU MLP, learned absolute positions (RoPE is overkill at S=256).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 128
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 256
+    dtype: str = "float32"
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (checked by tests against the pytree)."""
+        c = self
+        emb = c.vocab_size * c.d_model + c.max_seq * c.d_model
+        attn = 4 * c.d_model * c.d_model
+        mlp = 3 * c.d_model * c.d_ff
+        norms = 2 * c.d_model
+        head = c.d_model * c.vocab_size + c.d_model  # lm head + final norm
+        return emb + c.n_layers * (attn + mlp + norms) + head
+
+
+# Preset pairs mirroring the paper's draft/target families (scaled down).
+# Names echo the roles in Table 1; sizes keep build-time training cheap.
+PRESETS: Dict[str, ModelConfig] = {
+    # "whisper-small.en"-role target / "distil-small.en"-role draft (ASR task)
+    "target-base": ModelConfig(d_model=128, n_layers=4, n_heads=4, d_ff=512),
+    "draft-base": ModelConfig(d_model=64, n_layers=2, n_heads=2, d_ff=256),
+    # larger pair ("large-v2" / "distil-large-v2"-role) for the second row group
+    "target-large": ModelConfig(d_model=192, n_layers=6, n_heads=6, d_ff=768),
+    "draft-large": ModelConfig(d_model=96, n_layers=3, n_heads=3, d_ff=384),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict:
+    """Initialise a parameter pytree (numpy RNG: reproducible, cheap)."""
+    rng = np.random.RandomState(seed)
+    dt = np.float32
+
+    def dense(shape, scale=None):
+        fan_in = shape[0]
+        scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        return jnp.asarray(rng.normal(0.0, scale, size=shape).astype(dt))
+
+    params = {
+        "tok_emb": dense((cfg.vocab_size, cfg.d_model), scale=0.02),
+        "pos_emb": dense((cfg.max_seq, cfg.d_model), scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense((cfg.d_model, cfg.vocab_size)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((cfg.d_model,), dt),
+                "wq": dense((cfg.d_model, cfg.d_model)),
+                "wk": dense((cfg.d_model, cfg.d_model)),
+                "wv": dense((cfg.d_model, cfg.d_model)),
+                "wo": dense((cfg.d_model, cfg.d_model)),
+                "mlp_norm": jnp.ones((cfg.d_model,), dt),
+                "w_gate": dense((cfg.d_model, cfg.d_ff)),
+                "w_up": dense((cfg.d_model, cfg.d_ff)),
+                "w_down": dense((cfg.d_ff, cfg.d_model)),
+            }
+        )
+    return params
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def attention(layer: dict, x: jnp.ndarray, cfg: ModelConfig,
+              pad_mask: jnp.ndarray) -> jnp.ndarray:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ layer["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ layer["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ layer["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)  # (b,h,s,s)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    mask = causal[None, None, :, :] & pad_mask[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ layer["wo"]
+
+
+def mlp(layer: dict, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(x @ layer["w_gate"])
+    return (gate * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            lens: jnp.ndarray, num_layers: int | None = None) -> jnp.ndarray:
+    """Full-sequence forward.
+
+    tokens: i32 (B, S) — padded with 0 beyond lens[b].
+    lens:   i32 (B,)   — valid prefix length per row.
+    num_layers: run only the first k transformer blocks (still through the
+    final norm + lm head) — the layer-skipping used by self-speculative
+    drafting (Zhang et al. 2024, cited in the paper's §A.7).
+    returns logits f32 (B, S, V); positions >= lens are garbage (masked
+    attention keeps positions < lens causal + pad-invariant).
+    """
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    pad_mask = positions[None, :] < lens[:, None]  # (B, S) keys validity
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions][None, :, :]
+    layers = params["layers"] if num_layers is None else params["layers"][:num_layers]
+    for layer in layers:
+        x = x + attention(layer, rms_norm(x, layer["attn_norm"]), cfg, pad_mask)
+        x = x + mlp(layer, rms_norm(x, layer["mlp_norm"]))
+    x = rms_norm(x, params["final_norm"])
+    return x @ params["lm_head"]
+
+
+def logits_at(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+              lens: jnp.ndarray, last_k: int) -> jnp.ndarray:
+    """Logits at the last `last_k` valid positions: (B, last_k, V).
+
+    Row b, slot j holds the logits at sequence position lens[b]-last_k+j —
+    i.e. the distribution for the token at position lens[b]-last_k+j+1.
+    Slots that would index before position 0 are clamped (callers only read
+    slots that exist).
+    """
+    full = forward(params, cfg, tokens, lens)  # (B, S, V)
+    b = tokens.shape[0]
+    offs = jnp.arange(last_k) - last_k  # [-k .. -1]
+    idx = jnp.maximum(lens[:, None] + offs[None, :], 0)  # (B, k)
+    return jnp.take_along_axis(full, idx[:, :, None], axis=1)
+
+
+def next_logits(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                lens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token logits at the end of each row's prefix: (B, V)."""
+    return logits_at(params, cfg, tokens, lens, 1)[:, 0, :]
+
+
+def loss_fn(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            lens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-char cross entropy over valid positions."""
+    logits = forward(params, cfg, tokens, lens)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, :, None], axis=-1)[:, :, 0]
+    valid = (jnp.arange(tokens.shape[1] - 1)[None, :] + 1) < lens[:, None]
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)

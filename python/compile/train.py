@@ -1,0 +1,249 @@
+"""Build-time training of the draft/target LM pairs.
+
+Runs once inside ``make artifacts`` (never on the request path): trains the
+preset model pairs from ``model.PRESETS`` on ``data/corpus.txt`` with a
+hand-rolled Adam (optax is not available in the build image) and caches the
+resulting parameter pytrees as .npz files keyed by a config+corpus hash.
+
+The point is not SOTA modelling — it is that draft and target fit the same
+distribution so the serving engine operates in the paper's 45-60%
+acceptance regime (Table 8). A few hundred steps on the synthetic corpus
+reach per-char perplexity < 3, which is plenty.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as m
+
+
+# ---------------------------------------------------------------------------
+# tokenizer
+
+
+class CharTokenizer:
+    """Char-level tokenizer with pad/bos/eos specials.
+
+    The vocab is padded to `pad_to` entries so the verify kernels see a
+    multi-of-128 vocabulary (and the rust tokenizer loads the same table
+    from artifacts/tokenizer.json).
+    """
+
+    PAD, BOS, EOS = 0, 1, 2
+
+    def __init__(self, chars: List[str], pad_to: int = 128):
+        self.chars = chars
+        self.stoi = {c: i + 3 for i, c in enumerate(chars)}
+        self.vocab_size = max(pad_to, len(chars) + 3)
+
+    @classmethod
+    def from_text(cls, text: str, pad_to: int = 128) -> "CharTokenizer":
+        return cls(sorted(set(text)), pad_to=pad_to)
+
+    def encode(self, s: str) -> List[int]:
+        # unknown chars map to pad (never produced by the generator)
+        return [self.stoi.get(c, self.PAD) for c in s]
+
+    def decode(self, ids) -> str:
+        inv = {v: k for k, v in self.stoi.items()}
+        return "".join(inv.get(int(i), "") for i in ids)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(
+                {
+                    "type": "char",
+                    "vocab_size": self.vocab_size,
+                    "specials": {"pad": self.PAD, "bos": self.BOS, "eos": self.EOS},
+                    "chars": self.chars,
+                },
+                f,
+            )
+
+
+# ---------------------------------------------------------------------------
+# data
+
+
+def batches(text_ids: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.RandomState(seed)
+    n = len(text_ids) - seq - 1
+    for _ in range(steps):
+        starts = rng.randint(0, n, size=batch)
+        yield np.stack([text_ids[s : s + seq] for s in starts]).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled Adam
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mi, vi: p - lr * (mi * mhat_scale) / (jnp.sqrt(vi * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# param (de)serialisation — flat npz with path-encoded keys
+
+
+def flatten_params(params, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            out.update(flatten_params(v, f"{prefix}{k}/"))
+    elif isinstance(params, list):
+        for i, v in enumerate(params):
+            out.update(flatten_params(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(params)
+    return out
+
+
+def save_params(path: str, params) -> None:
+    np.savez(path, **flatten_params(params))
+
+
+def load_params(path: str, cfg: m.ModelConfig):
+    """Rebuild the pytree in the shape init_params produces."""
+    flat = dict(np.load(path))
+    params = {
+        "tok_emb": jnp.asarray(flat["tok_emb"]),
+        "pos_emb": jnp.asarray(flat["pos_emb"]),
+        "final_norm": jnp.asarray(flat["final_norm"]),
+        "lm_head": jnp.asarray(flat["lm_head"]),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        layer = {}
+        for name in (
+            "attn_norm wq wk wv wo mlp_norm w_gate w_up w_down".split()
+        ):
+            layer[name] = jnp.asarray(flat[f"layers/{i}/{name}"])
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# training loop
+
+
+def corpus_hash(text: str, cfg: m.ModelConfig, steps: int, seed: int) -> str:
+    h = hashlib.sha256()
+    h.update(text.encode())
+    h.update(repr((cfg, steps, seed)).encode())
+    return h.hexdigest()[:16]
+
+
+def train_model(
+    name: str,
+    cfg: m.ModelConfig,
+    text_ids: np.ndarray,
+    steps: int,
+    seed: int,
+    batch: int = 32,
+    seq: int = 128,
+    lr: float = 2e-3,
+    log_every: int = 50,
+) -> Tuple[dict, List[float]]:
+    params = m.init_params(cfg, seed)
+    state = adam_init(params)
+    lens = jnp.full((batch,), seq, jnp.int32)
+
+    @jax.jit
+    def step(params, state, toks):
+        loss, grads = jax.value_and_grad(m.loss_fn)(params, cfg, toks, lens)
+        params, state = adam_update(params, grads, state, lr=lr)
+        return params, state, loss
+
+    losses = []
+    t0 = time.time()
+    for i, toks in enumerate(batches(text_ids, batch, seq, steps, seed + 1)):
+        params, state, loss = step(params, state, jnp.asarray(toks))
+        if i % log_every == 0 or i == steps - 1:
+            l = float(loss)
+            losses.append(l)
+            print(f"[train {name}] step {i:4d}/{steps} loss {l:.4f} "
+                  f"({time.time()-t0:.1f}s)")
+    return params, losses
+
+
+def ensure_trained(
+    out_dir: str,
+    corpus_path: str,
+    pairs=(("target-base", 400), ("draft-base", 400),
+           ("target-large", 400), ("draft-large", 400)),
+    seed: int = 11,
+    force: bool = False,
+) -> Tuple[CharTokenizer, Dict[str, str], Dict[str, List[float]]]:
+    """Train (or load cached) all preset models. Returns tokenizer + paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    with open(corpus_path) as f:
+        text = f.read()
+    tok = CharTokenizer.from_text(text)
+    tok.save(os.path.join(out_dir, "tokenizer.json"))
+    ids = np.asarray(tok.encode(text), dtype=np.int32)
+
+    paths, curves = {}, {}
+    for name, steps in pairs:
+        cfg = m.PRESETS[name]
+        assert cfg.vocab_size == tok.vocab_size, (
+            f"{name}: preset vocab {cfg.vocab_size} != tokenizer {tok.vocab_size}"
+        )
+        tag = corpus_hash(text, cfg, steps, seed)
+        path = os.path.join(out_dir, f"params_{name}.npz")
+        meta = os.path.join(out_dir, f"params_{name}.json")
+        if not force and os.path.exists(path) and os.path.exists(meta):
+            with open(meta) as f:
+                if json.load(f).get("hash") == tag:
+                    print(f"[train] cache hit for {name}")
+                    paths[name] = path
+                    continue
+        params, losses = train_model(name, cfg, ids, steps, seed)
+        save_params(path, params)
+        with open(meta, "w") as f:
+            json.dump({"hash": tag, "loss_curve": losses,
+                       "param_count": cfg.param_count()}, f)
+        paths[name] = path
+        curves[name] = losses
+    return tok, paths, curves
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--corpus", default="../data/corpus.txt")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    pairs = tuple((n, args.steps) for n in
+                  ("target-base", "draft-base", "target-large", "draft-large"))
+    ensure_trained(args.out, args.corpus, pairs=pairs, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""L2: full speculative-sampling verification graphs.
+
+One fused graph per (method, B, G, V): takes target/draft logits, the
+drafted tokens, and externally-supplied uniforms (the rust coordinator owns
+the RNG — PCG64 — so the whole stack is deterministic given a seed) and
+returns the accepted length plus the emitted tokens, i.e. everything the
+L3 hot path needs from one PJRT call.
+
+Methods (§3.2):
+  baseline — unfused reference mirroring the HF transformers implementation:
+             full softmax on both logit tensors, gather, ratio, residual,
+             normalised resampling. No Pallas.
+  exact    — softmax (still required: the kernel consumes probabilities,
+             like the paper's precomputed p/q inputs) + the fused Pallas
+             tile kernel for tau/a/b. Bit-identical outputs to baseline.
+  sigmoid  — the fused Pallas sigmoid-approximation kernel on raw logits;
+             softmax never happens. alpha/beta are runtime inputs.
+
+Verification semantics (shared tail, Eq. 1-3):
+  accept_c   = u_acc[:, c] <= tau_c(draft_c)            c = 0..G-1
+  accept_len = length of the leading run of accepts
+  on first rejection at position r: emit x ~ max_norm(p_r - q_r) via
+  inverse CDF with u_res (no division: threshold u*b on the raw cumsum)
+  on all-accept: emit a bonus token x ~ p_G via inverse CDF with u_bonus
+  out_tokens[:, :accept_len] = draft tokens, out_tokens[:, accept_len] =
+  resampled/bonus token, remaining slots = -1.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.spec_verify import (
+    DEFAULT_TILE,
+    verify_tiles_exact,
+    verify_tiles_sigmoid,
+)
+
+METHODS = ("baseline", "exact", "sigmoid", "sigmoid16")
+
+
+def _finish(tau_full, a, b, bonus_weights, draft, u_acc, u_res, u_bonus):
+    """Shared acceptance/resample/bonus tail.
+
+    tau_full: (B, G, V); a: (B, G, V); b: (B, G); bonus_weights: (B, V)
+    draft: i32 (B, G); u_*: f32 uniforms.
+    """
+    bsz, g = draft.shape
+    tau_sel = jnp.take_along_axis(tau_full, draft[:, :, None], axis=-1)[:, :, 0]
+    accept = (u_acc <= tau_sel).astype(jnp.int32)  # (B, G)
+    run = jnp.cumprod(accept, axis=1)
+    accept_len = jnp.sum(run, axis=1)  # (B,)
+
+    # Residual resampling at the first rejected position (clamped: unused
+    # when all tokens were accepted). Gather one row, then a single cumsum —
+    # cheaper than the naive all-positions CDF (see DESIGN.md §9 item 2).
+    rej = jnp.minimum(accept_len, g - 1)
+    a_rej = jnp.take_along_axis(a, rej[:, None, None], axis=1)[:, 0, :]  # (B,V)
+    res_tok = ref.inverse_cdf_sample(a_rej, u_res)
+
+    bonus_tok = ref.inverse_cdf_sample(bonus_weights, u_bonus)
+    next_tok = jnp.where(accept_len == g, bonus_tok, res_tok).astype(jnp.int32)
+
+    idx = jnp.arange(g + 1)[None, :]  # (1, G+1)
+    draft_pad = jnp.concatenate([draft, jnp.zeros((bsz, 1), jnp.int32)], axis=1)
+    out = jnp.where(idx < accept_len[:, None], draft_pad, -1)
+    out = jnp.where(idx == accept_len[:, None], next_tok[:, None], out)
+    return accept_len.astype(jnp.int32), out.astype(jnp.int32), tau_sel
+
+
+def make_verify_fn(
+    method: str,
+    tile: int = DEFAULT_TILE,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> Callable:
+    """Build the verification graph for `method`.
+
+    Returned signature (sigmoid takes a trailing (2,) alpha_beta input):
+      fn(z_p (B,G+1,V), z_q (B,G,V), draft i32(B,G),
+         u_acc (B,G), u_res (B,), u_bonus (B,) [, alpha_beta (2,)])
+        -> (accept_len i32(B,), out_tokens i32(B,G+1), tau_sel f32(B,G))
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+
+    if method == "baseline":
+
+        def fn(z_p, z_q, draft, u_acc, u_res, u_bonus):
+            # Unfused: two full stable softmaxes (each a max + a sum
+            # reduction over V), then the straight-line Eq. 1-3 math.
+            p = ref.softmax(z_p)  # (B, G+1, V)
+            q = ref.softmax(z_q)  # (B, G, V)
+            tau, a, b = ref.ref_verify(p[:, :-1, :], q)
+            return _finish(tau, a, b, p[:, -1, :], draft, u_acc, u_res, u_bonus)
+
+        return fn
+
+    if method == "exact":
+
+        def fn(z_p, z_q, draft, u_acc, u_res, u_bonus):
+            p = ref.softmax(z_p)
+            q = ref.softmax(z_q)
+            if use_pallas:
+                tau, a, b = verify_tiles_exact(
+                    p[:, :-1, :], q, tile=tile, interpret=interpret
+                )
+            else:
+                tau, a, b = ref.ref_verify(p[:, :-1, :], q)
+            return _finish(tau, a, b, p[:, -1, :], draft, u_acc, u_res, u_bonus)
+
+        return fn
+
+    if method == "sigmoid":
+
+        def fn(z_p, z_q, draft, u_acc, u_res, u_bonus, alpha_beta):
+            if use_pallas:
+                tau, a, b = verify_tiles_sigmoid(
+                    z_p[:, :-1, :], z_q, alpha_beta, tile=tile, interpret=interpret
+                )
+            else:
+                tau, a, b = ref.ref_verify_sigmoid(
+                    z_p[:, :-1, :], z_q, alpha_beta[0], alpha_beta[1]
+                )
+            # Bonus row: same element-wise approximation, fused by XLA.
+            inv = 1.0 / (alpha_beta[1] - alpha_beta[0])
+            bonus = jax.nn.sigmoid((z_p[:, -1, :] - alpha_beta[0]) * inv)
+            return _finish(tau, a, b, bonus, draft, u_acc, u_res, u_bonus)
+
+        return fn
+
+    # "sigmoid16": the paper's actual numeric regime — Whisper logits are
+    # fp16, and the (z - α)/(β - α) rescaling is performed in half
+    # precision. At |α| = |β| = 1e5 the subtraction overflows fp16
+    # (max 65504) to inf, the division yields inf/inf = NaN, every
+    # acceptance test fails and resampling draws from a NaN residual —
+    # reproducing Table 2's WER-29.34 / −10826% catastrophic row, which
+    # pure-f32 arithmetic cannot show.
+    def fn(z_p, z_q, draft, u_acc, u_res, u_bonus, alpha_beta):
+        def approx(z):
+            ab16 = alpha_beta.astype(jnp.float16)
+            z16 = z.astype(jnp.float16)
+            scaled = (z16 - ab16[0]) / (ab16[1] - ab16[0])  # fp16 math
+            return jax.nn.sigmoid(scaled.astype(jnp.float32))
+
+        p = approx(z_p)
+        q = approx(z_q)
+        # unguarded ratio, as the torch implementation computes it: when the
+        # fp16 rescale produced NaN the ratio stays NaN, u <= NaN is false,
+        # and every draft is rejected — the paper's observed failure mode.
+        tau = jnp.minimum(1.0, p[:, :-1, :] / q)
+        a = jnp.maximum(p[:, :-1, :] - q, 0.0)
+        b = jnp.sum(a, axis=-1)
+        return _finish(tau, a, b, p[:, -1, :], draft, u_acc, u_res, u_bonus)
+
+    return fn
+
+
+def make_sample_fn() -> Callable:
+    """Categorical draw from logits with temperature, inverse-CDF style.
+
+    fn(logits (B,V), u (B,), temp (B,)) -> token i32 (B,)
+    temp <= 0 selects greedy argmax (used by the engine's greedy mode and
+    by the draft model when a request asks for deterministic drafting).
+    """
+
+    def fn(logits, u, temp):
+        safe_t = jnp.where(temp > 0.0, temp, 1.0)
+        p = ref.softmax(logits / safe_t[:, None])
+        sampled = ref.inverse_cdf_sample(p, u)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.where(temp > 0.0, sampled, greedy)
+
+    return fn

@@ -1,0 +1,98 @@
+"""AOT pipeline: lowering produces loadable, self-contained HLO text."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as m
+from compile.verify_graph import make_verify_fn
+
+
+def test_hlo_text_has_entry_and_no_elided_constants():
+    fn = make_verify_fn("exact")
+    v, g = 64, 2
+    ins = (aot.spec((1, g + 1, v), jnp.float32), aot.spec((1, g, v), jnp.float32),
+           aot.spec((1, g), jnp.int32), aot.spec((1, g), jnp.float32),
+           aot.spec((1,), jnp.float32), aot.spec((1,), jnp.float32))
+    text = aot.to_hlo_text(jax.jit(fn).lower(*ins))
+    assert "ENTRY" in text
+    assert "constant({...})" not in text  # print_large_constants=True
+    assert "custom-call" not in text      # interpret-mode pallas only
+
+
+def test_model_artifact_includes_weights():
+    cfg = m.ModelConfig(vocab_size=32, d_model=16, n_layers=1, n_heads=2,
+                        d_ff=32, max_seq=16)
+    params = m.init_params(cfg, seed=0)
+
+    def fn(tokens, lens):
+        return (m.next_logits(params, cfg, tokens, lens),)
+
+    text = aot.to_hlo_text(jax.jit(fn).lower(
+        aot.spec((1, 16), jnp.int32), aot.spec((1,), jnp.int32)))
+    # weights are baked in: text must be large relative to the op count
+    assert "constant({...})" not in text
+    assert len(text) > 20_000
+    # exactly the two runtime parameters in the ENTRY computation
+    entry = text[text.index("ENTRY"):]
+    entry_block = entry[:entry.index("\n}")]
+    n_params = sum(1 for line in entry_block.splitlines()
+                   if " parameter(" in line)
+    assert n_params == 2, entry_block[:500]
+
+
+def test_builder_writes_manifest_entry(tmp_path):
+    b = aot.Builder(str(tmp_path))
+    fn = make_verify_fn("baseline")
+    v, g = 16, 1
+    ins = (aot.spec((1, g + 1, v), jnp.float32), aot.spec((1, g, v), jnp.float32),
+           aot.spec((1, g), jnp.int32), aot.spec((1, g), jnp.float32),
+           aot.spec((1,), jnp.float32), aot.spec((1,), jnp.float32))
+    b.lower("verify_test", fn, ins, dict(kind="verify", method="baseline",
+                                         b=1, g=g, v=v))
+    assert (tmp_path / "verify_test.hlo.txt").exists()
+    e = b.entries[0]
+    assert e["inputs"][0] == ["float32", [1, 2, 16]]
+    assert e["outputs"][0] == ["int32", [1]]
+    assert e["outputs"][1] == ["int32", [1, 2]]
+
+
+def test_builder_cache_hit(tmp_path):
+    b = aot.Builder(str(tmp_path))
+    fn = make_verify_fn("baseline")
+    v, g = 16, 1
+    ins = (aot.spec((1, g + 1, v), jnp.float32), aot.spec((1, g, v), jnp.float32),
+           aot.spec((1, g), jnp.int32), aot.spec((1, g), jnp.float32),
+           aot.spec((1,), jnp.float32), aot.spec((1,), jnp.float32))
+    b.lower("verify_test", fn, ins, dict(kind="verify"))
+    mtime = os.path.getmtime(tmp_path / "verify_test.hlo.txt")
+    b.lower("verify_test", fn, ins, dict(kind="verify"))  # cached: no rewrite
+    assert os.path.getmtime(tmp_path / "verify_test.hlo.txt") == mtime
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first")
+def test_existing_manifest_schema():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    man = json.load(open(path))
+    assert man["version"] == 1
+    assert man["vocab_size"] >= 128
+    kinds = {e["kind"] for e in man["artifacts"]}
+    assert {"draft_step", "target_step", "target_score", "verify"} <= kinds
+    for e in man["artifacts"]:
+        f = os.path.join(os.path.dirname(path), e["file"])
+        assert os.path.exists(f), e["name"]
+        assert e["inputs"] and e["outputs"]
+        if e["kind"] == "verify":
+            assert e["method"] in ("baseline", "exact", "sigmoid", "sigmoid16")
+            # sigmoid variants carry the runtime (alpha, beta) input
+            n_in = len(e["inputs"])
+            expect = 7 if e["method"].startswith("sigmoid") else 6
+            assert n_in == expect, e["name"]

@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas verification kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including vocab sizes that don't divide the tile,
+single-tile and multi-tile grids) and logit scales; every kernel output is
+compared against ``ref.py``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spec_verify import (
+    verify_tiles_exact,
+    verify_tiles_sigmoid,
+    vmem_bytes,
+)
+
+
+def rand_probs(rng, b, g, v, scale=3.0):
+    z = rng.randn(b, g, v).astype(np.float32) * scale
+    return np.asarray(ref.softmax(jnp.asarray(z)))
+
+
+shape_st = st.tuples(
+    st.integers(1, 3),      # B
+    st.integers(1, 6),      # G
+    st.integers(2, 700),    # V
+    st.sampled_from([8, 64, 128, 1024]),  # tile
+    st.integers(0, 2**31 - 1),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_st)
+def test_exact_kernel_matches_ref(args):
+    b, g, v, tile, seed = args
+    rng = np.random.RandomState(seed)
+    p = jnp.asarray(rand_probs(rng, b, g, v))
+    q = jnp.asarray(rand_probs(rng, b, g, v))
+    tau_k, a_k, b_k = verify_tiles_exact(p, q, tile=tile)
+    tau_r, a_r, b_r = ref.ref_verify(p, q)
+    np.testing.assert_allclose(tau_k, tau_r, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(a_k, a_r, rtol=1e-6, atol=1e-7)
+    # b is a sum reduced in a different association order (per-tile partials
+    # then cross-tile): allow f32 reassociation slack.
+    np.testing.assert_allclose(b_k, b_r, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    shape_st,
+    st.sampled_from([(-10.0, 10.0), (-1e3, 1e3), (-1e4, 1e4), (-1e5, 1e5)]),
+    st.floats(0.5, 30.0),
+)
+def test_sigmoid_kernel_matches_ref(args, alpha_beta, scale):
+    b, g, v, tile, seed = args
+    alpha, beta = alpha_beta
+    rng = np.random.RandomState(seed)
+    zp = jnp.asarray(rng.randn(b, g, v).astype(np.float32) * scale)
+    zq = jnp.asarray(rng.randn(b, g, v).astype(np.float32) * scale)
+    ab = jnp.asarray([alpha, beta], jnp.float32)
+    tau_k, a_k, b_k = verify_tiles_sigmoid(zp, zq, ab, tile=tile)
+    tau_r, a_r, b_r = ref.ref_verify_sigmoid(zp, zq, alpha, beta)
+    np.testing.assert_allclose(tau_k, tau_r, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(a_k, a_r, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(b_k, b_r, rtol=1e-4, atol=1e-6)
+
+
+def test_exact_identical_p_q_accepts_everything():
+    rng = np.random.RandomState(0)
+    p = jnp.asarray(rand_probs(rng, 2, 3, 97))
+    tau, a, b = verify_tiles_exact(p, p, tile=32)
+    assert np.all(np.asarray(tau) == 1.0)
+    assert np.all(np.asarray(a) == 0.0)
+    assert np.all(np.asarray(b) == 0.0)
+
+
+def test_exact_zero_q_lanes_get_tau_one():
+    # q = 0 on some lanes must not produce NaN/inf (guarded division).
+    p = jnp.asarray([[[0.25, 0.25, 0.25, 0.25]]], jnp.float32)
+    q = jnp.asarray([[[0.5, 0.5, 0.0, 0.0]]], jnp.float32)
+    tau, a, b = verify_tiles_exact(p, q, tile=2)
+    t = np.asarray(tau)[0, 0]
+    assert np.all(np.isfinite(t))
+    np.testing.assert_allclose(t, [0.5, 0.5, 1.0, 1.0])
+    np.testing.assert_allclose(np.asarray(b)[0, 0], 0.5)
+
+
+def test_tile_larger_than_vocab_is_clamped():
+    rng = np.random.RandomState(1)
+    p = jnp.asarray(rand_probs(rng, 1, 1, 5))
+    q = jnp.asarray(rand_probs(rng, 1, 1, 5))
+    tau, a, b = verify_tiles_exact(p, q, tile=1024)
+    tau_r, a_r, b_r = ref.ref_verify(p, q)
+    np.testing.assert_allclose(tau, tau_r, rtol=1e-6)
+    np.testing.assert_allclose(b, b_r, rtol=1e-6)
+
+
+def test_sigmoid_extreme_scale_saturates_tau_to_one():
+    # The Table 2 +-1e5 failure mode: scaled logits collapse below f32
+    # epsilon around sigma(0.5), every ratio becomes ~1, everything accepts.
+    rng = np.random.RandomState(2)
+    zp = jnp.asarray(rng.randn(1, 2, 64).astype(np.float32) * 5)
+    zq = jnp.asarray(rng.randn(1, 2, 64).astype(np.float32) * 5)
+    ab = jnp.asarray([-1e5, 1e5], jnp.float32)
+    tau, a, b = verify_tiles_sigmoid(zp, zq, ab, tile=64)
+    assert float(jnp.min(tau)) > 0.999
+    # residual mass nearly vanishes (all sigmoids collapse toward sigma(0.5))
+    assert float(jnp.max(b)) < 1e-2
+
+
+def test_vmem_budget_within_sram():
+    # Paper: n=1024 threads/block, A100 has 192KB SRAM/SM. After perf
+    # iteration 1 a grid step holds (γ, n) tiles: fp16 fits at γ=20 with
+    # the paper's n=1024; f32 needs n=512 at γ=20 (or γ≤10 at n=1024).
+    assert vmem_bytes(20, dtype_bytes=2) <= 192 * 1024
+    assert vmem_bytes(20, tile=512, dtype_bytes=4) <= 192 * 1024
+    assert vmem_bytes(10, dtype_bytes=4) <= 192 * 1024
+    # footprint grows linearly in gamma
+    assert vmem_bytes(10) < vmem_bytes(20) <= 2 * vmem_bytes(10)
+
+
+@pytest.mark.parametrize("v,tile,k", [(128, 128, 1), (129, 128, 2), (4096, 1024, 4)])
+def test_partial_sum_tile_count(v, tile, k):
+    rng = np.random.RandomState(3)
+    p = jnp.asarray(rand_probs(rng, 1, 1, v))
+    q = jnp.asarray(rand_probs(rng, 1, 1, v))
+    # indirect check: outputs still match the oracle at these K values
+    _, _, b_k = verify_tiles_exact(p, q, tile=tile)
+    _, _, b_r = ref.ref_verify(p, q)
+    np.testing.assert_allclose(b_k, b_r, rtol=1e-5)

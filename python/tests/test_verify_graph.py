@@ -1,0 +1,232 @@
+"""L2 semantics: the fused verification graphs.
+
+The acceptance/resample/bonus tail is checked against an *independent*
+step-by-step numpy oracle (written procedurally, not by reusing the jnp
+graph), and `exact` is asserted bit-identical to `baseline`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.verify_graph import make_sample_fn, make_verify_fn
+
+
+# ---------------------------------------------------------------------------
+# independent numpy oracle
+
+
+def np_softmax(z):
+    m = z.max(axis=-1, keepdims=True)
+    e = np.exp(z - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def np_sigmoid(z, alpha, beta):
+    return 1.0 / (1.0 + np.exp(-((z - alpha) / (beta - alpha))))
+
+
+def np_inverse_cdf(w, u):
+    total = w.sum()
+    if total <= 0.0:
+        return int(np.argmax(w))
+    cdf = np.cumsum(w)
+    tok = int(np.sum(cdf <= u * total))
+    return min(tok, len(w) - 1)
+
+
+def oracle_step(z_p, z_q, draft, u_acc, u_res, u_bonus, method, alpha=None, beta=None):
+    """Speculative verification for ONE batch row, straight from Eq. 1-3."""
+    g = draft.shape[0]
+    if method == "sigmoid":
+        p = np_sigmoid(z_p.astype(np.float32), alpha, beta)
+        q = np_sigmoid(z_q.astype(np.float32), alpha, beta)
+    else:
+        p = np_softmax(z_p.astype(np.float32))
+        q = np_softmax(z_q.astype(np.float32))
+    accept_len = g
+    for c in range(g):
+        x = int(draft[c])
+        qc = q[c, x]
+        tau = 1.0 if qc <= 0.0 else min(1.0, p[c, x] / qc)
+        if u_acc[c] > tau:
+            accept_len = c
+            break
+    out = np.full(g + 1, -1, np.int64)
+    out[:accept_len] = draft[:accept_len]
+    if accept_len == g:
+        out[g] = np_inverse_cdf(p[g], u_bonus)
+    else:
+        residual = np.maximum(p[accept_len] - q[accept_len], 0.0)
+        out[accept_len] = np_inverse_cdf(residual, u_res)
+    return accept_len, out
+
+
+def make_inputs(seed, b, g, v, scale=3.0):
+    rng = np.random.RandomState(seed)
+    z_p = rng.randn(b, g + 1, v).astype(np.float32) * scale
+    z_q = rng.randn(b, g, v).astype(np.float32) * scale
+    draft = rng.randint(0, v, size=(b, g)).astype(np.int32)
+    u_acc = rng.rand(b, g).astype(np.float32)
+    u_res = rng.rand(b).astype(np.float32)
+    u_bonus = rng.rand(b).astype(np.float32)
+    return z_p, z_q, draft, u_acc, u_res, u_bonus
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 8), st.integers(4, 300))
+def test_baseline_matches_numpy_oracle(seed, b, g, v):
+    ins = make_inputs(seed, b, g, v)
+    fn = make_verify_fn("baseline")
+    alen, out, _tau = fn(*map(jnp.asarray, ins))
+    for row in range(b):
+        exp_len, exp_out = oracle_step(
+            ins[0][row], ins[1][row], ins[2][row],
+            ins[3][row], ins[4][row], ins[5][row], "baseline")
+        assert int(alen[row]) == exp_len, f"row {row}"
+        np.testing.assert_array_equal(np.asarray(out[row]), exp_out)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 2), st.integers(1, 8), st.integers(4, 300))
+def test_exact_bit_identical_to_baseline(seed, b, g, v):
+    ins = tuple(map(jnp.asarray, make_inputs(seed, b, g, v)))
+    ob = make_verify_fn("baseline")(*ins)
+    oe = make_verify_fn("exact")(*ins)
+    np.testing.assert_array_equal(np.asarray(ob[0]), np.asarray(oe[0]))
+    np.testing.assert_array_equal(np.asarray(ob[1]), np.asarray(oe[1]))
+    np.testing.assert_allclose(np.asarray(ob[2]), np.asarray(oe[2]), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.integers(1, 2),
+    st.integers(1, 6),
+    st.integers(4, 200),
+    st.sampled_from([(-10.0, 10.0), (-1e3, 1e3), (-1e4, 1e4)]),
+)
+def test_sigmoid_matches_numpy_oracle(seed, b, g, v, ab):
+    alpha, beta = ab
+    ins = make_inputs(seed, b, g, v, scale=8.0)
+    fn = make_verify_fn("sigmoid")
+    alen, out, _ = fn(*map(jnp.asarray, ins), jnp.asarray([alpha, beta], jnp.float32))
+    for row in range(b):
+        exp_len, exp_out = oracle_step(
+            ins[0][row], ins[1][row], ins[2][row],
+            ins[3][row], ins[4][row], ins[5][row], "sigmoid", alpha, beta)
+        assert int(alen[row]) == exp_len
+        np.testing.assert_array_equal(np.asarray(out[row]), exp_out)
+
+
+def test_all_accept_emits_bonus():
+    # p == q => tau == 1 everywhere => everything accepted, bonus emitted.
+    b, g, v = 2, 4, 32
+    rng = np.random.RandomState(0)
+    z = rng.randn(b, g + 1, v).astype(np.float32)
+    draft = rng.randint(0, v, (b, g)).astype(np.int32)
+    u = rng.rand(b, g).astype(np.float32)
+    fn = make_verify_fn("baseline")
+    alen, out, tau = fn(jnp.asarray(z), jnp.asarray(z[:, :g]), jnp.asarray(draft),
+                        jnp.asarray(u), jnp.zeros(b), jnp.asarray([0.3, 0.9]))
+    assert np.all(np.asarray(alen) == g)
+    assert np.all(np.asarray(tau) == 1.0)
+    assert np.all(np.asarray(out)[:, :g] == draft)
+    assert np.all(np.asarray(out)[:, g] >= 0)
+
+
+def test_immediate_reject_resamples_from_residual():
+    # q concentrates on token 0, p on token 1; draft token 0 is rejected
+    # whenever u_acc > p(0)/q(0), and the residual argmax is token 1.
+    v = 8
+    z_q = np.full((1, 1, v), -10.0, np.float32); z_q[0, 0, 0] = 10.0
+    z_p = np.full((1, 2, v), -10.0, np.float32); z_p[0, :, 1] = 10.0
+    fn = make_verify_fn("baseline")
+    alen, out, tau = fn(jnp.asarray(z_p), jnp.asarray(z_q),
+                        jnp.asarray([[0]], jnp.int32),
+                        jnp.asarray([[0.9]], jnp.float32),
+                        jnp.asarray([0.5], jnp.float32),
+                        jnp.asarray([0.5], jnp.float32))
+    assert int(alen[0]) == 0
+    assert int(out[0, 0]) == 1  # residual mass sits on token 1
+    assert np.all(np.asarray(out)[0, 1:] == -1)
+
+
+def test_resample_distribution_matches_max_norm():
+    """Chi-square: resampled tokens follow max_norm(p - q) (Eq. 2/3)."""
+    v = 16
+    rng = np.random.RandomState(42)
+    z_p = rng.randn(1, 2, v).astype(np.float32) * 2
+    z_q = rng.randn(1, 1, v).astype(np.float32) * 2
+    p = np_softmax(z_p[0, 0]); q = np_softmax(z_q[0, 0])
+    residual = np.maximum(p - q, 0.0)
+    residual /= residual.sum()
+
+    fn = make_verify_fn("baseline")
+    # draft the token q loves but p hates -> frequent rejection
+    draft_tok = int(np.argmax(q - p))
+    n = 20_000
+    counts = np.zeros(v)
+    us = np.linspace(0.0, 1.0, n, endpoint=False) + 0.5 / n  # stratified
+    alen, out, _ = jnp.broadcast_to, None, None
+    z_p_j = jnp.asarray(np.repeat(z_p, 1, 0))
+    for chunk in np.array_split(us, 20):
+        b = len(chunk)
+        alen_c, out_c, _ = fn(
+            jnp.asarray(np.repeat(z_p, b, 0)), jnp.asarray(np.repeat(z_q, b, 0)),
+            jnp.full((b, 1), draft_tok, jnp.int32),
+            jnp.ones((b, 1), jnp.float32),  # u_acc = 1 -> reject unless tau == 1
+            jnp.asarray(chunk.astype(np.float32)),
+            jnp.zeros(b, jnp.float32))
+        toks = np.asarray(out_c)[:, 0]
+        assert np.all(np.asarray(alen_c) == 0)
+        for t in toks:
+            counts[t] += 1
+    expected = residual * n
+    mask = expected > 5
+    chi2 = np.sum((counts[mask] - expected[mask]) ** 2 / expected[mask])
+    dof = mask.sum() - 1
+    # stratified sampling makes this extremely tight; 3*dof is generous
+    assert chi2 < 3 * max(dof, 1), (chi2, dof, counts, expected)
+
+
+def test_out_tokens_shape_and_padding_invariants():
+    ins = tuple(map(jnp.asarray, make_inputs(7, 3, 5, 64)))
+    alen, out, tau = make_verify_fn("exact")(*ins)
+    out = np.asarray(out); alen = np.asarray(alen)
+    assert out.shape == (3, 6)
+    for r in range(3):
+        k = alen[r]
+        assert np.all(out[r, :k] >= 0)
+        assert out[r, k] >= 0  # resample/bonus slot always emitted
+        assert np.all(out[r, k + 1:] == -1)
+
+
+# ---------------------------------------------------------------------------
+# sample_fn (draft/target fused sampling head)
+
+
+def test_sample_fn_greedy_when_temp_zero():
+    fn = make_sample_fn()
+    logits = jnp.asarray([[0.0, 5.0, 1.0], [2.0, 0.0, -1.0]], jnp.float32)
+    tok = fn(logits, jnp.asarray([0.7, 0.2]), jnp.zeros(2))
+    np.testing.assert_array_equal(np.asarray(tok), [1, 0])
+
+
+def test_sample_fn_inverse_cdf_deterministic():
+    fn = make_sample_fn()
+    logits = jnp.log(jnp.asarray([[0.1, 0.2, 0.7]], jnp.float32))
+    # CDF = [.1, .3, 1.0]; u=0.05 -> 0, u=0.15 -> 1, u=0.95 -> 2
+    for u, want in [(0.05, 0), (0.15, 1), (0.95, 2)]:
+        tok = fn(logits, jnp.asarray([u], jnp.float32), jnp.ones(1))
+        assert int(tok[0]) == want, u
+
+
+def test_inverse_cdf_sample_edge_cases():
+    w = jnp.asarray([0.0, 0.0, 1.0, 0.0], jnp.float32)
+    assert int(ref.inverse_cdf_sample(w, jnp.asarray(0.999))) == 2
+    assert int(ref.inverse_cdf_sample(w, jnp.asarray(0.0))) == 2
+    zero = jnp.zeros(4, jnp.float32)
+    assert int(ref.inverse_cdf_sample(zero, jnp.asarray(0.5))) == 0

@@ -1,0 +1,81 @@
+//! End-to-end engine benchmark (Table 5's wall-clock quantity): decode a
+//! fixed workload with each method and report wall time, throughput and
+//! the Δ% improvements.
+//!
+//! `cargo bench --bench bench_e2e`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use specd::engine::{Backend, Engine, EngineConfig, GenRequest, Mode};
+use specd::runtime::Runtime;
+use specd::sampling::Method;
+use specd::tokenizer::Tokenizer;
+use specd::util::stats::rel_improvement_pct;
+
+fn run(rt: &Arc<Runtime>, tok: &Tokenizer, method: Method, mode: Mode) -> (f64, usize, f64) {
+    let mut engine = Engine::new(
+        rt.clone(),
+        EngineConfig {
+            method,
+            backend: Backend::Hlo,
+            mode,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| {
+            GenRequest::new(
+                i,
+                tok.encode("The scheduler accepts the drafted tokens"),
+                40,
+            )
+            .with_temperature(0.7)
+            .with_seed(500 + i)
+        })
+        .collect();
+    let t = Instant::now();
+    let results = engine.generate(reqs).unwrap();
+    let wall = t.elapsed().as_secs_f64();
+    let tokens: usize = results.iter().map(|r| r.token_ids.len()).sum();
+    (wall, tokens, engine.stats.profiling_time_total())
+}
+
+fn main() {
+    let rt = Arc::new(Runtime::open_default().expect("run `make artifacts` first"));
+    let tok = Tokenizer::load(&specd::artifacts_dir().join("tokenizer.json")).unwrap();
+
+    println!("end-to-end decode: 6 requests × 40 tokens (measured, PJRT-CPU)\n");
+    let (wall_ar, tok_ar, _) = run(&rt, &tok, Method::Exact, Mode::Autoregressive);
+    let (wall_b, tok_b, prof_b) = run(&rt, &tok, Method::Baseline, Mode::Speculative);
+    let (wall_e, tok_e, prof_e) = run(&rt, &tok, Method::Exact, Mode::Speculative);
+    let (wall_s, tok_s, prof_s) =
+        run(&rt, &tok, Method::sigmoid(-1e3, 1e3), Mode::Speculative);
+
+    let row = |name: &str, wall: f64, tokens: usize, prof: f64| {
+        println!(
+            "{name:<26} wall {wall:>7.3}s  {:>7.1} tok/s  Σprofiling {:>8.2}ms",
+            tokens as f64 / wall,
+            prof * 1e3
+        );
+    };
+    row("autoregressive", wall_ar, tok_ar, 0.0);
+    row("speculative baseline", wall_b, tok_b, prof_b);
+    row("speculative exact", wall_e, tok_e, prof_e);
+    row("speculative sigmoid", wall_s, tok_s, prof_s);
+    println!(
+        "\nΔ% wall-clock vs baseline: exact {:+.1}%, sigmoid {:+.1}%",
+        rel_improvement_pct(wall_b, wall_e),
+        rel_improvement_pct(wall_b, wall_s)
+    );
+    println!(
+        "Δ% profiling  vs baseline: exact {:+.1}%, sigmoid {:+.1}%",
+        rel_improvement_pct(prof_b, prof_e),
+        rel_improvement_pct(prof_b, prof_s)
+    );
+    println!(
+        "speculative speedup over autoregressive (exact): {:.2}x",
+        (tok_e as f64 / wall_e) / (tok_ar as f64 / wall_ar)
+    );
+}

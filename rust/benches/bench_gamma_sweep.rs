@@ -1,0 +1,71 @@
+//! Figure 3 (kernel level): verification time vs γ at a paper-scale
+//! vocabulary, per method. Prints a CSV series (measured PJRT-CPU) plus
+//! the simulated A100 series.
+//!
+//! `cargo bench --bench bench_gamma_sweep`
+
+use std::sync::Arc;
+
+use specd::runtime::{HostTensor, Runtime};
+use specd::sampling::Method;
+use specd::simulator::{simulate_step, DeviceProfile, SimConfig};
+use specd::util::bench::{bench, BenchConfig};
+use specd::util::rng::Pcg32;
+
+fn main() {
+    let rt = Arc::new(Runtime::open_default().expect("run `make artifacts` first"));
+    let dev = DeviceProfile::by_name("a100").unwrap();
+    // prefer the paper-scale 32k vocab artifacts; fall back to 4096 (quick set)
+    let v = if rt.manifest.verify("baseline", 1, 5, 32768).is_ok() {
+        32768
+    } else {
+        4096
+    };
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 10,
+        max_iters: 60,
+        max_time: std::time::Duration::from_millis(1200),
+    };
+    println!("gamma,method,meas_ms,sim_a100_ms   (V={v}, B=1)");
+    for g in [1usize, 2, 3, 5, 8, 10, 15, 20] {
+        for method in ["baseline", "exact", "sigmoid"] {
+            let Ok(exe) = rt.load_verify(method, 1, g, v) else {
+                continue;
+            };
+            let mut rng = Pcg32::seeded(g as u64);
+            let z_p: Vec<f32> = (0..(g + 1) * v).map(|_| rng.gaussian() as f32 * 3.0).collect();
+            let z_q: Vec<f32> = (0..g * v).map(|_| rng.gaussian() as f32 * 3.0).collect();
+            let mut inputs = vec![
+                HostTensor::f32(&[1, g + 1, v], z_p),
+                HostTensor::f32(&[1, g, v], z_q),
+                HostTensor::i32(&[1, g], (0..g as i32).collect()),
+                HostTensor::f32(&[1, g], vec![0.5; g]),
+                HostTensor::f32(&[1], vec![0.4]),
+                HostTensor::f32(&[1], vec![0.6]),
+            ];
+            if method == "sigmoid" {
+                inputs.push(HostTensor::f32(&[2], vec![-1e3, 1e3]));
+            }
+            let r = bench(&format!("{method}/g{g}"), cfg, || {
+                let out = exe.run(&inputs).unwrap();
+                specd::util::bench::black_box(out);
+            });
+            let m = match method {
+                "baseline" => Method::Baseline,
+                "exact" => Method::Exact,
+                _ => Method::sigmoid(-1e3, 1e3),
+            };
+            let sim = simulate_step(
+                dev,
+                SimConfig { batch: 1, gamma: g, vocab: 51865, dtype_bytes: 2 },
+                m,
+            );
+            println!(
+                "{g},{method},{:.4},{:.3}",
+                r.summary.mean * 1e3,
+                sim.step_time * 1e3
+            );
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Substrate micro-benchmarks: the hand-rolled components on the hot
+//! path (JSON wire protocol, RNG, softmax, metrics, profiler overhead).
+//!
+//! `cargo bench --bench bench_substrate`
+
+use specd::metrics::{rouge1_f1, wer};
+use specd::sampling;
+use specd::util::bench::{bench_report, black_box, BenchConfig};
+use specd::util::json;
+use specd::util::rng::Pcg32;
+use specd::util::timer::Profiler;
+
+fn main() {
+    let cfg = BenchConfig::default();
+
+    // JSON: a typical response line
+    let line = r#"{"id":42,"text":"the scheduler accepts the drafted tokens in parallel","tokens":64,"steps":17,"accept_rate":0.61,"tokens_per_step":3.76,"latency_ms":12.25,"finish":"length"}"#;
+    bench_report("json/parse_response_line", cfg, || {
+        black_box(json::parse(line).unwrap());
+    });
+    let v = json::parse(line).unwrap();
+    bench_report("json/dump_response_line", cfg, || {
+        black_box(v.dump());
+    });
+
+    // RNG: uniform fill of a γ=20 acceptance buffer
+    let mut rng = Pcg32::seeded(1);
+    let mut buf = [0f32; 20];
+    bench_report("rng/fill_uniform_20", cfg, || {
+        rng.fill_uniform(&mut buf);
+        black_box(buf[0]);
+    });
+
+    // softmax + sigmoid over a 32k-vocab row (the oracle hot loop)
+    let mut rng = Pcg32::seeded(2);
+    let logits: Vec<f32> = (0..32_768).map(|_| rng.gaussian() as f32 * 3.0).collect();
+    bench_report("sampling/softmax_32k", cfg, || {
+        let mut x = logits.clone();
+        let n = x.len();
+        sampling::softmax_rows(&mut x, n);
+        black_box(x[0]);
+    });
+    bench_report("sampling/sigmoid_approx_32k", cfg, || {
+        let mut x = logits.clone();
+        sampling::sigmoid_approx(&mut x, -1e3, 1e3);
+        black_box(x[0]);
+    });
+    let weights: Vec<f32> = logits.iter().map(|x| x.max(0.0)).collect();
+    bench_report("sampling/inverse_cdf_32k", cfg, || {
+        black_box(sampling::inverse_cdf_sample(&weights, 0.7));
+    });
+
+    // metrics on ~40-word strings
+    let a = "the scheduler accepts the drafted tokens in parallel and then the batch planner emits the next request once per step while the profiler tracks the partial sums after the reduction with bounded memory on the hot path";
+    let b = "the scheduler rejects the drafted tokens in sequence and then the batch planner emits the last request twice per step";
+    bench_report("metrics/wer_40w", cfg, || {
+        black_box(wer(a, b));
+    });
+    bench_report("metrics/rouge1_40w", cfg, || {
+        black_box(rouge1_f1(a, b));
+    });
+
+    // profiler overhead per scope (claimed < 1us in timer.rs docs)
+    let p = Profiler::new();
+    bench_report("profiler/scope_enter_exit", cfg, || {
+        let _g = p.scope("bench");
+    });
+}

@@ -1,0 +1,53 @@
+//! Table-regeneration bench: times the fast (simulator-backed) table
+//! generators end-to-end and one representative measured run, so `cargo
+//! bench` stays bounded. Full-budget regeneration of every table runs via
+//! `specd table --id all --n 8 > results/tables.txt` (see Makefile
+//! `tables` target).
+
+use std::time::Instant;
+
+use specd::engine::Backend;
+use specd::sampling::Method;
+use specd::simulator::DeviceProfile;
+use specd::tables::{generate, run_method, EvalContext, TableId};
+use specd::workload::{make_tasks, TaskKind};
+
+fn main() {
+    let ctx = EvalContext::open_default(2).expect("run `make artifacts` first");
+    let dev = DeviceProfile::by_name("a100").unwrap();
+
+    // simulator-backed tables: cheap, deterministic
+    for id in [TableId::T3] {
+        let t = Instant::now();
+        match generate(id, &ctx, dev) {
+            Ok(out) => println!(
+                "{id:?}: regenerated in {:.3}s ({} lines)",
+                t.elapsed().as_secs_f64(),
+                out.lines().count()
+            ),
+            Err(e) => println!("{id:?}: FAILED — {e:#}"),
+        }
+    }
+
+    // one representative measured harness run per method (the unit of work
+    // every measured table is built from)
+    let tasks = make_tasks(&ctx.corpus, TaskKind::Summarize, 2, 202);
+    for (name, method) in [
+        ("baseline", Method::Baseline),
+        ("exact", Method::Exact),
+        ("sigmoid", Method::sigmoid(-1e4, 1e4)),
+    ] {
+        let t = Instant::now();
+        match run_method(&ctx, &tasks, method, Backend::Hlo, 5, false) {
+            Ok(run) => println!(
+                "run_method/{name}: {:.2}s wall, {} steps, Σprofiling {:.2}ms, metric {:.3}",
+                t.elapsed().as_secs_f64(),
+                run.steps,
+                run.profiling_total * 1e3,
+                run.metric
+            ),
+            Err(e) => println!("run_method/{name}: FAILED — {e:#}"),
+        }
+    }
+    println!("\nfull regeneration: `specd table --id all --n 8` (see results/)");
+}

@@ -1,0 +1,87 @@
+//! Verification micro-benchmark (Table 6's per-step quantity, kernel
+//! only): execute the three verify artifacts at the engine vocab and at
+//! the paper-scale vocabularies, plus the native oracle for reference.
+//!
+//! `cargo bench --bench bench_verify`
+
+use std::sync::Arc;
+
+use specd::runtime::{HostTensor, Runtime};
+use specd::sampling::{self, Method};
+use specd::util::bench::{bench_report, BenchConfig};
+use specd::util::rng::Pcg32;
+
+fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+}
+
+fn main() {
+    let rt = Arc::new(Runtime::open_default().expect("run `make artifacts` first"));
+    let cfg = BenchConfig {
+        warmup_iters: 3,
+        min_iters: 15,
+        max_iters: 200,
+        max_time: std::time::Duration::from_secs(2),
+    };
+    let g = 5usize;
+    println!("verification step, B=1 γ={g} (HLO artifacts via PJRT-CPU + native oracle)\n");
+
+    let mut vocabs = vec![rt.manifest.vocab_size, 4096];
+    if rt.manifest.verify("baseline", 1, g, 32768).is_ok() {
+        vocabs.push(32768);
+    }
+    for v in vocabs {
+        let mut rng = Pcg32::seeded(7);
+        let z_p = randn(&mut rng, (g + 1) * v, 3.0);
+        let z_q = randn(&mut rng, g * v, 3.0);
+        let draft: Vec<i32> = (0..g).map(|_| rng.below(v as u32) as i32).collect();
+        let u_acc: Vec<f32> = (0..g).map(|_| rng.uniform_f32()).collect();
+        let base_inputs = vec![
+            HostTensor::f32(&[1, g + 1, v], z_p.clone()),
+            HostTensor::f32(&[1, g, v], z_q.clone()),
+            HostTensor::i32(&[1, g], draft.clone()),
+            HostTensor::f32(&[1, g], u_acc.clone()),
+            HostTensor::f32(&[1], vec![0.4]),
+            HostTensor::f32(&[1], vec![0.6]),
+        ];
+        for method in ["baseline", "exact", "sigmoid"] {
+            let exe = rt.load_verify(method, 1, g, v).expect(method);
+            let mut inputs = base_inputs.clone();
+            if method == "sigmoid" {
+                inputs.push(HostTensor::f32(&[2], vec![-1e3, 1e3]));
+            }
+            bench_report(&format!("hlo/{method}/v{v}"), cfg, || {
+                let out = exe.run(&inputs).unwrap();
+                specd::util::bench::black_box(out);
+            });
+        }
+        // tile-size ablation artifacts (DESIGN §5), V=32768 only
+        if v == 32768 {
+            for t in [128usize, 256, 512] {
+                let name = format!("verify_exact_b1_g{g}_v{v}_t{t}");
+                if let Ok(exe) = rt.load(&name) {
+                    bench_report(&format!("hlo/exact/v{v}/tile{t}"), cfg, || {
+                        let out = exe.run(&base_inputs).unwrap();
+                        specd::util::bench::black_box(out);
+                    });
+                }
+            }
+        }
+        // native oracle for scale
+        bench_report(&format!("native/exact/v{v}"), cfg, || {
+            let out = sampling::verify::spec_step_batch(
+                &z_p, &z_q, 1, g, v, &draft, &u_acc, &[0.4], &[0.6],
+                Method::Exact, None,
+            );
+            specd::util::bench::black_box(out);
+        });
+        bench_report(&format!("native/sigmoid/v{v}"), cfg, || {
+            let out = sampling::verify::spec_step_batch(
+                &z_p, &z_q, 1, g, v, &draft, &u_acc, &[0.4], &[0.6],
+                Method::sigmoid(-1e3, 1e3), None,
+            );
+            specd::util::bench::black_box(out);
+        });
+        println!();
+    }
+}

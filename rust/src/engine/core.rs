@@ -1,0 +1,589 @@
+//! The continuous-batching speculative decode loop.
+//!
+//! One decode step over B slots (inactive slots padded, masked by
+//! `lens`):
+//!
+//! 1. **draft**: γ sequential `draft_step` calls — each samples one token
+//!    for every slot and returns the raw draft logits (collected into
+//!    z_q);
+//! 2. **score**: one `target_score` call returning the target logits at
+//!    the last `GMAX+1` positions; the engine slices the (γ+1) rows the
+//!    verification needs;
+//! 3. **verify**: one fused verification call (HLO artifact or native
+//!    oracle) producing per-slot accepted lengths and emitted tokens;
+//! 4. **commit**: slot state update, finish detection, refill from the
+//!    admission queue, adaptive-γ update (+2 on all-accept / −1).
+//!
+//! Every uniform consumed anywhere in the stack comes from per-request
+//! PCG32 streams, so generation is deterministic given request seeds.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{HostTensor, LoadedExecutable, Runtime};
+use crate::sampling::Method;
+use crate::tokenizer;
+use crate::util::rng::Pcg32;
+
+use super::gamma::GammaController;
+use super::request::{FinishReason, GenRequest, GenResult};
+use super::stats::EngineStats;
+use super::verifier::{Backend, Verifier, VerifyInputs};
+
+/// Decoding mode: the speculative pipeline or plain target-only
+/// autoregression (the non-speculative reference used by the serve demo).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Speculative,
+    Autoregressive,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// model pair from the manifest ("base" / "large")
+    pub pair: String,
+    /// slot count; must match an artifact batch size
+    pub batch: usize,
+    pub method: Method,
+    pub backend: Backend,
+    pub mode: Mode,
+    pub gamma_init: usize,
+    /// pin γ (disables the adaptive controller) — used by the sweeps
+    pub gamma_pinned: bool,
+    /// self-speculative drafting (§A.7): draft with the first half of the
+    /// *target* model's layers instead of the separate draft network
+    pub self_draft: bool,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            pair: "base".into(),
+            batch: 1,
+            method: Method::Exact,
+            backend: Backend::Hlo,
+            mode: Mode::Speculative,
+            gamma_init: 5,
+            gamma_pinned: false,
+            self_draft: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-slot decoding state.
+struct Slot {
+    req: GenRequest,
+    /// token buffer of length S (prompt + generated + in-flight drafts)
+    tokens: Vec<i32>,
+    /// valid committed length (prompt + generated)
+    len: usize,
+    generated: Vec<i32>,
+    rng: Pcg32,
+    steps: usize,
+    drafted: usize,
+    accepted: usize,
+    started: Instant,
+}
+
+impl Slot {
+    fn headroom(&self, s: usize) -> usize {
+        s.saturating_sub(self.len)
+    }
+}
+
+/// The speculative-decoding serving engine.
+pub struct Engine {
+    pub runtime: Arc<Runtime>,
+    pub config: EngineConfig,
+    pub stats: EngineStats,
+    verifier: Verifier,
+    gamma: GammaController,
+    draft_step: Arc<LoadedExecutable>,
+    target_step: Arc<LoadedExecutable>,
+    target_score: Arc<LoadedExecutable>,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<GenRequest>,
+    results: Vec<GenResult>,
+    // model dims
+    seq_len: usize,
+    vocab: usize,
+    gmax: usize,
+    // preallocated step buffers (hot path, no per-step allocation)
+    tokens_buf: Vec<i32>,
+    lens_buf: Vec<i32>,
+    u_buf: Vec<f32>,
+    temp_buf: Vec<f32>,
+    zq_buf: Vec<f32>,
+    zp_buf: Vec<f32>,
+    draft_buf: Vec<i32>,
+    uacc_buf: Vec<f32>,
+    ures_buf: Vec<f32>,
+    ubonus_buf: Vec<f32>,
+}
+
+impl Engine {
+    pub fn new(runtime: Arc<Runtime>, config: EngineConfig) -> Result<Self> {
+        let m = &runtime.manifest;
+        let (seq_len, vocab, gmax) = (m.seq_len, m.vocab_size, m.gmax);
+        if !m.model_batches(&config.pair).contains(&config.batch) {
+            bail!(
+                "no artifacts for pair {:?} at batch {} (available: {:?})",
+                config.pair,
+                config.batch,
+                m.model_batches(&config.pair)
+            );
+        }
+        let draft_kind = if config.self_draft {
+            "draft_self_step"
+        } else {
+            "draft_step"
+        };
+        let draft_step = runtime.load_model(draft_kind, &config.pair, config.batch)?;
+        let target_step = runtime.load_model("target_step", &config.pair, config.batch)?;
+        let target_score = runtime.load_model("target_score", &config.pair, config.batch)?;
+        let verifier = Verifier::new(
+            runtime.clone(),
+            config.method,
+            config.backend,
+            config.batch,
+            vocab,
+        );
+        let avail = verifier.available_gammas();
+        if avail.is_empty() && config.mode == Mode::Speculative {
+            bail!(
+                "no verify artifacts for method {:?} b={} v={}",
+                config.method.name(),
+                config.batch,
+                vocab
+            );
+        }
+        let max_gamma = avail.iter().copied().max().unwrap_or(1).min(gmax);
+        let gamma = if config.gamma_pinned {
+            GammaController::pinned(config.gamma_init.min(max_gamma))
+        } else {
+            GammaController::new(config.gamma_init, 1, max_gamma)
+        };
+        let b = config.batch;
+        Ok(Engine {
+            verifier,
+            gamma,
+            draft_step,
+            target_step,
+            target_score,
+            slots: (0..b).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            results: Vec::new(),
+            stats: EngineStats::default(),
+            seq_len,
+            vocab,
+            gmax,
+            tokens_buf: vec![0; b * seq_len],
+            lens_buf: vec![1; b],
+            u_buf: vec![0.0; b],
+            temp_buf: vec![0.0; b],
+            zq_buf: vec![0.0; b * gmax * vocab],
+            zp_buf: vec![0.0; b * (gmax + 1) * vocab],
+            draft_buf: vec![0; b * gmax],
+            uacc_buf: vec![0.0; b * gmax],
+            ures_buf: vec![0.0; b],
+            ubonus_buf: vec![0.0; b],
+            runtime,
+            config,
+        })
+    }
+
+    /// Enqueue a request (admitted into a slot on the next step).
+    pub fn submit(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Requests currently being decoded.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn gamma(&self) -> usize {
+        self.gamma.gamma()
+    }
+
+    /// Submit-all + run-to-completion convenience.
+    pub fn generate(&mut self, reqs: Vec<GenRequest>) -> Result<Vec<GenResult>> {
+        for r in reqs {
+            self.submit(r);
+        }
+        self.run_until_done()?;
+        Ok(self.take_results())
+    }
+
+    pub fn run_until_done(&mut self) -> Result<()> {
+        self.admit();
+        while self.active() > 0 {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    pub fn take_results(&mut self) -> Vec<GenResult> {
+        let mut out = std::mem::take(&mut self.results);
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    fn admit(&mut self) {
+        for slot in self.slots.iter_mut() {
+            if slot.is_none() {
+                if let Some(req) = self.queue.pop_front() {
+                    let mut tokens = vec![tokenizer::PAD; self.seq_len];
+                    let prompt: Vec<i32> = if req.prompt_ids.is_empty() {
+                        vec![tokenizer::BOS]
+                    } else {
+                        let keep = req.prompt_ids.len().min(self.seq_len / 2);
+                        req.prompt_ids[req.prompt_ids.len() - keep..].to_vec()
+                    };
+                    tokens[..prompt.len()].copy_from_slice(&prompt);
+                    let len = prompt.len();
+                    let rng = Pcg32::derive(self.config.seed ^ req.seed, req.id);
+                    *slot = Some(Slot {
+                        req,
+                        tokens,
+                        len,
+                        generated: Vec::new(),
+                        rng,
+                        steps: 0,
+                        drafted: 0,
+                        accepted: 0,
+                        started: Instant::now(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Speculative-mode clamp: rejection sampling needs q to be the real
+    /// proposal distribution, so fully-greedy temps are nudged positive.
+    fn effective_temp(t: f32) -> f32 {
+        t.max(0.05)
+    }
+
+    /// Execute one decode step across all active slots.
+    pub fn step(&mut self) -> Result<()> {
+        self.admit();
+        if self.active() == 0 {
+            return Ok(());
+        }
+        let step_started = Instant::now();
+        match self.config.mode {
+            Mode::Speculative => self.step_speculative(step_started),
+            Mode::Autoregressive => self.step_autoregressive(step_started),
+        }
+    }
+
+    fn fill_model_inputs(&mut self, extra: usize) {
+        let (b, s) = (self.config.batch, self.seq_len);
+        for i in 0..b {
+            match &self.slots[i] {
+                Some(slot) => {
+                    self.tokens_buf[i * s..(i + 1) * s].copy_from_slice(&slot.tokens);
+                    self.lens_buf[i] = (slot.len + extra) as i32;
+                }
+                None => {
+                    self.tokens_buf[i * s..(i + 1) * s].fill(tokenizer::PAD);
+                    self.lens_buf[i] = 1;
+                }
+            }
+        }
+    }
+
+    fn step_speculative(&mut self, step_started: Instant) -> Result<()> {
+        let (b, s, v) = (self.config.batch, self.seq_len, self.vocab);
+
+        // γ for this step: controller value clamped by slot headroom and
+        // artifact availability.
+        let min_headroom = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|sl| sl.headroom(s))
+            .min()
+            .unwrap_or(2);
+        let want = self.gamma.effective(min_headroom);
+        let avail = self.verifier.available_gammas();
+        let gamma = avail
+            .iter()
+            .copied()
+            .filter(|&g| g <= want)
+            .max()
+            .unwrap_or_else(|| avail.first().copied().unwrap_or(1));
+
+        // --- 1. draft phase: γ sequential draft_step calls
+        {
+            let prof = self.runtime.profiler.clone();
+            let _g = prof.scope("step/draft");
+            for c in 0..gamma {
+                self.fill_model_inputs(c);
+                for i in 0..b {
+                    let (u, t) = match &mut self.slots[i] {
+                        Some(slot) => (
+                            slot.rng.uniform_f32(),
+                            Self::effective_temp(slot.req.draft_temperature),
+                        ),
+                        None => (0.0, 1.0),
+                    };
+                    self.u_buf[i] = u;
+                    self.temp_buf[i] = t;
+                }
+                let out = self.draft_step.run(&[
+                    HostTensor::i32(&[b, s], self.tokens_buf.clone()),
+                    HostTensor::i32(&[b], self.lens_buf.clone()),
+                    HostTensor::f32(&[b], self.u_buf.clone()),
+                    HostTensor::f32(&[b], self.temp_buf.clone()),
+                ])?;
+                let toks = out[0].as_i32()?;
+                let logits = out[1].as_f32()?;
+                for i in 0..b {
+                    if let Some(slot) = &mut self.slots[i] {
+                        slot.tokens[slot.len + c] = toks[i];
+                        self.draft_buf[i * gamma + c] = toks[i];
+                    }
+                    self.zq_buf[(i * gamma + c) * v..(i * gamma + c + 1) * v]
+                        .copy_from_slice(&logits[i * v..(i + 1) * v]);
+                }
+            }
+        }
+
+        // --- 2. target scoring: one call, slice the last γ+1 positions
+        {
+            let prof = self.runtime.profiler.clone();
+            let _g = prof.scope("step/score");
+            self.fill_model_inputs(gamma);
+            let out = self.target_score.run(&[
+                HostTensor::i32(&[b, s], self.tokens_buf.clone()),
+                HostTensor::i32(&[b], self.lens_buf.clone()),
+            ])?;
+            let win = out[0].as_f32()?; // (B, GMAX+1, V)
+            let w = self.gmax + 1;
+            for i in 0..b {
+                for j in 0..=gamma {
+                    let src = (i * w + (w - (gamma + 1) + j)) * v;
+                    let dst = (i * (gamma + 1) + j) * v;
+                    self.zp_buf[dst..dst + v].copy_from_slice(&win[src..src + v]);
+                }
+            }
+        }
+
+        // --- temperature scaling (verification distributions must match
+        // the sampling temperature; see effective_temp)
+        for i in 0..b {
+            let t = match &self.slots[i] {
+                Some(slot) => Self::effective_temp(slot.req.temperature),
+                None => 1.0,
+            };
+            if (t - 1.0).abs() > 1e-6 {
+                let inv = 1.0 / t;
+                for x in &mut self.zp_buf[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v] {
+                    *x *= inv;
+                }
+                for x in &mut self.zq_buf[i * gamma * v..(i + 1) * gamma * v] {
+                    *x *= inv;
+                }
+            }
+        }
+
+        // --- 3. verification (the paper's kernel, one fused call)
+        for i in 0..b {
+            let (ua, ur, ub2) = match &mut self.slots[i] {
+                Some(slot) => {
+                    for c in 0..gamma {
+                        self.uacc_buf[i * gamma + c] = slot.rng.uniform_f32();
+                    }
+                    (true, slot.rng.uniform_f32(), slot.rng.uniform_f32())
+                }
+                None => (false, 0.0, 0.0),
+            };
+            if !ua {
+                self.uacc_buf[i * gamma..(i + 1) * gamma].fill(1.0);
+            }
+            self.ures_buf[i] = ur;
+            self.ubonus_buf[i] = ub2;
+        }
+        let (out, verify_secs) = self.verifier.verify(
+            gamma,
+            &VerifyInputs {
+                z_p: &self.zp_buf[..b * (gamma + 1) * v],
+                z_q: &self.zq_buf[..b * gamma * v],
+                draft: &self.draft_buf[..b * gamma],
+                u_acc: &self.uacc_buf[..b * gamma],
+                u_res: &self.ures_buf,
+                u_bonus: &self.ubonus_buf,
+            },
+        )?;
+
+        // --- 4. commit
+        let mut all_accepted = true;
+        let mut drafted_total = 0usize;
+        let mut accepted_total = 0usize;
+        let mut emitted_total = 0usize;
+        for i in 0..b {
+            let Some(slot) = &mut self.slots[i] else { continue };
+            let alen = out.accept_len[i] as usize;
+            slot.steps += 1;
+            slot.drafted += gamma;
+            slot.accepted += alen;
+            drafted_total += gamma;
+            accepted_total += alen;
+            if alen < gamma {
+                all_accepted = false;
+            }
+
+            let row = &out.out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)];
+            let mut finish: Option<FinishReason> = None;
+            for &tok in row.iter().take(alen + 1) {
+                debug_assert!(tok >= 0);
+                slot.tokens[slot.len] = tok;
+                slot.len += 1;
+                slot.generated.push(tok);
+                emitted_total += 1;
+                if tok == tokenizer::EOS {
+                    finish = Some(FinishReason::Stop);
+                    break;
+                }
+                if slot.generated.len() >= slot.req.max_new_tokens {
+                    finish = Some(FinishReason::Length);
+                    break;
+                }
+            }
+            if finish.is_none() && slot.headroom(s) < 2 {
+                finish = Some(FinishReason::Context);
+            }
+            if let Some(reason) = finish {
+                let slot = self.slots[i].take().unwrap();
+                self.results.push(GenResult {
+                    id: slot.req.id,
+                    token_ids: slot.generated,
+                    finish: reason,
+                    steps: slot.steps,
+                    drafted: slot.drafted,
+                    accepted: slot.accepted,
+                    latency: slot.started.elapsed().as_secs_f64(),
+                });
+                self.stats.finished += 1;
+            }
+        }
+
+        self.gamma.update(all_accepted);
+        self.stats.record_step(
+            gamma,
+            drafted_total,
+            accepted_total,
+            emitted_total,
+            step_started.elapsed().as_secs_f64(),
+            verify_secs,
+        );
+        self.admit();
+        Ok(())
+    }
+
+    fn step_autoregressive(&mut self, step_started: Instant) -> Result<()> {
+        let (b, s) = (self.config.batch, self.seq_len);
+        self.fill_model_inputs(0);
+        for i in 0..b {
+            let (u, t) = match &mut self.slots[i] {
+                Some(slot) => (slot.rng.uniform_f32(), slot.req.temperature),
+                None => (0.0, 1.0),
+            };
+            self.u_buf[i] = u;
+            self.temp_buf[i] = t;
+        }
+        let out = {
+            let _g = self.runtime.profiler.scope("step/target_step");
+            self.target_step.run(&[
+                HostTensor::i32(&[b, s], self.tokens_buf.clone()),
+                HostTensor::i32(&[b], self.lens_buf.clone()),
+                HostTensor::f32(&[b], self.u_buf.clone()),
+                HostTensor::f32(&[b], self.temp_buf.clone()),
+            ])?
+        };
+        let toks = out[0].as_i32()?;
+        let mut emitted = 0usize;
+        for i in 0..b {
+            let Some(slot) = &mut self.slots[i] else { continue };
+            slot.steps += 1;
+            slot.tokens[slot.len] = toks[i];
+            slot.len += 1;
+            slot.generated.push(toks[i]);
+            emitted += 1;
+            let finish = if toks[i] == tokenizer::EOS {
+                Some(FinishReason::Stop)
+            } else if slot.generated.len() >= slot.req.max_new_tokens {
+                Some(FinishReason::Length)
+            } else if slot.headroom(s) < 2 {
+                Some(FinishReason::Context)
+            } else {
+                None
+            };
+            if let Some(reason) = finish {
+                let slot = self.slots[i].take().unwrap();
+                self.results.push(GenResult {
+                    id: slot.req.id,
+                    token_ids: slot.generated,
+                    finish: reason,
+                    steps: slot.steps,
+                    drafted: 0,
+                    accepted: 0,
+                    latency: slot.started.elapsed().as_secs_f64(),
+                });
+                self.stats.finished += 1;
+            }
+        }
+        self.stats
+            .record_step(0, 0, 0, emitted, step_started.elapsed().as_secs_f64(), 0.0);
+        self.admit();
+        Ok(())
+    }
+
+    /// Generate text end-to-end with a tokenizer (server/example helper).
+    pub fn generate_text(
+        &mut self,
+        tok: &tokenizer::Tokenizer,
+        prompts: &[(&str, usize)],
+        temperature: f32,
+    ) -> Result<Vec<(String, GenResult)>> {
+        let reqs: Vec<GenRequest> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, (p, max_new))| {
+                GenRequest::new(i as u64, tok.encode(p), *max_new)
+                    .with_temperature(temperature)
+            })
+            .collect();
+        let results = self.generate(reqs)?;
+        Ok(results
+            .into_iter()
+            .map(|r| (tok.decode_until_stop(&r.token_ids), r))
+            .collect())
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("pair", &self.config.pair)
+            .field("batch", &self.config.batch)
+            .field("method", &self.config.method.name())
+            .field("active", &self.active())
+            .field("pending", &self.pending())
+            .finish()
+    }
+}
+
+// Engine construction/decode tests need artifacts: rust/tests/it_engine.rs.

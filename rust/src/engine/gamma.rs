@@ -1,0 +1,134 @@
+//! Adaptive draft-length (γ) controller.
+//!
+//! §4.1: *"Initially, γ is set to 5 and increases by 2 if all speculative
+//! tokens sampled from the draft model are accepted; otherwise, it
+//! decreases by 1."* — the heuristic of HF transformers' assisted
+//! generation, reimplemented here with explicit bounds so the engine can
+//! only request γ values that exist as AOT artifacts.
+
+#[derive(Debug, Clone)]
+pub struct GammaController {
+    gamma: usize,
+    min: usize,
+    max: usize,
+    /// when pinned, update() is a no-op (used by the γ-sweep experiments)
+    pinned: bool,
+}
+
+impl GammaController {
+    pub fn new(init: usize, min: usize, max: usize) -> Self {
+        assert!(min >= 1 && min <= max, "bad gamma bounds [{min}, {max}]");
+        GammaController {
+            gamma: init.clamp(min, max),
+            min,
+            max,
+            pinned: false,
+        }
+    }
+
+    /// Fixed γ (figures 3-5 sweep a pinned initial value).
+    pub fn pinned(gamma: usize) -> Self {
+        GammaController {
+            gamma,
+            min: gamma,
+            max: gamma,
+            pinned: true,
+        }
+    }
+
+    pub fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    /// Apply the +2/−1 rule after a verification step.
+    pub fn update(&mut self, all_accepted: bool) {
+        if self.pinned {
+            return;
+        }
+        self.gamma = if all_accepted {
+            (self.gamma + 2).min(self.max)
+        } else {
+            self.gamma.saturating_sub(1).max(self.min)
+        };
+    }
+
+    /// γ to actually use this step given per-slot context headroom
+    /// (each slot needs room for γ drafts + 1 emitted token).
+    pub fn effective(&self, min_headroom: usize) -> usize {
+        self.gamma.min(min_headroom.saturating_sub(1)).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Config};
+
+    #[test]
+    fn follows_paper_heuristic() {
+        let mut c = GammaController::new(5, 1, 20);
+        c.update(true);
+        assert_eq!(c.gamma(), 7);
+        c.update(true);
+        assert_eq!(c.gamma(), 9);
+        c.update(false);
+        assert_eq!(c.gamma(), 8);
+    }
+
+    #[test]
+    fn clamps_to_bounds() {
+        let mut c = GammaController::new(19, 1, 20);
+        c.update(true);
+        assert_eq!(c.gamma(), 20);
+        let mut c = GammaController::new(1, 1, 20);
+        c.update(false);
+        assert_eq!(c.gamma(), 1);
+    }
+
+    #[test]
+    fn pinned_never_moves() {
+        let mut c = GammaController::pinned(3);
+        c.update(true);
+        c.update(false);
+        assert_eq!(c.gamma(), 3);
+    }
+
+    #[test]
+    fn effective_respects_headroom() {
+        let c = GammaController::new(5, 1, 20);
+        assert_eq!(c.effective(100), 5);
+        assert_eq!(c.effective(4), 3); // room for 3 drafts + 1 emit
+        assert_eq!(c.effective(1), 1); // never below 1
+    }
+
+    #[test]
+    fn prop_gamma_always_in_bounds() {
+        forall("gamma bounds", Config { cases: 100, ..Config::default() }, |rng, _| {
+            let mut c = GammaController::new(5, 1, 20);
+            for _ in 0..200 {
+                c.update(rng.below(2) == 1);
+                if !(1..=20).contains(&c.gamma()) {
+                    return Err(format!("gamma {} out of bounds", c.gamma()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_update_law() {
+        forall("gamma +2/-1", Config { cases: 60, ..Config::default() }, |rng, _| {
+            let mut c = GammaController::new(5, 1, 20);
+            for _ in 0..50 {
+                let before = c.gamma();
+                let ok = rng.below(2) == 1;
+                c.update(ok);
+                let expect = if ok { (before + 2).min(20) } else { (before - 1).max(1) };
+                if c.gamma() != expect {
+                    return Err(format!("{before} -{ok}-> {} != {expect}", c.gamma()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

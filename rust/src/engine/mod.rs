@@ -1,0 +1,26 @@
+//! L3 coordinator: the speculative-decoding serving engine.
+//!
+//! The paper's contribution is the verification kernel; the system around
+//! it here is a vLLM-style serving loop specialised for speculative
+//! sampling:
+//!
+//! * [`request`] — request/result types and sampling parameters
+//! * [`gamma`] — the adaptive draft-length controller (the HF heuristic
+//!   the paper uses in §4.1: start at 5, +2 on all-accept, −1 otherwise)
+//! * [`verifier`] — pluggable verification backends: the three AOT HLO
+//!   methods (`baseline` / `exact` / `sigmoid`) plus a pure-rust `native`
+//!   oracle backend
+//! * [`core`] — continuous-batching decode loop over the PJRT artifacts
+//! * [`stats`] — acceptance/time accounting for the paper's tables
+
+pub mod core;
+pub mod gamma;
+pub mod request;
+pub mod stats;
+pub mod verifier;
+
+pub use core::{Engine, EngineConfig, Mode};
+pub use gamma::GammaController;
+pub use request::{FinishReason, GenRequest, GenResult};
+pub use stats::EngineStats;
+pub use verifier::{Backend, Verifier};

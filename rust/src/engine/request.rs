@@ -1,0 +1,122 @@
+//! Request/response types for the serving engine.
+
+/// A generation request (token-id level; the server layer handles text).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt_ids: Vec<i32>,
+    /// raw prompt text, encoded by whichever layer owns the tokenizer
+    /// (the TCP server's engine thread); ignored when `prompt_ids` is set
+    pub prompt_text: Option<String>,
+    pub max_new_tokens: usize,
+    /// target-model sampling temperature; `0.0` = greedy
+    pub temperature: f32,
+    /// draft-model sampling temperature (the draft usually samples at the
+    /// same temperature; exposed because greedy drafting raises acceptance)
+    pub draft_temperature: f32,
+    /// per-request RNG stream seed
+    pub seed: u64,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt_ids: Vec<i32>, max_new_tokens: usize) -> Self {
+        GenRequest {
+            id,
+            prompt_ids,
+            prompt_text: None,
+            max_new_tokens,
+            temperature: 0.8,
+            draft_temperature: 0.8,
+            seed: id,
+        }
+    }
+
+    pub fn greedy(mut self) -> Self {
+        self.temperature = 0.0;
+        self.draft_temperature = 0.0;
+        self
+    }
+
+    pub fn with_temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self.draft_temperature = t;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// hit `max_new_tokens`
+    Length,
+    /// generated EOS
+    Stop,
+    /// ran out of model context (S)
+    Context,
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: u64,
+    /// newly generated token ids (prompt excluded)
+    pub token_ids: Vec<i32>,
+    pub finish: FinishReason,
+    /// decode steps this request was live for
+    pub steps: usize,
+    /// draft tokens proposed / accepted while this request was live
+    pub drafted: usize,
+    pub accepted: usize,
+    /// request wall latency, seconds
+    pub latency: f64,
+}
+
+impl GenResult {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+
+    /// mean tokens emitted per decode step (the speculative speedup proxy)
+    pub fn tokens_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.token_ids.len() as f64 / self.steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let r = GenRequest::new(7, vec![1, 2, 3], 40).greedy().with_seed(9);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.seed, 9);
+        let r = GenRequest::new(8, vec![1], 10).with_temperature(1.3);
+        assert_eq!(r.draft_temperature, 1.3);
+    }
+
+    #[test]
+    fn result_rates() {
+        let r = GenResult {
+            id: 1,
+            token_ids: vec![5; 30],
+            finish: FinishReason::Length,
+            steps: 10,
+            drafted: 50,
+            accepted: 20,
+            latency: 0.5,
+        };
+        assert!((r.acceptance_rate() - 0.4).abs() < 1e-12);
+        assert!((r.tokens_per_step() - 3.0).abs() < 1e-12);
+    }
+}

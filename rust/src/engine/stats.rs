@@ -1,0 +1,87 @@
+//! Engine-level accounting for the paper's evaluation tables.
+
+use crate::util::stats::Series;
+
+/// Counters + per-step series collected while the engine runs.
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// decode steps executed
+    pub steps: usize,
+    /// draft tokens proposed / accepted across all steps
+    pub drafted: usize,
+    pub accepted: usize,
+    /// tokens emitted (accepted + resampled/bonus)
+    pub emitted: usize,
+    /// wall time of each decode step (seconds)
+    pub step_time: Series,
+    /// time inside the verification call stack per step (seconds) — the
+    /// paper's "profiling time" series
+    pub verify_time: Series,
+    /// γ used at each step
+    pub gamma_series: Series,
+    /// completed requests
+    pub finished: usize,
+}
+
+impl EngineStats {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+
+    /// Σ verification time over all steps — the quantity Table 1 compares.
+    pub fn profiling_time_total(&self) -> f64 {
+        self.verify_time.sum()
+    }
+
+    pub fn tokens_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.emitted as f64 / self.steps as f64
+    }
+
+    pub fn record_step(
+        &mut self,
+        gamma: usize,
+        drafted: usize,
+        accepted: usize,
+        emitted: usize,
+        step_secs: f64,
+        verify_secs: f64,
+    ) {
+        self.steps += 1;
+        self.drafted += drafted;
+        self.accepted += accepted;
+        self.emitted += emitted;
+        self.step_time.push(step_secs);
+        self.verify_time.push(verify_secs);
+        self.gamma_series.push(gamma as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut s = EngineStats::default();
+        s.record_step(5, 5, 3, 4, 0.010, 0.004);
+        s.record_step(4, 4, 4, 5, 0.008, 0.003);
+        assert_eq!(s.steps, 2);
+        assert!((s.acceptance_rate() - 7.0 / 9.0).abs() < 1e-12);
+        assert!((s.profiling_time_total() - 0.007).abs() < 1e-12);
+        assert!((s.tokens_per_step() - 4.5).abs() < 1e-12);
+        assert!((s.gamma_series.mean() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_safe() {
+        let s = EngineStats::default();
+        assert_eq!(s.acceptance_rate(), 0.0);
+        assert_eq!(s.tokens_per_step(), 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! # specd — optimized speculative sampling serving engine
+//!
+//! Reproduction of *"Optimized Speculative Sampling for GPU Hardware
+//! Accelerators"* (Wagner et al., EMNLP 2024) as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: continuous batcher,
+//!   adaptive-γ controller, verification backends, TCP server, metrics,
+//!   and the device cost model used for GPU-shaped performance claims.
+//! * **L2 (python/compile, build time)** — JAX graphs for the draft/target
+//!   models and the fused verification step, lowered once to HLO text.
+//! * **L1 (python/compile/kernels, build time)** — the paper's tiled
+//!   verification kernels written in Pallas.
+//!
+//! Python never runs on the request path: everything the engine executes is
+//! an AOT-compiled artifact loaded from `artifacts/` via PJRT
+//! ([`runtime`]), plus a pure-rust oracle ([`sampling`]) used for
+//! cross-validation and as a native fallback backend.
+//!
+//! Entry points: [`engine::Engine`] for in-process serving,
+//! [`server`] for the TCP front-end, [`tables`] for regenerating every
+//! table/figure of the paper's evaluation section.
+
+pub mod engine;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod server;
+pub mod simulator;
+pub mod tables;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifacts directory, overridable via `SPECD_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("SPECD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,265 @@
+//! `specd` CLI — serve, generate, evaluate, and regenerate the paper's
+//! tables/figures.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use specd::engine::{Backend, Engine, EngineConfig, Mode};
+use specd::runtime::Runtime;
+use specd::sampling::Method;
+use specd::server::{Server, ServerConfig};
+use specd::simulator::DeviceProfile;
+use specd::tables::{self, EvalContext, TableId};
+use specd::tokenizer::Tokenizer;
+use specd::util::cli::Command;
+use specd::workload::{make_tasks, TaskKind};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match argv.split_first() {
+        Some((s, rest)) => (s.as_str(), rest.to_vec()),
+        None => ("help", Vec::new()),
+    };
+    let code = match dispatch(sub, &rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
+    match sub {
+        "info" => info(rest),
+        "run" => run(rest),
+        "serve" => serve(rest),
+        "client" => client(rest),
+        "eval" => eval(rest),
+        "table" | "figure" => table(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", help_text());
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{}", help_text()),
+    }
+}
+
+fn help_text() -> &'static str {
+    "specd — optimized speculative sampling serving engine (EMNLP 2024 reproduction)\n\
+     \n\
+     subcommands:\n\
+     \x20 info                         artifact/manifest summary\n\
+     \x20 run     --prompt <text>      one-off generation\n\
+     \x20 serve   --addr <host:port>   TCP JSON-lines server\n\
+     \x20 client  --prompt <text>      send a request to a running server\n\
+     \x20 eval    --task asr|sum       workload evaluation (WER / ROUGE-1)\n\
+     \x20 table   --id t1..t8|all      regenerate a paper table\n\
+     \x20 figure  --id f3|f4|f5        regenerate a paper figure's data\n\
+     \n\
+     common options: --method baseline|exact|sigmoid, --backend hlo|native,\n\
+     --pair base|large, --batch N, --alpha/--beta, --n <examples>, --seed"
+}
+
+fn parse_method(p: &specd::util::cli::Parsed) -> Result<Method> {
+    match p.str("method") {
+        "baseline" => Ok(Method::Baseline),
+        "exact" => Ok(Method::Exact),
+        "sigmoid" => Ok(Method::sigmoid(
+            p.f64("alpha").map_err(|e| anyhow!(e))? as f32,
+            p.f64("beta").map_err(|e| anyhow!(e))? as f32,
+        )),
+        "sigmoid16" => Ok(Method::sigmoid16(
+            p.f64("alpha").map_err(|e| anyhow!(e))? as f32,
+            p.f64("beta").map_err(|e| anyhow!(e))? as f32,
+        )),
+        other => bail!("unknown method {other:?}"),
+    }
+}
+
+fn engine_opts(cmd: Command) -> Command {
+    cmd.opt("method", "exact", "verification method")
+        .opt("backend", "hlo", "verifier backend (hlo|native)")
+        .opt("pair", "base", "model pair")
+        .opt("batch", "1", "engine slots (must match artifacts)")
+        .opt("alpha", "-1000", "sigmoid alpha")
+        .opt("beta", "1000", "sigmoid beta")
+        .opt("gamma", "5", "initial draft length")
+        .flag("self-draft", "draft via target-layer skipping (self-speculative)")
+        .opt("seed", "0", "rng seed")
+}
+
+fn build_engine(p: &specd::util::cli::Parsed, mode: Mode) -> Result<(Engine, Tokenizer)> {
+    let runtime = Arc::new(Runtime::open_default()?);
+    let tokenizer = Tokenizer::load(&specd::artifacts_dir().join("tokenizer.json"))?;
+    let config = EngineConfig {
+        pair: p.str("pair").to_string(),
+        batch: p.usize("batch").map_err(|e| anyhow!(e))?,
+        method: parse_method(p)?,
+        backend: Backend::parse(p.str("backend"))
+            .ok_or_else(|| anyhow!("bad --backend"))?,
+        mode,
+        gamma_init: p.usize("gamma").map_err(|e| anyhow!(e))?,
+        gamma_pinned: false,
+        self_draft: p.flag("self-draft"),
+        seed: p.u64("seed").map_err(|e| anyhow!(e))?,
+    };
+    Ok((Engine::new(runtime, config)?, tokenizer))
+}
+
+fn info(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "artifact summary");
+    cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let runtime = Runtime::open_default()?;
+    let m = &runtime.manifest;
+    println!("specd {}", specd::version());
+    println!("artifacts dir : {}", m.dir.display());
+    println!("vocab         : {}", m.vocab_size);
+    println!("seq len       : {}", m.seq_len);
+    println!("gmax          : {}", m.gmax);
+    for (pair, (t, d)) in &m.pairs {
+        println!("pair {pair:<8}: target {t} params, draft {d} params");
+    }
+    println!("artifacts     : {}", m.entries.len());
+    for kind in ["draft_step", "target_step", "target_score", "verify"] {
+        let n = m.entries.iter().filter(|e| e.kind == kind).count();
+        println!("  {kind:<14} {n}");
+    }
+    Ok(())
+}
+
+fn run(rest: &[String]) -> Result<()> {
+    let cmd = engine_opts(Command::new("run", "one-off generation"))
+        .req("prompt", "prompt text")
+        .opt("max-new", "64", "max new tokens")
+        .opt("temperature", "0.8", "sampling temperature")
+        .flag("autoregressive", "disable speculation (target-only)");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let mode = if p.flag("autoregressive") {
+        Mode::Autoregressive
+    } else {
+        Mode::Speculative
+    };
+    let (mut engine, tok) = build_engine(&p, mode)?;
+    let out = engine.generate_text(
+        &tok,
+        &[(p.str("prompt"), p.usize("max-new").map_err(|e| anyhow!(e))?)],
+        p.f64("temperature").map_err(|e| anyhow!(e))? as f32,
+    )?;
+    for (text, r) in out {
+        println!("{}{}", p.str("prompt"), text);
+        eprintln!(
+            "[{} tokens, {} steps, {:.2} tok/step, accept {:.1}%, {:.1}ms]",
+            r.token_ids.len(),
+            r.steps,
+            r.tokens_per_step(),
+            r.acceptance_rate() * 100.0,
+            r.latency * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn serve(rest: &[String]) -> Result<()> {
+    let cmd = engine_opts(Command::new("serve", "TCP JSON-lines server"))
+        .opt("addr", "127.0.0.1:7077", "bind address");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let (engine, tok) = build_engine(&p, Mode::Speculative)?;
+    let server = Server::start(
+        engine,
+        tok,
+        ServerConfig {
+            addr: p.str("addr").to_string(),
+        },
+    )?;
+    println!("listening on {} (ctrl-c to stop)", server.addr());
+    server.serve_forever()
+}
+
+fn client(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("client", "send one request to a specd server")
+        .opt("addr", "127.0.0.1:7077", "server address")
+        .req("prompt", "prompt text")
+        .opt("max-new", "64", "max new tokens")
+        .opt("temperature", "0.8", "sampling temperature");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let mut c = specd::server::service::Client::connect(p.str("addr"))?;
+    let resp = c.request(
+        1,
+        p.str("prompt"),
+        p.usize("max-new").map_err(|e| anyhow!(e))?,
+        p.f64("temperature").map_err(|e| anyhow!(e))? as f32,
+    )?;
+    println!("{}", resp.dump());
+    Ok(())
+}
+
+fn eval(rest: &[String]) -> Result<()> {
+    let cmd = engine_opts(Command::new("eval", "workload evaluation"))
+        .opt("task", "asr", "asr | summarize")
+        .opt("n", "8", "examples")
+        .opt("temperature", "0.7", "sampling temperature");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let kind = TaskKind::parse(p.str("task")).ok_or_else(|| anyhow!("bad --task"))?;
+    let mut ctx = EvalContext::open_default(p.usize("n").map_err(|e| anyhow!(e))?)?;
+    ctx.pair = p.str("pair").to_string();
+    ctx.batch = p.usize("batch").map_err(|e| anyhow!(e))?;
+    ctx.temperature = p.f64("temperature").map_err(|e| anyhow!(e))? as f32;
+    let tasks = make_tasks(&ctx.corpus, kind, ctx.n_examples, 42);
+    let method = parse_method(&p)?;
+    let backend =
+        Backend::parse(p.str("backend")).ok_or_else(|| anyhow!("bad --backend"))?;
+    let run = tables::run_method(&ctx, &tasks, method, backend, 5, false)?;
+    println!(
+        "task={:?} method={} n={}",
+        kind,
+        method.name(),
+        ctx.n_examples
+    );
+    println!("{} = {:.3}", kind.metric_name(), run.metric);
+    println!(
+        "profiling total = {:.2}ms over {} steps",
+        run.profiling_total * 1e3,
+        run.steps
+    );
+    println!("per-step verify = {}ms", run.per_step_verify.mean_std_ms());
+    println!(
+        "acceptance = {:.1}%  mean γ = {:.2}",
+        run.acceptance_rate * 100.0,
+        run.gamma_mean
+    );
+    println!(
+        "wallclock = {:.3}s  tokens = {}",
+        run.wallclock, run.emitted_tokens
+    );
+    Ok(())
+}
+
+fn table(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("table", "regenerate a paper table/figure")
+        .req("id", "t1|t2|t3|t4|t5|t6|t8|f3|f4|f5|all")
+        .opt("n", "8", "examples per run")
+        .opt("pair", "base", "model pair")
+        .opt("batch", "1", "engine slots")
+        .opt("device", "a100", "simulated device (a100|2080ti)")
+        .opt("seed", "1234", "rng seed");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let device = DeviceProfile::by_name(p.str("device"))
+        .ok_or_else(|| anyhow!("unknown device {:?}", p.str("device")))?;
+    let mut ctx = EvalContext::open_default(p.usize("n").map_err(|e| anyhow!(e))?)?;
+    ctx.pair = p.str("pair").to_string();
+    ctx.batch = p.usize("batch").map_err(|e| anyhow!(e))?;
+    ctx.seed = p.u64("seed").map_err(|e| anyhow!(e))?;
+    let ids: Vec<TableId> = if p.str("id") == "all" {
+        TableId::ALL.to_vec()
+    } else {
+        vec![TableId::parse(p.str("id"))
+            .ok_or_else(|| anyhow!("unknown table id {:?}", p.str("id")))?]
+    };
+    for id in ids {
+        println!("{}", tables::generate(id, &ctx, device)?);
+    }
+    Ok(())
+}

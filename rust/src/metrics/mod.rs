@@ -1,0 +1,8 @@
+//! Task metrics used by the paper's evaluation: WER for the ASR-role
+//! workload, ROUGE-1 for the summarization-role workload.
+
+pub mod rouge;
+pub mod wer;
+
+pub use rouge::rouge1_f1;
+pub use wer::wer;

@@ -1,0 +1,97 @@
+//! ROUGE-1 (unigram overlap F1) — the summarization metric in Table 1.
+//!
+//! Standard clipped-count formulation (Lin 2004): overlap = Σ_w min(
+//! count_hyp(w), count_ref(w)); precision = overlap/|hyp|, recall =
+//! overlap/|ref|, F1 = harmonic mean.
+
+use std::collections::HashMap;
+
+fn counts(words: &[&str]) -> HashMap<String, usize> {
+    let mut map = HashMap::new();
+    for w in words {
+        *map.entry(w.to_lowercase()).or_insert(0) += 1;
+    }
+    map
+}
+
+/// ROUGE-1 precision/recall/F1.
+pub fn rouge1(reference: &str, hypothesis: &str) -> (f64, f64, f64) {
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    let h: Vec<&str> = hypothesis.split_whitespace().collect();
+    if r.is_empty() || h.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let rc = counts(&r);
+    let hc = counts(&h);
+    let overlap: usize = hc
+        .iter()
+        .map(|(w, c)| c.min(rc.get(w).unwrap_or(&0)))
+        .sum();
+    let p = overlap as f64 / h.len() as f64;
+    let rec = overlap as f64 / r.len() as f64;
+    let f1 = if p + rec == 0.0 {
+        0.0
+    } else {
+        2.0 * p * rec / (p + rec)
+    };
+    (p, rec, f1)
+}
+
+/// Convenience: just the F1 (what Table 1 reports as "ROUGE-1").
+pub fn rouge1_f1(reference: &str, hypothesis: &str) -> f64 {
+    rouge1(reference, hypothesis).2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_text_scores_one() {
+        let (p, r, f) = rouge1("the cat sat", "the cat sat");
+        assert_eq!((p, r, f), (1.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn disjoint_text_scores_zero() {
+        assert_eq!(rouge1_f1("aa bb", "cc dd"), 0.0);
+    }
+
+    #[test]
+    fn known_partial_overlap() {
+        // ref: "the cat sat on the mat" (6), hyp: "the cat" (2)
+        // clipped overlap = 2 -> p = 1.0, r = 1/3, f1 = 0.5
+        let (p, r, f) = rouge1("the cat sat on the mat", "the cat");
+        assert!((p - 1.0).abs() < 1e-12);
+        assert!((r - 1.0 / 3.0).abs() < 1e-12);
+        assert!((f - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counts_are_clipped() {
+        // hyp repeats "the" 4x but ref has it twice -> overlap clipped to 2
+        let (p, _, _) = rouge1("the a the b", "the the the the");
+        assert!((p - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert_eq!(rouge1_f1("The Cat", "the cat"), 1.0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(rouge1_f1("", "x"), 0.0);
+        assert_eq!(rouge1_f1("x", ""), 0.0);
+    }
+
+    #[test]
+    fn symmetry_of_f1() {
+        let a = "the scheduler batches requests";
+        let b = "the batcher schedules the queue";
+        let f1 = rouge1_f1(a, b);
+        let f2 = rouge1_f1(b, a);
+        assert!((f1 - f2).abs() < 1e-12);
+        assert!(f1 > 0.0 && f1 < 1.0);
+    }
+}

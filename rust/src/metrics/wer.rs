@@ -1,0 +1,116 @@
+//! Word error rate: Levenshtein distance over whitespace-split words,
+//! normalised by reference length — the ASR metric in Table 1/4.
+
+/// Word-level edit distance (substitution/insertion/deletion all cost 1),
+/// two-row dynamic program: O(|ref|·|hyp|) time, O(|hyp|) space.
+pub fn word_edit_distance(reference: &[&str], hypothesis: &[&str]) -> usize {
+    if reference.is_empty() {
+        return hypothesis.len();
+    }
+    if hypothesis.is_empty() {
+        return reference.len();
+    }
+    let mut prev: Vec<usize> = (0..=hypothesis.len()).collect();
+    let mut curr = vec![0usize; hypothesis.len() + 1];
+    for (i, rw) in reference.iter().enumerate() {
+        curr[0] = i + 1;
+        for (j, hw) in hypothesis.iter().enumerate() {
+            let sub = prev[j] + usize::from(rw != hw);
+            let del = prev[j + 1] + 1;
+            let ins = curr[j] + 1;
+            curr[j + 1] = sub.min(del).min(ins);
+        }
+        std::mem::swap(&mut prev, &mut curr);
+    }
+    prev[hypothesis.len()]
+}
+
+fn words(s: &str) -> Vec<&str> {
+    s.split_whitespace().collect()
+}
+
+/// WER = edit_distance(ref_words, hyp_words) / |ref_words|.
+///
+/// Case-sensitive (both sides come from the same tokenizer). An empty
+/// reference with a non-empty hypothesis is scored as 1.0 per hyp word
+/// cap at 1.0? — no: standard WER is unbounded above; we follow that
+/// (the paper's ±10^5 row reports WER 29.34).
+pub fn wer(reference: &str, hypothesis: &str) -> f64 {
+    let r = words(reference);
+    let h = words(hypothesis);
+    if r.is_empty() {
+        return if h.is_empty() { 0.0 } else { h.len() as f64 };
+    }
+    word_edit_distance(&r, &h) as f64 / r.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Config};
+
+    #[test]
+    fn identical_is_zero() {
+        assert_eq!(wer("the scheduler accepts", "the scheduler accepts"), 0.0);
+    }
+
+    #[test]
+    fn known_distances() {
+        // 1 substitution over 3 words
+        assert!((wer("a b c", "a x c") - 1.0 / 3.0).abs() < 1e-12);
+        // 1 deletion
+        assert!((wer("a b c", "a c") - 1.0 / 3.0).abs() < 1e-12);
+        // 1 insertion
+        assert!((wer("a b c", "a b x c") - 1.0 / 3.0).abs() < 1e-12);
+        // everything wrong
+        assert!((wer("a b", "x y") - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_cases() {
+        assert_eq!(wer("", ""), 0.0);
+        assert_eq!(wer("a b", ""), 1.0);
+        assert_eq!(wer("", "a b c"), 3.0);
+    }
+
+    #[test]
+    fn wer_can_exceed_one() {
+        // hypothesis much longer than reference (paper Table 2: WER 29.34)
+        let h = vec!["x"; 50].join(" ");
+        assert!(wer("a", &h) > 10.0);
+    }
+
+    #[test]
+    fn whitespace_normalisation() {
+        assert_eq!(wer("a  b\t c", "a b c"), 0.0);
+    }
+
+    #[test]
+    fn prop_triangle_like_bounds() {
+        forall("wer bounds", Config { cases: 60, ..Config::default() }, |rng, size| {
+            let vocab = ["alpha", "beta", "gamma", "delta"];
+            let mk = |rng: &mut crate::util::rng::Pcg32, n: usize| {
+                (0..n).map(|_| *rng.choice(&vocab)).collect::<Vec<_>>().join(" ")
+            };
+            let n = size.max(1);
+            let a = mk(rng, n);
+            let m = rng.below(2 * n as u32) as usize;
+            let b = mk(rng, m);
+            let w = wer(&a, &b);
+            let na = a.split_whitespace().count() as f64;
+            let nb = b.split_whitespace().count() as f64;
+            // distance bounded by max(len) => wer <= max(na, nb)/na
+            if w < 0.0 || w > (na.max(nb) / na) + 1e-12 {
+                return Err(format!("wer {w} out of bounds ({na}, {nb})"));
+            }
+            // symmetry of the underlying distance
+            let w2 = wer(&b, &a);
+            let d1 = w * na;
+            let d2 = if nb == 0.0 { w2 } else { w2 * nb };
+            if (d1 - d2).abs() > 1e-9 {
+                return Err(format!("distance asymmetry {d1} vs {d2}"));
+            }
+            Ok(())
+        });
+    }
+}

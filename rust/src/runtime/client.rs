@@ -1,0 +1,226 @@
+//! PJRT CPU client wrapper: HLO-text loading, executable caching,
+//! profiled execution, and a peak-memory gauge for the Fig. 4/5
+//! reproduction.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+use super::tensor::HostTensor;
+use crate::util::timer::Profiler;
+
+/// Peak/current host-buffer accounting. PJRT-CPU buffers alias host
+/// memory, so literal traffic is the faithful "device memory" proxy;
+/// [`crate::simulator`] scales this model to real HBM capacities.
+#[derive(Debug, Default)]
+pub struct MemoryGauge {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl MemoryGauge {
+    pub fn alloc(&self, bytes: usize) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn free(&self, bytes: usize) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn current_bytes(&self) -> usize {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_peak(&self) {
+        self.peak
+            .store(self.current.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// A compiled artifact plus its manifest record.
+pub struct LoadedExecutable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    profiler: Arc<Profiler>,
+    gauge: Arc<MemoryGauge>,
+}
+
+impl LoadedExecutable {
+    /// Execute with shape-checked inputs; returns the tuple elements.
+    ///
+    /// Scope accounting: `exec/<name>` for the PJRT call itself plus
+    /// `exec_kind/<kind>[/<method>]` aggregates used by the Δ%-profiling
+    /// tables.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, (dtype, shape))) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            t.check_spec(dtype, shape, i)
+                .with_context(|| format!("artifact {}", self.entry.name))?;
+        }
+
+        let in_bytes: usize = inputs.iter().map(HostTensor::size_bytes).sum();
+        self.gauge.alloc(in_bytes);
+
+        let started = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.entry.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?
+            .to_tuple()
+            .context("untupling result")?;
+        let outputs: Vec<HostTensor> = tuple
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        let elapsed = started.elapsed();
+
+        let out_bytes: usize = outputs.iter().map(HostTensor::size_bytes).sum();
+        self.gauge.alloc(out_bytes);
+        self.gauge.free(in_bytes + out_bytes);
+
+        self.profiler.record(&format!("exec/{}", self.entry.name), elapsed);
+        let kind_scope = match &self.entry.method {
+            Some(m) => format!("exec_kind/{}/{}", self.entry.kind, m),
+            None => format!("exec_kind/{}", self.entry.kind),
+        };
+        self.profiler.record(&kind_scope, elapsed);
+        Ok(outputs)
+    }
+}
+
+/// PJRT CPU runtime with an executable cache keyed by artifact name.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub profiler: Arc<Profiler>,
+    pub gauge: Arc<MemoryGauge>,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<LoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (compiles nothing yet — executables
+    /// are compiled lazily on first use and cached).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.entries.len()
+        );
+        Ok(Runtime {
+            manifest,
+            profiler: Arc::new(Profiler::new()),
+            gauge: Arc::new(MemoryGauge::default()),
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default location (`artifacts/` or `$SPECD_ARTIFACTS`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(&crate::artifacts_dir())
+    }
+
+    /// Load (compile) an artifact by name, with caching.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.by_name(name)?.clone();
+        let _scope = self.profiler.scope(&format!("compile/{name}"));
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let loaded = Arc::new(LoadedExecutable {
+            entry,
+            exe,
+            profiler: self.profiler.clone(),
+            gauge: self.gauge.clone(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Load the verify artifact for (method, b, g, v).
+    pub fn load_verify(
+        &self,
+        method: &str,
+        b: usize,
+        g: usize,
+        v: usize,
+    ) -> Result<Arc<LoadedExecutable>> {
+        let name = self.manifest.verify(method, b, g, v)?.name.clone();
+        self.load(&name)
+    }
+
+    /// Load a model artifact (`draft_step` / `target_step` /
+    /// `target_score`) for a pair + batch size.
+    pub fn load_model(&self, kind: &str, pair: &str, b: usize) -> Result<Arc<LoadedExecutable>> {
+        let name = self.manifest.model(kind, pair, b)?.name.clone();
+        self.load(&name)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// PJRT handles live behind Arc'd C++ objects; the client is used from the
+// engine thread and the server threads.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+unsafe impl Send for LoadedExecutable {}
+unsafe impl Sync for LoadedExecutable {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_gauge_tracks_peak() {
+        let g = MemoryGauge::default();
+        g.alloc(100);
+        g.alloc(50);
+        g.free(120);
+        g.alloc(10);
+        assert_eq!(g.peak_bytes(), 150);
+        assert_eq!(g.current_bytes(), 40);
+        g.reset_peak();
+        assert_eq!(g.peak_bytes(), 40);
+    }
+
+    // Runtime/executable tests live in rust/tests/it_runtime.rs — they
+    // need built artifacts and the PJRT plugin.
+}

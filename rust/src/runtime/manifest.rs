@@ -1,0 +1,237 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One artifact's manifest record.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub method: Option<String>,
+    pub pair: Option<String>,
+    pub b: usize,
+    pub g: usize,
+    pub v: usize,
+    pub s: usize,
+    /// (dtype, shape) per positional input
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Value, dir: &Path) -> Result<Self> {
+        let name = v
+            .req("name")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .context("name")?
+            .to_string();
+        let file = dir.join(
+            v.req("file")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .context("file")?,
+        );
+        let get_usize = |key: &str| v.get(key).and_then(Value::as_usize).unwrap_or(0);
+        let iospec = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+            v.req(key)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .context("iospec not array")?
+                .iter()
+                .map(|entry| {
+                    let pair = entry.as_arr().context("iospec entry")?;
+                    let dtype = pair[0].as_str().context("dtype")?.to_string();
+                    let shape = pair[1]
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((dtype, shape))
+                })
+                .collect()
+        };
+        Ok(ArtifactEntry {
+            name,
+            file,
+            kind: v
+                .req("kind")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .context("kind")?
+                .to_string(),
+            method: v.get("method").and_then(Value::as_str).map(String::from),
+            pair: v.get("pair").and_then(Value::as_str).map(String::from),
+            b: get_usize("b"),
+            g: get_usize("g"),
+            v: get_usize("v"),
+            s: get_usize("s"),
+            inputs: iospec("inputs")?,
+            outputs: iospec("outputs")?,
+        })
+    }
+}
+
+/// Parsed manifest with lookup indexes.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub gmax: usize,
+    /// pair name -> (target params, draft params)
+    pub pairs: HashMap<String, (usize, usize)>,
+    pub entries: Vec<ArtifactEntry>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::from_json(&text, dir)
+    }
+
+    pub fn from_json(text: &str, dir: &Path) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version = v.get("version").and_then(Value::as_i64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let entries: Vec<ArtifactEntry> = v
+            .req("artifacts")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .context("artifacts")?
+            .iter()
+            .map(|e| ArtifactEntry::from_json(e, dir))
+            .collect::<Result<_>>()?;
+        let by_name = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        let mut pairs = HashMap::new();
+        if let Some(Value::Obj(fields)) = v.get("pairs") {
+            for (name, p) in fields {
+                let t = p.get("target_params").and_then(Value::as_usize).unwrap_or(0);
+                let d = p.get("draft_params").and_then(Value::as_usize).unwrap_or(0);
+                pairs.insert(name.clone(), (t, d));
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab_size: v.get("vocab_size").and_then(Value::as_usize).unwrap_or(0),
+            seq_len: v.get("seq_len").and_then(Value::as_usize).unwrap_or(0),
+            gmax: v.get("gmax").and_then(Value::as_usize).unwrap_or(0),
+            pairs,
+            entries,
+            by_name,
+        })
+    }
+
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.entries[i])
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Find the verify artifact for (method, b, g, v).
+    pub fn verify(&self, method: &str, b: usize, g: usize, v: usize) -> Result<&ArtifactEntry> {
+        self.by_name(&format!("verify_{method}_b{b}_g{g}_v{v}"))
+    }
+
+    pub fn model(&self, kind: &str, pair: &str, b: usize) -> Result<&ArtifactEntry> {
+        self.by_name(&format!("{kind}_{pair}_b{b}"))
+    }
+
+    /// γ values available for a (method, b, v) verify family, sorted.
+    pub fn verify_gammas(&self, method: &str, b: usize, v: usize) -> Vec<usize> {
+        let mut gs: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| {
+                e.kind == "verify"
+                    && e.method.as_deref() == Some(method)
+                    && e.b == b
+                    && e.v == v
+            })
+            .map(|e| e.g)
+            .collect();
+        gs.sort_unstable();
+        gs
+    }
+
+    /// batch sizes available for a pair's model artifacts.
+    pub fn model_batches(&self, pair: &str) -> Vec<usize> {
+        let mut bs: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "draft_step" && e.pair.as_deref() == Some(pair))
+            .map(|e| e.b)
+            .collect();
+        bs.sort_unstable();
+        bs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "version": 1, "vocab_size": 128, "seq_len": 256, "gmax": 20,
+        "pairs": {"base": {"target": "target-base", "draft": "draft-base",
+                            "target_params": 900000, "draft_params": 120000}},
+        "artifacts": [
+            {"name": "draft_step_base_b1", "file": "draft_step_base_b1.hlo.txt",
+             "kind": "draft_step", "pair": "base", "b": 1, "s": 256, "v": 128,
+             "inputs": [["int32",[1,256]],["int32",[1]],["float32",[1]],["float32",[1]]],
+             "outputs": [["int32",[1]],["float32",[1,128]]]},
+            {"name": "verify_exact_b1_g5_v128", "file": "verify_exact_b1_g5_v128.hlo.txt",
+             "kind": "verify", "method": "exact", "b": 1, "g": 5, "v": 128,
+             "inputs": [["float32",[1,6,128]]], "outputs": [["int32",[1]]]},
+            {"name": "verify_exact_b1_g2_v128", "file": "verify_exact_b1_g2_v128.hlo.txt",
+             "kind": "verify", "method": "exact", "b": 1, "g": 2, "v": 128,
+             "inputs": [["float32",[1,3,128]]], "outputs": [["int32",[1]]]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::from_json(DOC, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.vocab_size, 128);
+        assert_eq!(m.pairs["base"], (900000, 120000));
+        let e = m.verify("exact", 1, 5, 128).unwrap();
+        assert_eq!(e.g, 5);
+        assert_eq!(e.inputs[0].1, vec![1, 6, 128]);
+        assert!(m.verify("exact", 1, 9, 128).is_err());
+        assert_eq!(m.model("draft_step", "base", 1).unwrap().kind, "draft_step");
+    }
+
+    #[test]
+    fn gamma_listing_sorted() {
+        let m = Manifest::from_json(DOC, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.verify_gammas("exact", 1, 128), vec![2, 5]);
+        assert!(m.verify_gammas("sigmoid", 1, 128).is_empty());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = DOC.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::from_json(&bad, Path::new("/tmp")).is_err());
+    }
+}

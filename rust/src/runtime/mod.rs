@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! * [`tensor`] — host-side tensor type + literal conversion
+//! * [`manifest`] — typed view of `artifacts/manifest.json`
+//! * [`client`] — PJRT CPU client wrapper, executable cache, memory gauge
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{LoadedExecutable, Runtime};
+pub use manifest::{ArtifactEntry, Manifest};
+pub use tensor::HostTensor;

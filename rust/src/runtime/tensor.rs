@@ -1,0 +1,159 @@
+//! Host-side tensors and conversion to/from `xla::Literal`.
+//!
+//! Only the dtypes the artifacts use (f32, i32) are supported; shapes are
+//! explicit so input validation against the manifest happens before PJRT
+//! sees anything.
+
+use anyhow::{bail, Context, Result};
+
+/// View a 4-byte-element slice as raw bytes (safe: f32/i32 are plain old
+/// data with alignment ≥ 1).
+fn bytemuck_cast<T>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::f32(&[], vec![x])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "float32",
+            HostTensor::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    /// Convert to an XLA literal.
+    ///
+    /// Perf iteration 2 (EXPERIMENTS.md §Perf): build the literal in ONE
+    /// copy via `create_from_shape_and_untyped_data` instead of
+    /// `vec1(...).reshape(...)`, which copied the buffer twice (once into
+    /// the rank-1 literal, once into the reshaped one). At the bench-scale
+    /// verify inputs (γ=5, V=32k ⇒ ~2.6MB of logits per step) this removes
+    /// ~5MB of memcpy per verification call.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match self {
+            HostTensor::F32 { data, .. } => (xla::ElementType::F32, bytemuck_cast(data)),
+            HostTensor::I32 { data, .. } => (xla::ElementType::S32, bytemuck_cast(data)),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), bytes)
+            .with_context(|| format!("creating literal {:?} {:?}", ty, self.shape()))
+    }
+
+    /// Convert from an XLA literal (copies).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::f32(&dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::i32(&dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported artifact dtype {other:?}"),
+        }
+    }
+
+    /// Validate against a manifest iospec entry `(dtype, shape)`.
+    pub fn check_spec(&self, dtype: &str, shape: &[usize], arg_idx: usize) -> Result<()> {
+        if self.dtype() != dtype {
+            bail!(
+                "arg {arg_idx}: dtype mismatch: got {}, artifact wants {dtype}",
+                self.dtype()
+            );
+        }
+        if self.shape() != shape {
+            bail!(
+                "arg {arg_idx}: shape mismatch: got {:?}, artifact wants {shape:?}",
+                self.shape()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), "float32");
+        assert_eq!(t.size_bytes(), 24);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn spec_check() {
+        let t = HostTensor::i32(&[4], vec![1, 2, 3, 4]);
+        assert!(t.check_spec("int32", &[4], 0).is_ok());
+        assert!(t.check_spec("float32", &[4], 0).is_err());
+        assert!(t.check_spec("int32", &[2, 2], 0).is_err());
+    }
+
+    // literal round-trips live in rust/tests/ (they need the PJRT runtime)
+}

@@ -1,0 +1,16 @@
+//! Pure-rust speculative sampling oracle.
+//!
+//! Bit-comparable reimplementation (in f32, matching the AOT graphs'
+//! arithmetic) of the verification semantics in §3.1 Eq. 1-3. Three roles:
+//!
+//! 1. cross-validation: integration tests execute the HLO artifacts and
+//!    assert their outputs against this module;
+//! 2. a `native` verifier backend for [`crate::engine`] — useful when the
+//!    model vocab is small and PJRT dispatch overhead dominates;
+//! 3. the workload for the L3 micro-benchmarks.
+
+pub mod verify;
+
+pub use verify::{
+    inverse_cdf_sample, sigmoid_approx, softmax_rows, spec_step, Method, StepOutput,
+};

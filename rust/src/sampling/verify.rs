@@ -1,0 +1,614 @@
+//! Speculative verification semantics in pure rust (f32).
+//!
+//! Mirrors `python/compile/verify_graph.py` operation-for-operation so the
+//! outputs are comparable with the AOT executables: stable softmax, the
+//! guarded tau division, residual resampling via unnormalised inverse CDF,
+//! and the bonus draw on all-accept.
+
+use crate::util::timer::Profiler;
+
+/// Verification method (§3.2). `Baseline` and `Exact` are semantically
+/// identical here (the distinction is kernel structure, which only exists
+/// on the accelerator); both are provided so profiling scopes match the
+/// HLO backends one-to-one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Baseline,
+    Exact,
+    /// Element-wise sigmoid approximation with scaling constants (α, β).
+    Sigmoid { alpha_milli: i64, beta_milli: i64 },
+    /// Sigmoid approximation with the (z−α)/(β−α) rescale performed in
+    /// fp16 — the paper's actual numeric regime for Whisper, which
+    /// overflows (→ NaN → reject-everything) at |α| = 1e5 (Table 2).
+    Sigmoid16 { alpha_milli: i64, beta_milli: i64 },
+}
+
+impl Method {
+    pub fn sigmoid(alpha: f32, beta: f32) -> Self {
+        Method::Sigmoid {
+            alpha_milli: (alpha * 1000.0) as i64,
+            beta_milli: (beta * 1000.0) as i64,
+        }
+    }
+
+    pub fn sigmoid16(alpha: f32, beta: f32) -> Self {
+        Method::Sigmoid16 {
+            alpha_milli: (alpha * 1000.0) as i64,
+            beta_milli: (beta * 1000.0) as i64,
+        }
+    }
+
+    pub fn alpha_beta(&self) -> Option<(f32, f32)> {
+        match self {
+            Method::Sigmoid {
+                alpha_milli,
+                beta_milli,
+            }
+            | Method::Sigmoid16 {
+                alpha_milli,
+                beta_milli,
+            } => Some((*alpha_milli as f32 / 1000.0, *beta_milli as f32 / 1000.0)),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Baseline => "baseline",
+            Method::Exact => "exact",
+            Method::Sigmoid { .. } => "sigmoid",
+            Method::Sigmoid16 { .. } => "sigmoid16",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fp16 emulation (no half type in the vendored crate set)
+
+/// Round an f32 to the nearest IEEE binary16 and back (round-to-nearest-
+/// even, overflow to ±inf) — enough to emulate the paper's fp16 rescale.
+pub fn f16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits >> 31;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / nan pass through
+        return x;
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1f {
+        // overflow -> ±inf
+        return f32::from_bits((sign << 31) | 0x7f80_0000);
+    }
+    if e16 <= 0 {
+        // subnormal-or-zero in f16; flush tiny values through a scaled
+        // round (adequate here: logits scaled by 1e-3..1e-5 stay normal)
+        if e16 < -10 {
+            return if sign == 1 { -0.0 } else { 0.0 };
+        }
+        let shift = (14 - e16) as u32; // bits to drop from the 24-bit sig
+        let sig = frac | 0x80_0000;
+        let rounded = round_even(sig, shift);
+        let val = rounded as f32 * (0.5f32).powi(24 - shift as i32 - 1 + 15 + 10);
+        return if sign == 1 { -val } else { val };
+    }
+    // normal: keep 10 fraction bits of the 23
+    let rounded = round_even(frac, 13);
+    let (frac16, e16) = if rounded >= 1 << 10 {
+        (0u32, e16 + 1)
+    } else {
+        (rounded, e16)
+    };
+    if e16 >= 0x1f {
+        return f32::from_bits((sign << 31) | 0x7f80_0000);
+    }
+    let exp32 = (e16 - 15 + 127) as u32;
+    f32::from_bits((sign << 31) | (exp32 << 23) | (frac16 << 13))
+}
+
+fn round_even(sig: u32, shift: u32) -> u32 {
+    let kept = sig >> shift;
+    let rem = sig & ((1 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && kept & 1 == 1) {
+        kept + 1
+    } else {
+        kept
+    }
+}
+
+/// Result of verifying one batch row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOutput {
+    /// number of draft tokens accepted (leading run)
+    pub accept_len: usize,
+    /// emitted tokens: accepted drafts + one resampled/bonus token; always
+    /// `accept_len + 1` entries.
+    pub tokens: Vec<i32>,
+}
+
+/// Numerically-stable softmax over each row of a (rows, v) matrix,
+/// in place.
+pub fn softmax_rows(x: &mut [f32], v: usize) {
+    debug_assert_eq!(x.len() % v, 0);
+    for row in x.chunks_mut(v) {
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for e in row.iter_mut() {
+            *e = (*e - max).exp();
+            sum += *e;
+        }
+        let inv = 1.0 / sum;
+        for e in row.iter_mut() {
+            *e *= inv;
+        }
+    }
+}
+
+/// Element-wise sigmoid approximation of softmax (Eq. 5), in place.
+pub fn sigmoid_approx(x: &mut [f32], alpha: f32, beta: f32) {
+    let inv = 1.0 / (beta - alpha);
+    for e in x.iter_mut() {
+        let z = (*e - alpha) * inv;
+        *e = 1.0 / (1.0 + (-z).exp());
+    }
+}
+
+/// Eq. 5 with the rescale computed in (emulated) fp16: (z−α)/(β−α) with
+/// every intermediate rounded to binary16, then σ in f32. Overflows to
+/// inf/inf = NaN at |α| ≳ 65504, matching the paper's fp16 pipeline.
+pub fn sigmoid_approx_fp16(x: &mut [f32], alpha: f32, beta: f32) {
+    let a16 = f16_round(alpha);
+    let denom = f16_round(f16_round(beta) - a16);
+    for e in x.iter_mut() {
+        let z = f16_round(f16_round(f16_round(*e) - a16) / denom);
+        *e = 1.0 / (1.0 + (-z).exp());
+    }
+}
+
+/// Draw from an unnormalised non-negative weight vector by inverse CDF —
+/// matches `ref.inverse_cdf_sample` (threshold `u * total` on the raw
+/// cumulative sum; zero-mass rows fall back to argmax).
+pub fn inverse_cdf_sample(weights: &[f32], u: f32) -> usize {
+    let total: f32 = weights.iter().sum();
+    // `!(total > 0)` also catches NaN totals (fp16-overflow residuals),
+    // matching the jnp graph's `where(total > 0, tok, argmax)`.
+    if !(total > 0.0) {
+        // first-occurrence argmax, matching jnp.argmax in the AOT graphs
+        let mut best = 0usize;
+        for (i, w) in weights.iter().enumerate().skip(1) {
+            if *w > weights[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let thresh = u * total;
+    let mut cdf = 0.0f32;
+    for (i, w) in weights.iter().enumerate() {
+        cdf += w;
+        if cdf > thresh {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Acceptance ratio τ(x) = min(1, p/q) with the q==0 guard (Eq. 1).
+#[inline]
+pub fn tau(p: f32, q: f32) -> f32 {
+    if q > 0.0 {
+        (p / q).min(1.0)
+    } else {
+        1.0
+    }
+}
+
+/// One full speculative verification step for a single sequence.
+///
+/// * `z_p`: target logits, `(gamma + 1) * v` row-major (row γ = bonus row)
+/// * `z_q`: draft logits, `gamma * v`
+/// * `draft`: the γ drafted token ids
+/// * `u_acc`: γ acceptance uniforms; `u_res`, `u_bonus`: resample/bonus
+///
+/// An optional profiler receives the same scope names as the HLO backends
+/// (`verify/softmax`, `verify/kernel`, `verify/finish`) so Δ%-profiling
+/// comparisons are apples-to-apples.
+#[allow(clippy::too_many_arguments)]
+pub fn spec_step(
+    z_p: &[f32],
+    z_q: &[f32],
+    v: usize,
+    draft: &[i32],
+    u_acc: &[f32],
+    u_res: f32,
+    u_bonus: f32,
+    method: Method,
+    profiler: Option<&Profiler>,
+) -> StepOutput {
+    let gamma = draft.len();
+    debug_assert_eq!(z_p.len(), (gamma + 1) * v);
+    debug_assert_eq!(z_q.len(), gamma * v);
+    debug_assert_eq!(u_acc.len(), gamma);
+
+    // --- probability construction ("softmax" scope; sigmoid replaces it)
+    let mut p = z_p.to_vec();
+    let mut q = z_q.to_vec();
+    {
+        let _g = profiler.map(|pr| pr.scope("verify/softmax"));
+        match method {
+            Method::Baseline | Method::Exact => {
+                softmax_rows(&mut p, v);
+                softmax_rows(&mut q, v);
+            }
+            Method::Sigmoid { .. } => {
+                let (alpha, beta) = method.alpha_beta().unwrap();
+                sigmoid_approx(&mut p, alpha, beta);
+                sigmoid_approx(&mut q, alpha, beta);
+            }
+            Method::Sigmoid16 { .. } => {
+                let (alpha, beta) = method.alpha_beta().unwrap();
+                sigmoid_approx_fp16(&mut p, alpha, beta);
+                sigmoid_approx_fp16(&mut q, alpha, beta);
+            }
+        }
+    }
+
+    // --- acceptance loop (the "kernel" work: tau at drafted tokens).
+    // Accept iff u <= tau, exactly as the AOT graphs compute it: a NaN tau
+    // (fp16 overflow) fails the comparison and REJECTS — the semantics
+    // the paper's torch pipeline exhibits at ±1e5 scaling.
+    let mut accept_len = gamma;
+    {
+        let _g = profiler.map(|pr| pr.scope("verify/kernel"));
+        for c in 0..gamma {
+            let x = draft[c] as usize;
+            let accepted = if matches!(method, Method::Sigmoid16 { .. }) {
+                // unguarded ratio, NaN-propagating min (rust's f32::min
+                // would swallow the NaN): accept iff u <= min(1, r)
+                let r = p[c * v + x] / q[c * v + x];
+                u_acc[c] <= r || r >= 1.0
+            } else {
+                u_acc[c] <= tau(p[c * v + x], q[c * v + x])
+            };
+            if !accepted {
+                accept_len = c;
+                break;
+            }
+        }
+    }
+
+    // --- resample / bonus ("finish" scope)
+    let _g = profiler.map(|pr| pr.scope("verify/finish"));
+    let mut tokens: Vec<i32> = draft[..accept_len].to_vec();
+    if accept_len == gamma {
+        let bonus_row = &p[gamma * v..(gamma + 1) * v];
+        tokens.push(inverse_cdf_sample(bonus_row, u_bonus) as i32);
+    } else {
+        let c = accept_len;
+        let residual: Vec<f32> = (0..v)
+            .map(|x| (p[c * v + x] - q[c * v + x]).max(0.0))
+            .collect();
+        tokens.push(inverse_cdf_sample(&residual, u_res) as i32);
+    }
+    StepOutput { accept_len, tokens }
+}
+
+/// Batched wrapper with the same layout as the HLO verify artifacts:
+/// returns `(accept_len, out_tokens)` where `out_tokens` is
+/// `(gamma + 1)` per row, `-1`-padded.
+#[allow(clippy::too_many_arguments)]
+pub fn spec_step_batch(
+    z_p: &[f32],
+    z_q: &[f32],
+    b: usize,
+    gamma: usize,
+    v: usize,
+    draft: &[i32],
+    u_acc: &[f32],
+    u_res: &[f32],
+    u_bonus: &[f32],
+    method: Method,
+    profiler: Option<&Profiler>,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut accept = vec![0i32; b];
+    let mut out = vec![-1i32; b * (gamma + 1)];
+    for row in 0..b {
+        let o = spec_step(
+            &z_p[row * (gamma + 1) * v..(row + 1) * (gamma + 1) * v],
+            &z_q[row * gamma * v..(row + 1) * gamma * v],
+            v,
+            &draft[row * gamma..(row + 1) * gamma],
+            &u_acc[row * gamma..(row + 1) * gamma],
+            u_res[row],
+            u_bonus[row],
+            method,
+            profiler,
+        );
+        accept[row] = o.accept_len as i32;
+        out[row * (gamma + 1)..row * (gamma + 1) + o.tokens.len()]
+            .copy_from_slice(&o.tokens);
+    }
+    (accept, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Config};
+    use crate::util::rng::Pcg32;
+
+    fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn softmax_rows_normalises() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 3);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row.iter().all(|&p| p > 0.0));
+        }
+        // monotone in logits
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_stable() {
+        let mut a = vec![1000.0, 1001.0, 999.0];
+        let mut b = vec![0.0, 1.0, -1.0];
+        softmax_rows(&mut a, 3);
+        softmax_rows(&mut b, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+            assert!(x.is_finite());
+        }
+    }
+
+    #[test]
+    fn tau_guards_zero_q() {
+        assert_eq!(tau(0.5, 0.0), 1.0);
+        assert_eq!(tau(0.0, 0.0), 1.0);
+        assert_eq!(tau(0.2, 0.4), 0.5);
+        assert_eq!(tau(0.4, 0.2), 1.0);
+    }
+
+    #[test]
+    fn inverse_cdf_known_thresholds() {
+        let w = [0.1, 0.2, 0.7];
+        assert_eq!(inverse_cdf_sample(&w, 0.05), 0);
+        assert_eq!(inverse_cdf_sample(&w, 0.15), 1);
+        assert_eq!(inverse_cdf_sample(&w, 0.95), 2);
+        assert_eq!(inverse_cdf_sample(&[0.0, 0.0, 1.0], 0.0), 2);
+        assert_eq!(inverse_cdf_sample(&[0.0; 4], 0.5), 0); // zero mass -> argmax
+    }
+
+    #[test]
+    fn identical_p_q_accepts_all_and_emits_bonus() {
+        let v = 16;
+        let mut rng = Pcg32::seeded(0);
+        let z_q = randn(&mut rng, 3 * v, 2.0);
+        let mut z_p = z_q.clone();
+        z_p.extend(randn(&mut rng, v, 2.0)); // bonus row
+        let out = spec_step(
+            &z_p, &z_q, v, &[1, 2, 3], &[0.99, 0.99, 0.99], 0.5, 0.5,
+            Method::Exact, None,
+        );
+        assert_eq!(out.accept_len, 3);
+        assert_eq!(out.tokens.len(), 4);
+        assert_eq!(&out.tokens[..3], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn certain_rejection_resamples_from_residual() {
+        // q loves token 0, p loves token 1 -> reject, residual argmax = 1
+        let v = 8;
+        let mut z_q = vec![-10.0f32; v];
+        z_q[0] = 10.0;
+        let mut z_p = vec![-10.0f32; 2 * v];
+        z_p[1] = 10.0;
+        z_p[v + 1] = 10.0;
+        let out = spec_step(
+            &z_p, &z_q, v, &[0], &[0.9], 0.5, 0.5, Method::Baseline, None,
+        );
+        assert_eq!(out.accept_len, 0);
+        assert_eq!(out.tokens, vec![1]);
+    }
+
+    #[test]
+    fn sigmoid_extreme_scaling_accepts_everything() {
+        let v = 32;
+        let mut rng = Pcg32::seeded(1);
+        let z_p = randn(&mut rng, 3 * v, 5.0);
+        let z_q = randn(&mut rng, 2 * v, 5.0);
+        let out = spec_step(
+            &z_p, &z_q, v, &[3, 4], &[0.999, 0.999], 0.1, 0.1,
+            Method::sigmoid(-1e5, 1e5), None,
+        );
+        assert_eq!(out.accept_len, 2); // the Table 2 ±1e5 collapse
+    }
+
+    #[test]
+    fn baseline_and_exact_agree_everywhere() {
+        forall("baseline==exact", Config { cases: 40, ..Config::default() }, |rng, size| {
+            let v = 4 + size;
+            let gamma = 1 + (size % 5);
+            let z_p = randn(rng, (gamma + 1) * v, 3.0);
+            let z_q = randn(rng, gamma * v, 3.0);
+            let draft: Vec<i32> = (0..gamma).map(|_| rng.below(v as u32) as i32).collect();
+            let u_acc: Vec<f32> = (0..gamma).map(|_| rng.uniform_f32()).collect();
+            let (ur, ub) = (rng.uniform_f32(), rng.uniform_f32());
+            let a = spec_step(&z_p, &z_q, v, &draft, &u_acc, ur, ub, Method::Baseline, None);
+            let e = spec_step(&z_p, &z_q, v, &draft, &u_acc, ur, ub, Method::Exact, None);
+            if a != e {
+                return Err(format!("{a:?} != {e:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn emitted_token_count_is_accept_len_plus_one() {
+        forall("emit count", Config { cases: 60, ..Config::default() }, |rng, size| {
+            let v = 4 + size;
+            let gamma = 1 + (size % 7);
+            let z_p = randn(rng, (gamma + 1) * v, 4.0);
+            let z_q = randn(rng, gamma * v, 4.0);
+            let draft: Vec<i32> = (0..gamma).map(|_| rng.below(v as u32) as i32).collect();
+            let u_acc: Vec<f32> = (0..gamma).map(|_| rng.uniform_f32()).collect();
+            let o = spec_step(&z_p, &z_q, v, &draft, &u_acc,
+                              rng.uniform_f32(), rng.uniform_f32(),
+                              Method::Baseline, None);
+            if o.tokens.len() != o.accept_len + 1 {
+                return Err(format!("{} tokens for accept_len {}", o.tokens.len(), o.accept_len));
+            }
+            if o.accept_len > gamma {
+                return Err("accept_len beyond gamma".into());
+            }
+            if o.tokens.iter().any(|&t| t < 0 || t as usize >= v) {
+                return Err(format!("token out of range: {:?}", o.tokens));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_wrapper_matches_single_rows() {
+        let (b, gamma, v) = (3, 4, 24);
+        let mut rng = Pcg32::seeded(9);
+        let z_p = randn(&mut rng, b * (gamma + 1) * v, 3.0);
+        let z_q = randn(&mut rng, b * gamma * v, 3.0);
+        let draft: Vec<i32> = (0..b * gamma).map(|_| rng.below(v as u32) as i32).collect();
+        let u_acc: Vec<f32> = (0..b * gamma).map(|_| rng.uniform_f32()).collect();
+        let u_res: Vec<f32> = (0..b).map(|_| rng.uniform_f32()).collect();
+        let u_bonus: Vec<f32> = (0..b).map(|_| rng.uniform_f32()).collect();
+        let (alen, out) = spec_step_batch(
+            &z_p, &z_q, b, gamma, v, &draft, &u_acc, &u_res, &u_bonus,
+            Method::Exact, None,
+        );
+        for row in 0..b {
+            let o = spec_step(
+                &z_p[row * (gamma + 1) * v..(row + 1) * (gamma + 1) * v],
+                &z_q[row * gamma * v..(row + 1) * gamma * v],
+                v,
+                &draft[row * gamma..(row + 1) * gamma],
+                &u_acc[row * gamma..(row + 1) * gamma],
+                u_res[row],
+                u_bonus[row],
+                Method::Exact,
+                None,
+            );
+            assert_eq!(alen[row] as usize, o.accept_len);
+            let got = &out[row * (gamma + 1)..row * (gamma + 1) + o.tokens.len()];
+            assert_eq!(got, o.tokens.as_slice());
+            // padding beyond emitted tokens
+            assert!(out[row * (gamma + 1) + o.tokens.len()..(row + 1) * (gamma + 1)]
+                .iter()
+                .all(|&t| t == -1));
+        }
+    }
+
+    #[test]
+    fn f16_round_reference_values() {
+        // exactly representable values pass through
+        for x in [0.0f32, 1.0, -2.5, 0.5, 65504.0] {
+            assert_eq!(f16_round(x), x, "{x}");
+        }
+        // rounding to 10 fraction bits: 1 + 2^-11 is a 0.5-ulp tie and
+        // rounds to even (1.0); 1 + 3·2^-11 is a 1.5-ulp tie and rounds
+        // to the even neighbour 1 + 2·2^-10
+        assert_eq!(f16_round(1.0 + 2f32.powi(-11)), 1.0);
+        assert_eq!(f16_round(1.0 + 3.0 * 2f32.powi(-11)), 1.0 + 2f32.powi(-9));
+        // just above the half-ulp tie rounds up
+        assert_eq!(
+            f16_round(1.0 + 2f32.powi(-11) + 2f32.powi(-13)),
+            1.0 + 2f32.powi(-10)
+        );
+        // overflow -> inf (f16 max finite = 65504)
+        assert_eq!(f16_round(65520.0), f32::INFINITY);
+        assert_eq!(f16_round(1e5), f32::INFINITY);
+        assert_eq!(f16_round(-1e5), f32::NEG_INFINITY);
+        // inf/nan pass through
+        assert!(f16_round(f32::NAN).is_nan());
+        assert_eq!(f16_round(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_round_error_is_within_half_ulp() {
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..2000 {
+            let x = (rng.gaussian() as f32) * 100.0;
+            let r = f16_round(x);
+            let ulp = 2f32.powi(x.abs().log2().floor() as i32 - 10);
+            assert!((r - x).abs() <= ulp * 0.5 + 1e-12, "{x} -> {r}");
+        }
+    }
+
+    #[test]
+    fn sigmoid16_moderate_scale_close_to_f32() {
+        let mut a = vec![3.0f32, -4.0, 0.25];
+        let mut b = a.clone();
+        sigmoid_approx(&mut a, -1e3, 1e3);
+        sigmoid_approx_fp16(&mut b, -1e3, 1e3);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sigmoid16_overflow_rejects_everything() {
+        let v = 16;
+        let mut rng = Pcg32::seeded(6);
+        let z_p = randn(&mut rng, 3 * v, 5.0);
+        let z_q = randn(&mut rng, 2 * v, 5.0);
+        let out = spec_step(
+            &z_p, &z_q, v, &[1, 2], &[0.1, 0.1], 0.5, 0.5,
+            Method::sigmoid16(-1e5, 1e5), None,
+        );
+        // NaN tau fails every acceptance test: reject at position 0
+        assert_eq!(out.accept_len, 0);
+        assert_eq!(out.tokens.len(), 1);
+        // while f32 sigmoid at the same scale accepts both drafts
+        let out32 = spec_step(
+            &z_p, &z_q, v, &[1, 2], &[0.1, 0.1], 0.5, 0.5,
+            Method::sigmoid(-1e5, 1e5), None,
+        );
+        assert_eq!(out32.accept_len, 2);
+    }
+
+    #[test]
+    fn acceptance_rate_increases_with_agreement() {
+        // draft == target logits -> accept rate 1; independent logits -> lower
+        let v = 64;
+        let gamma = 5;
+        let trials = 200;
+        let mut rng = Pcg32::seeded(3);
+        let mut acc_same = 0usize;
+        let mut acc_indep = 0usize;
+        for _ in 0..trials {
+            let z_q = randn(&mut rng, gamma * v, 3.0);
+            let mut z_p_same = z_q.clone();
+            z_p_same.extend(randn(&mut rng, v, 3.0));
+            let z_p_ind = randn(&mut rng, (gamma + 1) * v, 3.0);
+            // draft sampled from q
+            let mut draft = Vec::new();
+            for c in 0..gamma {
+                let mut row = z_q[c * v..(c + 1) * v].to_vec();
+                softmax_rows(&mut row, v);
+                draft.push(inverse_cdf_sample(&row, rng.uniform_f32()) as i32);
+            }
+            let u_acc: Vec<f32> = (0..gamma).map(|_| rng.uniform_f32()).collect();
+            let o1 = spec_step(&z_p_same, &z_q, v, &draft, &u_acc, 0.5, 0.5,
+                               Method::Exact, None);
+            let o2 = spec_step(&z_p_ind, &z_q, v, &draft, &u_acc, 0.5, 0.5,
+                               Method::Exact, None);
+            acc_same += o1.accept_len;
+            acc_indep += o2.accept_len;
+        }
+        assert_eq!(acc_same, trials * gamma);
+        assert!(acc_indep < acc_same / 2, "{acc_indep} vs {acc_same}");
+    }
+}

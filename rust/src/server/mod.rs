@@ -1,0 +1,17 @@
+//! TCP serving front-end.
+//!
+//! JSON-lines protocol over plain TCP (the vendored crate set has no
+//! tokio; the engine thread + per-connection reader threads and mpsc
+//! channels give the same continuous-batching behaviour):
+//!
+//! ```text
+//! -> {"id": 1, "prompt": "the scheduler", "max_new_tokens": 64, "temperature": 0.8}
+//! <- {"id": 1, "text": "...", "tokens": 64, "steps": 17, "accept_rate": 0.61,
+//!     "latency_ms": 12.3, "finish": "length"}
+//! ```
+
+pub mod protocol;
+pub mod service;
+
+pub use protocol::{parse_request, render_response, WireRequest, WireResponse};
+pub use service::{Server, ServerConfig};

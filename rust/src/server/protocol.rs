@@ -1,0 +1,151 @@
+//! Wire protocol: one JSON object per line, both directions.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::engine::{FinishReason, GenResult};
+use crate::util::json::{self, obj, Value};
+
+/// Parsed client request line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub seed: Option<u64>,
+}
+
+pub fn parse_request(line: &str) -> Result<WireRequest> {
+    let v = json::parse(line).map_err(|e| anyhow!("{e}"))?;
+    Ok(WireRequest {
+        id: v
+            .req("id")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_i64()
+            .context("id must be an integer")? as u64,
+        prompt: v
+            .req("prompt")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .context("prompt must be a string")?
+            .to_string(),
+        max_new_tokens: v
+            .get("max_new_tokens")
+            .and_then(Value::as_usize)
+            .unwrap_or(64),
+        temperature: v
+            .get("temperature")
+            .and_then(Value::as_f64)
+            .unwrap_or(0.8) as f32,
+        seed: v.get("seed").and_then(Value::as_i64).map(|s| s as u64),
+    })
+}
+
+/// Server response line.
+#[derive(Debug, Clone)]
+pub struct WireResponse {
+    pub id: u64,
+    pub text: String,
+    pub result: GenResult,
+}
+
+fn finish_str(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::Context => "context",
+    }
+}
+
+pub fn render_response(resp: &WireResponse) -> String {
+    let r = &resp.result;
+    obj(vec![
+        ("id", (resp.id as i64).into()),
+        ("text", resp.text.as_str().into()),
+        ("tokens", r.token_ids.len().into()),
+        ("steps", r.steps.into()),
+        ("accept_rate", Value::Num(r.acceptance_rate())),
+        ("tokens_per_step", Value::Num(r.tokens_per_step())),
+        ("latency_ms", Value::Num(r.latency * 1e3)),
+        ("finish", finish_str(r.finish).into()),
+    ])
+    .dump()
+}
+
+/// Error line for malformed requests.
+pub fn render_error(id: Option<u64>, msg: &str) -> String {
+    obj(vec![
+        ("id", id.map(|i| (i as i64).into()).unwrap_or(Value::Null)),
+        ("error", msg.into()),
+    ])
+    .dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_request() {
+        let r = parse_request(
+            r#"{"id": 3, "prompt": "hello", "max_new_tokens": 10, "temperature": 0.5, "seed": 9}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, "hello");
+        assert_eq!(r.max_new_tokens, 10);
+        assert_eq!(r.seed, Some(9));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let r = parse_request(r#"{"id": 1, "prompt": "x"}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 64);
+        assert!((r.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(r.seed, None);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"prompt": "x"}"#).is_err());
+        assert!(parse_request(r#"{"id": "x", "prompt": "y"}"#).is_err());
+    }
+
+    #[test]
+    fn response_round_trips_as_json() {
+        let resp = WireResponse {
+            id: 5,
+            text: "hello \"world\"".into(),
+            result: GenResult {
+                id: 5,
+                token_ids: vec![1, 2, 3],
+                finish: FinishReason::Length,
+                steps: 2,
+                drafted: 10,
+                accepted: 5,
+                latency: 0.0123,
+            },
+        };
+        let line = render_response(&resp);
+        let v = crate::util::json::parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(5));
+        assert_eq!(v.get("tokens").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("finish").unwrap().as_str(), Some("length"));
+        assert_eq!(v.get("text").unwrap().as_str(), Some("hello \"world\""));
+        assert!((v.get("accept_rate").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_rendering() {
+        let line = render_error(Some(2), "bad prompt");
+        let v = crate::util::json::parse(&line).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("bad prompt"));
+        let line = render_error(None, "parse failure");
+        assert!(crate::util::json::parse(&line)
+            .unwrap()
+            .get("id")
+            .unwrap()
+            .is_null());
+    }
+}

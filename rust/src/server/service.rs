@@ -1,0 +1,245 @@
+//! Threaded TCP server with a single-engine continuous-batching loop.
+//!
+//! Topology: one listener thread accepting connections, one reader thread
+//! per connection parsing JSON lines, one engine thread owning the
+//! [`Engine`] and stepping it while work exists. Responses are written by
+//! the engine thread through per-connection cloned `TcpStream`s, so the
+//! hot loop never blocks on a slow client for longer than one write.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Engine, GenRequest};
+use crate::tokenizer::Tokenizer;
+
+use super::protocol::{parse_request, render_error, render_response, WireResponse};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7077".into(),
+        }
+    }
+}
+
+struct Job {
+    engine_id: u64,
+    wire_id: u64,
+    stream: TcpStream,
+    request: GenRequest,
+}
+
+/// The serving front-end. Owns the engine on a dedicated thread.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    listener: TcpListener,
+    job_tx: Sender<Job>,
+    engine_handle: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind and spawn the engine thread. `addr` may use port 0 for an
+    /// ephemeral port (tests); the bound address is available via
+    /// [`Server::addr`].
+    pub fn start(engine: Engine, tokenizer: Tokenizer, cfg: ServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let (job_tx, job_rx) = channel::<Job>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let engine_handle = {
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("specd-engine".into())
+                .spawn(move || engine_loop(engine, tokenizer, job_rx, shutdown))
+                .context("spawning engine thread")?
+        };
+        crate::info!("server listening on {addr}");
+        Ok(Server {
+            addr,
+            listener,
+            job_tx,
+            engine_handle: std::sync::Mutex::new(Some(engine_handle)),
+            shutdown,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Accept connections until `shutdown` is set (blocks the caller).
+    pub fn serve_forever(&self) -> Result<()> {
+        let next_id = AtomicU64::new(1);
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            let stream = stream.context("accept")?;
+            let tx = self.job_tx.clone();
+            let id_base = next_id.fetch_add(1 << 20, Ordering::Relaxed);
+            std::thread::spawn(move || {
+                if let Err(e) = connection_loop(stream, tx, id_base) {
+                    crate::debug!("connection ended: {e:#}");
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Signal shutdown (in-flight requests finish; accept loop exits on
+    /// the next connection attempt).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.engine_handle.lock().unwrap().take();
+    }
+}
+
+fn connection_loop(stream: TcpStream, tx: Sender<Job>, id_base: u64) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    crate::debug!("connection from {peer}");
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut n = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Ok(wire) => {
+                n += 1;
+                let engine_id = id_base + n;
+                let request = GenRequest {
+                    id: engine_id,
+                    prompt_ids: Vec::new(), // encoded by the engine thread
+                    prompt_text: Some(wire.prompt),
+                    max_new_tokens: wire.max_new_tokens,
+                    temperature: wire.temperature,
+                    draft_temperature: wire.temperature,
+                    seed: wire.seed.unwrap_or(wire.id),
+                };
+                tx.send(Job {
+                    engine_id,
+                    wire_id: wire.id,
+                    stream: stream.try_clone()?,
+                    request,
+                })
+                .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+            }
+            Err(e) => {
+                let mut s = stream.try_clone()?;
+                let _ = writeln!(s, "{}", render_error(None, &format!("{e:#}")));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn engine_loop(
+    mut engine: Engine,
+    tokenizer: Tokenizer,
+    rx: Receiver<Job>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut inflight: HashMap<u64, (u64, TcpStream)> = HashMap::new();
+    loop {
+        if shutdown.load(Ordering::Relaxed) && inflight.is_empty() {
+            break;
+        }
+        // admit everything queued; block briefly when idle
+        let mut got = false;
+        loop {
+            let job = if engine.active() == 0 && inflight.is_empty() && !got {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(j) => j,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            };
+            got = true;
+            let mut req = job.request;
+            if let Some(text) = req.prompt_text.take() {
+                req.prompt_ids = tokenizer.encode(&text);
+            }
+            inflight.insert(job.engine_id, (job.wire_id, job.stream));
+            engine.submit(req);
+        }
+
+        if engine.active() == 0 && engine.pending() == 0 {
+            continue;
+        }
+        if let Err(e) = engine.step() {
+            crate::error!("engine step failed: {e:#}");
+            // fail all in-flight requests
+            for (_eid, (wid, mut stream)) in inflight.drain() {
+                let _ = writeln!(stream, "{}", render_error(Some(wid), "engine failure"));
+            }
+            continue;
+        }
+        for result in engine.take_results() {
+            if let Some((wire_id, mut stream)) = inflight.remove(&result.id) {
+                let resp = WireResponse {
+                    id: wire_id,
+                    text: tokenizer.decode_until_stop(&result.token_ids),
+                    result,
+                };
+                let _ = writeln!(stream, "{}", render_response(&resp));
+            }
+        }
+    }
+}
+
+/// Minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request and wait for its response line.
+    pub fn request(
+        &mut self,
+        id: u64,
+        prompt: &str,
+        max_new_tokens: usize,
+        temperature: f32,
+    ) -> Result<crate::util::json::Value> {
+        let line = crate::util::json::obj(vec![
+            ("id", (id as i64).into()),
+            ("prompt", prompt.into()),
+            ("max_new_tokens", max_new_tokens.into()),
+            ("temperature", crate::util::json::Value::Num(temperature as f64)),
+        ])
+        .dump();
+        writeln!(self.stream, "{line}")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        crate::util::json::parse(&resp).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}

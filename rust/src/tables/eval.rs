@@ -1,0 +1,155 @@
+//! Shared measurement harness: run a workload through the engine with a
+//! given verification method and collect the quantities the paper
+//! reports.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{Backend, Engine, EngineConfig, GenRequest, Mode};
+use crate::runtime::Runtime;
+use crate::sampling::Method;
+use crate::tokenizer::Tokenizer;
+use crate::util::stats::Summary;
+use crate::workload::{make_tasks, Corpus, Task, TaskKind};
+
+/// Everything an evaluation run needs.
+pub struct EvalContext {
+    pub runtime: Arc<Runtime>,
+    pub tokenizer: Tokenizer,
+    pub corpus: Corpus,
+    pub pair: String,
+    pub batch: usize,
+    pub n_examples: usize,
+    pub seed: u64,
+    pub temperature: f32,
+}
+
+impl EvalContext {
+    /// Open runtime + tokenizer + corpus from the default locations.
+    pub fn open_default(n_examples: usize) -> Result<Self> {
+        let runtime = Arc::new(Runtime::open_default()?);
+        let tokenizer = Tokenizer::load(&crate::artifacts_dir().join("tokenizer.json"))?;
+        let corpus = Corpus::load_default()?;
+        Ok(EvalContext {
+            runtime,
+            tokenizer,
+            corpus,
+            pair: "base".into(),
+            batch: 1,
+            n_examples,
+            seed: 1234,
+            temperature: 0.5,
+        })
+    }
+}
+
+/// Result of running one (method, workload) combination.
+#[derive(Debug, Clone)]
+pub struct MethodRun {
+    pub method: Method,
+    /// WER (asr) or ROUGE-1 (sum), averaged over examples
+    pub metric: f64,
+    /// Σ verification-call-stack time over all steps+examples (seconds) —
+    /// the paper's "profiling time"
+    pub profiling_total: f64,
+    /// wall time of the whole decode loop (seconds) — Table 5's quantity
+    pub wallclock: f64,
+    pub steps: usize,
+    pub emitted_tokens: usize,
+    /// per-step verification time distribution (Table 6 / Fig. 3)
+    pub per_step_verify: Summary,
+    pub acceptance_rate: f64,
+    pub gamma_mean: f64,
+    /// peak host-buffer bytes during the run (Fig. 4/5 measured column)
+    pub peak_mem_bytes: usize,
+}
+
+/// Run `tasks` through a fresh engine configured for `method`.
+///
+/// Seeds are derived from the task index only, so two methods see
+/// identical requests and uniforms — `exact` therefore reproduces
+/// `baseline` token-for-token, as in the paper.
+#[allow(clippy::too_many_arguments)]
+pub fn run_method(
+    ctx: &EvalContext,
+    tasks: &[Task],
+    method: Method,
+    backend: Backend,
+    gamma_init: usize,
+    gamma_pinned: bool,
+) -> Result<MethodRun> {
+    let config = EngineConfig {
+        pair: ctx.pair.clone(),
+        batch: ctx.batch,
+        method,
+        backend,
+        mode: Mode::Speculative,
+        gamma_init,
+        gamma_pinned,
+        self_draft: false,
+        seed: ctx.seed,
+    };
+    let mut engine = Engine::new(ctx.runtime.clone(), config)?;
+    ctx.runtime.gauge.reset_peak();
+
+    let reqs: Vec<GenRequest> = tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            GenRequest::new(i as u64, ctx.tokenizer.encode(&t.prompt), t.max_new_tokens)
+                .with_temperature(ctx.temperature)
+                .with_seed(ctx.seed.wrapping_add(i as u64))
+        })
+        .collect();
+
+    let started = Instant::now();
+    let results = engine.generate(reqs)?;
+    let wallclock = started.elapsed().as_secs_f64();
+
+    let mut metric_sum = 0.0;
+    for (task, result) in tasks.iter().zip(&results) {
+        let hyp = ctx.tokenizer.decode_until_stop(&result.token_ids);
+        metric_sum += task.score(&hyp);
+    }
+    let stats = &engine.stats;
+    Ok(MethodRun {
+        method,
+        metric: metric_sum / tasks.len().max(1) as f64,
+        profiling_total: stats.profiling_time_total(),
+        wallclock,
+        steps: stats.steps,
+        emitted_tokens: stats.emitted,
+        per_step_verify: stats.verify_time.summary(),
+        acceptance_rate: stats.acceptance_rate(),
+        gamma_mean: stats.gamma_series.mean(),
+        peak_mem_bytes: ctx.runtime.gauge.peak_bytes(),
+    })
+}
+
+/// Run all three methods on the same task set (the Table 1 row group).
+pub fn run_all_methods(
+    ctx: &EvalContext,
+    kind: TaskKind,
+    split_seed: u64,
+    alpha_beta: (f32, f32),
+) -> Result<(MethodRun, MethodRun, MethodRun)> {
+    let tasks = make_tasks(&ctx.corpus, kind, ctx.n_examples, split_seed);
+    let base = run_method(ctx, &tasks, Method::Baseline, Backend::Hlo, 5, false)?;
+    let exact = run_method(ctx, &tasks, Method::Exact, Backend::Hlo, 5, false)?;
+    let sig = run_method(
+        ctx,
+        &tasks,
+        Method::sigmoid(alpha_beta.0, alpha_beta.1),
+        Backend::Hlo,
+        5,
+        false,
+    )?;
+    Ok((base, exact, sig))
+}
+
+#[cfg(test)]
+mod tests {
+    // Everything here needs built artifacts; see rust/tests/it_tables.rs.
+}

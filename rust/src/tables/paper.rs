@@ -1,0 +1,126 @@
+//! The paper's model/dataset combinations, used to drive the simulator at
+//! the scales the authors evaluated (Tables 1/3/4/6 and Figs. 3-5).
+
+use crate::simulator::SimConfig;
+
+/// One target/draft combination from Table 1.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperCombo {
+    pub target: &'static str,
+    pub draft: &'static str,
+    /// evaluation task family
+    pub task: &'static str,
+    pub vocab: usize,
+    /// logit bytes: Whisper runs fp16, Llama/Qwen/Gemma logits fp32 (§4.3)
+    pub dtype_bytes: usize,
+    pub target_params: f64,
+    pub draft_params: f64,
+}
+
+pub const COMBOS: &[PaperCombo] = &[
+    PaperCombo {
+        target: "Whisper Small.EN",
+        draft: "Distil-Whisper Small.EN",
+        task: "asr",
+        vocab: 51_865,
+        dtype_bytes: 2,
+        target_params: 244e6,
+        draft_params: 166e6,
+    },
+    PaperCombo {
+        target: "Whisper Large V2",
+        draft: "Distil-Whisper Large V2",
+        task: "asr",
+        vocab: 51_865,
+        dtype_bytes: 2,
+        target_params: 1.55e9,
+        draft_params: 756e6,
+    },
+    PaperCombo {
+        target: "Llama2 7B",
+        draft: "Sheared Llama 1.3B",
+        task: "sum",
+        vocab: 32_000,
+        dtype_bytes: 4,
+        target_params: 7e9,
+        draft_params: 1.3e9,
+    },
+    PaperCombo {
+        target: "Llama2 13B",
+        draft: "Sheared Llama 1.3B",
+        task: "sum",
+        vocab: 32_000,
+        dtype_bytes: 4,
+        target_params: 13e9,
+        draft_params: 1.3e9,
+    },
+    PaperCombo {
+        target: "Qwen 7B",
+        draft: "Qwen 0.5B",
+        task: "sum",
+        vocab: 151_936,
+        dtype_bytes: 4,
+        target_params: 7e9,
+        draft_params: 0.5e9,
+    },
+    PaperCombo {
+        target: "Gemma 7B",
+        draft: "Gemma 2B",
+        task: "sum",
+        vocab: 256_000,
+        dtype_bytes: 4,
+        target_params: 7e9,
+        draft_params: 2e9,
+    },
+];
+
+impl PaperCombo {
+    pub fn sim_config(&self, gamma: usize) -> SimConfig {
+        SimConfig {
+            batch: 1,
+            gamma,
+            vocab: self.vocab,
+            dtype_bytes: self.dtype_bytes,
+        }
+    }
+
+    /// The (α, β) the paper uses for this task family (§4.1).
+    pub fn alpha_beta(&self) -> (f32, f32) {
+        if self.task == "asr" {
+            (-1e3, 1e3)
+        } else {
+            (-1e4, 1e4)
+        }
+    }
+}
+
+/// ASR "dataset" labels for Table 1 rows (synthetic splits of the corpus
+/// playing the roles of LibriSpeech clean/other, TED-LIUM, CV16).
+pub const ASR_SPLITS: &[(&str, u64)] = &[
+    ("synth-libri-clean", 101),
+    ("synth-libri-other", 102),
+    ("synth-tedlium", 103),
+    ("synth-cv16", 104),
+];
+
+/// Summarization "dataset" labels (Xsum / CNN-DM roles).
+pub const SUM_SPLITS: &[(&str, u64)] = &[("synth-cnndm", 201), ("synth-xsum", 202)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combos_cover_both_tasks() {
+        assert!(COMBOS.iter().any(|c| c.task == "asr"));
+        assert!(COMBOS.iter().filter(|c| c.task == "sum").count() == 4);
+    }
+
+    #[test]
+    fn alpha_beta_follows_section_41() {
+        let asr = COMBOS.iter().find(|c| c.task == "asr").unwrap();
+        assert_eq!(asr.alpha_beta(), (-1e3, 1e3));
+        let s = COMBOS.iter().find(|c| c.task == "sum").unwrap();
+        assert_eq!(s.alpha_beta(), (-1e4, 1e4));
+    }
+}

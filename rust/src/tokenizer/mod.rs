@@ -1,0 +1,158 @@
+//! Char-level tokenizer — loads the table written by the python build
+//! (`artifacts/tokenizer.json`) so L3 encodes/decodes exactly like L2
+//! trained.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+const N_SPECIALS: i32 = 3;
+
+/// Char-level tokenizer with pad/bos/eos specials and a padded vocab.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    chars: Vec<char>,
+    /// char -> id lookup (ids start at N_SPECIALS)
+    index: std::collections::HashMap<char, i32>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn from_chars(chars: Vec<char>, vocab_size: usize) -> Result<Self> {
+        if vocab_size < chars.len() + N_SPECIALS as usize {
+            bail!(
+                "vocab_size {} too small for {} chars + specials",
+                vocab_size,
+                chars.len()
+            );
+        }
+        let index = chars
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (*c, i as i32 + N_SPECIALS))
+            .collect();
+        Ok(Tokenizer {
+            chars,
+            index,
+            vocab_size,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tokenizer {}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let vocab_size = v
+            .req("vocab_size")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_usize()
+            .context("vocab_size not an int")?;
+        let chars: Vec<char> = v
+            .req("chars")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .context("chars not an array")?
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .and_then(|s| s.chars().next())
+                    .context("bad char entry")
+            })
+            .collect::<Result<_>>()?;
+        Self::from_chars(chars, vocab_size)
+    }
+
+    /// Encode text; unknown characters are skipped (the build corpus
+    /// defines the closed character set).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .filter_map(|c| self.index.get(&c).copied())
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&id| {
+                let idx = id - N_SPECIALS;
+                if idx >= 0 && (idx as usize) < self.chars.len() {
+                    Some(self.chars[idx as usize])
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Decode stopping at the first EOS / PAD.
+    pub fn decode_until_stop(&self, ids: &[i32]) -> String {
+        let end = ids
+            .iter()
+            .position(|&t| t == EOS || t == PAD)
+            .unwrap_or(ids.len());
+        self.decode(&ids[..end])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::from_json(
+            r#"{"type":"char","vocab_size":128,
+                "specials":{"pad":0,"bos":1,"eos":2},
+                "chars":[" ",".","a","b","c","d","e"]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let t = tok();
+        let text = "abc de.";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn ids_start_after_specials() {
+        let t = tok();
+        assert!(t.encode("a").iter().all(|&id| id >= 3));
+    }
+
+    #[test]
+    fn unknown_chars_skipped() {
+        let t = tok();
+        assert_eq!(t.decode(&t.encode("aXb")), "ab");
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = tok();
+        let mut ids = t.encode("abc");
+        ids.push(EOS);
+        ids.extend(t.encode("dd"));
+        assert_eq!(t.decode_until_stop(&ids), "abc");
+    }
+
+    #[test]
+    fn decode_ignores_out_of_range() {
+        let t = tok();
+        // 'a' = chars[2] -> id 5, 'b' = chars[3] -> id 6
+        assert_eq!(t.decode(&[-1, 5, 999, 6]), "ab");
+    }
+
+    #[test]
+    fn vocab_too_small_rejected() {
+        let r = Tokenizer::from_chars(vec!['a', 'b'], 4);
+        assert!(r.is_err());
+    }
+}

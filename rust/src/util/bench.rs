@@ -1,0 +1,196 @@
+//! Benchmark harness (criterion is not in the vendored crate set).
+//!
+//! Warmup + timed iterations with outlier-robust reporting; every
+//! `rust/benches/*.rs` target uses this. Measurement model: each sample is
+//! one invocation of the closure, wall-clocked with `Instant`; reported
+//! statistics come from [`crate::util::stats::Series`].
+
+use std::time::{Duration, Instant};
+
+use super::stats::{Series, Summary};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// stop early once this much time has been spent measuring
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 5,
+            min_iters: 20,
+            max_iters: 2000,
+            max_time: Duration::from_secs(3),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn row(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>8} iters  mean {:>10.3}us  p50 {:>10.3}us  p99 {:>10.3}us  std {:>8.3}us",
+            self.name,
+            s.n,
+            s.mean * 1e6,
+            s.p50 * 1e6,
+            s.p99 * 1e6,
+            s.std * 1e6,
+        )
+    }
+}
+
+/// Benchmark a closure; returns per-iteration timing stats.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut series = Series::new();
+    let started = Instant::now();
+    for i in 0..cfg.max_iters {
+        let t = Instant::now();
+        f();
+        series.push(t.elapsed().as_secs_f64());
+        if i + 1 >= cfg.min_iters && started.elapsed() > cfg.max_time {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: series.summary(),
+    }
+}
+
+/// Convenience: run + print a row.
+pub fn bench_report<F: FnMut()>(name: &str, cfg: BenchConfig, f: F) -> BenchResult {
+    let r = bench(name, cfg, f);
+    println!("{}", r.row());
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (std::hint::black_box is stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Markdown-style table printer shared by bench targets and `specd table`.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench(
+            "noop-ish",
+            BenchConfig {
+                warmup_iters: 2,
+                min_iters: 10,
+                max_iters: 50,
+                max_time: Duration::from_millis(200),
+            },
+            || {
+                black_box((0..100).sum::<u64>());
+            },
+        );
+        assert!(r.summary.n >= 10);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.summary.p50 <= r.summary.p99 + 1e-12);
+    }
+
+    #[test]
+    fn bench_respects_time_budget() {
+        let t = Instant::now();
+        let r = bench(
+            "sleepy",
+            BenchConfig {
+                warmup_iters: 0,
+                min_iters: 3,
+                max_iters: 10_000,
+                max_time: Duration::from_millis(50),
+            },
+            || std::thread::sleep(Duration::from_millis(5)),
+        );
+        assert!(t.elapsed() < Duration::from_secs(2));
+        assert!(r.summary.n < 10_000);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["method", "Δ% prof"]);
+        t.row(vec!["exact".into(), "11.7%".into()]);
+        t.row(vec!["sigmoid".into(), "71.9%".into()]);
+        let s = t.render();
+        assert!(s.contains("| method"));
+        assert!(s.lines().count() == 4);
+        assert!(s.contains("| sigmoid"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

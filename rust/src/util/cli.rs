@@ -1,0 +1,213 @@
+//! Tiny declarative CLI argument parser (the vendored crate set has no
+//! clap). Supports `--key value`, `--key=value`, boolean flags, and a
+//! leading positional subcommand; renders `--help` from the spec.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+    pub is_flag: bool,
+}
+
+/// Declarative command description.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            args: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            default: Some(default),
+            help,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            default: None,
+            help,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            default: Some("false"),
+            help,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        for a in &self.args {
+            let d = match a.default {
+                Some(d) if !a.is_flag => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{:<18} {}{}", a.name, a.help, d);
+        }
+        s
+    }
+
+    /// Parse `argv` (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+        let mut values: HashMap<String, String> = HashMap::new();
+        for a in &self.args {
+            if let Some(d) = a.default {
+                values.insert(a.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            let stripped = tok
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected argument {tok:?}\n{}", self.usage()))?;
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = self
+                .args
+                .iter()
+                .find(|a| a.name == key)
+                .ok_or_else(|| format!("unknown option --{key}\n{}", self.usage()))?;
+            let val = if spec.is_flag {
+                inline_val.unwrap_or_else(|| "true".to_string())
+            } else if let Some(v) = inline_val {
+                v
+            } else {
+                i += 1;
+                argv.get(i)
+                    .cloned()
+                    .ok_or_else(|| format!("--{key} needs a value"))?
+            };
+            values.insert(key.to_string(), val);
+            i += 1;
+        }
+        for a in &self.args {
+            if !values.contains_key(a.name) {
+                return Err(format!("missing required --{}\n{}", a.name, self.usage()));
+            }
+        }
+        Ok(Parsed { values })
+    }
+}
+
+/// Parsed argument values with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: HashMap<String, String>,
+}
+
+impl Parsed {
+    pub fn str(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("arg {key} not in spec"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, String> {
+        self.str(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected integer, got {:?}", self.str(key)))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64, String> {
+        self.str(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected integer, got {:?}", self.str(key)))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, String> {
+        self.str(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected number, got {:?}", self.str(key)))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.str(key) == "true"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the engine")
+            .opt("port", "7077", "tcp port")
+            .opt("method", "exact", "verifier")
+            .flag("verbose", "chatty")
+            .req("seed", "rng seed")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cmd().parse(&argv(&["--seed", "7"])).unwrap();
+        assert_eq!(p.usize("port").unwrap(), 7077);
+        assert_eq!(p.str("method"), "exact");
+        assert!(!p.flag("verbose"));
+        let p = cmd()
+            .parse(&argv(&["--seed=9", "--port=80", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.u64("seed").unwrap(), 9);
+        assert_eq!(p.usize("port").unwrap(), 80);
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(cmd().parse(&argv(&[])).unwrap_err().contains("--seed"));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        let e = cmd().parse(&argv(&["--seed", "1", "--nope", "2"])).unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn value_type_errors() {
+        let p = cmd().parse(&argv(&["--seed", "x"])).unwrap();
+        assert!(p.u64("seed").is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--port"));
+        assert!(u.contains("default: 7077"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Substrate utilities built in-tree.
+//!
+//! The build environment is fully offline with a minimal vendored crate
+//! set (`xla` + `anyhow`), so the usual ecosystem crates (serde_json,
+//! clap, criterion, proptest, rand) are implemented here at the size this
+//! project needs. Each submodule is self-contained and unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

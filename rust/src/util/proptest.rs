@@ -1,0 +1,137 @@
+//! Miniature property-testing harness (proptest is not in the vendored
+//! crate set). Runs a property over N seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed exactly, and
+//! performs a bounded "shrink" by retrying the property on smaller sizes
+//! drawn from the same seed.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath flags)
+//! use specd::util::proptest::{forall, Config};
+//! forall("sum is commutative", Config::default(), |rng, size| {
+//!     let a = rng.below(size.max(1) as u32);
+//!     let b = rng.below(size.max(1) as u32);
+//!     if a + b == b + a { Ok(()) } else { Err("not commutative".into()) }
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+    /// maximum "size" hint handed to the property (grows over cases)
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            base_seed: 0x5eed,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases; panics with replay info on the
+/// first failure. The property receives a seeded RNG and a size hint that
+/// ramps from 1 to `max_size` (small cases first — cheap shrinking).
+pub fn forall<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let seed = cfg.base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // bounded shrink: retry with progressively smaller sizes on the
+            // same seed and report the smallest size that still fails.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Pcg32::seeded(seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name:?} failed: {} \
+                 [replay: seed={seed}, size={}; first failure at size={size}]",
+                smallest.1, smallest.0
+            );
+        }
+    }
+}
+
+/// Replay a single case (used in regression tests after a failure).
+pub fn replay<F>(seed: u64, size: usize, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+{
+    let mut rng = Pcg32::seeded(seed);
+    prop(&mut rng, size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", Config { cases: 50, ..Config::default() }, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay: seed=")]
+    fn failing_property_reports_seed() {
+        forall("fails on big", Config::default(), |_, size| {
+            if size > 10 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0;
+        let mut min_seen = usize::MAX;
+        forall("sizes", Config { cases: 64, max_size: 64, ..Config::default() }, |_, s| {
+            max_seen = max_seen.max(s);
+            min_seen = min_seen.min(s);
+            Ok(())
+        });
+        assert_eq!(min_seen, 1);
+        assert!(max_seen >= 60);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let f = |rng: &mut Pcg32, _s: usize| {
+            let x = rng.next_u32();
+            if x % 2 == 0 {
+                Ok(())
+            } else {
+                Err(format!("odd {x}"))
+            }
+        };
+        let a = replay(42, 3, f);
+        let b = replay(42, 3, f);
+        assert_eq!(a, b);
+    }
+}

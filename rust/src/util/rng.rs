@@ -1,0 +1,174 @@
+//! PCG32 pseudo-random generator (O'Neill 2014, XSH-RR variant).
+//!
+//! The engine owns every random draw in the stack: drafted-token sampling,
+//! acceptance thresholds, resampling and bonus draws are all uniforms
+//! generated here and fed into the AOT graphs as inputs, so a run is
+//! reproducible bit-for-bit from a single seed. The stream semantics match
+//! `python/compile/gen_corpus.py::Pcg32` (pinned in tests below), which is
+//! how the corpus generator and the rust workloads stay aligned.
+
+/// PCG32: 64-bit state, 32-bit output, selectable stream.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Default stream used across the project (matches python side).
+    pub const DEFAULT_STREAM: u64 = 54;
+
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, Self::DEFAULT_STREAM)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, n)` (modulo; n is small everywhere we use this —
+    /// same bias tradeoff as the python generator, keeping streams aligned).
+    pub fn below(&mut self, n: u32) -> u32 {
+        self.next_u32() % n
+    }
+
+    /// Uniform f32 in `[0, 1)` with 24 bits of entropy — safe to compare
+    /// against CDF boundaries computed in f32 graphs.
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits.
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.uniform_f64().max(1e-300);
+        let u2 = self.uniform_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u32) as usize]
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent per-request stream from a base seed.
+    pub fn derive(seed: u64, request_id: u64) -> Self {
+        Self::new(seed ^ request_id.wrapping_mul(0x9E3779B97F4A7C15), request_id | 1)
+    }
+
+    /// Fill a buffer with uniform f32s (hot path helper — no allocation).
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for slot in out.iter_mut() {
+            *slot = self.uniform_f32();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_reference_stream() {
+        // pinned from python/compile/gen_corpus.py::Pcg32(seed, stream=54)
+        let mut r = Pcg32::new(42, 54);
+        let got: Vec<u32> = (0..6).map(|_| r.next_u32()).collect();
+        assert_eq!(
+            got,
+            vec![
+                2707161783, 2068313097, 3122475824, 2211639955, 3215226955, 3421331566
+            ]
+        );
+        let mut r = Pcg32::new(7, 54);
+        let got: Vec<u32> = (0..3).map(|_| r.next_u32()).collect();
+        assert_eq!(got, vec![2757016003, 1815248828, 428590333]);
+    }
+
+    #[test]
+    fn uniform_f32_in_unit_interval() {
+        let mut r = Pcg32::seeded(1);
+        for _ in 0..10_000 {
+            let u = r.uniform_f32();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_centered() {
+        let mut r = Pcg32::seeded(2);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "{mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg32::seeded(3);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.03, "{var}");
+    }
+
+    #[test]
+    fn derive_gives_distinct_streams() {
+        let mut a = Pcg32::derive(9, 1);
+        let mut b = Pcg32::derive(9, 2);
+        let xs: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let ys: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Pcg32::seeded(4);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg32::seeded(123);
+        let mut b = Pcg32::seeded(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Streaming statistics + summaries for latency/throughput reporting.
+
+/// Online accumulator (Welford) with raw-sample retention for percentiles.
+///
+/// Retains samples (f64) because every use in this project is bounded
+/// (per-step timings over at most a few hundred thousand steps).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        let n = self.samples.len() as f64;
+        let delta = x - self.mean;
+        self.mean += delta / n;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        (self.m2 / (self.samples.len() as f64 - 1.0)).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() as f64 - 1.0);
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let w = rank - lo as f64;
+            sorted[lo] * (1.0 - w) + sorted[hi] * w
+        }
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary {
+            n: self.len(),
+            mean: self.mean(),
+            std: self.std(),
+            min: self.min(),
+            max: self.max(),
+            p50: self.percentile(50.0),
+            p90: self.percentile(90.0),
+            p99: self.percentile(99.0),
+        }
+    }
+}
+
+/// Point-in-time summary of a [`Series`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// `"4.17±0.81ms"` formatting used by the Table 6 reproduction.
+    pub fn mean_std_ms(&self) -> String {
+        format!("{:.2}±{:.2}", self.mean * 1e3, self.std * 1e3)
+    }
+}
+
+/// Relative improvement of `new` over `base` in percent, as the paper
+/// reports it: `(base - new) / base * 100` (positive = faster).
+pub fn rel_improvement_pct(base: f64, new: f64) -> f64 {
+    if base == 0.0 {
+        return 0.0;
+    }
+    (base - new) / base * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_of_known_sequence() {
+        let mut s = Series::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // sample std of that classic sequence = sqrt(32/7)
+        assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = Series::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let s = Series::new();
+        assert!(s.percentile(50.0).is_nan());
+        let mut s = Series::new();
+        s.push(3.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+    }
+
+    #[test]
+    fn rel_improvement_matches_paper_convention() {
+        // baseline 4.17ms -> exact 3.67ms is a ~12% improvement (Table 6)
+        let pct = rel_improvement_pct(4.17, 3.67);
+        assert!((pct - 11.99).abs() < 0.01, "{pct}");
+        // regressions are negative
+        assert!(rel_improvement_pct(1.0, 2.0) < 0.0);
+    }
+
+    #[test]
+    fn summary_consistency() {
+        let mut s = Series::new();
+        for i in 0..1000 {
+            s.push((i % 10) as f64);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.n, 1000);
+        assert!((sum.mean - 4.5).abs() < 1e-12);
+        assert_eq!(sum.min, 0.0);
+        assert_eq!(sum.max, 9.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Scoped profiler mirroring the paper's measurement methodology.
+//!
+//! §4.1: *"We measure the execution time within the entire call stack of
+//! the speculative sampling function, including any nested function call
+//! (e.g. softmax). The profiling times are summed over all decoding steps
+//! and examples in a dataset, before the relative improvement is
+//! calculated."*
+//!
+//! [`Profiler`] accumulates wall-time per named scope; nested scopes are
+//! tracked with a `parent/child` path so "the entire call stack of the
+//! sampling function" is one subtree sum. Overhead is one `Instant::now()`
+//! pair + a mutex-guarded map update per scope exit (measured < 100ns,
+//! see bench_substrate).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ScopeStat {
+    pub calls: u64,
+    pub total: Duration,
+}
+
+/// Thread-safe scope accumulator.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    scopes: Mutex<HashMap<String, ScopeStat>>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enter a scope; time is recorded when the guard drops.
+    pub fn scope<'a>(&'a self, name: &str) -> ScopeGuard<'a> {
+        ScopeGuard {
+            profiler: self,
+            name: name.to_string(),
+            start: Instant::now(),
+        }
+    }
+
+    /// Record an externally-measured duration.
+    pub fn record(&self, name: &str, elapsed: Duration) {
+        let mut scopes = self.scopes.lock().unwrap();
+        let stat = scopes.entry(name.to_string()).or_default();
+        stat.calls += 1;
+        stat.total += elapsed;
+    }
+
+    pub fn get(&self, name: &str) -> ScopeStat {
+        self.scopes
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Total time of every scope whose path starts with `prefix` —
+    /// the paper's "entire call stack" sum for a function.
+    pub fn subtree_total(&self, prefix: &str) -> Duration {
+        let scopes = self.scopes.lock().unwrap();
+        scopes
+            .iter()
+            .filter(|(k, _)| k.as_str() == prefix || k.starts_with(&format!("{prefix}/")))
+            .map(|(_, s)| s.total)
+            .sum()
+    }
+
+    /// Exclusive total of exactly the named scope.
+    pub fn total(&self, name: &str) -> Duration {
+        self.get(name).total
+    }
+
+    pub fn reset(&self) {
+        self.scopes.lock().unwrap().clear();
+    }
+
+    /// Sorted (name, stat) pairs for reporting.
+    pub fn report(&self) -> Vec<(String, ScopeStat)> {
+        let mut rows: Vec<_> = self
+            .scopes
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect();
+        rows.sort_by(|a, b| b.1.total.cmp(&a.1.total));
+        rows
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from(format!(
+            "{:<42} {:>10} {:>14} {:>12}\n",
+            "scope", "calls", "total(ms)", "avg(us)"
+        ));
+        for (name, stat) in self.report() {
+            let total_ms = stat.total.as_secs_f64() * 1e3;
+            let avg_us = if stat.calls > 0 {
+                stat.total.as_secs_f64() * 1e6 / stat.calls as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{name:<42} {:>10} {total_ms:>14.3} {avg_us:>12.2}\n",
+                stat.calls
+            ));
+        }
+        out
+    }
+}
+
+/// RAII guard recording elapsed time on drop.
+pub struct ScopeGuard<'a> {
+    profiler: &'a Profiler,
+    name: String,
+    start: Instant,
+}
+
+impl Drop for ScopeGuard<'_> {
+    fn drop(&mut self) {
+        self.profiler.record(&self.name, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_calls_and_time() {
+        let p = Profiler::new();
+        for _ in 0..3 {
+            let _g = p.scope("verify");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let s = p.get("verify");
+        assert_eq!(s.calls, 3);
+        assert!(s.total >= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn subtree_sums_nested_scopes() {
+        let p = Profiler::new();
+        p.record("verify", Duration::from_millis(5));
+        p.record("verify/softmax", Duration::from_millis(3));
+        p.record("verify/kernel", Duration::from_millis(2));
+        p.record("verifyX", Duration::from_millis(100)); // not a child
+        assert_eq!(p.subtree_total("verify"), Duration::from_millis(10));
+        assert_eq!(p.total("verify"), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let p = Profiler::new();
+        p.record("a", Duration::from_millis(1));
+        p.reset();
+        assert_eq!(p.get("a").calls, 0);
+    }
+
+    #[test]
+    fn report_sorted_by_total() {
+        let p = Profiler::new();
+        p.record("small", Duration::from_micros(10));
+        p.record("big", Duration::from_millis(10));
+        let rows = p.report();
+        assert_eq!(rows[0].0, "big");
+        assert!(p.render().contains("big"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        let p = std::sync::Arc::new(Profiler::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        p.record("x", Duration::from_nanos(100));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.get("x").calls, 400);
+    }
+}

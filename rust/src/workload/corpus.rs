@@ -1,0 +1,78 @@
+//! Corpus access: the deterministic text the build-time models were
+//! trained on (`data/corpus.txt`, emitted by python/compile/gen_corpus.py).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Loaded corpus split into sentence and paragraph views.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub text: String,
+    pub paragraphs: Vec<String>,
+    pub sentences: Vec<String>,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading corpus {}", path.display()))?;
+        Self::from_text(text)
+    }
+
+    /// Default location (`data/corpus.txt` or `$SPECD_CORPUS`).
+    pub fn load_default() -> Result<Self> {
+        let path = std::env::var_os("SPECD_CORPUS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("data/corpus.txt"));
+        Self::load(&path)
+    }
+
+    pub fn from_text(text: String) -> Result<Self> {
+        if text.trim().is_empty() {
+            bail!("corpus is empty");
+        }
+        let paragraphs: Vec<String> = text
+            .split("\n\n")
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(String::from)
+            .collect();
+        let sentences: Vec<String> = paragraphs
+            .iter()
+            .flat_map(|p| p.split(". "))
+            .map(|s| s.trim().trim_end_matches('.').to_string())
+            .filter(|s| s.split_whitespace().count() >= 3)
+            .collect();
+        Ok(Corpus {
+            text,
+            paragraphs,
+            sentences,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "The scheduler accepts the drafted tokens. \
+The batch planner emits the next request in parallel.\n\n\
+A worker thread verifies a probability tile. The profiler tracks the \
+partial sums once per step.";
+
+    #[test]
+    fn splits_paragraphs_and_sentences() {
+        let c = Corpus::from_text(SAMPLE.to_string()).unwrap();
+        assert_eq!(c.paragraphs.len(), 2);
+        assert_eq!(c.sentences.len(), 4);
+        assert!(c.sentences[0].starts_with("The scheduler"));
+        // trailing period stripped
+        assert!(!c.sentences[0].ends_with('.'));
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Corpus::from_text("  \n ".to_string()).is_err());
+    }
+}

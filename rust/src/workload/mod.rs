@@ -1,0 +1,10 @@
+//! Evaluation workloads standing in for the paper's datasets (DESIGN.md
+//! §3): an ASR-role transcription task scored with WER and a
+//! summarization-role continuation task scored with ROUGE-1, both drawn
+//! deterministically from the build corpus.
+
+pub mod corpus;
+pub mod task;
+
+pub use corpus::Corpus;
+pub use task::{make_tasks, Task, TaskKind};

@@ -1,0 +1,184 @@
+//! Task generation + scoring.
+//!
+//! * [`TaskKind::Asr`] — "transcription": the prompt is a sentence prefix
+//!   and the model must continue the (highly regular) corpus text; scored
+//!   with WER against the true continuation. Plays the role of the
+//!   LibriSpeech/TED-LIUM/CV16 rows of Table 1.
+//! * [`TaskKind::Summarize`] — continuation of a paragraph after a
+//!   "Summary:"-style cue, scored with ROUGE-1 against the reference
+//!   continuation — the Xsum/CNN-DM role.
+//!
+//! Accuracy differences between verification methods arise exactly as in
+//! the paper: `exact` emits the same tokens as `baseline` (same metric to
+//! the last digit), while `sigmoid` perturbs acceptance/resampling and
+//! degrades the metric — increasingly so for extreme (α, β).
+
+use crate::metrics::{rouge1_f1, wer};
+use crate::util::rng::Pcg32;
+
+use super::corpus::Corpus;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Asr,
+    Summarize,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "asr" => Some(TaskKind::Asr),
+            "summarize" | "sum" => Some(TaskKind::Summarize),
+            _ => None,
+        }
+    }
+
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            TaskKind::Asr => "WER",
+            TaskKind::Summarize => "ROUGE-1",
+        }
+    }
+
+    /// true if larger metric values are better (ROUGE) or worse (WER)
+    pub fn higher_is_better(&self) -> bool {
+        matches!(self, TaskKind::Summarize)
+    }
+}
+
+/// One evaluation example.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub kind: TaskKind,
+    pub prompt: String,
+    pub reference: String,
+    pub max_new_tokens: usize,
+}
+
+impl Task {
+    /// Score a generated continuation against the reference.
+    pub fn score(&self, hypothesis: &str) -> f64 {
+        match self.kind {
+            TaskKind::Asr => wer(&self.reference, hypothesis),
+            TaskKind::Summarize => rouge1_f1(&self.reference, hypothesis),
+        }
+    }
+}
+
+/// Deterministically draw `n` tasks from the corpus.
+///
+/// ASR tasks: pick a sentence, prompt = first ~40% of its characters,
+/// reference = remainder (max_new sized to cover it). Summarize tasks:
+/// pick a paragraph, prompt = its first sentences, reference = the next
+/// chunk.
+pub fn make_tasks(corpus: &Corpus, kind: TaskKind, n: usize, seed: u64) -> Vec<Task> {
+    let mut rng = Pcg32::new(seed, 77);
+    let mut tasks = Vec::with_capacity(n);
+    while tasks.len() < n {
+        match kind {
+            TaskKind::Asr => {
+                let s = rng.choice(&corpus.sentences);
+                if s.len() < 40 {
+                    continue;
+                }
+                let cut = (s.len() * 2) / 5;
+                // cut at a char boundary (corpus is ascii, but be safe)
+                let cut = (cut..s.len()).find(|&i| s.is_char_boundary(i)).unwrap();
+                let reference = s[cut..].trim().to_string();
+                tasks.push(Task {
+                    kind,
+                    prompt: s[..cut].to_string(),
+                    reference: reference.clone(),
+                    max_new_tokens: (reference.len() + 8).min(160),
+                });
+            }
+            TaskKind::Summarize => {
+                let p = rng.choice(&corpus.paragraphs);
+                if p.len() < 160 {
+                    continue;
+                }
+                let cut = (96..p.len()).find(|&i| p.is_char_boundary(i)).unwrap();
+                let end = (cut + 100).min(p.len());
+                let end = (end..p.len())
+                    .find(|&i| p.is_char_boundary(i))
+                    .unwrap_or(p.len());
+                tasks.push(Task {
+                    kind,
+                    prompt: p[..cut].to_string(),
+                    reference: p[cut..end].trim().to_string(),
+                    max_new_tokens: 100,
+                });
+            }
+        }
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        let mut text = String::new();
+        for i in 0..20 {
+            text.push_str(&format!(
+                "The scheduler number {i} accepts the drafted tokens in parallel \
+                 and then the batch planner emits the next request once per step. \
+                 A worker thread verifies a probability tile with bounded memory. \
+                 The profiler tracks the partial sums after the reduction.\n\n"
+            ));
+        }
+        Corpus::from_text(text).unwrap()
+    }
+
+    #[test]
+    fn asr_tasks_split_sentences() {
+        let tasks = make_tasks(&corpus(), TaskKind::Asr, 8, 1);
+        assert_eq!(tasks.len(), 8);
+        for t in &tasks {
+            assert!(!t.prompt.is_empty());
+            assert!(!t.reference.is_empty());
+            assert!(t.max_new_tokens >= t.reference.len().min(152));
+        }
+    }
+
+    #[test]
+    fn summarize_tasks_have_paragraph_prompts() {
+        let tasks = make_tasks(&corpus(), TaskKind::Summarize, 5, 2);
+        assert_eq!(tasks.len(), 5);
+        for t in &tasks {
+            assert!(t.prompt.len() >= 96);
+            assert_eq!(t.max_new_tokens, 100);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = make_tasks(&corpus(), TaskKind::Asr, 5, 42);
+        let b = make_tasks(&corpus(), TaskKind::Asr, 5, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.reference, y.reference);
+        }
+        let c = make_tasks(&corpus(), TaskKind::Asr, 5, 43);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn scoring_uses_the_right_metric() {
+        let t = Task {
+            kind: TaskKind::Asr,
+            prompt: "p".into(),
+            reference: "a b c".into(),
+            max_new_tokens: 10,
+        };
+        assert_eq!(t.score("a b c"), 0.0); // perfect WER
+        let t = Task {
+            kind: TaskKind::Summarize,
+            prompt: "p".into(),
+            reference: "a b c".into(),
+            max_new_tokens: 10,
+        };
+        assert_eq!(t.score("a b c"), 1.0); // perfect ROUGE
+    }
+}

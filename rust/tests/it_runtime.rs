@@ -1,0 +1,265 @@
+//! Integration: PJRT runtime ↔ AOT artifacts ↔ pure-rust oracle.
+//!
+//! Requires `make artifacts` (or `make quick-artifacts`). The HLO verify
+//! executables are cross-checked against `specd::sampling` on the same
+//! inputs — `baseline`/`exact` must agree with the oracle decision-for-
+//! decision, which triangulates all three implementations (jnp graph,
+//! pallas kernel, rust).
+
+use std::sync::Arc;
+
+use specd::runtime::{HostTensor, Runtime};
+use specd::sampling::{self, Method};
+use specd::util::rng::Pcg32;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::open_default().expect(
+        "artifacts missing — run `make artifacts` (or `make quick-artifacts`) first",
+    ))
+}
+
+fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+}
+
+struct VerifyCase {
+    b: usize,
+    g: usize,
+    v: usize,
+    z_p: Vec<f32>,
+    z_q: Vec<f32>,
+    draft: Vec<i32>,
+    u_acc: Vec<f32>,
+    u_res: Vec<f32>,
+    u_bonus: Vec<f32>,
+}
+
+fn make_case(rng: &mut Pcg32, b: usize, g: usize, v: usize) -> VerifyCase {
+    VerifyCase {
+        b,
+        g,
+        v,
+        z_p: randn(rng, b * (g + 1) * v, 3.0),
+        z_q: randn(rng, b * g * v, 3.0),
+        draft: (0..b * g).map(|_| rng.below(v as u32) as i32).collect(),
+        u_acc: (0..b * g).map(|_| rng.uniform_f32()).collect(),
+        u_res: (0..b).map(|_| rng.uniform_f32()).collect(),
+        u_bonus: (0..b).map(|_| rng.uniform_f32()).collect(),
+    }
+}
+
+fn run_hlo(
+    rt: &Runtime,
+    method: &str,
+    case: &VerifyCase,
+    alpha_beta: Option<(f32, f32)>,
+) -> (Vec<i32>, Vec<i32>) {
+    let exe = rt
+        .load_verify(method, case.b, case.g, case.v)
+        .unwrap_or_else(|e| panic!("loading verify_{method}: {e:#}"));
+    let mut inputs = vec![
+        HostTensor::f32(&[case.b, case.g + 1, case.v], case.z_p.clone()),
+        HostTensor::f32(&[case.b, case.g, case.v], case.z_q.clone()),
+        HostTensor::i32(&[case.b, case.g], case.draft.clone()),
+        HostTensor::f32(&[case.b, case.g], case.u_acc.clone()),
+        HostTensor::f32(&[case.b], case.u_res.clone()),
+        HostTensor::f32(&[case.b], case.u_bonus.clone()),
+    ];
+    if let Some((a, b)) = alpha_beta {
+        inputs.push(HostTensor::f32(&[2], vec![a, b]));
+    }
+    let out = exe.run(&inputs).expect("execute");
+    (
+        out[0].as_i32().unwrap().to_vec(),
+        out[1].as_i32().unwrap().to_vec(),
+    )
+}
+
+fn run_native(case: &VerifyCase, method: Method) -> (Vec<i32>, Vec<i32>) {
+    sampling::verify::spec_step_batch(
+        &case.z_p,
+        &case.z_q,
+        case.b,
+        case.g,
+        case.v,
+        &case.draft,
+        &case.u_acc,
+        &case.u_res,
+        &case.u_bonus,
+        method,
+        None,
+    )
+}
+
+#[test]
+fn hlo_exact_matches_native_oracle() {
+    let rt = runtime();
+    let v = rt.manifest.vocab_size;
+    let mut rng = Pcg32::seeded(11);
+    for trial in 0..8 {
+        let case = make_case(&mut rng, 1, 5, v);
+        let (hlo_len, hlo_tok) = run_hlo(&rt, "exact", &case, None);
+        let (nat_len, nat_tok) = run_native(&case, Method::Exact);
+        assert_eq!(hlo_len, nat_len, "trial {trial} accept_len");
+        assert_eq!(hlo_tok, nat_tok, "trial {trial} tokens");
+    }
+}
+
+#[test]
+fn hlo_baseline_and_exact_bit_identical() {
+    let rt = runtime();
+    let v = rt.manifest.vocab_size;
+    let mut rng = Pcg32::seeded(12);
+    for g in [1usize, 2, 5] {
+        for _ in 0..4 {
+            let case = make_case(&mut rng, 1, g, v);
+            let a = run_hlo(&rt, "baseline", &case, None);
+            let b = run_hlo(&rt, "exact", &case, None);
+            assert_eq!(a, b, "γ={g}");
+        }
+    }
+}
+
+#[test]
+fn hlo_sigmoid_matches_native_sigmoid() {
+    let rt = runtime();
+    let v = rt.manifest.vocab_size;
+    let mut rng = Pcg32::seeded(13);
+    for (alpha, beta) in [(-1e3f32, 1e3f32), (-1e4, 1e4)] {
+        let case = make_case(&mut rng, 1, 5, v);
+        let (hlo_len, hlo_tok) = run_hlo(&rt, "sigmoid", &case, Some((alpha, beta)));
+        let (nat_len, nat_tok) = run_native(&case, Method::sigmoid(alpha, beta));
+        assert_eq!(hlo_len, nat_len, "alpha={alpha}");
+        assert_eq!(hlo_tok, nat_tok, "alpha={alpha}");
+    }
+}
+
+#[test]
+fn verify_output_contract_holds() {
+    let rt = runtime();
+    let v = rt.manifest.vocab_size;
+    let mut rng = Pcg32::seeded(14);
+    let case = make_case(&mut rng, 1, 5, v);
+    let (len, toks) = run_hlo(&rt, "exact", &case, None);
+    let alen = len[0] as usize;
+    assert!(alen <= 5);
+    // emitted tokens valid, padding is -1
+    for (i, &t) in toks.iter().enumerate() {
+        if i <= alen {
+            assert!((0..v as i32).contains(&t), "slot {i} = {t}");
+        } else {
+            assert_eq!(t, -1, "slot {i}");
+        }
+    }
+    // accepted prefix equals the drafts
+    assert_eq!(&toks[..alen], &case.draft[..alen]);
+}
+
+#[test]
+fn draft_step_greedy_is_argmax_and_deterministic() {
+    let rt = runtime();
+    let m = &rt.manifest;
+    let (s, _v) = (m.seq_len, m.vocab_size);
+    let exe = rt.load_model("draft_step", "base", 1).expect("draft_step");
+    let mut tokens = vec![0i32; s];
+    for (i, t) in tokens.iter_mut().enumerate().take(12) {
+        *t = 3 + (i as i32 % 40);
+    }
+    let inputs = [
+        HostTensor::i32(&[1, s], tokens.clone()),
+        HostTensor::i32(&[1], vec![12]),
+        HostTensor::f32(&[1], vec![0.3]),
+        HostTensor::f32(&[1], vec![0.0]), // temp 0 => greedy
+    ];
+    let out1 = exe.run(&inputs).unwrap();
+    let out2 = exe.run(&inputs).unwrap();
+    let tok1 = out1[0].as_i32().unwrap()[0];
+    let logits = out1[1].as_f32().unwrap();
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as i32;
+    assert_eq!(tok1, argmax, "greedy must be argmax");
+    assert_eq!(out2[0].as_i32().unwrap()[0], tok1, "determinism");
+}
+
+#[test]
+fn target_score_window_is_shifted_next_logits() {
+    // target_score's last row at lens L must equal target_step's logits at
+    // the same prefix (both are the next-token distribution at position L).
+    let rt = runtime();
+    let m = &rt.manifest;
+    let (s, v, w) = (m.seq_len, m.vocab_size, m.gmax + 1);
+    let score = rt.load_model("target_score", "base", 1).unwrap();
+    let step = rt.load_model("target_step", "base", 1).unwrap();
+    let mut tokens = vec![0i32; s];
+    for (i, t) in tokens.iter_mut().enumerate().take(30) {
+        *t = 3 + ((i * 7) as i32 % 50);
+    }
+    let lens = vec![30i32];
+    let score_out = score
+        .run(&[
+            HostTensor::i32(&[1, s], tokens.clone()),
+            HostTensor::i32(&[1], lens.clone()),
+        ])
+        .unwrap();
+    let win = score_out[0].as_f32().unwrap(); // (1, w, v)
+    let step_out = step
+        .run(&[
+            HostTensor::i32(&[1, s], tokens.clone()),
+            HostTensor::i32(&[1], lens),
+            HostTensor::f32(&[1], vec![0.5]),
+            HostTensor::f32(&[1], vec![0.0]),
+        ])
+        .unwrap();
+    let next = step_out[1].as_f32().unwrap(); // (1, v)
+    let last_row = &win[(w - 1) * v..w * v];
+    for (a, b) in last_row.iter().zip(next) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn literal_round_trip_through_tensors() {
+    let _rt = runtime(); // ensures the PJRT plugin is loadable
+    let t = HostTensor::f32(&[2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, -1e7]);
+    let lit = t.to_literal().unwrap();
+    let back = HostTensor::from_literal(&lit).unwrap();
+    assert_eq!(t, back);
+    let t = HostTensor::i32(&[4], vec![-1, 0, 7, i32::MAX]);
+    let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+    assert_eq!(t, back);
+}
+
+#[test]
+fn executable_rejects_wrong_shapes() {
+    let rt = runtime();
+    let exe = rt.load_model("draft_step", "base", 1).unwrap();
+    let bad = [
+        HostTensor::i32(&[1, 4], vec![0; 4]), // wrong S
+        HostTensor::i32(&[1], vec![1]),
+        HostTensor::f32(&[1], vec![0.0]),
+        HostTensor::f32(&[1], vec![1.0]),
+    ];
+    assert!(exe.run(&bad).is_err());
+    // wrong arity
+    assert!(exe.run(&bad[..2]).is_err());
+}
+
+#[test]
+fn profiler_accumulates_exec_scopes() {
+    let rt = runtime();
+    let v = rt.manifest.vocab_size;
+    let mut rng = Pcg32::seeded(15);
+    let case = make_case(&mut rng, 1, 1, v);
+    rt.profiler.reset();
+    let _ = run_hlo(&rt, "exact", &case, None);
+    let _ = run_hlo(&rt, "exact", &case, None);
+    let stat = rt.profiler.get(&format!("exec/verify_exact_b1_g1_v{v}"));
+    assert_eq!(stat.calls, 2);
+    assert!(stat.total.as_nanos() > 0);
+    let agg = rt.profiler.get("exec_kind/verify/exact");
+    assert_eq!(agg.calls, 2);
+}

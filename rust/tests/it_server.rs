@@ -1,0 +1,106 @@
+//! Integration: TCP server round-trips over a real engine.
+
+use std::sync::Arc;
+
+use specd::engine::{Backend, Engine, EngineConfig, Mode};
+use specd::runtime::Runtime;
+use specd::sampling::Method;
+use specd::server::service::Client;
+use specd::server::{Server, ServerConfig};
+use specd::tokenizer::Tokenizer;
+
+fn start_server() -> Arc<Server> {
+    let runtime = Arc::new(Runtime::open_default().expect("run `make artifacts` first"));
+    let tokenizer = Tokenizer::load(&specd::artifacts_dir().join("tokenizer.json")).unwrap();
+    let engine = Engine::new(
+        runtime,
+        EngineConfig {
+            pair: "base".into(),
+            batch: 1,
+            method: Method::Exact,
+            backend: Backend::Hlo,
+            mode: Mode::Speculative,
+            gamma_init: 5,
+            gamma_pinned: false,
+            self_draft: false,
+            seed: 3,
+        },
+    )
+    .unwrap();
+    Arc::new(
+        Server::start(
+            engine,
+            tokenizer,
+            ServerConfig {
+                addr: "127.0.0.1:0".into(), // ephemeral port
+            },
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn serves_requests_end_to_end() {
+    let server = start_server();
+    let addr = server.addr().to_string();
+    let accept_thread = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_forever();
+        })
+    };
+
+    let mut c = Client::connect(&addr).unwrap();
+    let resp = c
+        .request(1, "The scheduler accepts", 16, 0.7)
+        .expect("request 1");
+    assert!(resp.get("error").is_none(), "{}", resp.dump());
+    assert_eq!(resp.get("id").unwrap().as_i64(), Some(1));
+    assert!(resp.get("tokens").unwrap().as_usize().unwrap() > 0);
+    assert!(resp.get("text").unwrap().as_str().is_some());
+    assert!(resp.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // second request on the same connection
+    let resp2 = c.request(2, "A worker thread verifies", 8, 0.7).unwrap();
+    assert_eq!(resp2.get("id").unwrap().as_i64(), Some(2));
+
+    // a second concurrent client
+    let mut c2 = Client::connect(&addr).unwrap();
+    let resp3 = c2.request(9, "The profiler tracks", 8, 0.7).unwrap();
+    assert_eq!(resp3.get("id").unwrap().as_i64(), Some(9));
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_error_lines() {
+    use std::io::{BufRead, BufReader, Write};
+    let server = start_server();
+    let addr = server.addr();
+    let accept_thread = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_forever();
+        })
+    };
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    writeln!(stream, "this is not json").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = specd::util::json::parse(&line).unwrap();
+    assert!(v.get("error").is_some(), "{line}");
+
+    // and a valid one still works afterwards on the same connection
+    writeln!(stream, r#"{{"id": 4, "prompt": "The batch planner", "max_new_tokens": 6}}"#)
+        .unwrap();
+    let mut line2 = String::new();
+    reader.read_line(&mut line2).unwrap();
+    let v2 = specd::util::json::parse(&line2).unwrap();
+    assert_eq!(v2.get("id").unwrap().as_i64(), Some(4));
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
