@@ -6,7 +6,7 @@
 //! ```
 
 use anyhow::Result;
-use specd::engine::Backend;
+use specd::engine::{Backend, SamplingParams};
 use specd::sampling::Method;
 use specd::tables::{run_method, EvalContext};
 use specd::util::stats::rel_improvement_pct;
@@ -17,7 +17,9 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
-    let ctx = EvalContext::open_default(n)?;
+    let mut ctx = EvalContext::open_default(n)?;
+    // explicit per-request policy (the shared defaults minus temperature)
+    ctx.params = SamplingParams::default().with_temperature(0.5);
     for (kind, label) in [
         (TaskKind::Asr, "ASR role (WER ↓, paper uses α,β = ±1e3)"),
         (TaskKind::Summarize, "summarization role (ROUGE-1 ↑, paper ±1e4)"),

@@ -6,7 +6,7 @@
 //! ```
 
 use anyhow::Result;
-use specd::engine::Backend;
+use specd::engine::{Backend, SamplingParams};
 use specd::sampling::Method;
 use specd::tables::{run_method, EvalContext};
 use specd::util::stats::rel_improvement_pct;
@@ -17,9 +17,13 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
-    let ctx = EvalContext::open_default(n)?;
+    let mut ctx = EvalContext::open_default(n)?;
+    // transcription wants determinism: greedy per-request policy (the
+    // same server can concurrently serve sampled summarization — see
+    // examples/summarize.rs)
+    ctx.params = SamplingParams::default().greedy();
     let tasks = make_tasks(&ctx.corpus, TaskKind::Asr, n, 103);
-    println!("asr_sim: {n} transcription-continuation examples (WER, lower is better)\n");
+    println!("asr_sim: {n} greedy transcription-continuation examples (WER, lower is better)\n");
 
     let runs = [
         ("baseline/hlo", run_method(&ctx, &tasks, Method::Baseline, Backend::Hlo, 5, false)?),

@@ -6,7 +6,7 @@
 //! ```
 
 use anyhow::Result;
-use specd::engine::Backend;
+use specd::engine::{Backend, SamplingParams};
 use specd::sampling::Method;
 use specd::simulator::{peak_memory_bytes, simulate_step, DeviceProfile, SimConfig};
 use specd::tables::{run_method, EvalContext};
@@ -17,7 +17,10 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(4);
-    let ctx = EvalContext::open_default(n)?;
+    let mut ctx = EvalContext::open_default(n)?;
+    // the γ pin below is engine-level (run_method's gamma_pinned); the
+    // per-request equivalent is SamplingParams::pin_gamma
+    ctx.params = SamplingParams::default().with_temperature(0.5);
     let dev = DeviceProfile::by_name("a100").unwrap();
     let tasks = make_tasks(&ctx.corpus, TaskKind::Summarize, n, 202);
     let methods = [

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use anyhow::Result;
-use specd::engine::{Backend, Engine, EngineConfig, Mode};
+use specd::engine::{Backend, Engine, EngineConfig, Mode, SamplingParams};
 use specd::runtime::Runtime;
 use specd::sampling::Method;
 use specd::tokenizer::Tokenizer;
@@ -38,12 +38,17 @@ fn main() -> Result<()> {
         },
     )?;
 
-    // 4. generate
+    // 4. generate — per-request policy is a SamplingParams: nucleus
+    // sampling at temperature 0.5, stopping at a period
     let prompts = [
         ("The scheduler accepts the drafted tokens", 64usize),
         ("A worker thread verifies", 48usize),
     ];
-    let out = engine.generate_text(&tok, &prompts, 0.5)?;
+    let params = SamplingParams::default()
+        .with_temperature(0.5)
+        .with_top_p(0.95)
+        .with_stop(vec![". ".into()]);
+    let out = engine.generate_text(&tok, &prompts, &params)?;
     for ((prompt, _), (text, r)) in prompts.iter().zip(&out) {
         println!("\nprompt : {prompt}");
         println!("output : {text}");

@@ -1,10 +1,13 @@
 //! End-to-end serving driver (DESIGN.md's required e2e validation).
 //!
 //! Starts the TCP server over the build-time-trained models, fires a
-//! batch of concurrent client requests at it, and reports
+//! batch of concurrent protocol-v2 client requests at it, and reports
 //! latency/throughput — then repeats with speculation disabled
 //! (autoregressive target-only) to show the speculative speedup, and with
 //! the sigmoid method to show the paper's fastest configuration.
+//! Finishes with a protocol-v2 showcase: streaming deltas, per-request
+//! greedy + stop-sequence + γ-pin overrides, and mid-decode cancellation
+//! against the same server.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_demo
@@ -13,7 +16,7 @@
 use std::sync::Arc;
 
 use anyhow::Result;
-use specd::engine::{Backend, Engine, EngineConfig, Mode};
+use specd::engine::{Backend, Engine, EngineConfig, Mode, SamplingParams};
 use specd::runtime::Runtime;
 use specd::sampling::Method;
 use specd::server::service::Client;
@@ -66,9 +69,13 @@ fn run_config(label: &str, method: Method, mode: Mode) -> Result<(f64, f64, f64)
         let prompt = prompt.to_string();
         handles.push(std::thread::spawn(move || -> Result<Vec<(f64, usize)>> {
             let mut client = Client::connect(&addr)?;
+            let params = SamplingParams::default()
+                .with_max_new_tokens(MAX_NEW)
+                .with_temperature(0.7);
             let mut out = Vec::new();
             for round in 0..ROUNDS {
-                let resp = client.request((i * 10 + round) as u64, &prompt, MAX_NEW, 0.7)?;
+                let resp =
+                    client.request_v2((i * 10 + round) as u64, &prompt, &params)?;
                 anyhow::ensure!(resp.get("error").is_none(), "server error: {}", resp.dump());
                 out.push((
                     resp.get("latency_ms").unwrap().as_f64().unwrap(),
@@ -101,6 +108,93 @@ fn run_config(label: &str, method: Method, mode: Mode) -> Result<(f64, f64, f64)
     Ok((latency.percentile(50.0), latency.percentile(99.0), tput))
 }
 
+/// Protocol-v2 showcase against one running server: streaming deltas,
+/// per-request overrides (greedy, stop sequences, pinned γ), and
+/// mid-decode cancellation.
+fn protocol_v2_demo() -> Result<()> {
+    let runtime = Arc::new(Runtime::open_default()?);
+    let tokenizer = Tokenizer::load(&specd::artifacts_dir().join("tokenizer.json"))?;
+    let engine = Engine::new(runtime, EngineConfig::default())?;
+    let server = Arc::new(Server::start(
+        engine,
+        tokenizer,
+        ServerConfig { addr: "127.0.0.1:0".into() },
+    )?);
+    let addr = server.addr().to_string();
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = server.serve_forever();
+        });
+    }
+    let mut c = Client::connect(&addr)?;
+
+    // 1. stream a sampled request: delta events arrive as tokens commit
+    c.send_generate(
+        1,
+        "The request router batches",
+        &SamplingParams::default()
+            .with_max_new_tokens(32)
+            .with_temperature(0.8)
+            .with_top_p(0.9),
+        true,
+    )?;
+    let mut chunks = 0usize;
+    loop {
+        let ev = c.read_event()?;
+        match ev.get("event").and_then(|e| e.as_str()) {
+            Some("delta") => chunks += 1,
+            _ => {
+                println!(
+                    "streamed request: {chunks} delta chunks, finish={}",
+                    ev.get("finish").and_then(|f| f.as_str()).unwrap_or("?")
+                );
+                break;
+            }
+        }
+    }
+
+    // 2. per-request overrides: greedy, stop at the first space, γ pinned
+    let resp = c.request_v2(
+        2,
+        "The verification kernel",
+        &SamplingParams::default()
+            .greedy()
+            .with_max_new_tokens(32)
+            .with_stop(vec![" ".into()])
+            .pin_gamma(2),
+    )?;
+    println!(
+        "greedy + stop + γ-pin: finish={} text={:?}",
+        resp.get("finish").and_then(|f| f.as_str()).unwrap_or("?"),
+        resp.get("text").and_then(|t| t.as_str()).unwrap_or("?"),
+    );
+
+    // 3. cancel mid-decode: the slot is freed and the request finishes
+    // with "cancel"
+    c.send_generate(
+        3,
+        "The memory pool loads",
+        &SamplingParams::default().with_max_new_tokens(256),
+        true,
+    )?;
+    let _first_delta = c.read_event()?; // decode has started
+    c.send_cancel(3)?;
+    loop {
+        let ev = c.read_event()?;
+        if ev.get("event").and_then(|e| e.as_str()) != Some("delta") {
+            println!(
+                "cancelled request: finish={} after {} tokens",
+                ev.get("finish").and_then(|f| f.as_str()).unwrap_or("?"),
+                ev.get("tokens").and_then(|t| t.as_usize()).unwrap_or(0),
+            );
+            break;
+        }
+    }
+    server.shutdown();
+    Ok(())
+}
+
 fn main() -> Result<()> {
     println!(
         "serve_demo: {} concurrent clients × {} rounds, {} new tokens each\n",
@@ -131,5 +225,7 @@ fn main() -> Result<()> {
         tput_exact / tput_ar,
         tput_sig / tput_ar
     );
-    Ok(())
+
+    println!("\nprotocol v2 showcase (streaming / overrides / cancel):");
+    protocol_v2_demo()
 }

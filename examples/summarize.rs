@@ -7,7 +7,7 @@
 //! ```
 
 use anyhow::Result;
-use specd::engine::Backend;
+use specd::engine::{Backend, SamplingParams};
 use specd::sampling::Method;
 use specd::tables::{run_method, EvalContext};
 use specd::util::stats::rel_improvement_pct;
@@ -18,9 +18,13 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
-    let ctx = EvalContext::open_default(n)?;
+    let mut ctx = EvalContext::open_default(n)?;
+    // summarization samples with nucleus truncation (per-request policy;
+    // the top-p mask applies identically to every verification method,
+    // so the exact == baseline tie below still holds)
+    ctx.params = SamplingParams::default().with_temperature(0.7).with_top_p(0.95);
     let tasks = make_tasks(&ctx.corpus, TaskKind::Summarize, n, 202);
-    println!("summarize: {n} examples, 3 methods (same seeds — exact must tie baseline)\n");
+    println!("summarize: {n} nucleus-sampled examples, 3 methods (same seeds — exact must tie baseline)\n");
 
     let base = run_method(&ctx, &tasks, Method::Baseline, Backend::Hlo, 5, false)?;
     let exact = run_method(&ctx, &tasks, Method::Exact, Backend::Hlo, 5, false)?;

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use specd::engine::{Backend, Engine, EngineConfig, GenRequest, Mode};
+use specd::engine::{Backend, Engine, EngineConfig, GenRequest, Mode, SamplingParams};
 use specd::runtime::Runtime;
 use specd::sampling::Method;
 use specd::tokenizer::Tokenizer;
@@ -29,10 +29,11 @@ fn run(rt: &Arc<Runtime>, tok: &Tokenizer, method: Method, mode: Mode) -> (f64, 
             GenRequest::new(
                 i,
                 tok.encode("The scheduler accepts the drafted tokens"),
-                40,
+                SamplingParams::default()
+                    .with_max_new_tokens(40)
+                    .with_temperature(0.7)
+                    .with_seed(500 + i),
             )
-            .with_temperature(0.7)
-            .with_seed(500 + i)
         })
         .collect();
     let t = Instant::now();

@@ -11,8 +11,17 @@
 //!    verification needs;
 //! 3. **verify**: one fused verification call (HLO artifact or native
 //!    oracle) producing per-slot accepted lengths and emitted tokens;
-//! 4. **commit**: slot state update, finish detection, refill from the
-//!    admission queue, adaptive-γ update (+2 on all-accept / −1).
+//! 4. **commit**: slot state update, finish detection (EOS, stop
+//!    sequences, length, context), refill from the admission queue,
+//!    adaptive-γ update (+2 on all-accept / −1).
+//!
+//! Per-request policy lives in [`SamplingParams`] and is honored
+//! per-slot: target/draft temperatures, top-k/top-p truncation of the
+//! target distribution (logit masking shared with the sampling oracle),
+//! stop sequences at commit, γ caps/pins, and — on batch-1 engines —
+//! verification-method overrides. Committed tokens are additionally
+//! surfaced through [`Engine::take_deltas`] so the server can stream
+//! incremental output, and [`Engine::cancel`] frees a slot mid-decode.
 //!
 //! Every uniform consumed anywhere in the stack comes from per-request
 //! PCG32 streams, so generation is deterministic given request seeds.
@@ -24,12 +33,14 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::runtime::{HostTensor, LoadedExecutable, Runtime};
-use crate::sampling::Method;
+use crate::sampling::{self, Method};
 use crate::tokenizer;
 use crate::util::rng::Pcg32;
 
 use super::gamma::GammaController;
-use super::request::{FinishReason, GenRequest, GenResult};
+use super::request::{
+    match_stop_suffix, FinishReason, GenRequest, GenResult, SamplingParams,
+};
 use super::stats::EngineStats;
 use super::verifier::{Backend, Verifier, VerifyInputs};
 
@@ -110,6 +121,8 @@ pub struct Engine {
     slots: Vec<Option<Slot>>,
     queue: VecDeque<GenRequest>,
     results: Vec<GenResult>,
+    /// tokens committed since the last [`Engine::take_deltas`] call
+    deltas: Vec<(u64, Vec<i32>)>,
     // model dims
     seq_len: usize,
     vocab: usize,
@@ -179,6 +192,7 @@ impl Engine {
             slots: (0..b).map(|_| None).collect(),
             queue: VecDeque::new(),
             results: Vec::new(),
+            deltas: Vec::new(),
             stats: EngineStats::default(),
             seq_len,
             vocab,
@@ -199,8 +213,108 @@ impl Engine {
     }
 
     /// Enqueue a request (admitted into a slot on the next step).
+    ///
+    /// In-process callers are trusted: over-long prompts are truncated at
+    /// admission. Wire-facing layers should check [`Engine::admissible`]
+    /// first and reject instead.
     pub fn submit(&mut self, req: GenRequest) {
         self.queue.push_back(req);
+    }
+
+    /// Validate a request against the params rules and the loaded model
+    /// (the wire-facing admission check).
+    pub fn admissible(&self, req: &GenRequest) -> Result<(), String> {
+        req.params.validate()?;
+        if req.prompt_ids.len() > self.seq_len {
+            return Err(format!(
+                "prompt is {} tokens but model context is {}",
+                req.prompt_ids.len(),
+                self.seq_len
+            ));
+        }
+        if self.config.mode == Mode::Autoregressive
+            && (req.params.top_k != 0 || req.params.top_p < 1.0)
+        {
+            // the autoregressive path samples inside the target_step
+            // artifact, where the filter cannot be applied — reject
+            // rather than silently ignore the knobs
+            return Err(
+                "top_k/top_p filtering requires the speculative pipeline".into()
+            );
+        }
+        if let Some(m) = req.params.method {
+            if self.config.mode == Mode::Speculative {
+                if m != self.config.method && self.config.batch > 1 {
+                    return Err(
+                        "per-request method override requires a batch-1 engine".into()
+                    );
+                }
+                if self.verifier.available_gammas_for(m).is_empty() {
+                    return Err(format!(
+                        "no verify artifacts for method {:?}",
+                        m.name()
+                    ));
+                }
+            }
+        }
+        if let Some(g) = req.params.gamma {
+            if g > self.gmax {
+                return Err(format!("gamma {} exceeds model gmax {}", g, self.gmax));
+            }
+            if self.config.mode == Mode::Speculative {
+                let m = req.params.method.unwrap_or(self.config.method);
+                if !self
+                    .verifier
+                    .available_gammas_for(m)
+                    .iter()
+                    .any(|&x| x <= g)
+                {
+                    return Err(format!(
+                        "no verify artifact with gamma <= {g} for method {:?}",
+                        m.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Cancel a request by id: drop it from the queue, or free its slot
+    /// mid-decode. Emits a [`GenResult`] with [`FinishReason::Cancelled`]
+    /// carrying whatever was generated so far. Returns false when the id
+    /// is unknown (never submitted, or already finished).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            let _ = self.queue.remove(pos);
+            self.results.push(GenResult {
+                id,
+                token_ids: Vec::new(),
+                finish: FinishReason::Cancelled,
+                steps: 0,
+                drafted: 0,
+                accepted: 0,
+                latency: 0.0,
+            });
+            self.stats.finished += 1;
+            return true;
+        }
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().map_or(false, |s| s.req.id == id) {
+                let s = slot.take().unwrap();
+                self.results.push(GenResult {
+                    id,
+                    token_ids: s.generated,
+                    finish: FinishReason::Cancelled,
+                    steps: s.steps,
+                    drafted: s.drafted,
+                    accepted: s.accepted,
+                    latency: s.started.elapsed().as_secs_f64(),
+                });
+                self.stats.finished += 1;
+                return true;
+            }
+        }
+        false
     }
 
     /// Requests currently being decoded.
@@ -229,6 +343,8 @@ impl Engine {
         self.admit();
         while self.active() > 0 {
             self.step()?;
+            // batch path: nobody streams, don't let deltas accumulate
+            self.deltas.clear();
         }
         Ok(())
     }
@@ -237,6 +353,15 @@ impl Engine {
         let mut out = std::mem::take(&mut self.results);
         out.sort_by_key(|r| r.id);
         out
+    }
+
+    /// Tokens committed since the last call, in commit order:
+    /// `(request id, newly committed token ids)`. Streaming note: a stop
+    /// sequence that spans a step boundary may retract up to its length
+    /// from previously delivered deltas — the final [`GenResult`] (and
+    /// the wire `done` event) is authoritative.
+    pub fn take_deltas(&mut self) -> Vec<(u64, Vec<i32>)> {
+        std::mem::take(&mut self.deltas)
     }
 
     fn admit(&mut self) {
@@ -252,7 +377,8 @@ impl Engine {
                     };
                     tokens[..prompt.len()].copy_from_slice(&prompt);
                     let len = prompt.len();
-                    let rng = Pcg32::derive(self.config.seed ^ req.seed, req.id);
+                    let seed = req.params.seed_or(req.id);
+                    let rng = Pcg32::derive(self.config.seed ^ seed, req.id);
                     *slot = Some(Slot {
                         req,
                         tokens,
@@ -273,6 +399,47 @@ impl Engine {
     /// proposal distribution, so fully-greedy temps are nudged positive.
     fn effective_temp(t: f32) -> f32 {
         t.max(0.05)
+    }
+
+    /// Verification method for this step: the engine default unless an
+    /// active slot carries an override (admission restricts overrides to
+    /// batch-1 engines, so at most one is in play).
+    fn step_method(&self) -> Method {
+        self.slots
+            .iter()
+            .flatten()
+            .find_map(|s| s.req.params.method)
+            .unwrap_or(self.config.method)
+    }
+
+    /// γ wanted this step: the adaptive controller clamped by slot
+    /// headroom, then by per-request overrides — pinned slots bypass the
+    /// controller, plain overrides cap it; a heterogeneous batch resolves
+    /// to the most conservative value since γ is one per batched step.
+    /// The result is then snapped down to artifact availability
+    /// (admission guarantees an artifact with γ ≤ the override exists;
+    /// trusted in-process callers fall back to the smallest artifact).
+    fn step_gamma_want(&self, min_headroom: usize) -> usize {
+        let mut cap: Option<usize> = None;
+        let mut pinned: Option<usize> = None;
+        for sl in self.slots.iter().flatten() {
+            if let Some(g) = sl.req.params.gamma {
+                if sl.req.params.gamma_pinned {
+                    pinned = Some(pinned.map_or(g, |p| p.min(g)));
+                } else {
+                    cap = Some(cap.map_or(g, |c| c.min(g)));
+                }
+            }
+        }
+        // a pin replaces the controller value, not the other slots' caps
+        let mut want = match pinned {
+            Some(g) => g,
+            None => self.gamma.effective(min_headroom),
+        };
+        if let Some(c) = cap {
+            want = want.min(c);
+        }
+        want.min(min_headroom.saturating_sub(1)).max(1)
     }
 
     /// Execute one decode step across all active slots.
@@ -308,7 +475,7 @@ impl Engine {
         let (b, s, v) = (self.config.batch, self.seq_len, self.vocab);
 
         // γ for this step: controller value clamped by slot headroom and
-        // artifact availability.
+        // per-request overrides, snapped to artifact availability.
         let min_headroom = self
             .slots
             .iter()
@@ -316,8 +483,9 @@ impl Engine {
             .map(|sl| sl.headroom(s))
             .min()
             .unwrap_or(2);
-        let want = self.gamma.effective(min_headroom);
-        let avail = self.verifier.available_gammas();
+        let want = self.step_gamma_want(min_headroom);
+        let method = self.step_method();
+        let avail = self.verifier.available_gammas_for(method);
         let gamma = avail
             .iter()
             .copied()
@@ -335,7 +503,7 @@ impl Engine {
                     let (u, t) = match &mut self.slots[i] {
                         Some(slot) => (
                             slot.rng.uniform_f32(),
-                            Self::effective_temp(slot.req.draft_temperature),
+                            Self::effective_temp(slot.req.params.draft_temp()),
                         ),
                         None => (0.0, 1.0),
                     };
@@ -385,7 +553,7 @@ impl Engine {
         // the sampling temperature; see effective_temp)
         for i in 0..b {
             let t = match &self.slots[i] {
-                Some(slot) => Self::effective_temp(slot.req.temperature),
+                Some(slot) => Self::effective_temp(slot.req.params.temperature),
                 None => 1.0,
             };
             if (t - 1.0).abs() > 1e-6 {
@@ -396,6 +564,28 @@ impl Engine {
                 for x in &mut self.zq_buf[i * gamma * v..(i + 1) * gamma * v] {
                     *x *= inv;
                 }
+            }
+        }
+
+        // --- per-request top-k/top-p truncation of the target
+        // distribution (q is left untouched: it must remain the true
+        // proposal the drafts were sampled from; rejection sampling then
+        // yields the truncated target regardless of q's support)
+        for i in 0..b {
+            let (k, p) = match &self.slots[i] {
+                Some(slot) => (slot.req.params.top_k, slot.req.params.top_p),
+                None => (0, 1.0),
+            };
+            if k == 0 && p >= 1.0 {
+                continue;
+            }
+            for j in 0..=gamma {
+                let off = (i * (gamma + 1) + j) * v;
+                sampling::filter::mask_logits_top_k_top_p(
+                    &mut self.zp_buf[off..off + v],
+                    k,
+                    p,
+                );
             }
         }
 
@@ -418,6 +608,7 @@ impl Engine {
         }
         let (out, verify_secs) = self.verifier.verify(
             gamma,
+            method,
             &VerifyInputs {
                 z_p: &self.zp_buf[..b * (gamma + 1) * v],
                 z_q: &self.zq_buf[..b * gamma * v],
@@ -446,21 +637,35 @@ impl Engine {
             }
 
             let row = &out.out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)];
+            let gen_before = slot.generated.len();
             let mut finish: Option<FinishReason> = None;
             for &tok in row.iter().take(alen + 1) {
                 debug_assert!(tok >= 0);
                 slot.tokens[slot.len] = tok;
                 slot.len += 1;
                 slot.generated.push(tok);
-                emitted_total += 1;
                 if tok == tokenizer::EOS {
                     finish = Some(FinishReason::Stop);
                     break;
                 }
-                if slot.generated.len() >= slot.req.max_new_tokens {
+                if let Some(m) = match_stop_suffix(&slot.generated, &slot.req.stop_ids)
+                {
+                    slot.generated.truncate(slot.generated.len() - m);
+                    finish = Some(FinishReason::StopSeq);
+                    break;
+                }
+                if slot.generated.len() >= slot.req.params.max_new_tokens {
                     finish = Some(FinishReason::Length);
                     break;
                 }
+            }
+            // newly committed tokens (a stop-sequence trim can retract
+            // below gen_before when the match spans a step boundary)
+            let from = gen_before.min(slot.generated.len());
+            let delta: Vec<i32> = slot.generated[from..].to_vec();
+            emitted_total += delta.len();
+            if !delta.is_empty() {
+                self.deltas.push((slot.req.id, delta));
             }
             if finish.is_none() && slot.headroom(s) < 2 {
                 finish = Some(FinishReason::Context);
@@ -498,7 +703,7 @@ impl Engine {
         self.fill_model_inputs(0);
         for i in 0..b {
             let (u, t) = match &mut self.slots[i] {
-                Some(slot) => (slot.rng.uniform_f32(), slot.req.temperature),
+                Some(slot) => (slot.rng.uniform_f32(), slot.req.params.temperature),
                 None => (0.0, 1.0),
             };
             self.u_buf[i] = u;
@@ -520,17 +725,28 @@ impl Engine {
             slot.steps += 1;
             slot.tokens[slot.len] = toks[i];
             slot.len += 1;
+            let gen_before = slot.generated.len();
             slot.generated.push(toks[i]);
-            emitted += 1;
             let finish = if toks[i] == tokenizer::EOS {
                 Some(FinishReason::Stop)
-            } else if slot.generated.len() >= slot.req.max_new_tokens {
+            } else if let Some(m) =
+                match_stop_suffix(&slot.generated, &slot.req.stop_ids)
+            {
+                slot.generated.truncate(slot.generated.len() - m);
+                Some(FinishReason::StopSeq)
+            } else if slot.generated.len() >= slot.req.params.max_new_tokens {
                 Some(FinishReason::Length)
             } else if slot.headroom(s) < 2 {
                 Some(FinishReason::Context)
             } else {
                 None
             };
+            let from = gen_before.min(slot.generated.len());
+            let delta: Vec<i32> = slot.generated[from..].to_vec();
+            emitted += delta.len();
+            if !delta.is_empty() {
+                self.deltas.push((slot.req.id, delta));
+            }
             if let Some(reason) = finish {
                 let slot = self.slots[i].take().unwrap();
                 self.results.push(GenResult {
@@ -552,18 +768,20 @@ impl Engine {
     }
 
     /// Generate text end-to-end with a tokenizer (server/example helper).
+    /// `params` applies to every prompt; the per-prompt `usize` overrides
+    /// `max_new_tokens`.
     pub fn generate_text(
         &mut self,
         tok: &tokenizer::Tokenizer,
         prompts: &[(&str, usize)],
-        temperature: f32,
+        params: &SamplingParams,
     ) -> Result<Vec<(String, GenResult)>> {
         let reqs: Vec<GenRequest> = prompts
             .iter()
             .enumerate()
             .map(|(i, (p, max_new))| {
-                GenRequest::new(i as u64, tok.encode(p), *max_new)
-                    .with_temperature(temperature)
+                let rp = params.clone().with_max_new_tokens(*max_new);
+                GenRequest::new(i as u64, tok.encode(p), rp).tokenize_stops(tok)
             })
             .collect();
         let results = self.generate(reqs)?;

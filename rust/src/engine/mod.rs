@@ -4,7 +4,8 @@
 //! it here is a vLLM-style serving loop specialised for speculative
 //! sampling:
 //!
-//! * [`request`] — request/result types and sampling parameters
+//! * [`request`] — request/result types and [`SamplingParams`], the
+//!   single source of per-request policy (defaults + validation)
 //! * [`gamma`] — the adaptive draft-length controller (the HF heuristic
 //!   the paper uses in §4.1: start at 5, +2 on all-accept, −1 otherwise)
 //! * [`verifier`] — pluggable verification backends: the three AOT HLO
@@ -21,6 +22,8 @@ pub mod verifier;
 
 pub use core::{Engine, EngineConfig, Mode};
 pub use gamma::GammaController;
-pub use request::{FinishReason, GenRequest, GenResult};
+pub use request::{
+    match_stop_suffix, FinishReason, GenRequest, GenResult, SamplingParams,
+};
 pub use stats::EngineStats;
 pub use verifier::{Backend, Verifier};

@@ -1,4 +1,185 @@
 //! Request/response types for the serving engine.
+//!
+//! [`SamplingParams`] is the single source of per-request policy: every
+//! layer (wire protocol, CLI, evaluation harness, engine) builds requests
+//! from `SamplingParams::default()` plus explicit overrides, and
+//! [`SamplingParams::validate`] is the one place admission rules live.
+
+use crate::sampling::Method;
+use crate::tokenizer::Tokenizer;
+
+/// Per-request sampling and decoding policy.
+///
+/// Defaults (one source of truth — the wire protocol, the CLI and
+/// `GenRequest` all derive from it): `max_new_tokens` 64, `temperature`
+/// 0.8, draft follows the target temperature, no top-k/top-p truncation,
+/// no stop sequences, seed derived from the request id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    pub max_new_tokens: usize,
+    /// target-model sampling temperature; `0.0` = greedy
+    pub temperature: f32,
+    /// draft-model sampling temperature; `None` follows `temperature`
+    /// (exposed because greedy drafting raises acceptance)
+    pub draft_temperature: Option<f32>,
+    /// keep only the k most probable target tokens (`0` = disabled).
+    /// Honored by the speculative pipeline; autoregressive engines
+    /// reject filtered requests at admission (sampling happens inside
+    /// the target_step artifact there).
+    pub top_k: usize,
+    /// nucleus truncation of the target distribution (`1.0` = disabled;
+    /// same speculative-only caveat as `top_k`)
+    pub top_p: f32,
+    /// stop sequences (text level; tokenized at admission by whichever
+    /// layer owns the tokenizer). The matched sequence is trimmed from
+    /// the output.
+    pub stop: Vec<String>,
+    /// per-request RNG stream seed; `None` derives from the request id
+    pub seed: Option<u64>,
+    /// per-request draft-length override: caps the adaptive controller
+    /// while this request is active (one γ per batched step, so
+    /// heterogeneous batches resolve to the most conservative value)
+    pub gamma: Option<usize>,
+    /// with `gamma`, bypass the adaptive controller entirely (pin)
+    pub gamma_pinned: bool,
+    /// per-request verification-method override; honored where the loaded
+    /// artifacts allow it (batch-1 engines, or matching the engine method)
+    pub method: Option<Method>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            max_new_tokens: 64,
+            temperature: 0.8,
+            draft_temperature: None,
+            top_k: 0,
+            top_p: 1.0,
+            stop: Vec::new(),
+            seed: None,
+            gamma: None,
+            gamma_pinned: false,
+            method: None,
+        }
+    }
+}
+
+impl SamplingParams {
+    pub fn with_max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = n;
+        self
+    }
+
+    /// Set the target temperature (draft keeps following it).
+    pub fn with_temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    pub fn with_draft_temperature(mut self, t: f32) -> Self {
+        self.draft_temperature = Some(t);
+        self
+    }
+
+    /// Greedy decoding: temperature 0 for target and draft.
+    pub fn greedy(mut self) -> Self {
+        self.temperature = 0.0;
+        self.draft_temperature = None;
+        self
+    }
+
+    pub fn with_top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn with_top_p(mut self, p: f32) -> Self {
+        self.top_p = p;
+        self
+    }
+
+    pub fn with_stop(mut self, stop: Vec<String>) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Cap the adaptive γ controller at `g` while this request is active.
+    pub fn with_gamma(mut self, g: usize) -> Self {
+        self.gamma = Some(g);
+        self
+    }
+
+    /// Pin γ to exactly `g` for this request (bypasses the controller).
+    pub fn pin_gamma(mut self, g: usize) -> Self {
+        self.gamma = Some(g);
+        self.gamma_pinned = true;
+        self
+    }
+
+    pub fn with_method(mut self, m: Method) -> Self {
+        self.method = Some(m);
+        self
+    }
+
+    /// Effective draft temperature (follows `temperature` unless set).
+    pub fn draft_temp(&self) -> f32 {
+        self.draft_temperature.unwrap_or(self.temperature)
+    }
+
+    /// Effective RNG seed for a request with id `id`.
+    pub fn seed_or(&self, id: u64) -> u64 {
+        self.seed.unwrap_or(id)
+    }
+
+    /// Admission validation — the one place request policy rules live.
+    /// Model-dependent checks (prompt length, artifact availability) are
+    /// in [`crate::engine::Engine::admissible`].
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_new_tokens == 0 {
+            return Err("max_new_tokens must be >= 1".into());
+        }
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(format!(
+                "temperature must be finite and >= 0, got {}",
+                self.temperature
+            ));
+        }
+        if let Some(t) = self.draft_temperature {
+            if !t.is_finite() || t < 0.0 {
+                return Err(format!(
+                    "draft_temperature must be finite and >= 0, got {t}"
+                ));
+            }
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            return Err(format!(
+                "top_p must be in (0, 1], got {}",
+                self.top_p
+            ));
+        }
+        if self.stop.len() > 16 {
+            return Err(format!(
+                "at most 16 stop sequences, got {}",
+                self.stop.len()
+            ));
+        }
+        if self.stop.iter().any(String::is_empty) {
+            return Err("stop sequences must be non-empty".into());
+        }
+        if self.gamma == Some(0) {
+            return Err("gamma override must be >= 1".into());
+        }
+        if self.gamma_pinned && self.gamma.is_none() {
+            return Err("gamma_pinned requires gamma".into());
+        }
+        Ok(())
+    }
+}
 
 /// A generation request (token-id level; the server layer handles text).
 #[derive(Debug, Clone)]
@@ -8,45 +189,70 @@ pub struct GenRequest {
     /// raw prompt text, encoded by whichever layer owns the tokenizer
     /// (the TCP server's engine thread); ignored when `prompt_ids` is set
     pub prompt_text: Option<String>,
-    pub max_new_tokens: usize,
-    /// target-model sampling temperature; `0.0` = greedy
-    pub temperature: f32,
-    /// draft-model sampling temperature (the draft usually samples at the
-    /// same temperature; exposed because greedy drafting raises acceptance)
-    pub draft_temperature: f32,
-    /// per-request RNG stream seed
-    pub seed: u64,
+    /// sampling policy — the request's single source of decode knobs
+    pub params: SamplingParams,
+    /// `params.stop` tokenized (filled by whichever layer owns the
+    /// tokenizer); empty when no stop sequences apply
+    pub stop_ids: Vec<Vec<i32>>,
 }
 
 impl GenRequest {
-    pub fn new(id: u64, prompt_ids: Vec<i32>, max_new_tokens: usize) -> Self {
+    pub fn new(id: u64, prompt_ids: Vec<i32>, params: SamplingParams) -> Self {
         GenRequest {
             id,
             prompt_ids,
             prompt_text: None,
-            max_new_tokens,
-            temperature: 0.8,
-            draft_temperature: 0.8,
-            seed: id,
+            params,
+            stop_ids: Vec::new(),
         }
     }
 
+    /// Text-prompt request; `prompt_ids` is filled at admission by the
+    /// layer that owns the tokenizer.
+    pub fn from_text(id: u64, prompt: String, params: SamplingParams) -> Self {
+        GenRequest {
+            id,
+            prompt_ids: Vec::new(),
+            prompt_text: Some(prompt),
+            params,
+            stop_ids: Vec::new(),
+        }
+    }
+
+    /// Tokenize `params.stop` into `stop_ids` (char-level tokenizer, so
+    /// text-level and token-level matching coincide).
+    pub fn tokenize_stops(mut self, tok: &Tokenizer) -> Self {
+        self.stop_ids = self.params.stop.iter().map(|s| tok.encode(s)).collect();
+        self
+    }
+
+    // Thin conveniences over `params` (the common test/bench idioms).
+
     pub fn greedy(mut self) -> Self {
-        self.temperature = 0.0;
-        self.draft_temperature = 0.0;
+        self.params = self.params.greedy();
         self
     }
 
     pub fn with_temperature(mut self, t: f32) -> Self {
-        self.temperature = t;
-        self.draft_temperature = t;
+        self.params = self.params.with_temperature(t);
         self
     }
 
     pub fn with_seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
+        self.params = self.params.with_seed(seed);
         self
     }
+}
+
+/// If `generated` ends with one of `stops`, return the matched length
+/// (longest match wins so the whole sequence can be trimmed).
+pub fn match_stop_suffix(generated: &[i32], stops: &[Vec<i32>]) -> Option<usize> {
+    stops
+        .iter()
+        .filter(|s| !s.is_empty() && s.len() <= generated.len())
+        .filter(|s| &generated[generated.len() - s.len()..] == s.as_slice())
+        .map(Vec::len)
+        .max()
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,8 +261,13 @@ pub enum FinishReason {
     Length,
     /// generated EOS
     Stop,
+    /// matched a per-request stop sequence
+    StopSeq,
     /// ran out of model context (S)
     Context,
+    /// cancelled by the client (wire `{"op":"cancel"}` or
+    /// [`crate::engine::Engine::cancel`])
+    Cancelled,
 }
 
 /// Completed generation.
@@ -97,12 +308,92 @@ mod tests {
     use super::*;
 
     #[test]
-    fn builder_chain() {
-        let r = GenRequest::new(7, vec![1, 2, 3], 40).greedy().with_seed(9);
-        assert_eq!(r.temperature, 0.0);
-        assert_eq!(r.seed, 9);
-        let r = GenRequest::new(8, vec![1], 10).with_temperature(1.3);
-        assert_eq!(r.draft_temperature, 1.3);
+    fn params_defaults_are_the_single_source() {
+        let p = SamplingParams::default();
+        assert_eq!(p.max_new_tokens, 64);
+        assert!((p.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(p.draft_temperature, None);
+        assert!((p.draft_temp() - 0.8).abs() < 1e-6);
+        assert_eq!(p.top_k, 0);
+        assert!((p.top_p - 1.0).abs() < 1e-6);
+        assert!(p.stop.is_empty());
+        assert_eq!(p.seed, None);
+        assert_eq!(p.seed_or(42), 42);
+        assert_eq!(p.gamma, None);
+        assert_eq!(p.method, None);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn params_builder_chain() {
+        let p = SamplingParams::default()
+            .with_temperature(0.7)
+            .with_top_k(40)
+            .with_top_p(0.9)
+            .with_seed(9)
+            .with_stop(vec!["\n".into()])
+            .pin_gamma(3);
+        assert!((p.temperature - 0.7).abs() < 1e-6);
+        assert!((p.draft_temp() - 0.7).abs() < 1e-6);
+        assert_eq!(p.top_k, 40);
+        assert_eq!(p.seed_or(1), 9);
+        assert_eq!(p.gamma, Some(3));
+        assert!(p.gamma_pinned);
+        assert!(p.validate().is_ok());
+
+        let g = SamplingParams::default().with_draft_temperature(0.2).greedy();
+        assert_eq!(g.temperature, 0.0);
+        assert_eq!(g.draft_temp(), 0.0);
+    }
+
+    #[test]
+    fn params_validation_rejects_bad_values() {
+        let bad = [
+            SamplingParams::default().with_max_new_tokens(0),
+            SamplingParams::default().with_temperature(-0.1),
+            SamplingParams::default().with_temperature(f32::NAN),
+            SamplingParams::default().with_draft_temperature(-1.0),
+            SamplingParams::default().with_top_p(0.0),
+            SamplingParams::default().with_top_p(1.5),
+            SamplingParams::default().with_stop(vec!["".into()]),
+            SamplingParams::default().with_gamma(0),
+        ];
+        for p in bad {
+            assert!(p.validate().is_err(), "{p:?} should be rejected");
+        }
+        let mut pinned_without_gamma = SamplingParams::default();
+        pinned_without_gamma.gamma_pinned = true;
+        assert!(pinned_without_gamma.validate().is_err());
+    }
+
+    #[test]
+    fn request_builder_chain() {
+        let r = GenRequest::new(
+            7,
+            vec![1, 2, 3],
+            SamplingParams::default().with_max_new_tokens(40),
+        )
+        .greedy()
+        .with_seed(9);
+        assert_eq!(r.params.temperature, 0.0);
+        assert_eq!(r.params.seed_or(7), 9);
+        assert_eq!(r.params.max_new_tokens, 40);
+        let r = GenRequest::new(8, vec![1], SamplingParams::default())
+            .with_temperature(1.3);
+        assert!((r.params.draft_temp() - 1.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stop_suffix_matching() {
+        let stops = vec![vec![5, 6], vec![9], vec![4, 5, 6]];
+        assert_eq!(match_stop_suffix(&[1, 2, 9], &stops), Some(1));
+        // longest match wins
+        assert_eq!(match_stop_suffix(&[1, 4, 5, 6], &stops), Some(3));
+        assert_eq!(match_stop_suffix(&[1, 2, 5, 6], &stops), Some(2));
+        assert_eq!(match_stop_suffix(&[1, 2, 3], &stops), None);
+        assert_eq!(match_stop_suffix(&[], &stops), None);
+        // empty stop entries are ignored
+        assert_eq!(match_stop_suffix(&[1], &[vec![]]), None);
     }
 
     #[test]

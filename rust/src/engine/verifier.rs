@@ -77,24 +77,37 @@ impl Verifier {
         }
     }
 
-    /// γ values this verifier can serve (artifact availability).
+    /// γ values this verifier can serve for its default method.
     pub fn available_gammas(&self) -> Vec<usize> {
+        self.available_gammas_for(self.method)
+    }
+
+    /// γ values this verifier can serve for `method` (artifact
+    /// availability) — per-request method overrides are admitted only
+    /// when this is non-empty.
+    pub fn available_gammas_for(&self, method: Method) -> Vec<usize> {
         match self.backend {
             Backend::Native => (1..=64).collect(),
             Backend::Hlo => self
                 .runtime
                 .manifest
-                .verify_gammas(self.method.name(), self.batch, self.vocab),
+                .verify_gammas(method.name(), self.batch, self.vocab),
         }
     }
 
-    /// Run verification for `gamma` draft positions.
+    /// Run verification for `gamma` draft positions with `method` (the
+    /// engine default, or a per-request override).
     ///
     /// Returns the output plus the *execution* seconds — artifact
     /// compilation (lazy, first touch per γ) is deliberately excluded so
     /// Δ%-profiling comparisons between methods are not biased by which
     /// method ran first (the paper's timings are steady-state too).
-    pub fn verify(&self, gamma: usize, ins: &VerifyInputs<'_>) -> Result<(VerifyOutput, f64)> {
+    pub fn verify(
+        &self,
+        gamma: usize,
+        method: Method,
+        ins: &VerifyInputs<'_>,
+    ) -> Result<(VerifyOutput, f64)> {
         let (b, v) = (self.batch, self.vocab);
         debug_assert_eq!(ins.z_p.len(), b * (gamma + 1) * v);
         debug_assert_eq!(ins.z_q.len(), b * gamma * v);
@@ -112,7 +125,7 @@ impl Verifier {
                     ins.u_acc,
                     ins.u_res,
                     ins.u_bonus,
-                    self.method,
+                    method,
                     Some(&self.runtime.profiler),
                 );
                 Ok((
@@ -125,9 +138,7 @@ impl Verifier {
             }
             Backend::Hlo => {
                 // compile outside the timed region
-                let exe = self
-                    .runtime
-                    .load_verify(self.method.name(), b, gamma, v)?;
+                let exe = self.runtime.load_verify(method.name(), b, gamma, v)?;
                 let started = std::time::Instant::now();
                 let _scope = self.runtime.profiler.scope("verify");
                 let mut inputs = vec![
@@ -138,7 +149,7 @@ impl Verifier {
                     HostTensor::f32(&[b], ins.u_res.to_vec()),
                     HostTensor::f32(&[b], ins.u_bonus.to_vec()),
                 ];
-                if let Some((alpha, beta)) = self.method.alpha_beta() {
+                if let Some((alpha, beta)) = method.alpha_beta() {
                     inputs.push(HostTensor::f32(&[2], vec![alpha, beta]));
                 }
                 let out = exe.run(&inputs)?;

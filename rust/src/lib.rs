@@ -16,6 +16,30 @@
 //! ([`runtime`]), plus a pure-rust oracle ([`sampling`]) used for
 //! cross-validation and as a native fallback backend.
 //!
+//! ## Request API
+//!
+//! Per-request policy is a first-class [`engine::SamplingParams`] — the
+//! single source of request defaults and validation, threaded end-to-end:
+//!
+//! * target/draft **temperatures** and **top-k / top-p** truncation of
+//!   the target distribution (logit masking shared between the oracle and
+//!   the AOT verify path — see [`sampling::filter`]);
+//! * **stop sequences** detected at commit and trimmed from the output;
+//! * per-request **seed**, **γ cap/pin** for the adaptive draft-length
+//!   controller, and (on batch-1 engines) a **verification-method
+//!   override**.
+//!
+//! ## Wire protocol v2
+//!
+//! The TCP front-end ([`server`]) speaks a versioned JSON-lines protocol:
+//! a `{"v":2,"op":"generate",…,"params":{…}}` envelope carrying
+//! `SamplingParams`, incremental `{"event":"delta"}` token chunks for
+//! streaming requests, a final `{"event":"done"}` summary, structured
+//! `{"event":"error","code":…}` rejections validated at admission, and a
+//! `{"op":"cancel","id":…}` control line that frees the slot mid-decode.
+//! Legacy v1 one-shot lines keep working via a compatibility shim mapped
+//! onto `SamplingParams::default()`.
+//!
 //! Entry points: [`engine::Engine`] for in-process serving,
 //! [`server`] for the TCP front-end, [`tables`] for regenerating every
 //! table/figure of the paper's evaluation section.

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use specd::engine::{Backend, Engine, EngineConfig, Mode};
+use specd::engine::{Backend, Engine, EngineConfig, Mode, SamplingParams};
 use specd::runtime::Runtime;
 use specd::sampling::Method;
 use specd::server::{Server, ServerConfig};
@@ -13,6 +13,7 @@ use specd::simulator::DeviceProfile;
 use specd::tables::{self, EvalContext, TableId};
 use specd::tokenizer::Tokenizer;
 use specd::util::cli::Command;
+use specd::util::json::Value;
 use specd::workload::{make_tasks, TaskKind};
 
 fn main() {
@@ -53,28 +54,47 @@ fn help_text() -> &'static str {
      subcommands:\n\
      \x20 info                         artifact/manifest summary\n\
      \x20 run     --prompt <text>      one-off generation\n\
-     \x20 serve   --addr <host:port>   TCP JSON-lines server\n\
+     \x20 serve   --addr <host:port>   TCP JSON-lines server (protocol v2 + v1 shim)\n\
      \x20 client  --prompt <text>      send a request to a running server\n\
      \x20 eval    --task asr|sum       workload evaluation (WER / ROUGE-1)\n\
      \x20 table   --id t1..t8|all      regenerate a paper table\n\
      \x20 figure  --id f3|f4|f5        regenerate a paper figure's data\n\
+     \n\
+     sampling params (run/client; every request carries a SamplingParams —\n\
+     defaults: 64 new tokens, temperature 0.8, no truncation, no stops):\n\
+     \x20 --max-new N, --temperature T, --top-k K, --top-p P,\n\
+     \x20 --stop \"a,b\" (comma-separated stop sequences, trimmed from output),\n\
+     \x20 --request-gamma G [--pin-gamma] (per-request draft-length override);\n\
+     \x20 `client` additionally takes a per-request --seed and a\n\
+     \x20 --request-method override (`run`'s --seed seeds the engine RNG)\n\
+     \n\
+     wire protocol v2 (one JSON object per line, both directions):\n\
+     \x20 -> {\"v\":2,\"op\":\"generate\",\"id\":1,\"prompt\":\"...\",\"stream\":true,\n\
+     \x20     \"params\":{\"max_new_tokens\":32,\"top_p\":0.9,\"stop\":[\"\\n\"]}}\n\
+     \x20 <- {\"v\":2,\"event\":\"delta\",\"id\":1,\"text\":\"...\",\"tokens\":4}   (stream)\n\
+     \x20 <- {\"v\":2,\"event\":\"done\",\"id\":1,\"text\":\"...\",\"finish\":\"length\",...}\n\
+     \x20 -> {\"v\":2,\"op\":\"cancel\",\"id\":1}    frees the slot mid-decode\n\
+     \x20 <- {\"v\":2,\"event\":\"error\",\"id\":1,\"code\":\"invalid_params\",\"error\":...}\n\
+     \x20 v1 one-shot lines (no \"v\" key) still round-trip unchanged.\n\
      \n\
      common options: --method baseline|exact|sigmoid, --backend hlo|native,\n\
      --pair base|large, --batch N, --alpha/--beta, --n <examples>, --seed"
 }
 
 fn parse_method(p: &specd::util::cli::Parsed) -> Result<Method> {
-    match p.str("method") {
+    parse_method_str(
+        p.str("method"),
+        p.f64("alpha").map_err(|e| anyhow!(e))? as f32,
+        p.f64("beta").map_err(|e| anyhow!(e))? as f32,
+    )
+}
+
+fn parse_method_str(name: &str, alpha: f32, beta: f32) -> Result<Method> {
+    match name {
         "baseline" => Ok(Method::Baseline),
         "exact" => Ok(Method::Exact),
-        "sigmoid" => Ok(Method::sigmoid(
-            p.f64("alpha").map_err(|e| anyhow!(e))? as f32,
-            p.f64("beta").map_err(|e| anyhow!(e))? as f32,
-        )),
-        "sigmoid16" => Ok(Method::sigmoid16(
-            p.f64("alpha").map_err(|e| anyhow!(e))? as f32,
-            p.f64("beta").map_err(|e| anyhow!(e))? as f32,
-        )),
+        "sigmoid" => Ok(Method::sigmoid(alpha, beta)),
+        "sigmoid16" => Ok(Method::sigmoid16(alpha, beta)),
         other => bail!("unknown method {other:?}"),
     }
 }
@@ -89,6 +109,40 @@ fn engine_opts(cmd: Command) -> Command {
         .opt("gamma", "5", "initial draft length")
         .flag("self-draft", "draft via target-layer skipping (self-speculative)")
         .opt("seed", "0", "rng seed")
+}
+
+/// The per-request SamplingParams flags shared by `run` and `client`.
+fn sampling_opts(cmd: Command) -> Command {
+    cmd.opt("max-new", "64", "max new tokens")
+        .opt("temperature", "0.8", "sampling temperature (0 = greedy)")
+        .opt("top-k", "0", "top-k truncation (0 = off)")
+        .opt("top-p", "1.0", "nucleus truncation (1.0 = off)")
+        .opt("stop", "", "comma-separated stop sequences")
+        .opt("request-gamma", "0", "per-request draft-length cap (0 = off)")
+        .flag("pin-gamma", "pin γ to --request-gamma (bypass the controller)")
+}
+
+fn sampling_params(p: &specd::util::cli::Parsed) -> Result<SamplingParams> {
+    let mut params = SamplingParams::default()
+        .with_max_new_tokens(p.usize("max-new").map_err(|e| anyhow!(e))?)
+        .with_temperature(p.f64("temperature").map_err(|e| anyhow!(e))? as f32)
+        .with_top_k(p.usize("top-k").map_err(|e| anyhow!(e))?)
+        .with_top_p(p.f64("top-p").map_err(|e| anyhow!(e))? as f32);
+    if !p.str("stop").is_empty() {
+        params = params.with_stop(
+            p.str("stop").split(',').map(String::from).collect(),
+        );
+    }
+    let g = p.usize("request-gamma").map_err(|e| anyhow!(e))?;
+    if g > 0 {
+        params = if p.flag("pin-gamma") {
+            params.pin_gamma(g)
+        } else {
+            params.with_gamma(g)
+        };
+    }
+    params.validate().map_err(|e| anyhow!(e))?;
+    Ok(params)
 }
 
 fn build_engine(p: &specd::util::cli::Parsed, mode: Mode) -> Result<(Engine, Tokenizer)> {
@@ -131,10 +185,8 @@ fn info(rest: &[String]) -> Result<()> {
 }
 
 fn run(rest: &[String]) -> Result<()> {
-    let cmd = engine_opts(Command::new("run", "one-off generation"))
+    let cmd = sampling_opts(engine_opts(Command::new("run", "one-off generation")))
         .req("prompt", "prompt text")
-        .opt("max-new", "64", "max new tokens")
-        .opt("temperature", "0.8", "sampling temperature")
         .flag("autoregressive", "disable speculation (target-only)");
     let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
     let mode = if p.flag("autoregressive") {
@@ -142,11 +194,15 @@ fn run(rest: &[String]) -> Result<()> {
     } else {
         Mode::Speculative
     };
+    let params = sampling_params(&p)?;
+    if mode == Mode::Autoregressive && (params.top_k != 0 || params.top_p < 1.0) {
+        bail!("--top-k/--top-p require the speculative pipeline (drop --autoregressive)");
+    }
     let (mut engine, tok) = build_engine(&p, mode)?;
     let out = engine.generate_text(
         &tok,
-        &[(p.str("prompt"), p.usize("max-new").map_err(|e| anyhow!(e))?)],
-        p.f64("temperature").map_err(|e| anyhow!(e))? as f32,
+        &[(p.str("prompt"), params.max_new_tokens)],
+        &params,
     )?;
     for (text, r) in out {
         println!("{}{}", p.str("prompt"), text);
@@ -179,20 +235,42 @@ fn serve(rest: &[String]) -> Result<()> {
 }
 
 fn client(rest: &[String]) -> Result<()> {
-    let cmd = Command::new("client", "send one request to a specd server")
+    let cmd = sampling_opts(Command::new("client", "send one request to a specd server"))
         .opt("addr", "127.0.0.1:7077", "server address")
         .req("prompt", "prompt text")
-        .opt("max-new", "64", "max new tokens")
-        .opt("temperature", "0.8", "sampling temperature");
+        .opt("seed", "", "per-request rng seed (empty = derive)")
+        .opt("request-method", "", "per-request method override (baseline|exact|sigmoid|sigmoid16)")
+        .opt("alpha", "-1000", "sigmoid alpha for --request-method")
+        .opt("beta", "1000", "sigmoid beta for --request-method")
+        .flag("stream", "stream incremental delta events")
+        .flag("v1", "use the legacy v1 one-shot protocol");
     let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
-    let mut c = specd::server::service::Client::connect(p.str("addr"))?;
-    let resp = c.request(
-        1,
-        p.str("prompt"),
-        p.usize("max-new").map_err(|e| anyhow!(e))?,
-        p.f64("temperature").map_err(|e| anyhow!(e))? as f32,
-    )?;
-    println!("{}", resp.dump());
+    let mut params = sampling_params(&p)?;
+    if !p.str("seed").is_empty() {
+        params = params.with_seed(p.u64("seed").map_err(|e| anyhow!(e))?);
+    }
+    if !p.str("request-method").is_empty() {
+        params = params.with_method(parse_method_str(
+            p.str("request-method"),
+            p.f64("alpha").map_err(|e| anyhow!(e))? as f32,
+            p.f64("beta").map_err(|e| anyhow!(e))? as f32,
+        )?);
+    }
+    let mut c = specd::server::Client::connect(p.str("addr"))?;
+    if p.flag("v1") {
+        let resp = c.request(1, p.str("prompt"), params.max_new_tokens, params.temperature)?;
+        println!("{}", resp.dump());
+        return Ok(());
+    }
+    c.send_generate(1, p.str("prompt"), &params, p.flag("stream"))?;
+    loop {
+        let ev = c.read_event()?;
+        println!("{}", ev.dump());
+        match ev.get("event").and_then(Value::as_str) {
+            Some("delta") => continue,
+            _ => break, // done or error
+        }
+    }
     Ok(())
 }
 
@@ -206,7 +284,9 @@ fn eval(rest: &[String]) -> Result<()> {
     let mut ctx = EvalContext::open_default(p.usize("n").map_err(|e| anyhow!(e))?)?;
     ctx.pair = p.str("pair").to_string();
     ctx.batch = p.usize("batch").map_err(|e| anyhow!(e))?;
-    ctx.temperature = p.f64("temperature").map_err(|e| anyhow!(e))? as f32;
+    ctx.params = ctx
+        .params
+        .with_temperature(p.f64("temperature").map_err(|e| anyhow!(e))? as f32);
     let tasks = make_tasks(&ctx.corpus, kind, ctx.n_examples, 42);
     let method = parse_method(&p)?;
     let backend =

@@ -1,0 +1,184 @@
+//! Top-k / nucleus (top-p) truncation shared by the engine and the
+//! sampling oracle.
+//!
+//! Truncation is expressed as *logit masking*: excluded entries are set
+//! to [`MASKED_LOGIT`], so one filtered row flows unchanged through every
+//! downstream consumer — the native oracle's softmax, the AOT verify
+//! artifacts (whose on-device softmax renormalises over the survivors),
+//! and the sigmoid approximation (σ of a hugely negative input is 0).
+//!
+//! Speculative-sampling note: the engine masks only the *target*
+//! distribution p. The draft distribution q must stay the true proposal
+//! the drafts were sampled from; rejection sampling then yields exactly
+//! the truncated target regardless of q's support (a draft token outside
+//! the nucleus has p = 0, so τ = 0 and it is rejected).
+
+use std::cmp::Ordering;
+
+/// Mask value for excluded logits. Large enough that `exp(x - max)` is
+/// exactly 0 in f32 and the sigmoid rescale stays finite, but far from
+/// f32 overflow even after temperature scaling.
+pub const MASKED_LOGIT: f32 = -1.0e30;
+
+/// In-place top-k / top-p truncation of one logit row.
+///
+/// `top_k == 0` and `top_p >= 1.0` disable the respective criterion.
+/// Top-k applies first; top-p then keeps the smallest prefix of the
+/// (renormalised) survivors whose cumulative probability reaches `top_p`
+/// — the HF-transformers composition. The most probable token always
+/// survives.
+pub fn mask_logits_top_k_top_p(row: &mut [f32], top_k: usize, top_p: f32) {
+    let v = row.len();
+    if v == 0 {
+        return;
+    }
+    let k_active = top_k > 0 && top_k < v;
+    let p_active = top_p < 1.0;
+    if !k_active && !p_active {
+        return;
+    }
+
+    let mut idx: Vec<u32> = (0..v as u32).collect();
+    idx.sort_by(|&a, &b| {
+        row[b as usize]
+            .partial_cmp(&row[a as usize])
+            .unwrap_or(Ordering::Equal)
+    });
+
+    let mut keep = if k_active { top_k } else { v };
+    if p_active {
+        let max = row[idx[0] as usize];
+        let exps: Vec<f32> = idx[..keep]
+            .iter()
+            .map(|&i| (row[i as usize] - max).exp())
+            .collect();
+        let total: f32 = exps.iter().sum();
+        let target = top_p * total;
+        let mut cum = 0.0f32;
+        let mut n = 0usize;
+        for e in &exps {
+            cum += e;
+            n += 1;
+            if cum >= target {
+                break;
+            }
+        }
+        keep = n.max(1);
+    }
+    for &i in &idx[keep..] {
+        row[i as usize] = MASKED_LOGIT;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::softmax_rows;
+
+    fn survivors(row: &[f32]) -> Vec<usize> {
+        row.iter()
+            .enumerate()
+            .filter(|(_, &x)| x > MASKED_LOGIT)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    #[test]
+    fn disabled_filters_leave_row_untouched() {
+        let orig = vec![1.0f32, -2.0, 0.5, 3.0];
+        let mut row = orig.clone();
+        mask_logits_top_k_top_p(&mut row, 0, 1.0);
+        assert_eq!(row, orig);
+        // top_k >= v is also a no-op
+        mask_logits_top_k_top_p(&mut row, 4, 1.0);
+        assert_eq!(row, orig);
+    }
+
+    #[test]
+    fn top_k_keeps_k_largest() {
+        let mut row = vec![0.1f32, 2.0, -1.0, 1.5, 0.9];
+        mask_logits_top_k_top_p(&mut row, 2, 1.0);
+        assert_eq!(survivors(&row), vec![1, 3]);
+    }
+
+    #[test]
+    fn top_k_one_keeps_argmax_only() {
+        let mut row = vec![-3.0f32, 7.0, 0.0, 6.9];
+        mask_logits_top_k_top_p(&mut row, 1, 1.0);
+        assert_eq!(survivors(&row), vec![1]);
+    }
+
+    #[test]
+    fn top_p_keeps_nucleus() {
+        // probs 0.7, 0.2, 0.1 (ln is monotone so use ln-probs as logits)
+        let mut row = vec![0.7f32.ln(), 0.2f32.ln(), 0.1f32.ln()];
+        mask_logits_top_k_top_p(&mut row, 0, 0.75);
+        assert_eq!(survivors(&row), vec![0, 1]);
+        let mut row = vec![0.7f32.ln(), 0.2f32.ln(), 0.1f32.ln()];
+        mask_logits_top_k_top_p(&mut row, 0, 0.65);
+        assert_eq!(survivors(&row), vec![0]);
+    }
+
+    #[test]
+    fn argmax_always_survives_even_for_tiny_top_p() {
+        let mut row = vec![0.0f32, 5.0, 1.0];
+        mask_logits_top_k_top_p(&mut row, 0, 1e-6);
+        assert_eq!(survivors(&row), vec![1]);
+    }
+
+    #[test]
+    fn masked_row_softmax_renormalises_over_survivors() {
+        let mut row = vec![1.0f32, 0.5, 0.0, -0.5];
+        mask_logits_top_k_top_p(&mut row, 2, 1.0);
+        softmax_rows(&mut row, 4);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert_eq!(row[2], 0.0);
+        assert_eq!(row[3], 0.0);
+        assert!(row[0] > row[1] && row[1] > 0.0);
+    }
+
+    #[test]
+    fn prop_filter_invariants() {
+        use crate::util::proptest::{forall, Config};
+        forall(
+            "filter invariants",
+            Config {
+                cases: 100,
+                ..Config::default()
+            },
+            |rng, size| {
+                let v = 4 + size;
+                let mut row: Vec<f32> =
+                    (0..v).map(|_| rng.gaussian() as f32 * 3.0).collect();
+                let orig = row.clone();
+                let top_k = rng.below(v as u32 + 2) as usize;
+                let top_p = 0.05 + 0.95 * rng.uniform_f32();
+                mask_logits_top_k_top_p(&mut row, top_k, top_p);
+                let kept = survivors(&row);
+                if kept.is_empty() {
+                    return Err("no survivors".into());
+                }
+                if top_k > 0 && kept.len() > top_k {
+                    return Err(format!("{} survivors > top_k {top_k}", kept.len()));
+                }
+                // survivors keep their original logits and dominate the
+                // masked entries
+                let min_kept = kept
+                    .iter()
+                    .map(|&i| orig[i])
+                    .fold(f32::INFINITY, f32::min);
+                for i in 0..v {
+                    if kept.contains(&i) {
+                        if row[i] != orig[i] {
+                            return Err("survivor logit changed".into());
+                        }
+                    } else if orig[i] > min_kept {
+                        return Err("masked a logit above a survivor".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -9,8 +9,10 @@
 //!    model vocab is small and PJRT dispatch overhead dominates;
 //! 3. the workload for the L3 micro-benchmarks.
 
+pub mod filter;
 pub mod verify;
 
+pub use filter::{mask_logits_top_k_top_p, MASKED_LOGIT};
 pub use verify::{
     inverse_cdf_sample, sigmoid_approx, softmax_rows, spec_step, Method, StepOutput,
 };

@@ -2,16 +2,27 @@
 //!
 //! JSON-lines protocol over plain TCP (the vendored crate set has no
 //! tokio; the engine thread + per-connection reader threads and mpsc
-//! channels give the same continuous-batching behaviour):
+//! channels give the same continuous-batching behaviour). Protocol v2 is
+//! a versioned envelope with per-request [`crate::engine::SamplingParams`],
+//! streaming `delta`/`done` events and a `cancel` op:
 //!
 //! ```text
-//! -> {"id": 1, "prompt": "the scheduler", "max_new_tokens": 64, "temperature": 0.8}
-//! <- {"id": 1, "text": "...", "tokens": 64, "steps": 17, "accept_rate": 0.61,
-//!     "latency_ms": 12.3, "finish": "length"}
+//! -> {"v":2, "op":"generate", "id":1, "prompt":"the scheduler",
+//!     "stream":true, "params":{"max_new_tokens":64, "top_p":0.9}}
+//! <- {"v":2, "event":"delta", "id":1, "text":" accepts", "tokens":8}
+//! <- {"v":2, "event":"done", "id":1, "text":"...", "tokens":64,
+//!     "steps":17, "accept_rate":0.61, "latency_ms":12.3, "finish":"length"}
+//! -> {"v":2, "op":"cancel", "id":1}
 //! ```
+//!
+//! v1 one-shot lines (no `"v"` key) keep working unchanged — see
+//! [`protocol`] for the full framing reference.
 
 pub mod protocol;
 pub mod service;
 
-pub use protocol::{parse_request, render_response, WireRequest, WireResponse};
-pub use service::{Server, ServerConfig};
+pub use protocol::{
+    parse_line, parse_params, params_to_json, render_response, WireError, WireMsg,
+    WireRequest, WireResponse,
+};
+pub use service::{Client, Server, ServerConfig};

@@ -1,47 +1,406 @@
 //! Wire protocol: one JSON object per line, both directions.
+//!
+//! ## v2 (current)
+//!
+//! Requests are a versioned envelope:
+//!
+//! ```json
+//! {"v":2, "op":"generate", "id":1, "prompt":"...", "stream":true,
+//!  "params":{"max_new_tokens":32, "temperature":0.7, "top_p":0.9,
+//!            "stop":["\n"], "seed":7, "gamma":3, "gamma_pinned":true,
+//!            "method":"exact"}}
+//! {"v":2, "op":"cancel", "id":1}
+//! ```
+//!
+//! `params` keys map 1:1 onto [`SamplingParams`] (absent keys take the
+//! shared defaults). v2 parsing is strict: unknown envelope or params
+//! keys and wrong field types are rejected, never silently defaulted.
+//! `method` is a string (`"baseline"` / `"exact"`) or
+//! `{"name":"sigmoid","alpha":…,"beta":…}`.
+//!
+//! Responses are events. A streaming request receives incremental
+//! `{"v":2,"event":"delta","id":…,"text":…,"tokens":…}` lines as tokens
+//! commit, then a final `{"v":2,"event":"done", …summary…}`; a
+//! non-streaming request receives only the `done`. Failures are
+//! `{"v":2,"event":"error","id":…,"code":…,"error":…}`. A cancel frees
+//! the slot mid-decode and the request finishes with `"finish":"cancel"`.
+//!
+//! ## v1 (compatibility shim)
+//!
+//! A line without `"v"` is a one-shot v1 request
+//! (`{"id":…,"prompt":…,"max_new_tokens":…,"temperature":…,"seed":…}`),
+//! mapped onto [`SamplingParams::default`] and answered with the
+//! original single response line — unchanged for old clients.
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::engine::{FinishReason, GenResult};
+use crate::engine::{FinishReason, GenResult, SamplingParams};
+use crate::sampling::Method;
 use crate::util::json::{self, obj, Value};
 
-/// Parsed client request line.
+/// Parsed generate request (v1 or v2).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireRequest {
     pub id: u64,
     pub prompt: String,
-    pub max_new_tokens: usize,
-    pub temperature: f32,
-    pub seed: Option<u64>,
+    pub params: SamplingParams,
+    /// emit incremental `delta` events (v2 only)
+    pub stream: bool,
+    /// parsed from a v1 one-shot line — the response must stay v1-shaped
+    pub v1: bool,
 }
 
-pub fn parse_request(line: &str) -> Result<WireRequest> {
-    let v = json::parse(line).map_err(|e| anyhow!("{e}"))?;
-    Ok(WireRequest {
-        id: v
-            .req("id")
-            .map_err(|e| anyhow!("{e}"))?
-            .as_i64()
-            .context("id must be an integer")? as u64,
-        prompt: v
-            .req("prompt")
-            .map_err(|e| anyhow!("{e}"))?
+/// One parsed client line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    Generate(WireRequest),
+    Cancel { id: u64 },
+}
+
+/// Structured protocol error: machine-readable code + human message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub id: Option<u64>,
+    pub code: &'static str,
+    pub msg: String,
+    /// the offending line spoke v1 — answer with a v1-shaped error line
+    /// instead of a v2 error event
+    pub v1: bool,
+}
+
+impl WireError {
+    pub fn new(id: Option<u64>, code: &'static str, msg: impl Into<String>) -> Self {
+        WireError {
+            id,
+            code,
+            msg: msg.into(),
+            v1: false,
+        }
+    }
+
+    fn for_v1(mut self, v1: bool) -> Self {
+        self.v1 = v1;
+        self
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code, self.msg)
+    }
+}
+
+fn bad(id: Option<u64>, msg: impl Into<String>) -> WireError {
+    WireError::new(id, "bad_request", msg)
+}
+
+// Strict integer readers: the JSON layer carries f64, but "strict typing"
+// means 8.9 must not silently floor to 8 (Value::as_i64/as_usize truncate).
+fn as_int(v: &Value) -> Option<i64> {
+    v.as_f64()
+        .filter(|f| f.fract() == 0.0 && f.abs() <= 9e15)
+        .map(|f| f as i64)
+}
+
+fn as_uint(v: &Value) -> Option<usize> {
+    as_int(v).filter(|&i| i >= 0).map(|i| i as usize)
+}
+
+/// Parse one client line into a [`WireMsg`].
+///
+/// Field presence and types are checked strictly — a present-but-wrong
+/// typed field is an error, never silently defaulted (requests are
+/// validated at admission instead of trusted off the wire).
+pub fn parse_line(line: &str) -> Result<WireMsg, WireError> {
+    let v = json::parse(line).map_err(|e| WireError::new(None, "parse", e.to_string()))?;
+    let ver = match v.get("v") {
+        None => 1,
+        Some(x) => as_int(x).ok_or_else(|| bad(None, "v must be an integer"))?,
+    };
+    if ver != 1 && ver != 2 {
+        return Err(WireError::new(
+            None,
+            "unsupported_version",
+            format!("protocol version {ver} not supported (server speaks v1 and v2)"),
+        ));
+    }
+    // from here the dialect is known: v1 lines get v1-shaped error replies
+    parse_versioned(&v, ver).map_err(|e| e.for_v1(ver == 1))
+}
+
+fn parse_versioned(v: &Value, ver: i64) -> Result<WireMsg, WireError> {
+    let id = match v.get("id") {
+        None => return Err(bad(None, "missing key \"id\"")),
+        Some(x) => as_int(x).ok_or_else(|| bad(None, "id must be an integer"))? as u64,
+    };
+    // v2 envelopes are strict like their params objects (typos must not
+    // silently fall back to defaults); v1 keeps its historic leniency
+    if ver == 2 {
+        if let Value::Obj(fields) = &v {
+            for (key, _) in fields {
+                if !matches!(
+                    key.as_str(),
+                    "v" | "op" | "id" | "prompt" | "params" | "stream"
+                ) {
+                    return Err(bad(
+                        Some(id),
+                        format!("unknown key {key:?} in request envelope"),
+                    ));
+                }
+            }
+        }
+    }
+    let op = match v.get("op") {
+        None => "generate",
+        Some(x) => x
             .as_str()
-            .context("prompt must be a string")?
-            .to_string(),
-        max_new_tokens: v
-            .get("max_new_tokens")
-            .and_then(Value::as_usize)
-            .unwrap_or(64),
-        temperature: v
-            .get("temperature")
-            .and_then(Value::as_f64)
-            .unwrap_or(0.8) as f32,
-        seed: v.get("seed").and_then(Value::as_i64).map(|s| s as u64),
-    })
+            .ok_or_else(|| bad(Some(id), "op must be a string"))?,
+    };
+    match op {
+        "cancel" => {
+            if ver < 2 {
+                return Err(bad(Some(id), "cancel requires protocol v2"));
+            }
+            Ok(WireMsg::Cancel { id })
+        }
+        "generate" => parse_generate(v, ver, id),
+        other => Err(WireError::new(
+            Some(id),
+            "unknown_op",
+            format!("unknown op {other:?} (expected \"generate\" or \"cancel\")"),
+        )),
+    }
 }
 
-/// Server response line.
+fn parse_generate(v: &Value, ver: i64, id: u64) -> Result<WireMsg, WireError> {
+    let prompt = match v.get("prompt") {
+        None => return Err(bad(Some(id), "missing key \"prompt\"")),
+        Some(x) => x
+            .as_str()
+            .ok_or_else(|| bad(Some(id), "prompt must be a string"))?
+            .to_string(),
+    };
+    let mut params = SamplingParams::default();
+    let mut stream = false;
+    if ver == 1 {
+        // v1 shim: flat optional fields onto the shared defaults
+        if let Some(x) = v.get("max_new_tokens") {
+            params.max_new_tokens = as_uint(x)
+                .ok_or_else(|| bad(Some(id), "max_new_tokens must be a non-negative integer"))?;
+        }
+        if let Some(x) = v.get("temperature") {
+            params.temperature = x
+                .as_f64()
+                .ok_or_else(|| bad(Some(id), "temperature must be a number"))?
+                as f32;
+        }
+        if let Some(x) = v.get("seed") {
+            params.seed = Some(
+                as_int(x).ok_or_else(|| bad(Some(id), "seed must be an integer"))? as u64,
+            );
+        }
+    } else {
+        if let Some(pv) = v.get("params") {
+            params = parse_params(pv)
+                .map_err(|msg| WireError::new(Some(id), "invalid_params", msg))?;
+        }
+        if let Some(x) = v.get("stream") {
+            stream = x
+                .as_bool()
+                .ok_or_else(|| bad(Some(id), "stream must be a boolean"))?;
+        }
+    }
+    params
+        .validate()
+        .map_err(|msg| WireError::new(Some(id), "invalid_params", msg))?;
+    Ok(WireMsg::Generate(WireRequest {
+        id,
+        prompt,
+        params,
+        stream,
+        v1: ver == 1,
+    }))
+}
+
+/// Parse a v2 `params` object onto [`SamplingParams::default`]. Strict:
+/// unknown keys and wrong types are errors.
+pub fn parse_params(v: &Value) -> Result<SamplingParams, String> {
+    let Value::Obj(fields) = v else {
+        return Err("params must be an object".into());
+    };
+    let mut p = SamplingParams::default();
+    for (key, val) in fields {
+        match key.as_str() {
+            "max_new_tokens" => {
+                p.max_new_tokens =
+                    as_uint(val).ok_or("max_new_tokens must be a non-negative integer")?;
+            }
+            "temperature" => {
+                p.temperature =
+                    val.as_f64().ok_or("temperature must be a number")? as f32;
+            }
+            "draft_temperature" => {
+                p.draft_temperature =
+                    Some(val.as_f64().ok_or("draft_temperature must be a number")? as f32);
+            }
+            "top_k" => {
+                p.top_k = as_uint(val).ok_or("top_k must be a non-negative integer")?;
+            }
+            "top_p" => {
+                p.top_p = val.as_f64().ok_or("top_p must be a number")? as f32;
+            }
+            "stop" => {
+                let arr = val.as_arr().ok_or("stop must be an array of strings")?;
+                p.stop = arr
+                    .iter()
+                    .map(|s| {
+                        s.as_str()
+                            .map(String::from)
+                            .ok_or("stop entries must be strings".to_string())
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "seed" => {
+                p.seed = Some(as_int(val).ok_or("seed must be an integer")? as u64);
+            }
+            "gamma" => {
+                p.gamma = Some(as_uint(val).ok_or("gamma must be a positive integer")?);
+            }
+            "gamma_pinned" => {
+                p.gamma_pinned = val.as_bool().ok_or("gamma_pinned must be a boolean")?;
+            }
+            "method" => {
+                p.method = Some(parse_method_value(val)?);
+            }
+            other => return Err(format!("unknown parameter {other:?}")),
+        }
+    }
+    Ok(p)
+}
+
+fn parse_method_value(v: &Value) -> Result<Method, String> {
+    if let Some(name) = v.as_str() {
+        return match name {
+            "baseline" => Ok(Method::Baseline),
+            "exact" => Ok(Method::Exact),
+            "sigmoid" | "sigmoid16" => Err(format!(
+                "method {name:?} needs alpha/beta — use {{\"name\":{name:?},\"alpha\":…,\"beta\":…}}"
+            )),
+            other => Err(format!("unknown method {other:?}")),
+        };
+    }
+    if v.get("name").is_some() {
+        let name = v
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or("method name must be a string")?;
+        return match name {
+            "baseline" => Ok(Method::Baseline),
+            "exact" => Ok(Method::Exact),
+            "sigmoid" | "sigmoid16" => {
+                let alpha = v
+                    .get("alpha")
+                    .and_then(Value::as_f64)
+                    .ok_or("sigmoid method needs numeric alpha")?;
+                let beta = v
+                    .get("beta")
+                    .and_then(Value::as_f64)
+                    .ok_or("sigmoid method needs numeric beta")?;
+                if name == "sigmoid" {
+                    Ok(Method::sigmoid(alpha as f32, beta as f32))
+                } else {
+                    Ok(Method::sigmoid16(alpha as f32, beta as f32))
+                }
+            }
+            other => Err(format!("unknown method {other:?}")),
+        };
+    }
+    Err("method must be a string or an object with \"name\"".into())
+}
+
+fn method_value(m: Method) -> Value {
+    match m {
+        Method::Baseline => "baseline".into(),
+        Method::Exact => "exact".into(),
+        m => {
+            let (a, b) = m.alpha_beta().expect("sigmoid methods carry alpha/beta");
+            obj(vec![
+                ("name", m.name().into()),
+                ("alpha", Value::Num(a as f64)),
+                ("beta", Value::Num(b as f64)),
+            ])
+        }
+    }
+}
+
+/// Serialize params as a v2 `params` object (non-default fields only, so
+/// the server-side defaults stay the single source of truth).
+pub fn params_to_json(p: &SamplingParams) -> Value {
+    let d = SamplingParams::default();
+    let mut fields: Vec<(&str, Value)> = Vec::new();
+    if p.max_new_tokens != d.max_new_tokens {
+        fields.push(("max_new_tokens", p.max_new_tokens.into()));
+    }
+    if p.temperature != d.temperature {
+        fields.push(("temperature", Value::Num(p.temperature as f64)));
+    }
+    if let Some(t) = p.draft_temperature {
+        fields.push(("draft_temperature", Value::Num(t as f64)));
+    }
+    if p.top_k != d.top_k {
+        fields.push(("top_k", p.top_k.into()));
+    }
+    if p.top_p != d.top_p {
+        fields.push(("top_p", Value::Num(p.top_p as f64)));
+    }
+    if !p.stop.is_empty() {
+        fields.push((
+            "stop",
+            Value::Arr(p.stop.iter().map(|s| s.as_str().into()).collect()),
+        ));
+    }
+    if let Some(s) = p.seed {
+        fields.push(("seed", (s as i64).into()));
+    }
+    if let Some(g) = p.gamma {
+        fields.push(("gamma", g.into()));
+        if p.gamma_pinned {
+            fields.push(("gamma_pinned", true.into()));
+        }
+    }
+    if let Some(m) = p.method {
+        fields.push(("method", method_value(m)));
+    }
+    obj(fields)
+}
+
+/// Client-side: render a v2 generate line.
+pub fn render_generate(id: u64, prompt: &str, params: &SamplingParams, stream: bool) -> String {
+    let mut fields = vec![
+        ("v", 2i64.into()),
+        ("op", "generate".into()),
+        ("id", (id as i64).into()),
+        ("prompt", prompt.into()),
+    ];
+    let pjson = params_to_json(params);
+    if !matches!(&pjson, Value::Obj(f) if f.is_empty()) {
+        fields.push(("params", pjson));
+    }
+    if stream {
+        fields.push(("stream", true.into()));
+    }
+    obj(fields).dump()
+}
+
+/// Client-side: render a v2 cancel line.
+pub fn render_cancel(id: u64) -> String {
+    obj(vec![
+        ("v", 2i64.into()),
+        ("op", "cancel".into()),
+        ("id", (id as i64).into()),
+    ])
+    .dump()
+}
+
+/// Server response payload (v1 response line / v2 done event).
 #[derive(Debug, Clone)]
 pub struct WireResponse {
     pub id: u64,
@@ -53,13 +412,15 @@ fn finish_str(f: FinishReason) -> &'static str {
     match f {
         FinishReason::Length => "length",
         FinishReason::Stop => "stop",
+        FinishReason::StopSeq => "stop_seq",
         FinishReason::Context => "context",
+        FinishReason::Cancelled => "cancel",
     }
 }
 
-pub fn render_response(resp: &WireResponse) -> String {
+fn summary_fields(resp: &WireResponse) -> Vec<(&'static str, Value)> {
     let r = &resp.result;
-    obj(vec![
+    vec![
         ("id", (resp.id as i64).into()),
         ("text", resp.text.as_str().into()),
         ("tokens", r.token_ids.len().into()),
@@ -68,11 +429,50 @@ pub fn render_response(resp: &WireResponse) -> String {
         ("tokens_per_step", Value::Num(r.tokens_per_step())),
         ("latency_ms", Value::Num(r.latency * 1e3)),
         ("finish", finish_str(r.finish).into()),
+    ]
+}
+
+/// v1 one-shot response line (unchanged from protocol v1).
+pub fn render_response(resp: &WireResponse) -> String {
+    obj(summary_fields(resp)).dump()
+}
+
+/// v2 final summary event.
+pub fn render_done(resp: &WireResponse) -> String {
+    let mut fields = vec![("v", 2i64.into()), ("event", "done".into())];
+    fields.extend(summary_fields(resp));
+    obj(fields).dump()
+}
+
+/// v2 incremental token-chunk event.
+pub fn render_delta(id: u64, text: &str, tokens: usize) -> String {
+    obj(vec![
+        ("v", 2i64.into()),
+        ("event", "delta".into()),
+        ("id", (id as i64).into()),
+        ("text", text.into()),
+        ("tokens", tokens.into()),
     ])
     .dump()
 }
 
-/// Error line for malformed requests.
+/// v2 structured error event (also carries the plain `error` key so v1
+/// clients that only check for `error` keep working).
+pub fn render_error_event(err: &WireError) -> String {
+    obj(vec![
+        ("v", 2i64.into()),
+        ("event", "error".into()),
+        (
+            "id",
+            err.id.map(|i| (i as i64).into()).unwrap_or(Value::Null),
+        ),
+        ("code", err.code.into()),
+        ("error", err.msg.as_str().into()),
+    ])
+    .dump()
+}
+
+/// v1-shaped error line for failures on v1 one-shot requests.
 pub fn render_error(id: Option<u64>, msg: &str) -> String {
     obj(vec![
         ("id", id.map(|i| (i as i64).into()).unwrap_or(Value::Null)),
@@ -85,36 +485,249 @@ pub fn render_error(id: Option<u64>, msg: &str) -> String {
 mod tests {
     use super::*;
 
+    fn generate(line: &str) -> WireRequest {
+        match parse_line(line).unwrap() {
+            WireMsg::Generate(r) => r,
+            other => panic!("expected generate, got {other:?}"),
+        }
+    }
+
+    fn err_code(line: &str) -> &'static str {
+        parse_line(line).unwrap_err().code
+    }
+
     #[test]
-    fn parses_full_request() {
-        let r = parse_request(
+    fn parses_full_v1_request() {
+        let r = generate(
             r#"{"id": 3, "prompt": "hello", "max_new_tokens": 10, "temperature": 0.5, "seed": 9}"#,
-        )
-        .unwrap();
+        );
         assert_eq!(r.id, 3);
         assert_eq!(r.prompt, "hello");
-        assert_eq!(r.max_new_tokens, 10);
-        assert_eq!(r.seed, Some(9));
+        assert_eq!(r.params.max_new_tokens, 10);
+        assert!((r.params.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(r.params.seed, Some(9));
+        assert!(r.v1);
+        assert!(!r.stream);
     }
 
     #[test]
-    fn defaults_applied() {
-        let r = parse_request(r#"{"id": 1, "prompt": "x"}"#).unwrap();
-        assert_eq!(r.max_new_tokens, 64);
-        assert!((r.temperature - 0.8).abs() < 1e-6);
-        assert_eq!(r.seed, None);
+    fn v1_shim_defaults_are_sampling_params_default() {
+        // the compatibility shim maps a bare v1 line onto the one shared
+        // defaults struct — no protocol-local default values
+        let r = generate(r#"{"id": 1, "prompt": "x"}"#);
+        assert_eq!(r.params, SamplingParams::default());
+        assert!(r.v1);
     }
 
     #[test]
-    fn rejects_bad_requests() {
-        assert!(parse_request("not json").is_err());
-        assert!(parse_request(r#"{"prompt": "x"}"#).is_err());
-        assert!(parse_request(r#"{"id": "x", "prompt": "y"}"#).is_err());
+    fn parses_v2_request_with_params() {
+        let r = generate(
+            r#"{"v":2,"op":"generate","id":4,"prompt":"p","stream":true,
+                "params":{"max_new_tokens":8,"temperature":0.2,"draft_temperature":0.1,
+                          "top_k":5,"top_p":0.9,"stop":["\n","."],"seed":11,
+                          "gamma":3,"gamma_pinned":true,"method":"exact"}}"#,
+        );
+        assert!(!r.v1);
+        assert!(r.stream);
+        assert_eq!(r.params.max_new_tokens, 8);
+        assert!((r.params.draft_temp() - 0.1).abs() < 1e-6);
+        assert_eq!(r.params.top_k, 5);
+        assert_eq!(r.params.stop, vec!["\n".to_string(), ".".to_string()]);
+        assert_eq!(r.params.seed, Some(11));
+        assert_eq!(r.params.gamma, Some(3));
+        assert!(r.params.gamma_pinned);
+        assert_eq!(r.params.method, Some(Method::Exact));
     }
 
     #[test]
-    fn response_round_trips_as_json() {
-        let resp = WireResponse {
+    fn v2_without_params_takes_defaults() {
+        let r = generate(r#"{"v":2,"id":5,"prompt":"q"}"#);
+        assert_eq!(r.params, SamplingParams::default());
+        assert!(!r.stream);
+        assert!(!r.v1);
+    }
+
+    #[test]
+    fn parses_method_object_form() {
+        let r = generate(
+            r#"{"v":2,"id":1,"prompt":"p",
+                "params":{"method":{"name":"sigmoid","alpha":-1000,"beta":1000}}}"#,
+        );
+        assert_eq!(r.params.method, Some(Method::sigmoid(-1e3, 1e3)));
+        let r = generate(
+            r#"{"v":2,"id":1,"prompt":"p",
+                "params":{"method":{"name":"sigmoid16","alpha":-1e3,"beta":1e3}}}"#,
+        );
+        assert_eq!(r.params.method, Some(Method::sigmoid16(-1e3, 1e3)));
+    }
+
+    #[test]
+    fn parses_cancel() {
+        assert_eq!(
+            parse_line(r#"{"v":2,"op":"cancel","id":9}"#).unwrap(),
+            WireMsg::Cancel { id: 9 }
+        );
+        // cancel is a v2 op
+        assert_eq!(err_code(r#"{"op":"cancel","id":9}"#), "bad_request");
+    }
+
+    #[test]
+    fn rejects_malformed_and_missing_fields() {
+        assert_eq!(err_code("not json"), "parse");
+        assert_eq!(err_code(r#"{"prompt": "x"}"#), "bad_request"); // missing id
+        assert_eq!(err_code(r#"{"id": 1}"#), "bad_request"); // missing prompt
+        assert_eq!(err_code(r#"{"id": "x", "prompt": "y"}"#), "bad_request");
+    }
+
+    #[test]
+    fn rejects_wrong_field_types() {
+        assert_eq!(err_code(r#"{"id":1,"prompt":7}"#), "bad_request");
+        assert_eq!(
+            err_code(r#"{"id":1,"prompt":"x","max_new_tokens":"many"}"#),
+            "bad_request"
+        );
+        assert_eq!(
+            err_code(r#"{"id":1,"prompt":"x","temperature":"hot"}"#),
+            "bad_request"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","stream":"yes"}"#),
+            "bad_request"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"top_k":"all"}}"#),
+            "invalid_params"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"stop":"\n"}}"#),
+            "invalid_params"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":[1]}"#),
+            "invalid_params"
+        );
+    }
+
+    #[test]
+    fn v2_envelope_is_strict_v1_stays_lenient() {
+        // a typo'd v2 key must not silently fall back to defaults
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","Stream":true}"#),
+            "bad_request"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","Params":{"top_k":1}}"#),
+            "bad_request"
+        );
+        // v1 keeps its historic tolerance of extra keys
+        let r = generate(r#"{"id":1,"prompt":"x","extra":true}"#);
+        assert_eq!(r.params, SamplingParams::default());
+    }
+
+    #[test]
+    fn rejects_unknown_op_version_and_params() {
+        assert_eq!(err_code(r#"{"v":2,"op":"noop","id":1}"#), "unknown_op");
+        assert_eq!(err_code(r#"{"v":3,"id":1,"prompt":"x"}"#), "unsupported_version");
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"temprature":0.5}}"#),
+            "invalid_params"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"method":"warp"}}"#),
+            "invalid_params"
+        );
+        // sigmoid as a bare string lacks alpha/beta
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"method":"sigmoid"}}"#),
+            "invalid_params"
+        );
+    }
+
+    #[test]
+    fn errors_carry_the_request_dialect() {
+        // v1 lines must be answered with v1-shaped errors
+        assert!(parse_line(r#"{"id":1,"prompt":"x","temperature":-1}"#)
+            .unwrap_err()
+            .v1);
+        assert!(parse_line(r#"{"prompt":"x"}"#).unwrap_err().v1);
+        assert!(!parse_line(r#"{"v":2,"id":1,"prompt":"x","params":{"top_p":0}}"#)
+            .unwrap_err()
+            .v1);
+        // dialect unknown: unparseable lines and unsupported versions
+        assert!(!parse_line("garbage").unwrap_err().v1);
+        assert!(!parse_line(r#"{"v":7,"id":1}"#).unwrap_err().v1);
+    }
+
+    #[test]
+    fn fractional_integers_are_rejected_not_floored() {
+        assert_eq!(err_code(r#"{"id":1.5,"prompt":"x"}"#), "bad_request");
+        assert_eq!(
+            err_code(r#"{"id":1,"prompt":"x","max_new_tokens":8.9}"#),
+            "bad_request"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"gamma":2.5}}"#),
+            "invalid_params"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"top_k":1.2}}"#),
+            "invalid_params"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"seed":0.5}}"#),
+            "invalid_params"
+        );
+    }
+
+    #[test]
+    fn admission_validation_happens_at_parse() {
+        assert_eq!(
+            err_code(r#"{"id":1,"prompt":"x","temperature":-1}"#),
+            "invalid_params"
+        );
+        assert_eq!(
+            err_code(r#"{"id":1,"prompt":"x","max_new_tokens":0}"#),
+            "invalid_params"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"top_p":0}}"#),
+            "invalid_params"
+        );
+        assert_eq!(
+            err_code(r#"{"v":2,"id":1,"prompt":"x","params":{"gamma":0}}"#),
+            "invalid_params"
+        );
+    }
+
+    #[test]
+    fn generate_line_round_trips_through_parse() {
+        let params = SamplingParams::default()
+            .with_max_new_tokens(12)
+            .with_temperature(0.3)
+            .with_top_k(7)
+            .with_top_p(0.85)
+            .with_stop(vec![".".into()])
+            .with_seed(99)
+            .pin_gamma(2)
+            .with_method(Method::sigmoid(-1e4, 1e4));
+        let line = render_generate(6, "prompt text", &params, true);
+        let r = generate(&line);
+        assert_eq!(r.id, 6);
+        assert_eq!(r.prompt, "prompt text");
+        assert!(r.stream);
+        assert_eq!(r.params, params);
+
+        // defaults render to no params object at all
+        let line = render_generate(7, "p", &SamplingParams::default(), false);
+        assert!(!line.contains("params"), "{line}");
+        assert_eq!(generate(&line).params, SamplingParams::default());
+
+        let cancel = render_cancel(6);
+        assert_eq!(parse_line(&cancel).unwrap(), WireMsg::Cancel { id: 6 });
+    }
+
+    fn sample_response() -> WireResponse {
+        WireResponse {
             id: 5,
             text: "hello \"world\"".into(),
             result: GenResult {
@@ -126,9 +739,14 @@ mod tests {
                 accepted: 5,
                 latency: 0.0123,
             },
-        };
-        let line = render_response(&resp);
-        let v = crate::util::json::parse(&line).unwrap();
+        }
+    }
+
+    #[test]
+    fn v1_response_round_trips_as_json() {
+        let line = render_response(&sample_response());
+        let v = json::parse(&line).unwrap();
+        assert!(v.get("v").is_none(), "v1 response must stay unversioned");
         assert_eq!(v.get("id").unwrap().as_i64(), Some(5));
         assert_eq!(v.get("tokens").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("finish").unwrap().as_str(), Some("length"));
@@ -137,15 +755,45 @@ mod tests {
     }
 
     #[test]
-    fn error_rendering() {
+    fn v2_events_render() {
+        let mut resp = sample_response();
+        resp.result.finish = FinishReason::Cancelled;
+        let v = json::parse(&render_done(&resp)).unwrap();
+        assert_eq!(v.get("v").unwrap().as_i64(), Some(2));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(v.get("finish").unwrap().as_str(), Some("cancel"));
+
+        let v = json::parse(&render_delta(4, "chunk", 3)).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str(), Some("delta"));
+        assert_eq!(v.get("text").unwrap().as_str(), Some("chunk"));
+        assert_eq!(v.get("tokens").unwrap().as_usize(), Some(3));
+
+        let v = json::parse(&render_error_event(&WireError::new(
+            Some(2),
+            "invalid_params",
+            "bad temperature",
+        )))
+        .unwrap();
+        assert_eq!(v.get("event").unwrap().as_str(), Some("error"));
+        assert_eq!(v.get("code").unwrap().as_str(), Some("invalid_params"));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("bad temperature"));
+        assert_eq!(v.get("id").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn v1_error_rendering() {
         let line = render_error(Some(2), "bad prompt");
-        let v = crate::util::json::parse(&line).unwrap();
+        let v = json::parse(&line).unwrap();
         assert_eq!(v.get("error").unwrap().as_str(), Some("bad prompt"));
         let line = render_error(None, "parse failure");
-        assert!(crate::util::json::parse(&line)
-            .unwrap()
-            .get("id")
-            .unwrap()
-            .is_null());
+        assert!(json::parse(&line).unwrap().get("id").unwrap().is_null());
+    }
+
+    #[test]
+    fn stop_seq_finish_reason_renders() {
+        let mut resp = sample_response();
+        resp.result.finish = FinishReason::StopSeq;
+        let v = json::parse(&render_response(&resp)).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str(), Some("stop_seq"));
     }
 }

@@ -2,24 +2,37 @@
 //!
 //! Topology: one listener thread accepting connections, one reader thread
 //! per connection parsing JSON lines, one engine thread owning the
-//! [`Engine`] and stepping it while work exists. Responses are written by
-//! the engine thread through per-connection cloned `TcpStream`s, so the
-//! hot loop never blocks on a slow client for longer than one write.
+//! [`Engine`] and stepping it while work exists. Responses (including
+//! streaming `delta` events) are written by the engine thread through a
+//! per-connection mutex-serialized write half ([`SharedStream`]), so the
+//! hot loop never blocks on a slow client for longer than one line write
+//! and reader-side error lines can never interleave with in-flight
+//! deltas.
+//!
+//! Admission is validated on the engine thread ([`Engine::admissible`]):
+//! malformed lines are rejected by the reader with structured error
+//! events, over-long prompts / unsupported per-request overrides are
+//! rejected before a slot is committed. A `cancel` op frees the request's
+//! slot mid-decode; the request finishes with `"finish":"cancel"`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::engine::{Engine, GenRequest};
+use crate::engine::{Engine, GenRequest, SamplingParams};
 use crate::tokenizer::Tokenizer;
 
-use super::protocol::{parse_request, render_error, render_response, WireResponse};
+use super::protocol::{
+    parse_line, render_cancel, render_delta, render_done, render_error,
+    render_error_event, render_generate, render_response, WireError, WireMsg,
+    WireResponse,
+};
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -34,11 +47,29 @@ impl Default for ServerConfig {
     }
 }
 
-struct Job {
+/// One connection's write half. The reader thread (protocol errors) and
+/// the engine thread (deltas, results) both write to the socket; the
+/// mutex keeps whole lines atomic so the JSON framing cannot interleave.
+type SharedStream = Arc<Mutex<TcpStream>>;
+
+fn send_line(stream: &SharedStream, line: &str) {
+    if let Ok(mut s) = stream.lock() {
+        let _ = writeln!(s, "{line}");
+    }
+}
+
+struct GenJob {
     engine_id: u64,
     wire_id: u64,
-    stream: TcpStream,
+    stream: SharedStream,
     request: GenRequest,
+    streaming: bool,
+    v1: bool,
+}
+
+enum Job {
+    Generate(Box<GenJob>),
+    Cancel { engine_id: u64, wire_id: u64 },
 }
 
 /// The serving front-end. Owns the engine on a dedicated thread.
@@ -114,40 +145,87 @@ fn connection_loop(stream: TcpStream, tx: Sender<Job>, id_base: u64) -> Result<(
     let peer = stream.peer_addr()?;
     crate::debug!("connection from {peer}");
     let reader = BufReader::new(stream.try_clone()?);
+    let writer: SharedStream = Arc::new(Mutex::new(stream));
+    // wire id -> engine id, for routing cancels (ids are per-connection).
+    // Bounded: entries older than the last CANCEL_WINDOW requests are
+    // evicted — such requests have long finished and a cancel for them
+    // would be a no-op anyway.
+    const CANCEL_WINDOW: usize = 1024;
+    let mut ids: HashMap<u64, u64> = HashMap::new();
+    let mut order: VecDeque<u64> = VecDeque::new();
     let mut n = 0u64;
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request(&line) {
-            Ok(wire) => {
+        match parse_line(&line) {
+            Ok(WireMsg::Generate(wire)) => {
                 n += 1;
                 let engine_id = id_base + n;
-                let request = GenRequest {
-                    id: engine_id,
-                    prompt_ids: Vec::new(), // encoded by the engine thread
-                    prompt_text: Some(wire.prompt),
-                    max_new_tokens: wire.max_new_tokens,
-                    temperature: wire.temperature,
-                    draft_temperature: wire.temperature,
-                    seed: wire.seed.unwrap_or(wire.id),
-                };
-                tx.send(Job {
+                if ids.insert(wire.id, engine_id).is_none() {
+                    order.push_back(wire.id);
+                }
+                if order.len() > CANCEL_WINDOW {
+                    if let Some(old) = order.pop_front() {
+                        ids.remove(&old);
+                    }
+                }
+                let mut params = wire.params;
+                if wire.v1 && params.seed.is_none() {
+                    // v1 determinism contract: unseeded one-shot requests
+                    // seed from their wire id (pre-v2 behaviour, unchanged)
+                    params.seed = Some(wire.id);
+                }
+                let request = GenRequest::from_text(engine_id, wire.prompt, params);
+                tx.send(Job::Generate(Box::new(GenJob {
                     engine_id,
                     wire_id: wire.id,
-                    stream: stream.try_clone()?,
+                    stream: writer.clone(),
                     request,
-                })
+                    streaming: wire.stream,
+                    v1: wire.v1,
+                })))
                 .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
             }
-            Err(e) => {
-                let mut s = stream.try_clone()?;
-                let _ = writeln!(s, "{}", render_error(None, &format!("{e:#}")));
+            Ok(WireMsg::Cancel { id }) => match ids.get(&id) {
+                Some(&engine_id) => {
+                    tx.send(Job::Cancel {
+                        engine_id,
+                        wire_id: id,
+                    })
+                    .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+                }
+                None => {
+                    send_line(
+                        &writer,
+                        &render_error_event(&WireError::new(
+                            Some(id),
+                            "unknown_id",
+                            "no request with that id on this connection",
+                        )),
+                    );
+                }
+            },
+            Err(err) => {
+                // answer in the dialect the offending line spoke
+                let reply = if err.v1 {
+                    render_error(err.id, &err.msg)
+                } else {
+                    render_error_event(&err)
+                };
+                send_line(&writer, &reply);
             }
         }
     }
     Ok(())
+}
+
+struct Inflight {
+    wire_id: u64,
+    stream: SharedStream,
+    streaming: bool,
+    v1: bool,
 }
 
 fn engine_loop(
@@ -156,7 +234,7 @@ fn engine_loop(
     rx: Receiver<Job>,
     shutdown: Arc<AtomicBool>,
 ) {
-    let mut inflight: HashMap<u64, (u64, TcpStream)> = HashMap::new();
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
     loop {
         if shutdown.load(Ordering::Relaxed) && inflight.is_empty() {
             break;
@@ -177,34 +255,112 @@ fn engine_loop(
                 }
             };
             got = true;
-            let mut req = job.request;
-            if let Some(text) = req.prompt_text.take() {
-                req.prompt_ids = tokenizer.encode(&text);
+            match job {
+                Job::Generate(job) => {
+                    let GenJob {
+                        engine_id,
+                        wire_id,
+                        stream,
+                        mut request,
+                        streaming,
+                        v1,
+                    } = *job;
+                    if let Some(text) = request.prompt_text.take() {
+                        request.prompt_ids = tokenizer.encode(&text);
+                    }
+                    request = request.tokenize_stops(&tokenizer);
+                    // admission: validate against params rules + model
+                    // limits instead of decoding garbage
+                    if let Err(msg) = engine.admissible(&request) {
+                        let err = WireError::new(Some(wire_id), "rejected", msg);
+                        let line = if v1 {
+                            render_error(Some(wire_id), &err.msg)
+                        } else {
+                            render_error_event(&err)
+                        };
+                        send_line(&stream, &line);
+                        continue;
+                    }
+                    inflight.insert(
+                        engine_id,
+                        Inflight {
+                            wire_id,
+                            stream,
+                            streaming,
+                            v1,
+                        },
+                    );
+                    engine.submit(request);
+                }
+                Job::Cancel { engine_id, wire_id } => {
+                    if engine.cancel(engine_id) {
+                        // the Cancelled result flows out via the normal
+                        // result drain below
+                        crate::debug!("cancelled request {wire_id}");
+                    } else {
+                        // raced natural completion (or an admission
+                        // rejection) — the request was already answered;
+                        // a late error event here would desync clients
+                        // reading the shared response stream
+                        crate::debug!("cancel for finished request {wire_id}");
+                    }
+                }
             }
-            inflight.insert(job.engine_id, (job.wire_id, job.stream));
-            engine.submit(req);
         }
 
         if engine.active() == 0 && engine.pending() == 0 {
+            // drain results produced without stepping (queue cancels)
+            flush_results(&mut engine, &tokenizer, &mut inflight);
             continue;
         }
         if let Err(e) = engine.step() {
             crate::error!("engine step failed: {e:#}");
             // fail all in-flight requests
-            for (_eid, (wid, mut stream)) in inflight.drain() {
-                let _ = writeln!(stream, "{}", render_error(Some(wid), "engine failure"));
+            for (_eid, f) in inflight.drain() {
+                let line = if f.v1 {
+                    render_error(Some(f.wire_id), "engine failure")
+                } else {
+                    render_error_event(&WireError::new(
+                        Some(f.wire_id),
+                        "engine",
+                        "engine failure",
+                    ))
+                };
+                send_line(&f.stream, &line);
             }
             continue;
         }
-        for result in engine.take_results() {
-            if let Some((wire_id, mut stream)) = inflight.remove(&result.id) {
-                let resp = WireResponse {
-                    id: wire_id,
-                    text: tokenizer.decode_until_stop(&result.token_ids),
-                    result,
-                };
-                let _ = writeln!(stream, "{}", render_response(&resp));
+        // streaming deltas for this step
+        for (engine_id, toks) in engine.take_deltas() {
+            if let Some(f) = inflight.get(&engine_id) {
+                if f.streaming {
+                    let text = tokenizer.decode(&toks);
+                    send_line(&f.stream, &render_delta(f.wire_id, &text, toks.len()));
+                }
             }
+        }
+        flush_results(&mut engine, &tokenizer, &mut inflight);
+    }
+}
+
+fn flush_results(
+    engine: &mut Engine,
+    tokenizer: &Tokenizer,
+    inflight: &mut HashMap<u64, Inflight>,
+) {
+    for result in engine.take_results() {
+        if let Some(f) = inflight.remove(&result.id) {
+            let resp = WireResponse {
+                id: f.wire_id,
+                text: tokenizer.decode_until_stop(&result.token_ids),
+                result,
+            };
+            let line = if f.v1 {
+                render_response(&resp)
+            } else {
+                render_done(&resp)
+            };
+            send_line(&f.stream, &line);
         }
     }
 }
@@ -222,7 +378,50 @@ impl Client {
         Ok(Client { stream, reader })
     }
 
-    /// Send one request and wait for its response line.
+    /// Send one raw protocol line.
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        writeln!(self.stream, "{line}")?;
+        Ok(())
+    }
+
+    /// Read the next server line as JSON (blocks).
+    pub fn read_event(&mut self) -> Result<crate::util::json::Value> {
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        crate::util::json::parse(&resp).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Send a v2 generate line (responses are read via
+    /// [`Client::read_event`]).
+    pub fn send_generate(
+        &mut self,
+        id: u64,
+        prompt: &str,
+        params: &SamplingParams,
+        stream: bool,
+    ) -> Result<()> {
+        self.send_line(&render_generate(id, prompt, params, stream))
+    }
+
+    /// Send a v2 cancel line for an earlier generate.
+    pub fn send_cancel(&mut self, id: u64) -> Result<()> {
+        self.send_line(&render_cancel(id))
+    }
+
+    /// v2 non-streaming request: send and block for its `done` (or
+    /// `error`) event.
+    pub fn request_v2(
+        &mut self,
+        id: u64,
+        prompt: &str,
+        params: &SamplingParams,
+    ) -> Result<crate::util::json::Value> {
+        self.send_generate(id, prompt, params, false)?;
+        self.read_event()
+    }
+
+    /// v1 one-shot request (compatibility shim round-trip).
     pub fn request(
         &mut self,
         id: u64,
@@ -237,9 +436,7 @@ impl Client {
             ("temperature", crate::util::json::Value::Num(temperature as f64)),
         ])
         .dump();
-        writeln!(self.stream, "{line}")?;
-        let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
-        crate::util::json::parse(&resp).map_err(|e| anyhow::anyhow!("{e}"))
+        self.send_line(&line)?;
+        self.read_event()
     }
 }

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::{Backend, Engine, EngineConfig, GenRequest, Mode};
+use crate::engine::{Backend, Engine, EngineConfig, GenRequest, Mode, SamplingParams};
 use crate::runtime::Runtime;
 use crate::sampling::Method;
 use crate::tokenizer::Tokenizer;
@@ -23,7 +23,9 @@ pub struct EvalContext {
     pub batch: usize,
     pub n_examples: usize,
     pub seed: u64,
-    pub temperature: f32,
+    /// per-request policy applied to every task (max_new_tokens and seed
+    /// are overridden per task)
+    pub params: SamplingParams,
 }
 
 impl EvalContext {
@@ -40,7 +42,7 @@ impl EvalContext {
             batch: 1,
             n_examples,
             seed: 1234,
-            temperature: 0.5,
+            params: SamplingParams::default().with_temperature(0.5),
         })
     }
 }
@@ -98,9 +100,13 @@ pub fn run_method(
         .iter()
         .enumerate()
         .map(|(i, t)| {
-            GenRequest::new(i as u64, ctx.tokenizer.encode(&t.prompt), t.max_new_tokens)
-                .with_temperature(ctx.temperature)
-                .with_seed(ctx.seed.wrapping_add(i as u64))
+            let params = ctx
+                .params
+                .clone()
+                .with_max_new_tokens(t.max_new_tokens)
+                .with_seed(ctx.seed.wrapping_add(i as u64));
+            GenRequest::new(i as u64, ctx.tokenizer.encode(&t.prompt), params)
+                .tokenize_stops(&ctx.tokenizer)
         })
         .collect();
 

@@ -1,16 +1,26 @@
-//! Integration: TCP server round-trips over a real engine.
+//! Integration: TCP server round-trips over a real engine — protocol v2
+//! (streaming, per-request overrides, cancellation) and the v1 shim.
+//!
+//! These tests need built artifacts (`make artifacts`); they skip with a
+//! notice when the runtime cannot be opened.
 
 use std::sync::Arc;
 
-use specd::engine::{Backend, Engine, EngineConfig, Mode};
+use specd::engine::{Backend, Engine, EngineConfig, Mode, SamplingParams};
 use specd::runtime::Runtime;
 use specd::sampling::Method;
-use specd::server::service::Client;
-use specd::server::{Server, ServerConfig};
+use specd::server::{Client, Server, ServerConfig};
 use specd::tokenizer::Tokenizer;
+use specd::util::json::Value;
 
-fn start_server() -> Arc<Server> {
-    let runtime = Arc::new(Runtime::open_default().expect("run `make artifacts` first"));
+fn start_server() -> Option<Arc<Server>> {
+    let runtime = match Runtime::open_default() {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("skipping: artifacts unavailable ({e:#})");
+            return None;
+        }
+    };
     let tokenizer = Tokenizer::load(&specd::artifacts_dir().join("tokenizer.json")).unwrap();
     let engine = Engine::new(
         runtime,
@@ -27,7 +37,7 @@ fn start_server() -> Arc<Server> {
         },
     )
     .unwrap();
-    Arc::new(
+    Some(Arc::new(
         Server::start(
             engine,
             tokenizer,
@@ -36,25 +46,36 @@ fn start_server() -> Arc<Server> {
             },
         )
         .unwrap(),
-    )
+    ))
+}
+
+fn spawn_accept(server: &Arc<Server>) -> std::thread::JoinHandle<()> {
+    let server = server.clone();
+    std::thread::spawn(move || {
+        let _ = server.serve_forever();
+    })
+}
+
+fn event(v: &Value) -> &str {
+    v.get("event").and_then(Value::as_str).unwrap_or("")
+}
+
+fn finish(v: &Value) -> &str {
+    v.get("finish").and_then(Value::as_str).unwrap_or("")
 }
 
 #[test]
-fn serves_requests_end_to_end() {
-    let server = start_server();
+fn serves_v1_requests_end_to_end() {
+    let Some(server) = start_server() else { return };
     let addr = server.addr().to_string();
-    let accept_thread = {
-        let server = server.clone();
-        std::thread::spawn(move || {
-            let _ = server.serve_forever();
-        })
-    };
+    let accept_thread = spawn_accept(&server);
 
     let mut c = Client::connect(&addr).unwrap();
     let resp = c
         .request(1, "The scheduler accepts", 16, 0.7)
         .expect("request 1");
     assert!(resp.get("error").is_none(), "{}", resp.dump());
+    assert!(resp.get("v").is_none(), "v1 responses stay unversioned");
     assert_eq!(resp.get("id").unwrap().as_i64(), Some(1));
     assert!(resp.get("tokens").unwrap().as_usize().unwrap() > 0);
     assert!(resp.get("text").unwrap().as_str().is_some());
@@ -73,17 +94,137 @@ fn serves_requests_end_to_end() {
     accept_thread.join().unwrap();
 }
 
+/// The protocol-v2 acceptance scenario, all against one running server:
+/// stream deltas for a sampled request; run a concurrent greedy request
+/// with stop sequences and a per-request γ override; cancel a third
+/// mid-generation with its slot reclaimed; and a v1 one-shot request
+/// still round-trips unchanged.
+#[test]
+fn protocol_v2_full_scenario() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr().to_string();
+    let accept_thread = spawn_accept(&server);
+
+    // (a) streaming sampled request
+    let mut c1 = Client::connect(&addr).unwrap();
+    c1.send_generate(
+        1,
+        "The scheduler accepts the drafted tokens",
+        &SamplingParams::default()
+            .with_max_new_tokens(24)
+            .with_temperature(0.9)
+            .with_top_p(0.9)
+            .with_seed(5),
+        true,
+    )
+    .unwrap();
+
+    // (b) concurrent greedy request with stop sequences + γ override,
+    // from a second connection (queued behind (a) on a batch-1 engine)
+    let stops = ["e".to_string(), " ".to_string()];
+    let mut c2 = Client::connect(&addr).unwrap();
+    c2.send_generate(
+        7,
+        "A worker thread verifies",
+        &SamplingParams::default()
+            .greedy()
+            .with_max_new_tokens(16)
+            .with_stop(stops.to_vec())
+            .pin_gamma(2),
+        false,
+    )
+    .unwrap();
+
+    // drain (a): deltas then done; concatenated deltas must equal the
+    // final text (no stop sequences on this request, so no retraction)
+    let mut streamed = String::new();
+    let mut deltas = 0usize;
+    let done1 = loop {
+        let ev = c1.read_event().unwrap();
+        match event(&ev) {
+            "delta" => {
+                deltas += 1;
+                assert_eq!(ev.get("id").unwrap().as_i64(), Some(1));
+                streamed.push_str(ev.get("text").unwrap().as_str().unwrap());
+                assert!(ev.get("tokens").unwrap().as_usize().unwrap() > 0);
+            }
+            "done" => break ev,
+            other => panic!("unexpected event {other:?}: {}", ev.dump()),
+        }
+    };
+    assert!(deltas > 0, "streaming produced no delta events");
+    assert_eq!(done1.get("id").unwrap().as_i64(), Some(1));
+    let text1 = done1.get("text").unwrap().as_str().unwrap();
+    assert!(
+        streamed.starts_with(text1) || text1.starts_with(&streamed),
+        "streamed {streamed:?} vs done {text1:?}"
+    );
+    assert!(done1.get("tokens").unwrap().as_usize().unwrap() <= 24);
+
+    // drain (b): greedy + stop sequences; if a stop fired the text must
+    // not contain it (the matched sequence is trimmed)
+    let done2 = c2.read_event().unwrap();
+    assert_eq!(event(&done2), "done", "{}", done2.dump());
+    assert_eq!(done2.get("id").unwrap().as_i64(), Some(7));
+    let text2 = done2.get("text").unwrap().as_str().unwrap();
+    match finish(&done2) {
+        "stop_seq" => {
+            for s in &stops {
+                assert!(!text2.contains(s.as_str()), "{text2:?} contains {s:?}");
+            }
+        }
+        "length" => assert!(done2.get("tokens").unwrap().as_usize().unwrap() <= 16),
+        other => panic!("unexpected finish {other:?}"),
+    }
+
+    // (c) cancel a third request mid-generation
+    let mut c3 = Client::connect(&addr).unwrap();
+    c3.send_generate(
+        3,
+        "The memory pool loads",
+        &SamplingParams::default().with_max_new_tokens(200),
+        true,
+    )
+    .unwrap();
+    let first = c3.read_event().unwrap();
+    assert_eq!(event(&first), "delta", "decode should have started");
+    c3.send_cancel(3).unwrap();
+    let done3 = loop {
+        let ev = c3.read_event().unwrap();
+        if event(&ev) != "delta" {
+            break ev;
+        }
+    };
+    assert_eq!(event(&done3), "done", "{}", done3.dump());
+    assert_eq!(finish(&done3), "cancel", "{}", done3.dump());
+    assert!(done3.get("tokens").unwrap().as_usize().unwrap() < 200);
+
+    // the slot is reclaimed: the same connection serves a fresh request
+    let resp4 = c3
+        .request_v2(4, "The batch planner", &SamplingParams::default().with_max_new_tokens(4))
+        .unwrap();
+    assert_eq!(event(&resp4), "done", "{}", resp4.dump());
+    assert_eq!(resp4.get("id").unwrap().as_i64(), Some(4));
+
+    // (d) a v1 one-shot request still round-trips unchanged
+    let mut c4 = Client::connect(&addr).unwrap();
+    let v1 = c4.request(9, "The profiler tracks", 8, 0.7).unwrap();
+    assert!(v1.get("error").is_none(), "{}", v1.dump());
+    assert!(v1.get("v").is_none());
+    assert!(v1.get("event").is_none());
+    assert_eq!(v1.get("id").unwrap().as_i64(), Some(9));
+    assert!(v1.get("tokens").unwrap().as_usize().unwrap() > 0);
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
+
 #[test]
 fn malformed_requests_get_error_lines() {
     use std::io::{BufRead, BufReader, Write};
-    let server = start_server();
+    let Some(server) = start_server() else { return };
     let addr = server.addr();
-    let accept_thread = {
-        let server = server.clone();
-        std::thread::spawn(move || {
-            let _ = server.serve_forever();
-        })
-    };
+    let accept_thread = spawn_accept(&server);
 
     let mut stream = std::net::TcpStream::connect(addr).unwrap();
     writeln!(stream, "this is not json").unwrap();
@@ -92,6 +233,7 @@ fn malformed_requests_get_error_lines() {
     reader.read_line(&mut line).unwrap();
     let v = specd::util::json::parse(&line).unwrap();
     assert!(v.get("error").is_some(), "{line}");
+    assert_eq!(v.get("code").unwrap().as_str(), Some("parse"));
 
     // and a valid one still works afterwards on the same connection
     writeln!(stream, r#"{{"id": 4, "prompt": "The batch planner", "max_new_tokens": 6}}"#)
@@ -100,6 +242,99 @@ fn malformed_requests_get_error_lines() {
     reader.read_line(&mut line2).unwrap();
     let v2 = specd::util::json::parse(&line2).unwrap();
     assert_eq!(v2.get("id").unwrap().as_i64(), Some(4));
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
+
+#[test]
+fn protocol_error_paths_over_the_wire() {
+    use std::io::{BufRead, BufReader, Write};
+    let Some(server) = start_server() else { return };
+    let addr = server.addr();
+    let accept_thread = spawn_accept(&server);
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // v2-dialect (and dialect-unknown) failures: structured error events
+    let mut expect_code = |line: &str, code: &str| {
+        writeln!(stream, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let v = specd::util::json::parse(&resp).unwrap();
+        assert_eq!(v.get("event").and_then(Value::as_str), Some("error"), "{resp}");
+        assert_eq!(v.get("code").and_then(Value::as_str), Some(code), "{resp}");
+        assert!(v.get("error").is_some(), "{resp}");
+    };
+    expect_code("this is not json", "parse");
+    expect_code(r#"{"v":2,"op":"noop","id":1}"#, "unknown_op");
+    expect_code(r#"{"v":9,"id":1,"prompt":"x"}"#, "unsupported_version");
+    expect_code(r#"{"v":2,"id":1,"prompt":"x","params":{"nucleus":0.9}}"#, "invalid_params");
+    expect_code(r#"{"v":2,"id":1,"prompt":"x","params":{"gamma":2.5}}"#, "invalid_params");
+    expect_code(r#"{"v":2,"id":1,"prompt":"x","Stream":true}"#, "bad_request");
+    // cancel for an id this connection never sent
+    expect_code(r#"{"v":2,"op":"cancel","id":55}"#, "unknown_id");
+
+    // v1-dialect failures: v1-shaped {"id":…,"error":…} lines (no event)
+    let mut expect_v1_error = |line: &str| {
+        writeln!(stream, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let v = specd::util::json::parse(&resp).unwrap();
+        assert!(v.get("event").is_none(), "{resp}");
+        assert!(v.get("v").is_none(), "{resp}");
+        assert!(v.get("error").unwrap().as_str().is_some(), "{resp}");
+    };
+    expect_v1_error(r#"{"prompt": "missing id"}"#);
+    expect_v1_error(r#"{"id": 1}"#);
+    expect_v1_error(r#"{"id": "one", "prompt": "x"}"#);
+    expect_v1_error(r#"{"id": 1, "prompt": "x", "max_new_tokens": "lots"}"#);
+    expect_v1_error(r#"{"id":1,"prompt":"x","temperature":-0.5}"#);
+    expect_v1_error(r#"{"id":1,"prompt":"x","max_new_tokens":0}"#);
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
+
+#[test]
+fn admission_rejects_overlong_prompts_with_structured_error() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr().to_string();
+    let accept_thread = spawn_accept(&server);
+
+    let mut c = Client::connect(&addr).unwrap();
+    // far beyond any model context S — rejected at admission instead of
+    // decoding garbage or finishing with "context" immediately
+    let huge = "a ".repeat(50_000);
+    let resp = c
+        .request_v2(1, &huge, &SamplingParams::default().with_max_new_tokens(4))
+        .unwrap();
+    assert_eq!(event(&resp), "error", "{}", resp.dump());
+    assert_eq!(resp.get("code").unwrap().as_str(), Some("rejected"));
+    assert!(resp
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("context"));
+
+    // the connection and server stay healthy afterwards
+    let ok = c
+        .request_v2(2, "short prompt", &SamplingParams::default().with_max_new_tokens(4))
+        .unwrap();
+    assert_eq!(event(&ok), "done", "{}", ok.dump());
+
+    // unsupported per-request gamma override is also rejected up front
+    let resp = c
+        .request_v2(
+            3,
+            "short",
+            &SamplingParams::default().with_max_new_tokens(4).with_gamma(10_000),
+        )
+        .unwrap();
+    assert_eq!(event(&resp), "error", "{}", resp.dump());
+    assert_eq!(resp.get("code").unwrap().as_str(), Some("rejected"));
 
     server.shutdown();
     accept_thread.join().unwrap();

@@ -1,0 +1,237 @@
+//! Typed stub of the PJRT/XLA binding surface `specd` uses.
+//!
+//! The workspace builds hermetically against this crate: every type and
+//! signature matches the real `xla` bindings, host-side [`Literal`]
+//! handling is functional, but creating a [`PjRtClient`] reports that no
+//! native XLA runtime is linked. Integration tests detect that cleanly
+//! and skip; swap this path dependency for the real `xla` crate (plus
+//! its native library) to execute the AOT artifacts.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (mirrors the binding crate's error).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: specd was built against the vendored \
+     xla stub crate (rust/vendor/xla-stub); link the real xla bindings to execute artifacts";
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element dtypes of the artifact tensors (subset + placeholders so
+/// downstream matches stay non-trivial).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Host-side values a native type can be read back as.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_ne_chunk(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_ne_chunk(bytes: [u8; 4]) -> Self {
+        f32::from_ne_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_ne_chunk(bytes: [u8; 4]) -> Self {
+        i32::from_ne_bytes(bytes)
+    }
+}
+
+/// Array shape: dtype + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Dense host literal (functional in the stub: create / shape / read).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * 4 {
+            return Err(Error(format!(
+                "literal data is {} bytes but shape {dims:?} needs {}",
+                data.len(),
+                elems * 4
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            ty: self.ty,
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_ne_chunk([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Destructure a tuple literal (stub literals are never tuples).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path.as_ref())
+            .map(|_| HloModuleProto)
+            .map_err(|e| Error(format!("reading {}: {e}", path.as_ref().display())))
+    }
+}
+
+/// Computation wrapper (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Loaded executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client. [`PjRtClient::cpu`] fails in the stub — the one place
+/// callers learn the native runtime is absent.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let data: Vec<f32> = vec![1.0, -2.5, 3.5, 0.0, 7.25, -0.5];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &bytes)
+                .unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[3], &[0; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
