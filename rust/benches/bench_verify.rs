@@ -7,6 +7,7 @@
 use std::sync::Arc;
 
 use specd::runtime::{HostTensor, Runtime};
+use specd::sampling::kernels::{KernelConfig, VerifyWorkspace};
 use specd::sampling::{self, Method};
 use specd::util::bench::{bench_report, BenchConfig};
 use specd::util::rng::Pcg32;
@@ -67,21 +68,39 @@ fn main() {
                 }
             }
         }
-        // native oracle for scale
+        // native scalar oracle for scale
         bench_report(&format!("native/exact/v{v}"), cfg, || {
             let out = sampling::verify::spec_step_batch(
                 &z_p, &z_q, 1, g, v, &draft, &u_acc, &[0.4], &[0.6],
-                Method::Exact, None,
+                &[Method::Exact], None,
             );
             specd::util::bench::black_box(out);
         });
         bench_report(&format!("native/sigmoid/v{v}"), cfg, || {
             let out = sampling::verify::spec_step_batch(
                 &z_p, &z_q, 1, g, v, &draft, &u_acc, &[0.4], &[0.6],
-                Method::sigmoid(-1e3, 1e3), None,
+                &[Method::sigmoid(-1e3, 1e3)], None,
             );
             specd::util::bench::black_box(out);
         });
+        // segment-parallel kernel layer (zero-alloc workspace reuse)
+        {
+            let kcfg = KernelConfig {
+                min_parallel_elems: 0,
+                ..KernelConfig::default()
+            };
+            let threads = kcfg.threads;
+            let mut ws = VerifyWorkspace::with_capacity(kcfg, 1, g, v);
+            let mut accept = Vec::new();
+            let mut tokens = Vec::new();
+            bench_report(&format!("kernels/exact/v{v}/t{threads}"), cfg, || {
+                sampling::kernels::spec_step_batch_ws(
+                    &mut ws, &z_p, &z_q, 1, g, v, &draft, &u_acc, &[0.4], &[0.6],
+                    &[Method::Exact], &mut accept, &mut tokens, None,
+                );
+                specd::util::bench::black_box((&accept, &tokens));
+            });
+        }
         println!();
     }
 }

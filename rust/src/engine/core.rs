@@ -9,8 +9,13 @@
 //! 2. **score**: one `target_score` call returning the target logits at
 //!    the last `GMAX+1` positions; the engine slices the (γ+1) rows the
 //!    verification needs;
-//! 3. **verify**: one fused verification call (HLO artifact or native
-//!    oracle) producing per-slot accepted lengths and emitted tokens;
+//! 3. **verify**: one fused verification call per decode step — the HLO
+//!    artifact, or the native segment-parallel kernel layer
+//!    ([`crate::sampling::kernels`]) — producing per-slot accepted
+//!    lengths and emitted tokens. Verification is slot-parallel with
+//!    **per-slot method dispatch**: each row is verified under its own
+//!    [`crate::sampling::Method`] (the engine default or a per-request
+//!    override, on any batch size);
 //! 4. **commit**: slot state update, finish detection (EOS, stop
 //!    sequences, length, context), refill from the admission queue,
 //!    adaptive-γ update (+2 on all-accept / −1).
@@ -18,10 +23,19 @@
 //! Per-request policy lives in [`SamplingParams`] and is honored
 //! per-slot: target/draft temperatures, top-k/top-p truncation of the
 //! target distribution (logit masking shared with the sampling oracle),
-//! stop sequences at commit, γ caps/pins, and — on batch-1 engines —
-//! verification-method overrides. Committed tokens are additionally
+//! stop sequences at commit, γ caps/pins, and verification-method
+//! overrides (a heterogeneous batch resolves γ to the values common to
+//! every method's artifact set). Committed tokens are additionally
 //! surfaced through [`Engine::take_deltas`] so the server can stream
 //! incremental output, and [`Engine::cancel`] frees a slot mid-decode.
+//!
+//! The heavy per-step allocations are gone at steady state: model
+//! inputs are borrowed from preallocated step buffers as
+//! [`crate::runtime::TensorView`]s (no per-step logit/token clones),
+//! and the verification path writes into the engine-owned reusable
+//! [`VerifyOutput`] / kernel workspace. (Small bookkeeping allocations
+//! remain — the γ-availability set built per step, streaming deltas —
+//! all O(batch), none proportional to γ·V.)
 //!
 //! Every uniform consumed anywhere in the stack comes from per-request
 //! PCG32 streams, so generation is deterministic given request seeds.
@@ -32,7 +46,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{HostTensor, LoadedExecutable, Runtime};
+use crate::runtime::{LoadedExecutable, Runtime, TensorView};
 use crate::sampling::{self, Method};
 use crate::tokenizer;
 use crate::util::rng::Pcg32;
@@ -42,7 +56,7 @@ use super::request::{
     match_stop_suffix, FinishReason, GenRequest, GenResult, SamplingParams,
 };
 use super::stats::EngineStats;
-use super::verifier::{Backend, Verifier, VerifyInputs};
+use super::verifier::{Backend, Verifier, VerifyInputs, VerifyOutput};
 
 /// Decoding mode: the speculative pipeline or plain target-only
 /// autoregression (the non-speculative reference used by the serve demo).
@@ -138,6 +152,12 @@ pub struct Engine {
     uacc_buf: Vec<f32>,
     ures_buf: Vec<f32>,
     ubonus_buf: Vec<f32>,
+    /// per-slot verification method for the current step (engine default
+    /// unless the slot's request carries an override)
+    methods_buf: Vec<Method>,
+    /// reusable verification output buffers (accept lengths + emitted
+    /// tokens), filled in place by the verifier each step
+    verify_out: VerifyOutput,
 }
 
 impl Engine {
@@ -207,6 +227,8 @@ impl Engine {
             uacc_buf: vec![0.0; b * gmax],
             ures_buf: vec![0.0; b],
             ubonus_buf: vec![0.0; b],
+            methods_buf: vec![config.method; b],
+            verify_out: VerifyOutput::default(),
             runtime,
             config,
         })
@@ -244,14 +266,33 @@ impl Engine {
         }
         if let Some(m) = req.params.method {
             if self.config.mode == Mode::Speculative {
-                if m != self.config.method && self.config.batch > 1 {
-                    return Err(
-                        "per-request method override requires a batch-1 engine".into()
-                    );
-                }
-                if self.verifier.available_gammas_for(m).is_empty() {
+                // per-slot dispatch serves overrides on any batch size;
+                // the requirements are artifact availability and — since
+                // a batched step runs one γ for every slot — at least
+                // one γ shared with the engine method AND every method
+                // already admitted (active slots + queue). Admitting a
+                // request that zeroes the intersection would make a
+                // later batch unrunnable and fail *other* clients'
+                // requests, so it is rejected here instead.
+                let avail = self.verifier.available_gammas_for(m);
+                if avail.is_empty() {
                     return Err(format!(
                         "no verify artifacts for method {:?}",
+                        m.name()
+                    ));
+                }
+                let mut in_play: Vec<Method> = vec![self.config.method];
+                for s in self.slots.iter().flatten() {
+                    in_play.push(s.req.params.method.unwrap_or(self.config.method));
+                }
+                for r in &self.queue {
+                    in_play.push(r.params.method.unwrap_or(self.config.method));
+                }
+                let common = self.verifier.available_gammas_common(&in_play);
+                if !common.iter().any(|g| avail.contains(g)) {
+                    return Err(format!(
+                        "method {:?} shares no verify artifact gamma with \
+                         the engine method and currently admitted requests",
                         m.name()
                     ));
                 }
@@ -299,7 +340,7 @@ impl Engine {
             return true;
         }
         for slot in self.slots.iter_mut() {
-            if slot.as_ref().map_or(false, |s| s.req.id == id) {
+            if slot.as_ref().is_some_and(|s| s.req.id == id) {
                 let s = slot.take().unwrap();
                 self.results.push(GenResult {
                     id,
@@ -401,24 +442,39 @@ impl Engine {
         t.max(0.05)
     }
 
-    /// Verification method for this step: the engine default unless an
-    /// active slot carries an override (admission restricts overrides to
-    /// batch-1 engines, so at most one is in play).
-    fn step_method(&self) -> Method {
-        self.slots
+    /// Fill the per-slot verification methods for this step: the engine
+    /// default unless the slot's request carries an override. Inactive
+    /// slots pad with the first *active* slot's method (their rows are
+    /// masked at commit, so any method is semantically fine) — padding
+    /// with an in-use method keeps a fully-overridden batch down to one
+    /// HLO artifact dispatch and keeps the γ intersection from being
+    /// constrained by a method nobody is using.
+    fn fill_methods(&mut self) {
+        let pad = self
+            .slots
             .iter()
             .flatten()
-            .find_map(|s| s.req.params.method)
-            .unwrap_or(self.config.method)
+            .next()
+            .map(|s| s.req.params.method.unwrap_or(self.config.method))
+            .unwrap_or(self.config.method);
+        for i in 0..self.config.batch {
+            self.methods_buf[i] = match &self.slots[i] {
+                Some(s) => s.req.params.method.unwrap_or(self.config.method),
+                None => pad,
+            };
+        }
     }
 
     /// γ wanted this step: the adaptive controller clamped by slot
     /// headroom, then by per-request overrides — pinned slots bypass the
     /// controller, plain overrides cap it; a heterogeneous batch resolves
     /// to the most conservative value since γ is one per batched step.
-    /// The result is then snapped down to artifact availability
-    /// (admission guarantees an artifact with γ ≤ the override exists;
-    /// trusted in-process callers fall back to the smallest artifact).
+    /// The result is then snapped down to artifact availability — for a
+    /// heterogeneous batch, to the γ set common to every active slot's
+    /// verification method, so a γ pin can be served below its pinned
+    /// value when it shares the batch with method overrides (admission
+    /// guarantees an artifact with γ ≤ the override exists; trusted
+    /// in-process callers fall back to the smallest artifact).
     fn step_gamma_want(&self, min_headroom: usize) -> usize {
         let mut cap: Option<usize> = None;
         let mut pinned: Option<usize> = None;
@@ -484,14 +540,33 @@ impl Engine {
             .min()
             .unwrap_or(2);
         let want = self.step_gamma_want(min_headroom);
-        let method = self.step_method();
-        let avail = self.verifier.available_gammas_for(method);
+        self.fill_methods();
+        // a batched step runs one γ across all slots, so a heterogeneous
+        // batch snaps to the γ values every slot's method can serve.
+        // Admission checks each override pairwise against the engine
+        // method, so the intersection can only go empty when two
+        // *different* overrides have disjoint artifact γ sets — fail the
+        // step with a real message rather than limping into a γ no
+        // method can load.
+        let avail = self.verifier.available_gammas_common(&self.methods_buf);
+        if avail.is_empty() {
+            bail!(
+                "active requests' verification methods share no verify \
+                 artifact gamma (methods in play: {:?})",
+                self.methods_buf.iter().map(|m| m.name()).collect::<Vec<_>>()
+            );
+        }
         let gamma = avail
             .iter()
             .copied()
             .filter(|&g| g <= want)
             .max()
             .unwrap_or_else(|| avail.first().copied().unwrap_or(1));
+
+        // model input shapes (inputs are borrowed views over the
+        // preallocated step buffers — no per-step clones)
+        let shape_bs = [b, s];
+        let shape_b = [b];
 
         // --- 1. draft phase: γ sequential draft_step calls
         {
@@ -510,11 +585,11 @@ impl Engine {
                     self.u_buf[i] = u;
                     self.temp_buf[i] = t;
                 }
-                let out = self.draft_step.run(&[
-                    HostTensor::i32(&[b, s], self.tokens_buf.clone()),
-                    HostTensor::i32(&[b], self.lens_buf.clone()),
-                    HostTensor::f32(&[b], self.u_buf.clone()),
-                    HostTensor::f32(&[b], self.temp_buf.clone()),
+                let out = self.draft_step.run_views(&[
+                    TensorView::i32(&shape_bs, &self.tokens_buf),
+                    TensorView::i32(&shape_b, &self.lens_buf),
+                    TensorView::f32(&shape_b, &self.u_buf),
+                    TensorView::f32(&shape_b, &self.temp_buf),
                 ])?;
                 let toks = out[0].as_i32()?;
                 let logits = out[1].as_f32()?;
@@ -534,9 +609,9 @@ impl Engine {
             let prof = self.runtime.profiler.clone();
             let _g = prof.scope("step/score");
             self.fill_model_inputs(gamma);
-            let out = self.target_score.run(&[
-                HostTensor::i32(&[b, s], self.tokens_buf.clone()),
-                HostTensor::i32(&[b], self.lens_buf.clone()),
+            let out = self.target_score.run_views(&[
+                TensorView::i32(&shape_bs, &self.tokens_buf),
+                TensorView::i32(&shape_b, &self.lens_buf),
             ])?;
             let win = out[0].as_f32()?; // (B, GMAX+1, V)
             let w = self.gmax + 1;
@@ -606,17 +681,19 @@ impl Engine {
             self.ures_buf[i] = ur;
             self.ubonus_buf[i] = ub2;
         }
-        let (out, verify_secs) = self.verifier.verify(
+        let ins = VerifyInputs {
+            z_p: &self.zp_buf[..b * (gamma + 1) * v],
+            z_q: &self.zq_buf[..b * gamma * v],
+            draft: &self.draft_buf[..b * gamma],
+            u_acc: &self.uacc_buf[..b * gamma],
+            u_res: &self.ures_buf,
+            u_bonus: &self.ubonus_buf,
+        };
+        let verify_secs = self.verifier.verify_into(
             gamma,
-            method,
-            &VerifyInputs {
-                z_p: &self.zp_buf[..b * (gamma + 1) * v],
-                z_q: &self.zq_buf[..b * gamma * v],
-                draft: &self.draft_buf[..b * gamma],
-                u_acc: &self.uacc_buf[..b * gamma],
-                u_res: &self.ures_buf,
-                u_bonus: &self.ubonus_buf,
-            },
+            &self.methods_buf,
+            &ins,
+            &mut self.verify_out,
         )?;
 
         // --- 4. commit
@@ -626,7 +703,7 @@ impl Engine {
         let mut emitted_total = 0usize;
         for i in 0..b {
             let Some(slot) = &mut self.slots[i] else { continue };
-            let alen = out.accept_len[i] as usize;
+            let alen = self.verify_out.accept_len[i] as usize;
             slot.steps += 1;
             slot.drafted += gamma;
             slot.accepted += alen;
@@ -636,7 +713,8 @@ impl Engine {
                 all_accepted = false;
             }
 
-            let row = &out.out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)];
+            let row =
+                &self.verify_out.out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)];
             let gen_before = slot.generated.len();
             let mut finish: Option<FinishReason> = None;
             for &tok in row.iter().take(alen + 1) {
@@ -709,13 +787,15 @@ impl Engine {
             self.u_buf[i] = u;
             self.temp_buf[i] = t;
         }
+        let shape_bs = [b, s];
+        let shape_b = [b];
         let out = {
             let _g = self.runtime.profiler.scope("step/target_step");
-            self.target_step.run(&[
-                HostTensor::i32(&[b, s], self.tokens_buf.clone()),
-                HostTensor::i32(&[b], self.lens_buf.clone()),
-                HostTensor::f32(&[b], self.u_buf.clone()),
-                HostTensor::f32(&[b], self.temp_buf.clone()),
+            self.target_step.run_views(&[
+                TensorView::i32(&shape_bs, &self.tokens_buf),
+                TensorView::i32(&shape_b, &self.lens_buf),
+                TensorView::f32(&shape_b, &self.u_buf),
+                TensorView::f32(&shape_b, &self.temp_buf),
             ])?
         };
         let toks = out[0].as_i32()?;

@@ -26,4 +26,4 @@ pub use request::{
     match_stop_suffix, FinishReason, GenRequest, GenResult, SamplingParams,
 };
 pub use stats::EngineStats;
-pub use verifier::{Backend, Verifier};
+pub use verifier::{Backend, Verifier, VerifyInputs, VerifyOutput};

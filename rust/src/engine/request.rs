@@ -40,10 +40,16 @@ pub struct SamplingParams {
     /// while this request is active (one γ per batched step, so
     /// heterogeneous batches resolve to the most conservative value)
     pub gamma: Option<usize>,
-    /// with `gamma`, bypass the adaptive controller entirely (pin)
+    /// with `gamma`, bypass the adaptive controller entirely (pin).
+    /// A pin replaces the controller's value, not artifact reality: the
+    /// step still snaps γ down to the largest value every active slot's
+    /// verification method has artifacts for, so on a batch shared with
+    /// method-override requests the effective γ can sit below the pin.
     pub gamma_pinned: bool,
-    /// per-request verification-method override; honored where the loaded
-    /// artifacts allow it (batch-1 engines, or matching the engine method)
+    /// per-request verification-method override, honored per-slot on any
+    /// batch size (the verifier dispatches each batch row under its own
+    /// method). Admission requires verify artifacts for the method that
+    /// share at least one γ with the engine's default method.
     pub method: Option<Method>,
 }
 

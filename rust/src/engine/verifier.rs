@@ -1,17 +1,21 @@
 //! Verification backends.
 //!
-//! [`Backend::Hlo`] runs the fused AOT artifact for the configured method
-//! (one PJRT call per decode step — the paper's kernel path);
-//! [`Backend::Native`] runs the pure-rust oracle (identical semantics,
-//! useful when V is small enough that PJRT dispatch dominates, and as the
-//! cross-check in integration tests).
+//! [`Backend::Hlo`] runs the fused AOT artifact for each method present
+//! in the batch (one PJRT call per distinct method per decode step — the
+//! paper's kernel path); [`Backend::Native`] runs the segment-parallel
+//! kernel layer ([`crate::sampling::kernels`]): slot-parallel with
+//! per-row method dispatch, zero steady-state allocation via the
+//! verifier-owned [`VerifyWorkspace`], and bit-identical to the scalar
+//! oracle used as the cross-check in integration tests.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{HostTensor, Runtime};
-use crate::sampling::{self, Method};
+use crate::runtime::{Runtime, TensorView};
+use crate::sampling::kernels::{self, KernelConfig, VerifyWorkspace};
+use crate::sampling::Method;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -42,8 +46,10 @@ pub struct VerifyInputs<'a> {
     pub u_bonus: &'a [f32],
 }
 
-/// Output of one verification step.
-#[derive(Debug, Clone)]
+/// Output buffers of one verification step. Owned by the engine and
+/// reused across steps (cleared + refilled in place), so the commit path
+/// performs no per-step allocation.
+#[derive(Debug, Clone, Default)]
 pub struct VerifyOutput {
     /// accepted draft count per row (B,)
     pub accept_len: Vec<i32>,
@@ -51,13 +57,28 @@ pub struct VerifyOutput {
     pub out_tokens: Vec<i32>,
 }
 
-/// Method + backend dispatcher, loading per-γ executables lazily.
+/// Methods in first-occurrence order — the one dedup rule shared by the
+/// γ-intersection and the HLO dispatch loop, so the γ a step picks and
+/// the order artifacts execute in stay deterministic together.
+fn distinct_methods(methods: &[Method]) -> Vec<Method> {
+    let mut out: Vec<Method> = Vec::with_capacity(4);
+    for m in methods {
+        if !out.contains(m) {
+            out.push(*m);
+        }
+    }
+    out
+}
+
+/// Method + backend dispatcher, loading per-γ executables lazily. Owns
+/// the kernel workspace for the native backend.
 pub struct Verifier {
     runtime: Arc<Runtime>,
     pub method: Method,
     pub backend: Backend,
     batch: usize,
     vocab: usize,
+    ws: VerifyWorkspace,
 }
 
 impl Verifier {
@@ -74,7 +95,15 @@ impl Verifier {
             backend,
             batch,
             vocab,
+            ws: VerifyWorkspace::new(KernelConfig::from_env()),
         }
+    }
+
+    /// Replace the kernel scheduling config (bench/test knob; results
+    /// are identical for every config).
+    pub fn with_kernel_config(mut self, cfg: KernelConfig) -> Self {
+        self.ws = VerifyWorkspace::new(cfg);
+        self
     }
 
     /// γ values this verifier can serve for its default method.
@@ -95,27 +124,48 @@ impl Verifier {
         }
     }
 
-    /// Run verification for `gamma` draft positions with `method` (the
-    /// engine default, or a per-request override).
+    /// γ values every method in `methods` can serve (set intersection).
+    /// A batched step runs one γ for all slots, so a heterogeneous batch
+    /// is limited to the γ values common to its methods. Falls back to
+    /// the default method's set when `methods` is empty.
+    pub fn available_gammas_common(&self, methods: &[Method]) -> Vec<usize> {
+        let mut acc: Option<Vec<usize>> = None;
+        for m in distinct_methods(methods) {
+            let avail = self.available_gammas_for(m);
+            acc = Some(match acc {
+                None => avail,
+                Some(prev) => prev.into_iter().filter(|g| avail.contains(g)).collect(),
+            });
+        }
+        acc.unwrap_or_else(|| self.available_gammas())
+    }
+
+    /// Run verification for `gamma` draft positions, writing accept
+    /// lengths and emitted tokens into `out` (buffers reused across
+    /// steps). `methods` carries one verification method per batch row —
+    /// the engine default, or a per-request override on the slot.
     ///
-    /// Returns the output plus the *execution* seconds — artifact
-    /// compilation (lazy, first touch per γ) is deliberately excluded so
-    /// Δ%-profiling comparisons between methods are not biased by which
-    /// method ran first (the paper's timings are steady-state too).
-    pub fn verify(
-        &self,
+    /// Returns the *execution* seconds — artifact compilation (lazy,
+    /// first touch per γ) is deliberately excluded so Δ%-profiling
+    /// comparisons between methods are not biased by which method ran
+    /// first (the paper's timings are steady-state too).
+    pub fn verify_into(
+        &mut self,
         gamma: usize,
-        method: Method,
+        methods: &[Method],
         ins: &VerifyInputs<'_>,
-    ) -> Result<(VerifyOutput, f64)> {
+        out: &mut VerifyOutput,
+    ) -> Result<f64> {
         let (b, v) = (self.batch, self.vocab);
         debug_assert_eq!(ins.z_p.len(), b * (gamma + 1) * v);
         debug_assert_eq!(ins.z_q.len(), b * gamma * v);
+        assert_eq!(methods.len(), b, "one method per batch row");
         match self.backend {
             Backend::Native => {
-                let started = std::time::Instant::now();
+                let started = Instant::now();
                 let _scope = self.runtime.profiler.scope("verify");
-                let (accept_len, out_tokens) = sampling::verify::spec_step_batch(
+                kernels::spec_step_batch_ws(
+                    &mut self.ws,
                     ins.z_p,
                     ins.z_q,
                     b,
@@ -125,48 +175,83 @@ impl Verifier {
                     ins.u_acc,
                     ins.u_res,
                     ins.u_bonus,
-                    method,
+                    methods,
+                    &mut out.accept_len,
+                    &mut out.out_tokens,
                     Some(&self.runtime.profiler),
                 );
-                Ok((
-                    VerifyOutput {
-                        accept_len,
-                        out_tokens,
-                    },
-                    started.elapsed().as_secs_f64(),
-                ))
+                Ok(started.elapsed().as_secs_f64())
             }
             Backend::Hlo => {
-                // compile outside the timed region
-                let exe = self.runtime.load_verify(method.name(), b, gamma, v)?;
-                let started = std::time::Instant::now();
+                out.accept_len.clear();
+                out.accept_len.resize(b, 0);
+                out.out_tokens.clear();
+                out.out_tokens.resize(b * (gamma + 1), -1);
+                // one artifact per distinct method, compiled outside the
+                // timed region
+                let distinct = distinct_methods(methods);
+                let exes = distinct
+                    .iter()
+                    .map(|m| self.runtime.load_verify(m.name(), b, gamma, v))
+                    .collect::<Result<Vec<_>>>()?;
+
+                let started = Instant::now();
                 let _scope = self.runtime.profiler.scope("verify");
-                let mut inputs = vec![
-                    HostTensor::f32(&[b, gamma + 1, v], ins.z_p.to_vec()),
-                    HostTensor::f32(&[b, gamma, v], ins.z_q.to_vec()),
-                    HostTensor::i32(&[b, gamma], ins.draft.to_vec()),
-                    HostTensor::f32(&[b, gamma], ins.u_acc.to_vec()),
-                    HostTensor::f32(&[b], ins.u_res.to_vec()),
-                    HostTensor::f32(&[b], ins.u_bonus.to_vec()),
-                ];
-                if let Some((alpha, beta)) = method.alpha_beta() {
-                    inputs.push(HostTensor::f32(&[2], vec![alpha, beta]));
+                let shape_p = [b, gamma + 1, v];
+                let shape_q = [b, gamma, v];
+                let shape_g = [b, gamma];
+                let shape_b = [b];
+                let shape_ab = [2usize];
+                for (m, exe) in distinct.iter().zip(&exes) {
+                    let mut inputs = vec![
+                        TensorView::f32(&shape_p, ins.z_p),
+                        TensorView::f32(&shape_q, ins.z_q),
+                        TensorView::i32(&shape_g, ins.draft),
+                        TensorView::f32(&shape_g, ins.u_acc),
+                        TensorView::f32(&shape_b, ins.u_res),
+                        TensorView::f32(&shape_b, ins.u_bonus),
+                    ];
+                    let ab = m.alpha_beta().map(|(alpha, beta)| [alpha, beta]);
+                    if let Some(pair) = &ab {
+                        inputs.push(TensorView::f32(&shape_ab, pair));
+                    }
+                    let outs = exe.run_views(&inputs)?;
+                    let accept = outs[0].as_i32()?;
+                    let tokens = outs[1].as_i32()?;
+                    for row in 0..b {
+                        if methods[row] == *m {
+                            out.accept_len[row] = accept[row];
+                            out.out_tokens[row * (gamma + 1)..(row + 1) * (gamma + 1)]
+                                .copy_from_slice(
+                                    &tokens[row * (gamma + 1)..(row + 1) * (gamma + 1)],
+                                );
+                        }
+                    }
                 }
-                let out = exe.run(&inputs)?;
-                let result = VerifyOutput {
-                    accept_len: out[0].as_i32()?.to_vec(),
-                    out_tokens: out[1].as_i32()?.to_vec(),
-                };
-                Ok((result, started.elapsed().as_secs_f64()))
+                Ok(started.elapsed().as_secs_f64())
             }
         }
+    }
+
+    /// Convenience wrapper returning an owned [`VerifyOutput`]
+    /// (tests/benches; the engine hot path uses [`Verifier::verify_into`]).
+    pub fn verify(
+        &mut self,
+        gamma: usize,
+        methods: &[Method],
+        ins: &VerifyInputs<'_>,
+    ) -> Result<(VerifyOutput, f64)> {
+        let mut out = VerifyOutput::default();
+        let secs = self.verify_into(gamma, methods, ins, &mut out)?;
+        Ok((out, secs))
     }
 }
 
 #[cfg(test)]
 mod tests {
     // Backend parsing is trivial; HLO-vs-native equivalence is covered by
-    // rust/tests/it_runtime.rs (needs built artifacts).
+    // rust/tests/it_runtime.rs (needs built artifacts), and the native
+    // kernel layer is parity-tested in crate::sampling::kernels.
     use super::*;
 
     #[test]
@@ -174,5 +259,12 @@ mod tests {
         assert_eq!(Backend::parse("hlo"), Some(Backend::Hlo));
         assert_eq!(Backend::parse("native"), Some(Backend::Native));
         assert_eq!(Backend::parse("x"), None);
+    }
+
+    #[test]
+    fn verify_output_buffers_default_empty() {
+        let out = VerifyOutput::default();
+        assert!(out.accept_len.is_empty());
+        assert!(out.out_tokens.is_empty());
     }
 }

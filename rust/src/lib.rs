@@ -13,8 +13,23 @@
 //!
 //! Python never runs on the request path: everything the engine executes is
 //! an AOT-compiled artifact loaded from `artifacts/` via PJRT
-//! ([`runtime`]), plus a pure-rust oracle ([`sampling`]) used for
-//! cross-validation and as a native fallback backend.
+//! ([`runtime`]), plus a pure-rust oracle ([`sampling::verify`]) used for
+//! cross-validation and a segment-parallel native backend.
+//!
+//! ## Verification kernel layer
+//!
+//! The native verify path is a layered kernel architecture
+//! ([`sampling::kernels`]) mirroring the paper's §3 matrix partitioning
+//! on CPU threads: softmax/sigmoid probability construction, residual
+//! building and inverse-CDF sampling run segment-parallel over matrix
+//! rows and fixed vocab chunks on a scoped `std::thread` pool, with
+//! fixed-order chunk reductions keeping outputs **bit-identical** to the
+//! scalar oracle for every thread count. A preallocated
+//! [`sampling::kernels::VerifyWorkspace`] (owned by the engine's
+//! verifier) plus borrowed [`runtime::TensorView`] model inputs
+//! eliminate the per-step `O(γ·V)` clones and collects from the decode
+//! loop. Verification dispatches a per-slot [`sampling::Method`], which
+//! is what lets per-request method overrides run on any batch size.
 //!
 //! ## Request API
 //!
@@ -26,8 +41,8 @@
 //!   the AOT verify path — see [`sampling::filter`]);
 //! * **stop sequences** detected at commit and trimmed from the output;
 //! * per-request **seed**, **γ cap/pin** for the adaptive draft-length
-//!   controller, and (on batch-1 engines) a **verification-method
-//!   override**.
+//!   controller, and a **verification-method override** dispatched
+//!   per-slot on any batch size.
 //!
 //! ## Wire protocol v2
 //!

@@ -64,9 +64,12 @@ fn help_text() -> &'static str {
      defaults: 64 new tokens, temperature 0.8, no truncation, no stops):\n\
      \x20 --max-new N, --temperature T, --top-k K, --top-p P,\n\
      \x20 --stop \"a,b\" (comma-separated stop sequences, trimmed from output),\n\
-     \x20 --request-gamma G [--pin-gamma] (per-request draft-length override);\n\
-     \x20 `client` additionally takes a per-request --seed and a\n\
-     \x20 --request-method override (`run`'s --seed seeds the engine RNG)\n\
+     \x20 --request-gamma G [--pin-gamma] (per-request draft-length override),\n\
+     \x20 --request-method baseline|exact|sigmoid|sigmoid16 (per-request\n\
+     \x20 verification-method override, dispatched per slot on any batch\n\
+     \x20 size; needs verify artifacts sharing a gamma with the engine\n\
+     \x20 method); `client` additionally takes a per-request --seed\n\
+     \x20 (`run`'s --seed seeds the engine RNG)\n\
      \n\
      wire protocol v2 (one JSON object per line, both directions):\n\
      \x20 -> {\"v\":2,\"op\":\"generate\",\"id\":1,\"prompt\":\"...\",\"stream\":true,\n\
@@ -187,6 +190,11 @@ fn info(rest: &[String]) -> Result<()> {
 fn run(rest: &[String]) -> Result<()> {
     let cmd = sampling_opts(engine_opts(Command::new("run", "one-off generation")))
         .req("prompt", "prompt text")
+        .opt(
+            "request-method",
+            "",
+            "per-request verification-method override (any batch size)",
+        )
         .flag("autoregressive", "disable speculation (target-only)");
     let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
     let mode = if p.flag("autoregressive") {
@@ -194,7 +202,14 @@ fn run(rest: &[String]) -> Result<()> {
     } else {
         Mode::Speculative
     };
-    let params = sampling_params(&p)?;
+    let mut params = sampling_params(&p)?;
+    if !p.str("request-method").is_empty() {
+        params = params.with_method(parse_method_str(
+            p.str("request-method"),
+            p.f64("alpha").map_err(|e| anyhow!(e))? as f32,
+            p.f64("beta").map_err(|e| anyhow!(e))? as f32,
+        )?);
+    }
     if mode == Mode::Autoregressive && (params.top_k != 0 || params.top_p < 1.0) {
         bail!("--top-k/--top-p require the speculative pipeline (drop --autoregressive)");
     }

@@ -11,7 +11,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::manifest::{ArtifactEntry, Manifest};
-use super::tensor::HostTensor;
+use super::tensor::{HostTensor, TensorView};
 use crate::util::timer::Profiler;
 
 /// Peak/current host-buffer accounting. PJRT-CPU buffers alias host
@@ -56,12 +56,22 @@ pub struct LoadedExecutable {
 }
 
 impl LoadedExecutable {
-    /// Execute with shape-checked inputs; returns the tuple elements.
+    /// Execute with shape-checked owned inputs; returns the tuple
+    /// elements. Thin adapter over [`LoadedExecutable::run_views`] —
+    /// hot paths that reuse step buffers should call `run_views`
+    /// directly to avoid cloning inputs into owned tensors.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let views: Vec<TensorView<'_>> = inputs.iter().map(HostTensor::view).collect();
+        self.run_views(&views)
+    }
+
+    /// Execute with shape-checked borrowed inputs; returns the tuple
+    /// elements.
     ///
     /// Scope accounting: `exec/<name>` for the PJRT call itself plus
     /// `exec_kind/<kind>[/<method>]` aggregates used by the Δ%-profiling
     /// tables.
-    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    pub fn run_views(&self, inputs: &[TensorView<'_>]) -> Result<Vec<HostTensor>> {
         anyhow::ensure!(
             inputs.len() == self.entry.inputs.len(),
             "{}: expected {} inputs, got {}",
@@ -74,13 +84,13 @@ impl LoadedExecutable {
                 .with_context(|| format!("artifact {}", self.entry.name))?;
         }
 
-        let in_bytes: usize = inputs.iter().map(HostTensor::size_bytes).sum();
+        let in_bytes: usize = inputs.iter().map(TensorView::size_bytes).sum();
         self.gauge.alloc(in_bytes);
 
         let started = Instant::now();
         let literals: Vec<xla::Literal> = inputs
             .iter()
-            .map(HostTensor::to_literal)
+            .map(TensorView::to_literal)
             .collect::<Result<_>>()?;
         let result = self
             .exe

@@ -11,4 +11,4 @@ pub mod tensor;
 
 pub use client::{LoadedExecutable, Runtime};
 pub use manifest::{ArtifactEntry, Manifest};
-pub use tensor::HostTensor;
+pub use tensor::{HostTensor, TensorView};

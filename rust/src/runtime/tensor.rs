@@ -24,6 +24,84 @@ pub enum HostTensor {
     I32 { shape: Vec<usize>, data: Vec<i32> },
 }
 
+/// Borrowed tensor view — the zero-copy input form of [`HostTensor`].
+/// The engine hot path builds these over its preallocated step buffers
+/// instead of cloning each buffer into an owned tensor every decode
+/// step (at bench scale that was megabytes of memcpy per step).
+#[derive(Debug, Clone, Copy)]
+pub enum TensorView<'a> {
+    F32 { shape: &'a [usize], data: &'a [f32] },
+    I32 { shape: &'a [usize], data: &'a [i32] },
+}
+
+impl<'a> TensorView<'a> {
+    pub fn f32(shape: &'a [usize], data: &'a [f32]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorView::F32 { shape, data }
+    }
+
+    pub fn i32(shape: &'a [usize], data: &'a [i32]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorView::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorView::F32 { shape, .. } | TensorView::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            TensorView::F32 { .. } => "float32",
+            TensorView::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorView::F32 { data, .. } => data.len(),
+            TensorView::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    /// Convert to an XLA literal (the one unavoidable copy — PJRT owns
+    /// its input buffers).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match self {
+            TensorView::F32 { data, .. } => (xla::ElementType::F32, bytemuck_cast(data)),
+            TensorView::I32 { data, .. } => (xla::ElementType::S32, bytemuck_cast(data)),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), bytes)
+            .with_context(|| format!("creating literal {:?} {:?}", ty, self.shape()))
+    }
+
+    /// Validate against a manifest iospec entry `(dtype, shape)`.
+    pub fn check_spec(&self, dtype: &str, shape: &[usize], arg_idx: usize) -> Result<()> {
+        if self.dtype() != dtype {
+            bail!(
+                "arg {arg_idx}: dtype mismatch: got {}, artifact wants {dtype}",
+                self.dtype()
+            );
+        }
+        if self.shape() != shape {
+            bail!(
+                "arg {arg_idx}: shape mismatch: got {:?}, artifact wants {shape:?}",
+                self.shape()
+            );
+        }
+        Ok(())
+    }
+}
+
 impl HostTensor {
     pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
@@ -87,6 +165,17 @@ impl HostTensor {
         }
     }
 
+    /// Borrow as a [`TensorView`] (the form [`LoadedExecutable::run_views`]
+    /// consumes; `run` goes through this adapter).
+    ///
+    /// [`LoadedExecutable::run_views`]: crate::runtime::LoadedExecutable::run_views
+    pub fn view(&self) -> TensorView<'_> {
+        match self {
+            HostTensor::F32 { shape, data } => TensorView::F32 { shape, data },
+            HostTensor::I32 { shape, data } => TensorView::I32 { shape, data },
+        }
+    }
+
     /// Convert to an XLA literal.
     ///
     /// Perf iteration 2 (EXPERIMENTS.md §Perf): build the literal in ONE
@@ -96,12 +185,7 @@ impl HostTensor {
     /// verify inputs (γ=5, V=32k ⇒ ~2.6MB of logits per step) this removes
     /// ~5MB of memcpy per verification call.
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        let (ty, bytes): (xla::ElementType, &[u8]) = match self {
-            HostTensor::F32 { data, .. } => (xla::ElementType::F32, bytemuck_cast(data)),
-            HostTensor::I32 { data, .. } => (xla::ElementType::S32, bytemuck_cast(data)),
-        };
-        xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), bytes)
-            .with_context(|| format!("creating literal {:?} {:?}", ty, self.shape()))
+        self.view().to_literal()
     }
 
     /// Convert from an XLA literal (copies).
@@ -117,19 +201,7 @@ impl HostTensor {
 
     /// Validate against a manifest iospec entry `(dtype, shape)`.
     pub fn check_spec(&self, dtype: &str, shape: &[usize], arg_idx: usize) -> Result<()> {
-        if self.dtype() != dtype {
-            bail!(
-                "arg {arg_idx}: dtype mismatch: got {}, artifact wants {dtype}",
-                self.dtype()
-            );
-        }
-        if self.shape() != shape {
-            bail!(
-                "arg {arg_idx}: shape mismatch: got {:?}, artifact wants {shape:?}",
-                self.shape()
-            );
-        }
-        Ok(())
+        self.view().check_spec(dtype, shape, arg_idx)
     }
 }
 
@@ -145,6 +217,25 @@ mod tests {
         assert_eq!(t.size_bytes(), 24);
         assert!(t.as_f32().is_ok());
         assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn views_borrow_without_copying() {
+        let t = HostTensor::i32(&[2, 2], vec![1, 2, 3, 4]);
+        let v = t.view();
+        assert_eq!(v.shape(), t.shape());
+        assert_eq!(v.dtype(), "int32");
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.size_bytes(), 16);
+        assert!(v.check_spec("int32", &[2, 2], 0).is_ok());
+        assert!(v.check_spec("float32", &[2, 2], 0).is_err());
+        assert!(v.check_spec("int32", &[4], 0).is_err());
+
+        let shape = [3usize];
+        let data = [0.5f32, 1.5, 2.5];
+        let v = TensorView::f32(&shape, &data);
+        assert_eq!(v.shape(), &[3]);
+        assert!(!v.is_empty());
     }
 
     #[test]

@@ -1,0 +1,726 @@
+//! Segment-parallel verification kernels with zero-alloc workspaces.
+//!
+//! The paper's §3 observation is that the intermediate matrices of
+//! speculative sampling — the softmax/sigmoid probability rows, the τ
+//! ratios, the residual weights — are embarrassingly parallel across
+//! matrix segments, so they can be computed concurrently by thread
+//! blocks over fixed vocab chunks. This module is that partitioning
+//! mapped onto CPU threads for the native verification backend:
+//!
+//! * **probability construction** runs one scoped parallel region per
+//!   logits matrix: whole rows per worker when the batch provides enough
+//!   rows (`B·(γ+1)` target rows + `B·γ` draft rows), or per-row
+//!   [`verify::VOCAB_CHUNK`] segments when a small batch meets a huge
+//!   vocabulary (the `B=1, V=32k` bench regime);
+//! * **acceptance** is the `O(B·γ)` τ-comparison scan — scalar, it is
+//!   never the bottleneck;
+//! * **resample/bonus** constructs residual rows and draws the
+//!   inverse-CDF sample slot-parallel (and segment-parallel within the
+//!   single row at `B = 1`).
+//!
+//! ## Determinism
+//!
+//! Outputs are **bit-identical** to the scalar oracle
+//! ([`verify::spec_step`] per row) for every thread count and chunk
+//! size: work partitioning never reassociates a floating-point
+//! reduction. Row maxima are exact under any association; row sums are
+//! folded from fixed-order [`verify::VOCAB_CHUNK`] block partials in
+//! both the scalar reference and every parallel schedule (the same
+//! arithmetic graph, only its execution order varies). The parity
+//! property tests below assert this across all four [`Method`]s, chunk
+//! sizes, and thread counts — including the `Sigmoid16` fp16-overflow →
+//! NaN → reject-everything path.
+//!
+//! ## Workspaces
+//!
+//! [`VerifyWorkspace`] owns every intermediate buffer (probability
+//! matrices, residual rows, chunk partials), grown once and reused, so a
+//! steady-state [`spec_step_batch_ws`] call allocates **no buffers** —
+//! the per-step `to_vec()`/`collect()` of the scalar oracle is gone from
+//! the serving path (scoped threads still cost their spawns, which is
+//! why [`KernelConfig::min_parallel_elems`] gates small problems onto
+//! the scalar schedule).
+//!
+//! Profiler scopes mirror the HLO backends one-to-one
+//! (`verify/softmax`, `verify/kernel`, `verify/finish`) plus
+//! `verify/partition` for the segment-plan + workspace bookkeeping, so
+//! Δ%-profiling comparisons stay apples-to-apples.
+
+pub mod pool;
+
+use crate::sampling::verify::{self, inverse_cdf_sample, Method, VOCAB_CHUNK};
+use crate::util::timer::Profiler;
+
+/// Scheduling knobs for the kernel layer. None of these affect results
+/// (see the module docs on determinism) — only where the work runs.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelConfig {
+    /// maximum worker threads per parallel region (including the caller)
+    pub threads: usize,
+    /// scheduling granularity (elements) for sub-row segment work;
+    /// reductions always use the fixed [`VOCAB_CHUNK`] blocks
+    pub chunk: usize,
+    /// matrices smaller than this many elements stay on the scalar path
+    /// (a scoped region costs ~tens of µs of spawns; at the model vocab
+    /// of the toy artifact set the whole verify step is cheaper than
+    /// that)
+    pub min_parallel_elems: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8);
+        KernelConfig {
+            threads,
+            chunk: VOCAB_CHUNK,
+            min_parallel_elems: 64 * 1024,
+        }
+    }
+}
+
+impl KernelConfig {
+    /// Force the sequential path (bit-identical, useful as a reference).
+    pub fn scalar() -> Self {
+        KernelConfig {
+            threads: 1,
+            ..KernelConfig::default()
+        }
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        KernelConfig {
+            threads: threads.max(1),
+            ..KernelConfig::default()
+        }
+    }
+
+    /// Default config with `SPECD_VERIFY_THREADS` / `SPECD_VERIFY_CHUNK`
+    /// environment overrides applied.
+    pub fn from_env() -> Self {
+        let mut cfg = KernelConfig::default();
+        if let Some(t) = env_usize("SPECD_VERIFY_THREADS") {
+            cfg.threads = t.max(1);
+        }
+        if let Some(c) = env_usize("SPECD_VERIFY_CHUNK") {
+            cfg.chunk = c.max(1);
+        }
+        cfg
+    }
+
+    fn effective_threads(&self, elems: usize) -> usize {
+        if self.threads <= 1 || elems < self.min_parallel_elems {
+            1
+        } else {
+            self.threads
+        }
+    }
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+/// Preallocated buffers for the batched verification hot path. Owned by
+/// the engine's verifier and reused across decode steps; `ensure` grows
+/// buffers once per high-water mark, so steady-state steps allocate
+/// nothing.
+#[derive(Debug)]
+pub struct VerifyWorkspace {
+    pub cfg: KernelConfig,
+    /// target probability matrix, `B · (γ+1) · V`
+    p: Vec<f32>,
+    /// draft probability matrix, `B · γ · V`
+    q: Vec<f32>,
+    /// residual weight rows, `B · V`
+    residual: Vec<f32>,
+    /// per-[`VOCAB_CHUNK`] partials for the sub-row (few rows × huge V)
+    /// softmax schedule
+    partials: Vec<f32>,
+}
+
+impl VerifyWorkspace {
+    pub fn new(cfg: KernelConfig) -> Self {
+        VerifyWorkspace {
+            cfg,
+            p: Vec::new(),
+            q: Vec::new(),
+            residual: Vec::new(),
+            partials: Vec::new(),
+        }
+    }
+
+    /// Pre-size for a `(b, gamma, v)` step shape (optional; `ensure`
+    /// also grows on demand).
+    pub fn with_capacity(cfg: KernelConfig, b: usize, gamma: usize, v: usize) -> Self {
+        let mut ws = Self::new(cfg);
+        ws.ensure(b, gamma, v);
+        ws
+    }
+
+    fn ensure(&mut self, b: usize, gamma: usize, v: usize) {
+        grow(&mut self.p, b * (gamma + 1) * v);
+        grow(&mut self.q, b * gamma * v);
+        grow(&mut self.residual, b * v);
+        grow(&mut self.partials, v.div_ceil(VOCAB_CHUNK));
+    }
+}
+
+fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
+
+/// One batched, segment-parallel speculative verification step with
+/// per-slot method dispatch.
+///
+/// Layout matches [`verify::spec_step_batch`] / the HLO artifacts:
+/// `z_p` is `(B, γ+1, V)` target logits, `z_q` is `(B, γ, V)` draft
+/// logits, and `methods` carries one verification method per batch row.
+/// Results are written into the caller's reusable buffers: `accept`
+/// receives `B` accepted lengths, `out_tokens` receives `B · (γ+1)`
+/// emitted tokens, `-1`-padded.
+///
+/// Bit-identical to running the scalar oracle row by row, for every
+/// `KernelConfig` (see the module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn spec_step_batch_ws(
+    ws: &mut VerifyWorkspace,
+    z_p: &[f32],
+    z_q: &[f32],
+    b: usize,
+    gamma: usize,
+    v: usize,
+    draft: &[i32],
+    u_acc: &[f32],
+    u_res: &[f32],
+    u_bonus: &[f32],
+    methods: &[Method],
+    accept: &mut Vec<i32>,
+    out_tokens: &mut Vec<i32>,
+    profiler: Option<&Profiler>,
+) {
+    debug_assert_eq!(z_p.len(), b * (gamma + 1) * v);
+    debug_assert_eq!(z_q.len(), b * gamma * v);
+    debug_assert_eq!(draft.len(), b * gamma);
+    debug_assert_eq!(u_acc.len(), b * gamma);
+    debug_assert_eq!(u_res.len(), b);
+    debug_assert_eq!(u_bonus.len(), b);
+    assert_eq!(methods.len(), b, "one method per batch row");
+
+    accept.clear();
+    accept.resize(b, 0);
+    out_tokens.clear();
+    out_tokens.resize(b * (gamma + 1), -1);
+
+    // --- segment plan + workspace bookkeeping
+    let (threads, chunk) = {
+        let _g = profiler.map(|pr| pr.scope("verify/partition"));
+        ws.ensure(b, gamma, v);
+        let elems = b * (2 * gamma + 1) * v;
+        (ws.cfg.effective_threads(elems), ws.cfg.chunk.max(1))
+    };
+    let VerifyWorkspace {
+        p, q, residual, partials, ..
+    } = ws;
+    let p = &mut p[..b * (gamma + 1) * v];
+    let q = &mut q[..b * gamma * v];
+    let residual = &mut residual[..b * v];
+
+    // --- probability construction (the scalar path's "softmax" scope;
+    // sigmoid methods replace the op, not the scope)
+    {
+        let _g = profiler.map(|pr| pr.scope("verify/softmax"));
+        construct_matrix(
+            threads, chunk, z_p, &mut *p, v, gamma + 1, methods,
+            &mut partials[..],
+        );
+        construct_matrix(
+            threads, chunk, z_q, &mut *q, v, gamma, methods,
+            &mut partials[..],
+        );
+    }
+
+    // --- acceptance scan (τ at the drafted tokens)
+    {
+        let _g = profiler.map(|pr| pr.scope("verify/kernel"));
+        for i in 0..b {
+            let mut alen = gamma;
+            for c in 0..gamma {
+                let x = draft[i * gamma + c] as usize;
+                let pp = p[(i * (gamma + 1) + c) * v + x];
+                let qq = q[(i * gamma + c) * v + x];
+                if !verify::accept_decision(pp, qq, u_acc[i * gamma + c], methods[i]) {
+                    alen = c;
+                    break;
+                }
+            }
+            accept[i] = alen as i32;
+        }
+    }
+
+    // --- resample / bonus
+    {
+        let _g = profiler.map(|pr| pr.scope("verify/finish"));
+        let p = &*p;
+        let q = &*q;
+        let accept = &accept[..];
+        if b == 1 && threads > 1 {
+            // single slot: segment-parallel residual construction, then
+            // the sequential inverse-CDF scan
+            let alen = accept[0] as usize;
+            out_tokens[..alen].copy_from_slice(&draft[..alen]);
+            if alen == gamma {
+                let bonus = &p[gamma * v..][..v];
+                out_tokens[gamma] = inverse_cdf_sample(bonus, u_bonus[0]) as i32;
+            } else {
+                let prow = &p[alen * v..][..v];
+                let qrow = &q[alen * v..][..v];
+                pool::for_each_span(threads, &mut *residual, chunk, |first, span| {
+                    let off = first * chunk;
+                    for (j, r) in span.iter_mut().enumerate() {
+                        *r = (prow[off + j] - qrow[off + j]).max(0.0);
+                    }
+                });
+                out_tokens[alen] = inverse_cdf_sample(residual, u_res[0]) as i32;
+            }
+        } else {
+            // slot-parallel: each worker finishes a run of slots
+            pool::for_each_span2(
+                threads.min(b),
+                residual,
+                v,
+                &mut out_tokens[..],
+                gamma + 1,
+                |first_slot, res_span, tok_span| {
+                    let slots = res_span.len() / v;
+                    for k in 0..slots {
+                        let i = first_slot + k;
+                        let alen = accept[i] as usize;
+                        let trow = &mut tok_span[k * (gamma + 1)..][..gamma + 1];
+                        trow[..alen].copy_from_slice(&draft[i * gamma..i * gamma + alen]);
+                        if alen == gamma {
+                            let bonus = &p[(i * (gamma + 1) + gamma) * v..][..v];
+                            trow[gamma] = inverse_cdf_sample(bonus, u_bonus[i]) as i32;
+                        } else {
+                            let res = &mut res_span[k * v..][..v];
+                            let prow = &p[(i * (gamma + 1) + alen) * v..][..v];
+                            let qrow = &q[(i * gamma + alen) * v..][..v];
+                            for ((r, &pp), &qq) in
+                                res.iter_mut().zip(prow).zip(qrow)
+                            {
+                                *r = (pp - qq).max(0.0);
+                            }
+                            trow[alen] = inverse_cdf_sample(res, u_res[i]) as i32;
+                        }
+                    }
+                },
+            );
+        }
+    }
+}
+
+/// Build probability rows from logits: `dst[r] = construct(src row r)`
+/// under the owning slot's method (`slot = r / rows_per_slot`).
+#[allow(clippy::too_many_arguments)]
+fn construct_matrix(
+    threads: usize,
+    chunk: usize,
+    src: &[f32],
+    dst: &mut [f32],
+    v: usize,
+    rows_per_slot: usize,
+    methods: &[Method],
+    partials: &mut [f32],
+) {
+    let rows = dst.len() / v;
+    if rows == 0 || v == 0 {
+        return;
+    }
+    if threads > 1 && rows < threads && v > VOCAB_CHUNK {
+        // sub-row schedule: few rows meeting a huge vocabulary — split
+        // each row over vocab segments
+        for r in 0..rows {
+            construct_row_subrow(
+                threads,
+                chunk,
+                &src[r * v..][..v],
+                &mut dst[r * v..][..v],
+                methods[r / rows_per_slot],
+                &mut *partials,
+            );
+        }
+    } else {
+        // row schedule: whole rows per worker (one scoped region);
+        // threads == 1 degenerates to the inline scalar loop
+        pool::for_each_span(threads, dst, v, |first_row, span| {
+            for (k, drow) in span.chunks_mut(v).enumerate() {
+                let r = first_row + k;
+                construct_row_from(&src[r * v..][..v], drow, methods[r / rows_per_slot]);
+            }
+        });
+    }
+}
+
+fn construct_row_from(src: &[f32], dst: &mut [f32], method: Method) {
+    match method {
+        Method::Baseline | Method::Exact => verify::softmax_row_from(src, dst),
+        Method::Sigmoid { .. } => {
+            let (alpha, beta) = method.alpha_beta().unwrap();
+            verify::sigmoid_row_from(src, dst, alpha, beta);
+        }
+        Method::Sigmoid16 { .. } => {
+            let (alpha, beta) = method.alpha_beta().unwrap();
+            verify::sigmoid16_row_from(src, dst, alpha, beta);
+        }
+    }
+}
+
+/// One row partitioned over vocab segments. Sigmoid methods are
+/// element-wise (one region); softmax runs the three-phase schedule —
+/// parallel block maxima, parallel exp + block sums, parallel scale —
+/// with the [`VOCAB_CHUNK`] partials folded in fixed order between
+/// phases, reproducing the scalar reduction graph exactly.
+fn construct_row_subrow(
+    threads: usize,
+    chunk: usize,
+    src: &[f32],
+    dst: &mut [f32],
+    method: Method,
+    partials: &mut [f32],
+) {
+    match method {
+        Method::Sigmoid { .. } | Method::Sigmoid16 { .. } => {
+            let (alpha, beta) = method.alpha_beta().unwrap();
+            let fp16 = matches!(method, Method::Sigmoid16 { .. });
+            pool::for_each_span(threads, dst, chunk, |first, span| {
+                let off = first * chunk;
+                let sblk = &src[off..off + span.len()];
+                if fp16 {
+                    verify::sigmoid16_row_from(sblk, span, alpha, beta);
+                } else {
+                    verify::sigmoid_row_from(sblk, span, alpha, beta);
+                }
+            });
+        }
+        Method::Baseline | Method::Exact => {
+            let v = src.len();
+            let nblk = v.div_ceil(VOCAB_CHUNK);
+            let parts = &mut partials[..nblk];
+            // phase 1: block maxima (max is exact under any association)
+            pool::for_each_span(threads, &mut *parts, 1, |first, span| {
+                for (k, m) in span.iter_mut().enumerate() {
+                    let off = (first + k) * VOCAB_CHUNK;
+                    let blk = &src[off..(off + VOCAB_CHUNK).min(v)];
+                    *m = blk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                }
+            });
+            let max = parts.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            // phase 2: exp + per-block partial sums
+            pool::for_each_span2(
+                threads,
+                &mut *dst,
+                VOCAB_CHUNK,
+                &mut *parts,
+                1,
+                |first, dspan, pspan| {
+                    for (k, part) in pspan.iter_mut().enumerate() {
+                        let off = (first + k) * VOCAB_CHUNK;
+                        let len = VOCAB_CHUNK.min(v - off);
+                        let d = &mut dspan[k * VOCAB_CHUNK..][..len];
+                        let s = &src[off..off + len];
+                        let mut sum = 0.0f32;
+                        for (dd, &ss) in d.iter_mut().zip(s) {
+                            *dd = (ss - max).exp();
+                            sum += *dd;
+                        }
+                        *part = sum;
+                    }
+                },
+            );
+            // fixed-order fold of the block partials — identical to the
+            // scalar reference's chunk loop
+            let mut sum = 0.0f32;
+            for &part in parts.iter() {
+                sum += part;
+            }
+            let inv = 1.0 / sum;
+            // phase 3: scale
+            pool::for_each_span(threads, &mut *dst, VOCAB_CHUNK, |_, span| {
+                for e in span.iter_mut() {
+                    *e *= inv;
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::verify::spec_step_batch;
+    use crate::util::proptest::{forall, Config};
+    use crate::util::rng::Pcg32;
+
+    fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+    }
+
+    struct Case {
+        b: usize,
+        gamma: usize,
+        v: usize,
+        z_p: Vec<f32>,
+        z_q: Vec<f32>,
+        draft: Vec<i32>,
+        u_acc: Vec<f32>,
+        u_res: Vec<f32>,
+        u_bonus: Vec<f32>,
+        methods: Vec<Method>,
+    }
+
+    fn make_case(rng: &mut Pcg32, b: usize, gamma: usize, v: usize) -> Case {
+        let pool = [
+            Method::Baseline,
+            Method::Exact,
+            Method::sigmoid(-1e3, 1e3),
+            Method::sigmoid16(-1e3, 1e3),
+            // the Table 2 fp16-overflow row: NaN τ rejects everything
+            Method::sigmoid16(-1e5, 1e5),
+        ];
+        Case {
+            b,
+            gamma,
+            v,
+            z_p: randn(rng, b * (gamma + 1) * v, 3.0),
+            z_q: randn(rng, b * gamma * v, 3.0),
+            draft: (0..b * gamma).map(|_| rng.below(v as u32) as i32).collect(),
+            u_acc: (0..b * gamma).map(|_| rng.uniform_f32()).collect(),
+            u_res: (0..b).map(|_| rng.uniform_f32()).collect(),
+            u_bonus: (0..b).map(|_| rng.uniform_f32()).collect(),
+            methods: (0..b)
+                .map(|_| pool[rng.below(pool.len() as u32) as usize])
+                .collect(),
+        }
+    }
+
+    fn run_ws(case: &Case, cfg: KernelConfig) -> (Vec<i32>, Vec<i32>) {
+        let mut ws = VerifyWorkspace::new(cfg);
+        let mut accept = Vec::new();
+        let mut tokens = Vec::new();
+        spec_step_batch_ws(
+            &mut ws,
+            &case.z_p,
+            &case.z_q,
+            case.b,
+            case.gamma,
+            case.v,
+            &case.draft,
+            &case.u_acc,
+            &case.u_res,
+            &case.u_bonus,
+            &case.methods,
+            &mut accept,
+            &mut tokens,
+            None,
+        );
+        (accept, tokens)
+    }
+
+    fn run_oracle(case: &Case) -> (Vec<i32>, Vec<i32>) {
+        spec_step_batch(
+            &case.z_p,
+            &case.z_q,
+            case.b,
+            case.gamma,
+            case.v,
+            &case.draft,
+            &case.u_acc,
+            &case.u_res,
+            &case.u_bonus,
+            &case.methods,
+            None,
+        )
+    }
+
+    fn force_parallel(mut cfg: KernelConfig) -> KernelConfig {
+        cfg.min_parallel_elems = 0;
+        cfg
+    }
+
+    #[test]
+    fn parallel_kernels_bit_identical_to_scalar_oracle() {
+        // the acceptance criterion: accept lengths and emitted tokens
+        // match the scalar oracle exactly, for every thread count, with
+        // heterogeneous per-row methods drawn from all four Methods
+        forall(
+            "kernel parity",
+            Config { cases: 60, ..Config::default() },
+            |rng, size| {
+                let v = 4 + size * 3;
+                let gamma = 1 + (size % 6);
+                let b = 1 + (size % 5);
+                let case = make_case(rng, b, gamma, v);
+                let expect = run_oracle(&case);
+                for threads in [1usize, 2, 3, 8] {
+                    let cfg = force_parallel(KernelConfig::with_threads(threads));
+                    let got = run_ws(&case, cfg);
+                    if got != expect {
+                        return Err(format!(
+                            "threads={threads} b={b} γ={gamma} v={v}: {got:?} != {expect:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn chunk_size_never_changes_results() {
+        // the scheduling chunk is not the reduction chunk: any value
+        // must reproduce the oracle bit-for-bit
+        forall(
+            "chunk invariance",
+            Config { cases: 30, ..Config::default() },
+            |rng, size| {
+                let v = 8 + size * 4;
+                // b = 1 exercises the segment-parallel residual path,
+                // where the scheduling chunk actually bites
+                let b = 1 + (size % 2);
+                let case = make_case(rng, b, 3, v);
+                let expect = run_oracle(&case);
+                for chunk in [1usize, 7, 64, VOCAB_CHUNK] {
+                    for threads in [2usize, 5] {
+                        let mut cfg = force_parallel(KernelConfig::with_threads(threads));
+                        cfg.chunk = chunk;
+                        let got = run_ws(&case, cfg);
+                        if got != expect {
+                            return Err(format!(
+                                "chunk={chunk} threads={threads} v={v}: mismatch"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn subrow_schedule_matches_oracle_at_large_vocab() {
+        // rows < threads && v > VOCAB_CHUNK exercises the three-phase
+        // per-row segment schedule
+        let mut rng = Pcg32::seeded(77);
+        for method in [
+            Method::Exact,
+            Method::Baseline,
+            Method::sigmoid(-1e3, 1e3),
+            Method::sigmoid16(-1e3, 1e3),
+        ] {
+            let mut case = make_case(&mut rng, 1, 1, VOCAB_CHUNK + 513);
+            case.methods = vec![method];
+            let expect = run_oracle(&case);
+            let got = run_ws(&case, force_parallel(KernelConfig::with_threads(8)));
+            assert_eq!(got, expect, "method {}", method.name());
+        }
+    }
+
+    #[test]
+    fn sigmoid16_overflow_rejects_everything_through_parallel_path() {
+        let mut rng = Pcg32::seeded(78);
+        let mut case = make_case(&mut rng, 3, 4, 32);
+        // row 1 overflows fp16 (NaN τ → reject all); the neighbours keep
+        // their methods — per-slot dispatch must isolate the damage
+        case.methods = vec![
+            Method::Exact,
+            Method::sigmoid16(-1e5, 1e5),
+            Method::sigmoid(-1e3, 1e3),
+        ];
+        // u = 0 accepts unconditionally everywhere EXCEPT against a NaN τ
+        for u in case.u_acc.iter_mut() {
+            *u = 0.0;
+        }
+        let expect = run_oracle(&case);
+        for threads in [1usize, 4] {
+            let got = run_ws(&case, force_parallel(KernelConfig::with_threads(threads)));
+            assert_eq!(got, expect);
+            assert_eq!(got.0[1], 0, "NaN τ must reject every draft in row 1");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_does_not_leak_state_across_steps() {
+        let mut rng = Pcg32::seeded(79);
+        let cfg = force_parallel(KernelConfig::with_threads(4));
+        let mut ws = VerifyWorkspace::new(cfg);
+        let mut accept = Vec::new();
+        let mut tokens = Vec::new();
+        // shrink then grow: (b, γ, v) changes between steps
+        for (b, gamma, v) in [(4usize, 5usize, 64usize), (1, 2, 16), (3, 6, 80)] {
+            let case = make_case(&mut rng, b, gamma, v);
+            spec_step_batch_ws(
+                &mut ws,
+                &case.z_p,
+                &case.z_q,
+                b,
+                gamma,
+                v,
+                &case.draft,
+                &case.u_acc,
+                &case.u_res,
+                &case.u_bonus,
+                &case.methods,
+                &mut accept,
+                &mut tokens,
+                None,
+            );
+            assert_eq!((accept.clone(), tokens.clone()), run_oracle(&case));
+        }
+    }
+
+    #[test]
+    fn profiler_scopes_are_preserved_one_to_one() {
+        let profiler = Profiler::new();
+        let mut rng = Pcg32::seeded(80);
+        let case = make_case(&mut rng, 2, 3, 32);
+        let mut ws = VerifyWorkspace::new(KernelConfig::scalar());
+        let (mut accept, mut tokens) = (Vec::new(), Vec::new());
+        spec_step_batch_ws(
+            &mut ws,
+            &case.z_p,
+            &case.z_q,
+            case.b,
+            case.gamma,
+            case.v,
+            &case.draft,
+            &case.u_acc,
+            &case.u_res,
+            &case.u_bonus,
+            &case.methods,
+            &mut accept,
+            &mut tokens,
+            Some(&profiler),
+        );
+        for scope in [
+            "verify/partition",
+            "verify/softmax",
+            "verify/kernel",
+            "verify/finish",
+        ] {
+            assert_eq!(profiler.get(scope).calls, 1, "{scope}");
+        }
+    }
+
+    #[test]
+    fn config_from_env_defaults_are_sane() {
+        let cfg = KernelConfig::default();
+        assert!(cfg.threads >= 1);
+        assert_eq!(cfg.chunk, VOCAB_CHUNK);
+        assert!(KernelConfig::scalar().threads == 1);
+        assert_eq!(KernelConfig::with_threads(0).threads, 1);
+    }
+}

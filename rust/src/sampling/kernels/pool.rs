@@ -1,0 +1,218 @@
+//! Scoped fork-join primitives for the segment-parallel verification
+//! kernels.
+//!
+//! Safety model: **no `unsafe`**. Work is partitioned *before* any
+//! thread is spawned — each worker receives a disjoint `&mut` span
+//! produced by `split_at_mut`, so the borrow checker proves data-race
+//! freedom. Threads come from `std::thread::scope`, so tasks can borrow
+//! the caller's stack data (logit slices, workspace buffers) without
+//! lifetime erasure, and every region joins before returning.
+//!
+//! Determinism: the partition is a pure function of
+//! `(len, unit, threads)` and each task writes only values that are a
+//! pure function of its own input segment, so outputs are independent of
+//! scheduling, thread count, and span boundaries. Reductions that would
+//! reassociate floating-point sums are not performed here at all — the
+//! kernel layer folds fixed-order per-chunk partials instead (see
+//! [`crate::sampling::verify::VOCAB_CHUNK`]).
+//!
+//! A parallel region costs one `thread::scope` (a few tens of
+//! microseconds for the spawns); [`crate::sampling::kernels::KernelConfig`]
+//! gates regions on a minimum problem size so small matrices stay on the
+//! scalar path.
+
+/// Unit count of contiguous run `w` when `n_units` are split across
+/// `workers` runs (earlier runs absorb the remainder).
+fn share(n_units: usize, workers: usize, w: usize) -> usize {
+    n_units / workers + usize::from(w < n_units % workers)
+}
+
+/// Run `f(first_unit, span)` over disjoint contiguous spans of `data`,
+/// split at `unit`-element boundaries (only the final unit may be
+/// ragged). `f` runs on up to `threads` scoped threads, the last span on
+/// the calling thread; `threads <= 1` degenerates to one inline call.
+pub fn for_each_span<T, F>(threads: usize, data: &mut [T], unit: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(unit > 0, "span unit must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_units = data.len().div_ceil(unit);
+    let workers = threads.clamp(1, n_units);
+    if workers == 1 {
+        f(0, data);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = data;
+        let mut first = 0usize;
+        for w in 0..workers {
+            let units = share(n_units, workers, w);
+            let take = (units * unit).min(rest.len());
+            let (span, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let start = first;
+            first += units;
+            if w + 1 == workers {
+                f(start, span);
+            } else {
+                scope.spawn(move || f(start, span));
+            }
+        }
+    });
+}
+
+/// Like [`for_each_span`] but over two buffers partitioned in lockstep:
+/// unit `i` of `a` (stride `unit_a`) pairs with unit `i` of `b` (stride
+/// `unit_b`). Both buffers must contain the same number of units.
+pub fn for_each_span2<A, B, F>(
+    threads: usize,
+    a: &mut [A],
+    unit_a: usize,
+    b: &mut [B],
+    unit_b: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(unit_a > 0 && unit_b > 0, "span units must be positive");
+    if a.is_empty() && b.is_empty() {
+        return;
+    }
+    let n_units = a.len().div_ceil(unit_a);
+    debug_assert_eq!(n_units, b.len().div_ceil(unit_b), "unit count mismatch");
+    let workers = threads.clamp(1, n_units.max(1));
+    if workers == 1 {
+        f(0, a, b);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut first = 0usize;
+        for w in 0..workers {
+            let units = share(n_units, workers, w);
+            let take_a = (units * unit_a).min(rest_a.len());
+            let take_b = (units * unit_b).min(rest_b.len());
+            let (span_a, tail_a) = rest_a.split_at_mut(take_a);
+            let (span_b, tail_b) = rest_b.split_at_mut(take_b);
+            rest_a = tail_a;
+            rest_b = tail_b;
+            let start = first;
+            first += units;
+            if w + 1 == workers {
+                f(start, span_a, span_b);
+            } else {
+                scope.spawn(move || f(start, span_a, span_b));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn share_covers_all_units_contiguously() {
+        for n in [1usize, 2, 7, 16, 100] {
+            for workers in 1..=8 {
+                let total: usize = (0..workers).map(|w| share(n, workers, w)).sum();
+                assert_eq!(total, n, "n={n} workers={workers}");
+                // non-increasing run sizes (remainder goes to early runs)
+                for w in 1..workers {
+                    assert!(share(n, workers, w) <= share(n, workers, w - 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spans_cover_every_element_exactly_once() {
+        for threads in [1usize, 2, 3, 8, 17] {
+            for (len, unit) in [(12usize, 4usize), (13, 4), (1, 4), (64, 1), (10, 100)] {
+                let mut data = vec![0u32; len];
+                for_each_span(threads, &mut data, unit, |_first, span| {
+                    for e in span.iter_mut() {
+                        *e += 1;
+                    }
+                });
+                assert!(data.iter().all(|&x| x == 1), "threads={threads} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn first_unit_index_matches_span_offset() {
+        let len = 23;
+        let unit = 4;
+        let base = vec![0u8; len];
+        let base_ptr = base.as_ptr() as usize;
+        let mut data = base;
+        for_each_span(4, &mut data, unit, |first, span| {
+            let off = span.as_ptr() as usize - base_ptr;
+            assert_eq!(off, first * unit);
+        });
+    }
+
+    #[test]
+    fn results_are_thread_count_invariant() {
+        let compute = |threads: usize| {
+            let mut data: Vec<f64> = (0..997).map(|i| i as f64 * 0.25).collect();
+            for_each_span(threads, &mut data, 64, |first, span| {
+                for (k, e) in span.iter_mut().enumerate() {
+                    *e = (*e + (first * 64 + k) as f64).sqrt();
+                }
+            });
+            data
+        };
+        let one = compute(1);
+        for t in [2, 3, 8] {
+            assert_eq!(compute(t), one, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn span2_partitions_in_lockstep() {
+        // a: 6 units of 8, b: 6 units of 1
+        let mut a = vec![1u32; 48];
+        let mut b = vec![0u32; 6];
+        for_each_span2(3, &mut a, 8, &mut b, 1, |first, sa, sb| {
+            for (k, out) in sb.iter_mut().enumerate() {
+                let blk = &sa[k * 8..(k + 1) * 8];
+                *out = blk.iter().sum::<u32>() + (first + k) as u32;
+            }
+        });
+        for (i, &x) in b.iter().enumerate() {
+            assert_eq!(x, 8 + i as u32);
+        }
+        assert!(a.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn runs_on_multiple_threads_when_asked() {
+        // with enough units, more than one OS thread actually
+        // participates (each worker records its ThreadId)
+        let calls = AtomicUsize::new(0);
+        let tids = std::sync::Mutex::new(std::collections::HashSet::new());
+        let mut data = vec![0u8; 1024];
+        for_each_span(4, &mut data, 1, |_, _span| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            tids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 4, "one call per worker span");
+        assert!(
+            tids.lock().unwrap().len() > 1,
+            "parallel region must spawn real worker threads"
+        );
+    }
+}

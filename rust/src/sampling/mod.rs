@@ -1,18 +1,27 @@
-//! Pure-rust speculative sampling oracle.
+//! Pure-rust speculative sampling: scalar oracle + parallel kernels.
 //!
-//! Bit-comparable reimplementation (in f32, matching the AOT graphs'
-//! arithmetic) of the verification semantics in §3.1 Eq. 1-3. Three roles:
+//! [`verify`] is the bit-comparable scalar reimplementation (in f32,
+//! matching the AOT graphs' arithmetic) of the verification semantics in
+//! §3.1 Eq. 1-3. Three roles:
 //!
 //! 1. cross-validation: integration tests execute the HLO artifacts and
 //!    assert their outputs against this module;
-//! 2. a `native` verifier backend for [`crate::engine`] — useful when the
-//!    model vocab is small and PJRT dispatch overhead dominates;
+//! 2. the reference the segment-parallel kernel layer is proven
+//!    bit-identical to;
 //! 3. the workload for the L3 micro-benchmarks.
+//!
+//! [`kernels`] is the serving-path implementation of the same semantics:
+//! segment-parallel over matrix rows / vocab chunks (the §3 partitioning
+//! on CPU threads), zero-alloc via a preallocated [`kernels::VerifyWorkspace`],
+//! with per-slot [`Method`] dispatch for heterogeneous batches. The
+//! `native` verifier backend of [`crate::engine`] runs on it.
 
 pub mod filter;
+pub mod kernels;
 pub mod verify;
 
 pub use filter::{mask_logits_top_k_top_p, MASKED_LOGIT};
+pub use kernels::{KernelConfig, VerifyWorkspace};
 pub use verify::{
     inverse_cdf_sample, sigmoid_approx, softmax_rows, spec_step, Method, StepOutput,
 };

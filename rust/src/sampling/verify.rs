@@ -4,8 +4,24 @@
 //! outputs are comparable with the AOT executables: stable softmax, the
 //! guarded tau division, residual resampling via unnormalised inverse CDF,
 //! and the bonus draw on all-accept.
+//!
+//! This module is the **scalar reference**: self-contained, sequential,
+//! allocation-happy, optimised for auditability. The serving hot path
+//! runs the segment-parallel, zero-alloc implementation in
+//! [`crate::sampling::kernels`], which reuses the per-row primitives
+//! below and is bit-identical to this oracle for every thread count and
+//! chunk size (row reductions here are already expressed as fixed-order
+//! folds over [`VOCAB_CHUNK`] blocks, the same reduction graph the
+//! parallel kernels execute).
 
 use crate::util::timer::Profiler;
+
+/// Fixed vocab-chunk size (elements) for row reductions. Both the scalar
+/// reference and the parallel kernels fold per-chunk partials in chunk
+/// order, so partitioning work across threads cannot reassociate the
+/// sums. For `v <= VOCAB_CHUNK` (every model vocab in the artifact set)
+/// this degenerates to the plain sequential sum.
+pub const VOCAB_CHUNK: usize = 4096;
 
 /// Verification method (§3.2). `Baseline` and `Exact` are semantically
 /// identical here (the distinction is kernel structure, which only exists
@@ -23,18 +39,26 @@ pub enum Method {
     Sigmoid16 { alpha_milli: i64, beta_milli: i64 },
 }
 
+/// Round α/β to integer milli-units, to nearest (f32 carries ~7
+/// significant digits, so `1.234 * 1000.0` lands at `1233.9999…`;
+/// truncation would collapse it to 1233 and `alpha_beta()` would not
+/// round-trip).
+fn to_milli(x: f32) -> i64 {
+    (x * 1000.0).round() as i64
+}
+
 impl Method {
     pub fn sigmoid(alpha: f32, beta: f32) -> Self {
         Method::Sigmoid {
-            alpha_milli: (alpha * 1000.0) as i64,
-            beta_milli: (beta * 1000.0) as i64,
+            alpha_milli: to_milli(alpha),
+            beta_milli: to_milli(beta),
         }
     }
 
     pub fn sigmoid16(alpha: f32, beta: f32) -> Self {
         Method::Sigmoid16 {
-            alpha_milli: (alpha * 1000.0) as i64,
-            beta_milli: (beta * 1000.0) as i64,
+            alpha_milli: to_milli(alpha),
+            beta_milli: to_milli(beta),
         }
     }
 
@@ -128,21 +152,54 @@ pub struct StepOutput {
     pub tokens: Vec<i32>,
 }
 
-/// Numerically-stable softmax over each row of a (rows, v) matrix,
-/// in place.
+/// Numerically-stable softmax over each row of a (rows, v) matrix, in
+/// place. Row sums fold per-[`VOCAB_CHUNK`] partials in fixed chunk
+/// order (see the module docs), which is what lets the segment-parallel
+/// kernels stay bit-identical to this reference.
 pub fn softmax_rows(x: &mut [f32], v: usize) {
     debug_assert_eq!(x.len() % v, 0);
     for row in x.chunks_mut(v) {
-        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for e in row.iter_mut() {
+        softmax_row(row);
+    }
+}
+
+/// One softmax row with the fixed-order chunked reduction (shared by the
+/// scalar reference and every parallel schedule).
+pub(crate) fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for blk in row.chunks_mut(VOCAB_CHUNK) {
+        let mut part = 0.0f32;
+        for e in blk.iter_mut() {
             *e = (*e - max).exp();
-            sum += *e;
+            part += *e;
         }
-        let inv = 1.0 / sum;
-        for e in row.iter_mut() {
-            *e *= inv;
+        sum += part;
+    }
+    let inv = 1.0 / sum;
+    for e in row.iter_mut() {
+        *e *= inv;
+    }
+}
+
+/// `dst = softmax(src)` for one row — the out-of-place twin of
+/// [`softmax_row`] used by the kernel layer (identical arithmetic graph,
+/// so the result is bit-identical).
+pub(crate) fn softmax_row_from(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let max = src.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for (sb, db) in src.chunks(VOCAB_CHUNK).zip(dst.chunks_mut(VOCAB_CHUNK)) {
+        let mut part = 0.0f32;
+        for (d, &s) in db.iter_mut().zip(sb) {
+            *d = (s - max).exp();
+            part += *d;
         }
+        sum += part;
+    }
+    let inv = 1.0 / sum;
+    for e in dst.iter_mut() {
+        *e *= inv;
     }
 }
 
@@ -152,6 +209,17 @@ pub fn sigmoid_approx(x: &mut [f32], alpha: f32, beta: f32) {
     for e in x.iter_mut() {
         let z = (*e - alpha) * inv;
         *e = 1.0 / (1.0 + (-z).exp());
+    }
+}
+
+/// `dst = sigmoid_approx(src)` — out-of-place element-wise twin for the
+/// kernel layer.
+pub(crate) fn sigmoid_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta: f32) {
+    debug_assert_eq!(src.len(), dst.len());
+    let inv = 1.0 / (beta - alpha);
+    for (d, &s) in dst.iter_mut().zip(src) {
+        let z = (s - alpha) * inv;
+        *d = 1.0 / (1.0 + (-z).exp());
     }
 }
 
@@ -167,13 +235,27 @@ pub fn sigmoid_approx_fp16(x: &mut [f32], alpha: f32, beta: f32) {
     }
 }
 
+/// `dst = sigmoid_approx_fp16(src)` — out-of-place element-wise twin for
+/// the kernel layer.
+pub(crate) fn sigmoid16_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta: f32) {
+    debug_assert_eq!(src.len(), dst.len());
+    let a16 = f16_round(alpha);
+    let denom = f16_round(f16_round(beta) - a16);
+    for (d, &s) in dst.iter_mut().zip(src) {
+        let z = f16_round(f16_round(f16_round(s) - a16) / denom);
+        *d = 1.0 / (1.0 + (-z).exp());
+    }
+}
+
 /// Draw from an unnormalised non-negative weight vector by inverse CDF —
 /// matches `ref.inverse_cdf_sample` (threshold `u * total` on the raw
 /// cumulative sum; zero-mass rows fall back to argmax).
+// `!(total > 0)` below also catches NaN totals (fp16-overflow
+// residuals), matching the jnp graph's `where(total > 0, tok, argmax)` —
+// a rewrite to `total <= 0.0` would drop the NaN arm.
+#[allow(clippy::neg_cmp_op_on_partial_ord)]
 pub fn inverse_cdf_sample(weights: &[f32], u: f32) -> usize {
     let total: f32 = weights.iter().sum();
-    // `!(total > 0)` also catches NaN totals (fp16-overflow residuals),
-    // matching the jnp graph's `where(total > 0, tok, argmax)`.
     if !(total > 0.0) {
         // first-occurrence argmax, matching jnp.argmax in the AOT graphs
         let mut best = 0usize;
@@ -202,6 +284,21 @@ pub fn tau(p: f32, q: f32) -> f32 {
         (p / q).min(1.0)
     } else {
         1.0
+    }
+}
+
+/// One acceptance decision: accept draft position `c` iff `u <= τ`.
+/// `Sigmoid16` uses the unguarded NaN-propagating ratio (rust's
+/// `f32::min` would swallow the NaN): accept iff `u <= r || r >= 1` — a
+/// NaN ratio (fp16 overflow) fails both comparisons and REJECTS, the
+/// semantics the paper's torch pipeline exhibits at ±1e5 scaling.
+#[inline]
+pub(crate) fn accept_decision(p: f32, q: f32, u: f32, method: Method) -> bool {
+    if matches!(method, Method::Sigmoid16 { .. }) {
+        let r = p / q;
+        u <= r || r >= 1.0
+    } else {
+        u <= tau(p, q)
     }
 }
 
@@ -256,23 +353,14 @@ pub fn spec_step(
     }
 
     // --- acceptance loop (the "kernel" work: tau at drafted tokens).
-    // Accept iff u <= tau, exactly as the AOT graphs compute it: a NaN tau
-    // (fp16 overflow) fails the comparison and REJECTS — the semantics
-    // the paper's torch pipeline exhibits at ±1e5 scaling.
+    // Accept iff u <= tau, exactly as the AOT graphs compute it; see
+    // [`accept_decision`] for the Sigmoid16 NaN-rejection semantics.
     let mut accept_len = gamma;
     {
         let _g = profiler.map(|pr| pr.scope("verify/kernel"));
         for c in 0..gamma {
             let x = draft[c] as usize;
-            let accepted = if matches!(method, Method::Sigmoid16 { .. }) {
-                // unguarded ratio, NaN-propagating min (rust's f32::min
-                // would swallow the NaN): accept iff u <= min(1, r)
-                let r = p[c * v + x] / q[c * v + x];
-                u_acc[c] <= r || r >= 1.0
-            } else {
-                u_acc[c] <= tau(p[c * v + x], q[c * v + x])
-            };
-            if !accepted {
+            if !accept_decision(p[c * v + x], q[c * v + x], u_acc[c], method) {
                 accept_len = c;
                 break;
             }
@@ -297,7 +385,14 @@ pub fn spec_step(
 
 /// Batched wrapper with the same layout as the HLO verify artifacts:
 /// returns `(accept_len, out_tokens)` where `out_tokens` is
-/// `(gamma + 1)` per row, `-1`-padded.
+/// `(gamma + 1)` per row, `-1`-padded. `methods` carries one
+/// verification method per row (per-slot overrides in a heterogeneous
+/// batch); pass `&[m; b]` for the homogeneous case.
+///
+/// This is the sequential scalar oracle; the serving engine runs the
+/// slot-parallel, zero-alloc equivalent
+/// [`crate::sampling::kernels::spec_step_batch_ws`], which is asserted
+/// bit-identical to this function by the kernel parity property tests.
 #[allow(clippy::too_many_arguments)]
 pub fn spec_step_batch(
     z_p: &[f32],
@@ -309,9 +404,10 @@ pub fn spec_step_batch(
     u_acc: &[f32],
     u_res: &[f32],
     u_bonus: &[f32],
-    method: Method,
+    methods: &[Method],
     profiler: Option<&Profiler>,
 ) -> (Vec<i32>, Vec<i32>) {
+    debug_assert_eq!(methods.len(), b);
     let mut accept = vec![0i32; b];
     let mut out = vec![-1i32; b * (gamma + 1)];
     for row in 0..b {
@@ -323,7 +419,7 @@ pub fn spec_step_batch(
             &u_acc[row * gamma..(row + 1) * gamma],
             u_res[row],
             u_bonus[row],
-            method,
+            methods[row],
             profiler,
         );
         accept[row] = o.accept_len as i32;
@@ -477,7 +573,9 @@ mod tests {
 
     #[test]
     fn batch_wrapper_matches_single_rows() {
+        // heterogeneous per-row methods: each row must follow its own
         let (b, gamma, v) = (3, 4, 24);
+        let methods = [Method::Exact, Method::sigmoid(-1e3, 1e3), Method::Baseline];
         let mut rng = Pcg32::seeded(9);
         let z_p = randn(&mut rng, b * (gamma + 1) * v, 3.0);
         let z_q = randn(&mut rng, b * gamma * v, 3.0);
@@ -487,7 +585,7 @@ mod tests {
         let u_bonus: Vec<f32> = (0..b).map(|_| rng.uniform_f32()).collect();
         let (alen, out) = spec_step_batch(
             &z_p, &z_q, b, gamma, v, &draft, &u_acc, &u_res, &u_bonus,
-            Method::Exact, None,
+            &methods, None,
         );
         for row in 0..b {
             let o = spec_step(
@@ -498,7 +596,7 @@ mod tests {
                 &u_acc[row * gamma..(row + 1) * gamma],
                 u_res[row],
                 u_bonus[row],
-                Method::Exact,
+                methods[row],
                 None,
             );
             assert_eq!(alen[row] as usize, o.accept_len);
@@ -508,6 +606,70 @@ mod tests {
             assert!(out[row * (gamma + 1) + o.tokens.len()..(row + 1) * (gamma + 1)]
                 .iter()
                 .all(|&t| t == -1));
+        }
+    }
+
+    #[test]
+    fn sigmoid_constructor_rounds_to_nearest_milli() {
+        // f32 representation error must not truncate 1.234 to 1.233
+        for milli in [-100_000i64, -1999, -3, 0, 3, 500, 1234, 99_999] {
+            let a = milli as f32 / 1000.0;
+            let m = Method::sigmoid(a, a + 10.0);
+            let (ra, _) = m.alpha_beta().unwrap();
+            assert_eq!(ra, a, "alpha {a} did not round-trip");
+            let m16 = Method::sigmoid16(a, a + 10.0);
+            assert_eq!(m16.alpha_beta().unwrap().0, a);
+        }
+        // .9995 sits on the milli boundary: round to nearest, not toward 0
+        let m = Method::sigmoid(-0.9999, 0.9999);
+        assert_eq!(m.alpha_beta(), Some((-1.0, 1.0)));
+    }
+
+    #[test]
+    fn softmax_chunked_reduction_matches_plain_sum_for_small_v() {
+        // for v <= VOCAB_CHUNK the chunked fold degenerates to the plain
+        // sequential sum bit-for-bit
+        let mut rng = Pcg32::seeded(21);
+        let v = 97;
+        let mut chunked = randn(&mut rng, 3 * v, 4.0);
+        let mut plain = chunked.clone();
+        softmax_rows(&mut chunked, v);
+        for row in plain.chunks_mut(v) {
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for e in row.iter_mut() {
+                *e = (*e - max).exp();
+                sum += *e;
+            }
+            let inv = 1.0 / sum;
+            for e in row.iter_mut() {
+                *e *= inv;
+            }
+        }
+        assert_eq!(chunked, plain);
+    }
+
+    #[test]
+    fn out_of_place_rows_match_in_place() {
+        let mut rng = Pcg32::seeded(22);
+        let v = 64;
+        let src = randn(&mut rng, v, 3.0);
+        for (a, b) in [(-1e3f32, 1e3f32), (-1e5, 1e5)] {
+            let mut inplace = src.clone();
+            let mut out = vec![0.0f32; v];
+            softmax_row(&mut inplace);
+            softmax_row_from(&src, &mut out);
+            assert_eq!(inplace, out);
+
+            let mut inplace = src.clone();
+            sigmoid_approx(&mut inplace, a, b);
+            sigmoid_row_from(&src, &mut out, a, b);
+            assert_eq!(inplace, out);
+
+            let mut inplace = src.clone();
+            sigmoid_approx_fp16(&mut inplace, a, b);
+            sigmoid16_row_from(&src, &mut out, a, b);
+            assert_eq!(inplace, out);
         }
     }
 

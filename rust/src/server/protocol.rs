@@ -16,7 +16,12 @@
 //! shared defaults). v2 parsing is strict: unknown envelope or params
 //! keys and wrong field types are rejected, never silently defaulted.
 //! `method` is a string (`"baseline"` / `"exact"`) or
-//! `{"name":"sigmoid","alpha":…,"beta":…}`.
+//! `{"name":"sigmoid","alpha":…,"beta":…}` — honored per-slot on any
+//! batch size (the engine dispatches each batch row under its own
+//! method); a `method` is rejected at admission (structured
+//! `{"event":"error","code":"rejected"}`) only when the engine has no
+//! verify artifacts for it, or none sharing a γ with the engine's
+//! default method.
 //!
 //! Responses are events. A streaming request receives incremental
 //! `{"v":2,"event":"delta","id":…,"text":…,"tokens":…}` lines as tokens

@@ -7,6 +7,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::{obj, Value};
 use super::stats::{Series, Summary};
 
 #[derive(Debug, Clone, Copy)]
@@ -38,6 +39,21 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn mean_secs(&self) -> f64 {
         self.summary.mean
+    }
+
+    /// JSON record for the `--json` bench mode: per-target
+    /// mean/p50/p95/p99/std in µs plus the iteration count.
+    pub fn to_json(&self) -> Value {
+        let s = &self.summary;
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", s.n.into()),
+            ("mean_us", Value::Num(s.mean * 1e6)),
+            ("p50_us", Value::Num(s.p50 * 1e6)),
+            ("p95_us", Value::Num(s.p95 * 1e6)),
+            ("p99_us", Value::Num(s.p99 * 1e6)),
+            ("std_us", Value::Num(s.std * 1e6)),
+        ])
     }
 
     pub fn row(&self) -> String {
@@ -86,6 +102,12 @@ pub fn bench_report<F: FnMut()>(name: &str, cfg: BenchConfig, f: F) -> BenchResu
 /// (std::hint::black_box is stable since 1.66).
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Write a bench report JSON document (the `--json <path>` mode of the
+/// bench targets — e.g. `BENCH_PR3.json` seeding the perf trajectory).
+pub fn write_json(path: &std::path::Path, report: &Value) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", report.dump()))
 }
 
 /// Markdown-style table printer shared by bench targets and `specd table`.
@@ -174,6 +196,31 @@ mod tests {
         );
         assert!(t.elapsed() < Duration::from_secs(2));
         assert!(r.summary.n < 10_000);
+    }
+
+    #[test]
+    fn bench_result_serializes_to_json() {
+        let r = bench(
+            "json-ish",
+            BenchConfig {
+                warmup_iters: 0,
+                min_iters: 5,
+                max_iters: 10,
+                max_time: Duration::from_millis(100),
+            },
+            || {
+                black_box((0..50).sum::<u64>());
+            },
+        );
+        let v = r.to_json();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("json-ish"));
+        assert!(v.get("iters").unwrap().as_usize().unwrap() >= 5);
+        for key in ["mean_us", "p50_us", "p95_us", "p99_us", "std_us"] {
+            assert!(v.get(key).unwrap().as_f64().unwrap() >= 0.0, "{key}");
+        }
+        // round-trips through the JSON layer
+        let parsed = crate::util::json::parse(&v.dump()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("json-ish"));
     }
 
     #[test]

@@ -86,6 +86,7 @@ impl Series {
             max: self.max(),
             p50: self.percentile(50.0),
             p90: self.percentile(90.0),
+            p95: self.percentile(95.0),
             p99: self.percentile(99.0),
         }
     }
@@ -101,6 +102,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -147,6 +149,9 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!((s.percentile(99.0) - 99.01).abs() < 1e-9);
+        let sum = s.summary();
+        assert!((sum.p95 - 95.05).abs() < 1e-9);
+        assert!(sum.p50 <= sum.p95 && sum.p95 <= sum.p99);
     }
 
     #[test]

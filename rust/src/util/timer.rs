@@ -93,10 +93,10 @@ impl Profiler {
     }
 
     pub fn render(&self) -> String {
-        let mut out = String::from(format!(
+        let mut out = format!(
             "{:<42} {:>10} {:>14} {:>12}\n",
             "scope", "calls", "total(ms)", "avg(us)"
-        ));
+        );
         for (name, stat) in self.report() {
             let total_ms = stat.total.as_secs_f64() * 1e3;
             let avg_us = if stat.calls > 0 {

@@ -295,7 +295,7 @@ fn top_k_one_is_greedy_under_any_seed() {
 
 #[test]
 fn per_request_method_override_decodes() {
-    // a batch-1 engine configured for exact verification serving a
+    // an engine configured for exact verification serving a
     // sigmoid-override request (and admission must accept it)
     let Some(rt) = runtime() else { return };
     let t = tok();
@@ -312,6 +312,41 @@ fn per_request_method_override_decodes() {
     assert!(e.admissible(&req).is_ok());
     let results = e.generate(vec![req]).unwrap();
     assert!(!results[0].token_ids.is_empty());
+}
+
+#[test]
+fn per_request_method_override_honored_on_batched_engine() {
+    // the lifted batch-1 restriction: a batch > 1 engine admits a
+    // method override and dispatches it per-slot. The override here is
+    // the fp16-overflow sigmoid16 (NaN τ rejects every draft), which is
+    // observable per-slot: the overridden request accepts nothing while
+    // its batch-mates keep accepting drafts.
+    let Some(rt) = runtime() else { return };
+    let batches = rt.manifest.model_batches("base");
+    let Some(&b) = batches.iter().filter(|&&x| x > 1).min() else {
+        eprintln!("skipping: no batch > 1 model artifacts (quick set)");
+        return;
+    };
+    let t = tok();
+    let mut cfg = config(Method::Exact, Backend::Native);
+    cfg.batch = b;
+    let mut e = Engine::new(rt, cfg).unwrap();
+    let mut rs = reqs(&t, b, 12);
+    rs[0].params.method = Some(Method::sigmoid16(-1e5, 1e5));
+    for r in &rs {
+        assert!(e.admissible(r).is_ok(), "override rejected at admission");
+    }
+    let results = e.generate(rs).unwrap();
+    assert_eq!(results.len(), b);
+    let overridden = results.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(
+        overridden.accepted, 0,
+        "NaN τ must reject every draft of the overridden slot"
+    );
+    assert!(
+        results.iter().any(|r| r.id != 0 && r.accepted > 0),
+        "batch-mates must keep their exact-method acceptance"
+    );
 }
 
 #[test]

@@ -91,7 +91,7 @@ fn run_native(case: &VerifyCase, method: Method) -> (Vec<i32>, Vec<i32>) {
         &case.u_acc,
         &case.u_res,
         &case.u_bonus,
-        method,
+        &vec![method; case.b],
         None,
     )
 }
@@ -137,6 +137,62 @@ fn hlo_sigmoid_matches_native_sigmoid() {
         assert_eq!(hlo_len, nat_len, "alpha={alpha}");
         assert_eq!(hlo_tok, nat_tok, "alpha={alpha}");
     }
+}
+
+#[test]
+fn hlo_heterogeneous_methods_dispatch_per_row() {
+    // the grouped HLO dispatch (one artifact call per distinct method,
+    // selective per-row copy-back) must reproduce the native oracle's
+    // per-row decisions on a mixed exact/sigmoid batch
+    use specd::engine::{Backend, Verifier, VerifyInputs};
+    let Some(rt) = runtime() else { return };
+    let v = rt.manifest.vocab_size;
+    // find a batched verify shape both methods can serve
+    let mut found = None;
+    for b in 2..=8 {
+        let ge = rt.manifest.verify_gammas("exact", b, v);
+        let gs = rt.manifest.verify_gammas("sigmoid", b, v);
+        if let Some(&g) = ge.iter().find(|g| gs.contains(g)) {
+            found = Some((b, g));
+            break;
+        }
+    }
+    let Some((b, g)) = found else {
+        eprintln!("skipping: no batch > 1 verify artifacts shared by exact+sigmoid");
+        return;
+    };
+    let mut rng = Pcg32::seeded(16);
+    let case = make_case(&mut rng, b, g, v);
+    let methods: Vec<Method> = (0..b)
+        .map(|i| {
+            if i % 2 == 0 {
+                Method::Exact
+            } else {
+                Method::sigmoid(-1e3, 1e3)
+            }
+        })
+        .collect();
+    let mut verifier = Verifier::new(rt.clone(), Method::Exact, Backend::Hlo, b, v);
+    let (out, _secs) = verifier
+        .verify(
+            g,
+            &methods,
+            &VerifyInputs {
+                z_p: &case.z_p,
+                z_q: &case.z_q,
+                draft: &case.draft,
+                u_acc: &case.u_acc,
+                u_res: &case.u_res,
+                u_bonus: &case.u_bonus,
+            },
+        )
+        .expect("hlo heterogeneous verify");
+    let (nat_len, nat_tok) = sampling::verify::spec_step_batch(
+        &case.z_p, &case.z_q, b, g, v, &case.draft, &case.u_acc, &case.u_res,
+        &case.u_bonus, &methods, None,
+    );
+    assert_eq!(out.accept_len, nat_len, "per-row accept lengths");
+    assert_eq!(out.out_tokens, nat_tok, "per-row emitted tokens");
 }
 
 #[test]
