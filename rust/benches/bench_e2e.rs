@@ -8,8 +8,12 @@
 //!
 //! `--json <path>` writes a machine-readable report (per-target
 //! mean/p50/p95, per-scope profiler totals, tokens/sec and the
-//! verify-path speedup) — CI writes `BENCH_PR3.json`, seeding the perf
-//! trajectory. `--smoke` runs single-iteration timings (CI smoke step).
+//! verify-path speedup), stamped with `{"schema": 1, "git_rev": …}` so
+//! the trajectory tooling described in `docs/PERF.md` can trust the
+//! format. Per-PR snapshots are committed as `BENCH_PR<N>.json`
+//! (currently `BENCH_PR3.json` → `BENCH_PR4.json`); CI's smoke step
+//! writes a throwaway `BENCH_CI.json`. `--smoke` runs single-iteration
+//! timings (CI smoke step).
 //!
 //! The verify-path section needs no artifacts; the decode section skips
 //! itself with a notice when the AOT artifacts are unavailable.
@@ -58,9 +62,36 @@ fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
 }
 
+/// Short git revision of the working tree, for the JSON stamp
+/// (trajectory tooling correlates snapshots with commits). A dirty
+/// tree measures code no commit contains, so it is marked with a
+/// `-dirty` suffix rather than silently attributed to HEAD.
+fn git_rev() -> String {
+    let git = |args: &[&str]| {
+        std::process::Command::new("git")
+            .args(args)
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+    };
+    let Some(rev) = git(&["rev-parse", "--short", "HEAD"]) else {
+        return "unknown".to_string();
+    };
+    let dirty = git(&["status", "--porcelain"]).is_some_and(|s| !s.trim().is_empty());
+    if dirty {
+        format!("{}-dirty", rev.trim())
+    } else {
+        rev.trim().to_string()
+    }
+}
+
 /// Scalar oracle vs parallel kernels on the native verify path at paper
 /// scale (B=4, γ=5, V=4096). Returns the JSON section and the speedup of
-/// the widest parallel config over scalar.
+/// the widest parallel config over scalar. Each workspace's persistent
+/// worker pool spawns during the warmup iterations, outside the timed
+/// samples — the timed iterations measure the steady-state dispatch
+/// cost the engine sees, not thread spawns.
 fn verify_path_section(cfg: BenchConfig) -> (Value, f64) {
     let (b, gamma, v) = (4usize, 5usize, 4096usize);
     let mut rng = Pcg32::seeded(42);
@@ -286,6 +317,11 @@ fn main() {
             None => (Value::Null, Value::Null),
         };
         let report = obj(vec![
+            // schema version first: bump it whenever a key changes
+            // meaning, so trajectory tooling can refuse formats it does
+            // not understand instead of misreading them
+            ("schema", 1i64.into()),
+            ("git_rev", git_rev().into()),
             ("bench", "bench_e2e".into()),
             ("smoke", opts.smoke.into()),
             ("verify_path", verify_json),

@@ -83,7 +83,9 @@ fn main() {
             );
             specd::util::bench::black_box(out);
         });
-        // segment-parallel kernel layer (zero-alloc workspace reuse)
+        // segment-parallel kernel layer (zero-alloc workspace reuse; the
+        // workspace's persistent pool spawns during warmup, once, so the
+        // timed iterations see only the steady-state dispatch cost)
         {
             let kcfg = KernelConfig {
                 min_parallel_elems: 0,

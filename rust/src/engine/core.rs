@@ -32,10 +32,14 @@
 //! The heavy per-step allocations are gone at steady state: model
 //! inputs are borrowed from preallocated step buffers as
 //! [`crate::runtime::TensorView`]s (no per-step logit/token clones),
-//! and the verification path writes into the engine-owned reusable
-//! [`VerifyOutput`] / kernel workspace. (Small bookkeeping allocations
-//! remain — the γ-availability set built per step, streaming deltas —
-//! all O(batch), none proportional to γ·V.)
+//! model *outputs* are staged into engine-owned reusable buffers via
+//! [`crate::runtime::LoadedExecutable::run_views_into`] (no per-step
+//! `to_vec` of the draft/score logits), and the verification path
+//! writes into the engine-owned reusable [`VerifyOutput`] / kernel
+//! workspace, whose persistent worker pool also removes the per-step
+//! thread spawns. (Small bookkeeping allocations remain — the
+//! γ-availability set built per step, streaming deltas — all O(batch),
+//! none proportional to γ·V.)
 //!
 //! Every uniform consumed anywhere in the stack comes from per-request
 //! PCG32 streams, so generation is deterministic given request seeds.
@@ -46,7 +50,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{LoadedExecutable, Runtime, TensorView};
+use crate::runtime::{HostTensor, LoadedExecutable, Runtime, TensorView};
 use crate::sampling::{self, Method};
 use crate::tokenizer;
 use crate::util::rng::Pcg32;
@@ -158,6 +162,12 @@ pub struct Engine {
     /// reusable verification output buffers (accept lengths + emitted
     /// tokens), filled in place by the verifier each step
     verify_out: VerifyOutput,
+    /// reusable model-output staging buffers, refilled in place by
+    /// [`crate::runtime::LoadedExecutable::run_views_into`] — the
+    /// workspace pattern extended to the draft/score model calls, so
+    /// their per-step output `to_vec`s are gone too
+    draft_out: Vec<HostTensor>,
+    target_out: Vec<HostTensor>,
 }
 
 impl Engine {
@@ -229,6 +239,8 @@ impl Engine {
             ubonus_buf: vec![0.0; b],
             methods_buf: vec![config.method; b],
             verify_out: VerifyOutput::default(),
+            draft_out: Vec::new(),
+            target_out: Vec::new(),
             runtime,
             config,
         })
@@ -585,14 +597,17 @@ impl Engine {
                     self.u_buf[i] = u;
                     self.temp_buf[i] = t;
                 }
-                let out = self.draft_step.run_views(&[
-                    TensorView::i32(&shape_bs, &self.tokens_buf),
-                    TensorView::i32(&shape_b, &self.lens_buf),
-                    TensorView::f32(&shape_b, &self.u_buf),
-                    TensorView::f32(&shape_b, &self.temp_buf),
-                ])?;
-                let toks = out[0].as_i32()?;
-                let logits = out[1].as_f32()?;
+                self.draft_step.run_views_into(
+                    &[
+                        TensorView::i32(&shape_bs, &self.tokens_buf),
+                        TensorView::i32(&shape_b, &self.lens_buf),
+                        TensorView::f32(&shape_b, &self.u_buf),
+                        TensorView::f32(&shape_b, &self.temp_buf),
+                    ],
+                    &mut self.draft_out,
+                )?;
+                let toks = self.draft_out[0].as_i32()?;
+                let logits = self.draft_out[1].as_f32()?;
                 for i in 0..b {
                     if let Some(slot) = &mut self.slots[i] {
                         slot.tokens[slot.len + c] = toks[i];
@@ -609,11 +624,14 @@ impl Engine {
             let prof = self.runtime.profiler.clone();
             let _g = prof.scope("step/score");
             self.fill_model_inputs(gamma);
-            let out = self.target_score.run_views(&[
-                TensorView::i32(&shape_bs, &self.tokens_buf),
-                TensorView::i32(&shape_b, &self.lens_buf),
-            ])?;
-            let win = out[0].as_f32()?; // (B, GMAX+1, V)
+            self.target_score.run_views_into(
+                &[
+                    TensorView::i32(&shape_bs, &self.tokens_buf),
+                    TensorView::i32(&shape_b, &self.lens_buf),
+                ],
+                &mut self.target_out,
+            )?;
+            let win = self.target_out[0].as_f32()?; // (B, GMAX+1, V)
             let w = self.gmax + 1;
             for i in 0..b {
                 for j in 0..=gamma {
@@ -789,16 +807,20 @@ impl Engine {
         }
         let shape_bs = [b, s];
         let shape_b = [b];
-        let out = {
-            let _g = self.runtime.profiler.scope("step/target_step");
-            self.target_step.run_views(&[
-                TensorView::i32(&shape_bs, &self.tokens_buf),
-                TensorView::i32(&shape_b, &self.lens_buf),
-                TensorView::f32(&shape_b, &self.u_buf),
-                TensorView::f32(&shape_b, &self.temp_buf),
-            ])?
-        };
-        let toks = out[0].as_i32()?;
+        {
+            let prof = self.runtime.profiler.clone();
+            let _g = prof.scope("step/target_step");
+            self.target_step.run_views_into(
+                &[
+                    TensorView::i32(&shape_bs, &self.tokens_buf),
+                    TensorView::i32(&shape_b, &self.lens_buf),
+                    TensorView::f32(&shape_b, &self.u_buf),
+                    TensorView::f32(&shape_b, &self.temp_buf),
+                ],
+                &mut self.target_out,
+            )?;
+        }
+        let toks = self.target_out[0].as_i32()?;
         let mut emitted = 0usize;
         for i in 0..b {
             let Some(slot) = &mut self.slots[i] else { continue };

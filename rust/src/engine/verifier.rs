@@ -2,18 +2,59 @@
 //!
 //! [`Backend::Hlo`] runs the fused AOT artifact for each method present
 //! in the batch (one PJRT call per distinct method per decode step — the
-//! paper's kernel path); [`Backend::Native`] runs the segment-parallel
-//! kernel layer ([`crate::sampling::kernels`]): slot-parallel with
-//! per-row method dispatch, zero steady-state allocation via the
-//! verifier-owned [`VerifyWorkspace`], and bit-identical to the scalar
-//! oracle used as the cross-check in integration tests.
+//! paper's kernel path), staging outputs into a verifier-owned reusable
+//! buffer; [`Backend::Native`] runs the segment-parallel kernel layer
+//! ([`crate::sampling::kernels`]): slot-parallel with per-row method
+//! dispatch, zero steady-state allocation via the verifier-owned
+//! [`VerifyWorkspace`], and bit-identical to the scalar oracle used as
+//! the cross-check in integration tests.
+//!
+//! The verifier owns the workspace's persistent worker pool: workers
+//! spawn lazily on the first parallel verify region (at most once per
+//! engine) and are parked, reused by every subsequent decode step, and
+//! joined when the verifier drops. A verifier that never runs a
+//! parallel region — HLO backend, autoregressive mode, small matrices —
+//! never spawns any.
+//!
+//! ## Worked example
+//!
+//! Drive one native verification step directly (the engine does exactly
+//! this inside its decode loop, with `ins` borrowing its step buffers):
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use specd::engine::{Backend, Verifier, VerifyInputs, VerifyOutput};
+//! use specd::runtime::Runtime;
+//! use specd::sampling::Method;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let rt = Arc::new(Runtime::open_default()?);
+//! let (b, gamma, v) = (1, 2, rt.manifest.vocab_size);
+//! let mut verifier = Verifier::new(rt, Method::Exact, Backend::Native, b, v);
+//!
+//! let z_p = vec![0.0f32; b * (gamma + 1) * v]; // target logits (B, γ+1, V)
+//! let z_q = vec![0.0f32; b * gamma * v];       // draft logits  (B, γ, V)
+//! let ins = VerifyInputs {
+//!     z_p: &z_p,
+//!     z_q: &z_q,
+//!     draft: &[3, 5],
+//!     u_acc: &[0.4, 0.6],
+//!     u_res: &[0.5],
+//!     u_bonus: &[0.5],
+//! };
+//! let mut out = VerifyOutput::default(); // reuse across steps
+//! let secs = verifier.verify_into(gamma, &[Method::Exact; 1], &ins, &mut out)?;
+//! println!("accepted {} drafts in {secs:.6}s", out.accept_len[0]);
+//! # Ok(())
+//! # }
+//! ```
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{Runtime, TensorView};
+use crate::runtime::{HostTensor, Runtime, TensorView};
 use crate::sampling::kernels::{self, KernelConfig, VerifyWorkspace};
 use crate::sampling::Method;
 
@@ -71,7 +112,8 @@ fn distinct_methods(methods: &[Method]) -> Vec<Method> {
 }
 
 /// Method + backend dispatcher, loading per-γ executables lazily. Owns
-/// the kernel workspace for the native backend.
+/// the kernel workspace (buffers + persistent worker pool) for the
+/// native backend and the output staging buffer for the HLO backend.
 pub struct Verifier {
     runtime: Arc<Runtime>,
     pub method: Method,
@@ -79,6 +121,9 @@ pub struct Verifier {
     batch: usize,
     vocab: usize,
     ws: VerifyWorkspace,
+    /// reusable HLO artifact output staging (accept + tokens tensors),
+    /// refilled in place each dispatch
+    hlo_out: Vec<HostTensor>,
 }
 
 impl Verifier {
@@ -95,7 +140,10 @@ impl Verifier {
             backend,
             batch,
             vocab,
+            // the pool inside spawns lazily, so an HLO-backend or
+            // autoregressive engine never pays for idle worker threads
             ws: VerifyWorkspace::new(KernelConfig::from_env()),
+            hlo_out: Vec::new(),
         }
     }
 
@@ -215,9 +263,9 @@ impl Verifier {
                     if let Some(pair) = &ab {
                         inputs.push(TensorView::f32(&shape_ab, pair));
                     }
-                    let outs = exe.run_views(&inputs)?;
-                    let accept = outs[0].as_i32()?;
-                    let tokens = outs[1].as_i32()?;
+                    exe.run_views_into(&inputs, &mut self.hlo_out)?;
+                    let accept = self.hlo_out[0].as_i32()?;
+                    let tokens = self.hlo_out[1].as_i32()?;
                     for row in 0..b {
                         if methods[row] == *m {
                             out.accept_len[row] = accept[row];

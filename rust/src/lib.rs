@@ -21,15 +21,24 @@
 //! The native verify path is a layered kernel architecture
 //! ([`sampling::kernels`]) mirroring the paper's §3 matrix partitioning
 //! on CPU threads: softmax/sigmoid probability construction, residual
-//! building and inverse-CDF sampling run segment-parallel over matrix
-//! rows and fixed vocab chunks on a scoped `std::thread` pool, with
-//! fixed-order chunk reductions keeping outputs **bit-identical** to the
-//! scalar oracle for every thread count. A preallocated
+//! building and blocked-prefix-sum inverse-CDF sampling run
+//! segment-parallel over matrix rows and fixed vocab chunks on a
+//! **persistent worker pool** (spawned at most once, lazily, on the
+//! first parallel region; parked between steps; joined on drop), with
+//! fixed-order chunk
+//! reductions keeping outputs **bit-identical** to the scalar oracle
+//! for every thread count. A preallocated
 //! [`sampling::kernels::VerifyWorkspace`] (owned by the engine's
-//! verifier) plus borrowed [`runtime::TensorView`] model inputs
-//! eliminate the per-step `O(γ·V)` clones and collects from the decode
-//! loop. Verification dispatches a per-slot [`sampling::Method`], which
-//! is what lets per-request method overrides run on any batch size.
+//! verifier), borrowed [`runtime::TensorView`] model inputs, and
+//! in-place output staging
+//! ([`runtime::LoadedExecutable::run_views_into`]) eliminate the
+//! per-step `O(γ·V)` clones and collects from the decode loop.
+//! Verification dispatches a per-slot [`sampling::Method`], which is
+//! what lets per-request method overrides run on any batch size.
+//!
+//! `docs/ARCHITECTURE.md` walks the whole decode path end-to-end and
+//! maps the paper's §3 onto these modules; `docs/PERF.md` documents the
+//! benchmark methodology and the tracked perf trajectory.
 //!
 //! ## Request API
 //!

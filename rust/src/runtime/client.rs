@@ -58,8 +58,9 @@ pub struct LoadedExecutable {
 impl LoadedExecutable {
     /// Execute with shape-checked owned inputs; returns the tuple
     /// elements. Thin adapter over [`LoadedExecutable::run_views`] —
-    /// hot paths that reuse step buffers should call `run_views`
-    /// directly to avoid cloning inputs into owned tensors.
+    /// hot paths that reuse step buffers should call
+    /// [`LoadedExecutable::run_views_into`] directly to avoid cloning
+    /// inputs into owned tensors or allocating outputs.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let views: Vec<TensorView<'_>> = inputs.iter().map(HostTensor::view).collect();
         self.run_views(&views)
@@ -68,10 +69,33 @@ impl LoadedExecutable {
     /// Execute with shape-checked borrowed inputs; returns the tuple
     /// elements.
     ///
+    /// Allocates a fresh output vector per call — hot paths that run the
+    /// same artifact every decode step should hold a reusable buffer and
+    /// call [`LoadedExecutable::run_views_into`] instead.
+    pub fn run_views(&self, inputs: &[TensorView<'_>]) -> Result<Vec<HostTensor>> {
+        let mut outputs = Vec::new();
+        self.run_views_into(inputs, &mut outputs)?;
+        Ok(outputs)
+    }
+
+    /// Execute with shape-checked borrowed inputs, writing the tuple
+    /// elements into `outputs` in place — the staging-workspace form of
+    /// [`LoadedExecutable::run_views`]. Each slot's buffer capacity is
+    /// reused ([`HostTensor::copy_from_literal`]), so once shapes reach
+    /// their high-water mark a decode step performs **no output
+    /// allocation**; together with the borrowed input views this removes
+    /// every per-step `to_vec`/`clone` from the engine's draft and score
+    /// staging (the one unavoidable copy is literal creation — PJRT owns
+    /// its input buffers).
+    ///
     /// Scope accounting: `exec/<name>` for the PJRT call itself plus
     /// `exec_kind/<kind>[/<method>]` aggregates used by the Δ%-profiling
     /// tables.
-    pub fn run_views(&self, inputs: &[TensorView<'_>]) -> Result<Vec<HostTensor>> {
+    pub fn run_views_into(
+        &self,
+        inputs: &[TensorView<'_>],
+        outputs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
         anyhow::ensure!(
             inputs.len() == self.entry.inputs.len(),
             "{}: expected {} inputs, got {}",
@@ -101,10 +125,13 @@ impl LoadedExecutable {
             .context("fetching result literal")?
             .to_tuple()
             .context("untupling result")?;
-        let outputs: Vec<HostTensor> = tuple
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect::<Result<_>>()?;
+        outputs.truncate(tuple.len());
+        for (i, lit) in tuple.iter().enumerate() {
+            match outputs.get_mut(i) {
+                Some(slot) => slot.copy_from_literal(lit)?,
+                None => outputs.push(HostTensor::from_literal(lit)?),
+            }
+        }
         let elapsed = started.elapsed();
 
         let out_bytes: usize = outputs.iter().map(HostTensor::size_bytes).sum();
@@ -117,7 +144,7 @@ impl LoadedExecutable {
             None => format!("exec_kind/{}", self.entry.kind),
         };
         self.profiler.record(&kind_scope, elapsed);
-        Ok(outputs)
+        Ok(())
     }
 }
 

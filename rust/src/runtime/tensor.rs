@@ -199,6 +199,49 @@ impl HostTensor {
         }
     }
 
+    /// Refill `self` from an XLA literal **in place**, reusing the data
+    /// `Vec`'s capacity — the output-side twin of
+    /// [`crate::runtime::TensorView`]: where views remove the per-step
+    /// clone of model *inputs*, this removes the per-step `to_vec` of
+    /// model *outputs*. The decode loop's staging buffers keep their
+    /// high-water allocation, so a steady-state
+    /// [`crate::runtime::LoadedExecutable::run_views_into`] call
+    /// allocates nothing (a dtype change falls back to a fresh
+    /// conversion; artifact output dtypes never change between steps).
+    pub fn copy_from_literal(&mut self, lit: &xla::Literal) -> Result<()> {
+        let ashape = lit.array_shape().context("literal has no array shape")?;
+        let bytes = lit.untyped_data();
+        match (ashape.ty(), &mut *self) {
+            (xla::ElementType::F32, HostTensor::F32 { shape, data }) => {
+                shape.clear();
+                shape.extend(ashape.dims().iter().map(|&d| d as usize));
+                data.clear();
+                data.extend(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]])),
+                );
+                Ok(())
+            }
+            (xla::ElementType::S32, HostTensor::I32 { shape, data }) => {
+                shape.clear();
+                shape.extend(ashape.dims().iter().map(|&d| d as usize));
+                data.clear();
+                data.extend(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_ne_bytes([c[0], c[1], c[2], c[3]])),
+                );
+                Ok(())
+            }
+            // dtype switch: cold path, replace wholesale
+            (_, slot) => {
+                *slot = HostTensor::from_literal(lit)?;
+                Ok(())
+            }
+        }
+    }
+
     /// Validate against a manifest iospec entry `(dtype, shape)`.
     pub fn check_spec(&self, dtype: &str, shape: &[usize], arg_idx: usize) -> Result<()> {
         self.view().check_spec(dtype, shape, arg_idx)
@@ -246,5 +289,35 @@ mod tests {
         assert!(t.check_spec("int32", &[2, 2], 0).is_err());
     }
 
-    // literal round-trips live in rust/tests/ (they need the PJRT runtime)
+    #[test]
+    fn copy_from_literal_reuses_the_allocation() {
+        let data: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_ne_bytes()).collect();
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[2, 2],
+            &bytes,
+        )
+        .unwrap();
+        // start with a bigger buffer: the refill must shrink in place
+        let mut t = HostTensor::f32(&[8], vec![0.0; 8]);
+        let ptr = t.as_f32().unwrap().as_ptr();
+        t.copy_from_literal(&lit).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.as_f32().unwrap(), &data[..]);
+        assert_eq!(t.as_f32().unwrap().as_ptr(), ptr, "no reallocation");
+        // a dtype switch falls back to a fresh conversion
+        let ib: Vec<u8> = [7i32, 8].iter().flat_map(|x| x.to_ne_bytes()).collect();
+        let il = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[2],
+            &ib,
+        )
+        .unwrap();
+        t.copy_from_literal(&il).unwrap();
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.as_i32().unwrap(), &[7, 8]);
+    }
+
+    // executable round-trips live in rust/tests/ (they need the PJRT runtime)
 }

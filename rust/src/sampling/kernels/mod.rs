@@ -1,4 +1,5 @@
-//! Segment-parallel verification kernels with zero-alloc workspaces.
+//! Segment-parallel verification kernels with zero-alloc workspaces and
+//! a persistent worker pool.
 //!
 //! The paper's §3 observation is that the intermediate matrices of
 //! speculative sampling — the softmax/sigmoid probability rows, the τ
@@ -7,44 +8,87 @@
 //! blocks over fixed vocab chunks. This module is that partitioning
 //! mapped onto CPU threads for the native verification backend:
 //!
-//! * **probability construction** runs one scoped parallel region per
-//!   logits matrix: whole rows per worker when the batch provides enough
-//!   rows (`B·(γ+1)` target rows + `B·γ` draft rows), or per-row
+//! * **probability construction** runs one parallel region per logits
+//!   matrix: whole rows per worker when the batch provides enough rows
+//!   (`B·(γ+1)` target rows + `B·γ` draft rows), or per-row
 //!   [`verify::VOCAB_CHUNK`] segments when a small batch meets a huge
 //!   vocabulary (the `B=1, V=32k` bench regime);
 //! * **acceptance** is the `O(B·γ)` τ-comparison scan — scalar, it is
 //!   never the bottleneck;
 //! * **resample/bonus** constructs residual rows and draws the
-//!   inverse-CDF sample slot-parallel (and segment-parallel within the
-//!   single row at `B = 1`).
+//!   inverse-CDF sample slot-parallel — and, at `B = 1`, chunk-parallel
+//!   within the single row via blocked prefix sums
+//!   (per-[`verify::VOCAB_CHUNK`] partials computed concurrently, folded
+//!   in fixed order, then one block scanned element-wise).
+//!
+//! Parallel regions execute on the workspace-owned persistent
+//! [`pool::WorkerPool`]: workers are spawned at most once (lazily, on
+//! the first parallel region), parked between steps, and shut down when
+//! the workspace drops. PR 3 forked and joined scoped threads for every
+//! region — the CPU analogue of the per-step kernel-launch overhead §3
+//! is about — so at steady state a region now costs two condvar
+//! transitions instead of N spawns.
 //!
 //! ## Determinism
 //!
 //! Outputs are **bit-identical** to the scalar oracle
 //! ([`verify::spec_step`] per row) for every thread count and chunk
 //! size: work partitioning never reassociates a floating-point
-//! reduction. Row maxima are exact under any association; row sums are
-//! folded from fixed-order [`verify::VOCAB_CHUNK`] block partials in
-//! both the scalar reference and every parallel schedule (the same
-//! arithmetic graph, only its execution order varies). The parity
-//! property tests below assert this across all four [`Method`]s, chunk
-//! sizes, and thread counts — including the `Sigmoid16` fp16-overflow →
-//! NaN → reject-everything path.
+//! reduction. Row maxima are exact under any association; row sums and
+//! the inverse-CDF totals/prefixes are folded from fixed-order
+//! [`verify::VOCAB_CHUNK`] block partials in both the scalar reference
+//! and every parallel schedule (the same arithmetic graph, only its
+//! execution order varies). The parity property tests below assert this
+//! across all four [`Method`]s, chunk sizes, and thread counts —
+//! including the `Sigmoid16` fp16-overflow → NaN → reject-everything
+//! path and the multi-block (`V > VOCAB_CHUNK`) blocked-prefix-sum
+//! sampling path.
 //!
 //! ## Workspaces
 //!
 //! [`VerifyWorkspace`] owns every intermediate buffer (probability
-//! matrices, residual rows, chunk partials), grown once and reused, so a
-//! steady-state [`spec_step_batch_ws`] call allocates **no buffers** —
-//! the per-step `to_vec()`/`collect()` of the scalar oracle is gone from
-//! the serving path (scoped threads still cost their spawns, which is
-//! why [`KernelConfig::min_parallel_elems`] gates small problems onto
-//! the scalar schedule).
+//! matrices, residual rows, chunk partials) **and the worker pool**,
+//! grown/spawned once and reused, so a steady-state
+//! [`spec_step_batch_ws`] call allocates no buffers and spawns no
+//! threads. [`KernelConfig::min_parallel_elems`] still gates small
+//! problems onto the inline scalar schedule — a condvar round-trip is
+//! cheap, but not free.
 //!
 //! Profiler scopes mirror the HLO backends one-to-one
 //! (`verify/softmax`, `verify/kernel`, `verify/finish`) plus
 //! `verify/partition` for the segment-plan + workspace bookkeeping, so
 //! Δ%-profiling comparisons stay apples-to-apples.
+//!
+//! ## Worked example
+//!
+//! One batched verification step against the scalar oracle:
+//!
+//! ```
+//! use specd::sampling::kernels::{spec_step_batch_ws, KernelConfig, VerifyWorkspace};
+//! use specd::sampling::{verify, Method};
+//!
+//! let (b, gamma, v) = (2, 2, 8);
+//! let z_p: Vec<f32> = (0..b * (gamma + 1) * v).map(|i| (i % 7) as f32).collect();
+//! let z_q: Vec<f32> = (0..b * gamma * v).map(|i| (i % 5) as f32).collect();
+//! let draft = vec![1i32, 2, 3, 4];
+//! let u_acc = vec![0.5f32; b * gamma];
+//! let (u_res, u_bonus) = (vec![0.3f32; b], vec![0.7f32; b]);
+//! let methods = vec![Method::Exact, Method::sigmoid(-1e3, 1e3)];
+//!
+//! // the workspace owns the persistent pool; reuse it for every step
+//! let mut ws = VerifyWorkspace::new(KernelConfig::default());
+//! let (mut accept, mut tokens) = (Vec::new(), Vec::new());
+//! spec_step_batch_ws(
+//!     &mut ws, &z_p, &z_q, b, gamma, v, &draft, &u_acc, &u_res, &u_bonus,
+//!     &methods, &mut accept, &mut tokens, None,
+//! );
+//!
+//! // bit-identical to the sequential reference, for every KernelConfig
+//! let (accept_ref, tokens_ref) = verify::spec_step_batch(
+//!     &z_p, &z_q, b, gamma, v, &draft, &u_acc, &u_res, &u_bonus, &methods, None,
+//! );
+//! assert_eq!((accept, tokens), (accept_ref, tokens_ref));
+//! ```
 
 pub mod pool;
 
@@ -61,9 +105,9 @@ pub struct KernelConfig {
     /// reductions always use the fixed [`VOCAB_CHUNK`] blocks
     pub chunk: usize,
     /// matrices smaller than this many elements stay on the scalar path
-    /// (a scoped region costs ~tens of µs of spawns; at the model vocab
-    /// of the toy artifact set the whole verify step is cheaper than
-    /// that)
+    /// (a pool region costs a couple of condvar transitions — far below
+    /// the old scoped-spawn cost, but at the model vocab of the toy
+    /// artifact set the whole verify step is cheaper still)
     pub min_parallel_elems: usize,
 }
 
@@ -123,13 +167,17 @@ fn env_usize(key: &str) -> Option<usize> {
     std::env::var(key).ok().and_then(|v| v.parse().ok())
 }
 
-/// Preallocated buffers for the batched verification hot path. Owned by
-/// the engine's verifier and reused across decode steps; `ensure` grows
-/// buffers once per high-water mark, so steady-state steps allocate
-/// nothing.
+/// Preallocated buffers + persistent worker pool for the batched
+/// verification hot path. Owned by the engine's verifier and reused
+/// across decode steps; `ensure` grows buffers once per high-water mark
+/// and the pool spawns its workers at most once (lazily, on the first
+/// parallel region), so steady-state steps allocate nothing and spawn
+/// nothing. Dropping the workspace shuts down and joins the workers.
 #[derive(Debug)]
 pub struct VerifyWorkspace {
     pub cfg: KernelConfig,
+    /// long-lived workers serving every parallel region of every step
+    pool: pool::WorkerPool,
     /// target probability matrix, `B · (γ+1) · V`
     p: Vec<f32>,
     /// draft probability matrix, `B · γ · V`
@@ -137,19 +185,27 @@ pub struct VerifyWorkspace {
     /// residual weight rows, `B · V`
     residual: Vec<f32>,
     /// per-[`VOCAB_CHUNK`] partials for the sub-row (few rows × huge V)
-    /// softmax schedule
+    /// softmax schedule and the blocked inverse-CDF prefix sums
     partials: Vec<f32>,
 }
 
 impl VerifyWorkspace {
     pub fn new(cfg: KernelConfig) -> Self {
         VerifyWorkspace {
+            pool: pool::WorkerPool::new(cfg.threads),
             cfg,
             p: Vec::new(),
             q: Vec::new(),
             residual: Vec::new(),
             partials: Vec::new(),
         }
+    }
+
+    /// The workspace-owned persistent pool (observability/test hook —
+    /// e.g. asserting that consecutive verify steps reuse the same
+    /// worker threads).
+    pub fn pool(&self) -> &pool::WorkerPool {
+        &self.pool
     }
 
     /// Pre-size for a `(b, gamma, v)` step shape (optional; `ensure`
@@ -224,8 +280,9 @@ pub fn spec_step_batch_ws(
         (ws.cfg.effective_threads(elems), ws.cfg.chunk.max(1))
     };
     let VerifyWorkspace {
-        p, q, residual, partials, ..
+        p, q, residual, partials, pool, ..
     } = ws;
+    let pool = &*pool;
     let p = &mut p[..b * (gamma + 1) * v];
     let q = &mut q[..b * gamma * v];
     let residual = &mut residual[..b * v];
@@ -235,11 +292,11 @@ pub fn spec_step_batch_ws(
     {
         let _g = profiler.map(|pr| pr.scope("verify/softmax"));
         construct_matrix(
-            threads, chunk, z_p, &mut *p, v, gamma + 1, methods,
+            pool, threads, chunk, z_p, &mut *p, v, gamma + 1, methods,
             &mut partials[..],
         );
         construct_matrix(
-            threads, chunk, z_q, &mut *q, v, gamma, methods,
+            pool, threads, chunk, z_q, &mut *q, v, gamma, methods,
             &mut partials[..],
         );
     }
@@ -270,26 +327,31 @@ pub fn spec_step_batch_ws(
         let accept = &accept[..];
         if b == 1 && threads > 1 {
             // single slot: segment-parallel residual construction, then
-            // the sequential inverse-CDF scan
+            // the chunk-parallel blocked-prefix-sum inverse-CDF lookup
             let alen = accept[0] as usize;
             out_tokens[..alen].copy_from_slice(&draft[..alen]);
             if alen == gamma {
                 let bonus = &p[gamma * v..][..v];
-                out_tokens[gamma] = inverse_cdf_sample(bonus, u_bonus[0]) as i32;
+                out_tokens[gamma] =
+                    inverse_cdf_sample_blocked(pool, threads, bonus, u_bonus[0], partials)
+                        as i32;
             } else {
                 let prow = &p[alen * v..][..v];
                 let qrow = &q[alen * v..][..v];
-                pool::for_each_span(threads, &mut *residual, chunk, |first, span| {
+                pool::for_each_span(pool, threads, &mut *residual, chunk, |first, span| {
                     let off = first * chunk;
                     for (j, r) in span.iter_mut().enumerate() {
                         *r = (prow[off + j] - qrow[off + j]).max(0.0);
                     }
                 });
-                out_tokens[alen] = inverse_cdf_sample(residual, u_res[0]) as i32;
+                out_tokens[alen] =
+                    inverse_cdf_sample_blocked(pool, threads, residual, u_res[0], partials)
+                        as i32;
             }
         } else {
             // slot-parallel: each worker finishes a run of slots
             pool::for_each_span2(
+                pool,
                 threads.min(b),
                 residual,
                 v,
@@ -327,6 +389,7 @@ pub fn spec_step_batch_ws(
 /// under the owning slot's method (`slot = r / rows_per_slot`).
 #[allow(clippy::too_many_arguments)]
 fn construct_matrix(
+    pool: &pool::WorkerPool,
     threads: usize,
     chunk: usize,
     src: &[f32],
@@ -345,6 +408,7 @@ fn construct_matrix(
         // each row over vocab segments
         for r in 0..rows {
             construct_row_subrow(
+                pool,
                 threads,
                 chunk,
                 &src[r * v..][..v],
@@ -354,9 +418,9 @@ fn construct_matrix(
             );
         }
     } else {
-        // row schedule: whole rows per worker (one scoped region);
+        // row schedule: whole rows per worker (one pool region);
         // threads == 1 degenerates to the inline scalar loop
-        pool::for_each_span(threads, dst, v, |first_row, span| {
+        pool::for_each_span(pool, threads, dst, v, |first_row, span| {
             for (k, drow) in span.chunks_mut(v).enumerate() {
                 let r = first_row + k;
                 construct_row_from(&src[r * v..][..v], drow, methods[r / rows_per_slot]);
@@ -385,6 +449,7 @@ fn construct_row_from(src: &[f32], dst: &mut [f32], method: Method) {
 /// with the [`VOCAB_CHUNK`] partials folded in fixed order between
 /// phases, reproducing the scalar reduction graph exactly.
 fn construct_row_subrow(
+    pool: &pool::WorkerPool,
     threads: usize,
     chunk: usize,
     src: &[f32],
@@ -396,7 +461,7 @@ fn construct_row_subrow(
         Method::Sigmoid { .. } | Method::Sigmoid16 { .. } => {
             let (alpha, beta) = method.alpha_beta().unwrap();
             let fp16 = matches!(method, Method::Sigmoid16 { .. });
-            pool::for_each_span(threads, dst, chunk, |first, span| {
+            pool::for_each_span(pool, threads, dst, chunk, |first, span| {
                 let off = first * chunk;
                 let sblk = &src[off..off + span.len()];
                 if fp16 {
@@ -411,7 +476,7 @@ fn construct_row_subrow(
             let nblk = v.div_ceil(VOCAB_CHUNK);
             let parts = &mut partials[..nblk];
             // phase 1: block maxima (max is exact under any association)
-            pool::for_each_span(threads, &mut *parts, 1, |first, span| {
+            pool::for_each_span(pool, threads, &mut *parts, 1, |first, span| {
                 for (k, m) in span.iter_mut().enumerate() {
                     let off = (first + k) * VOCAB_CHUNK;
                     let blk = &src[off..(off + VOCAB_CHUNK).min(v)];
@@ -421,6 +486,7 @@ fn construct_row_subrow(
             let max = parts.iter().copied().fold(f32::NEG_INFINITY, f32::max);
             // phase 2: exp + per-block partial sums
             pool::for_each_span2(
+                pool,
                 threads,
                 &mut *dst,
                 VOCAB_CHUNK,
@@ -449,13 +515,55 @@ fn construct_row_subrow(
             }
             let inv = 1.0 / sum;
             // phase 3: scale
-            pool::for_each_span(threads, &mut *dst, VOCAB_CHUNK, |_, span| {
+            pool::for_each_span(pool, threads, &mut *dst, VOCAB_CHUNK, |_, span| {
                 for e in span.iter_mut() {
                     *e *= inv;
                 }
             });
         }
     }
+}
+
+/// Chunk-parallel inverse-CDF draw via blocked prefix sums — the
+/// parallel twin of [`verify::inverse_cdf_sample`], bit-identical to it
+/// for every thread count.
+///
+/// Only stage 1 differs from the scalar reference: the
+/// per-[`VOCAB_CHUNK`] partial sums are computed **in parallel** (each
+/// block's partial is a pure sequential sum of that block, so which
+/// lane computes it cannot change the value). Stages 2–3 — the
+/// fixed-order fold, winning-block lookup, and in-block scan — are the
+/// literal shared code path `verify::inverse_cdf_from_partials`, so the
+/// two implementations cannot drift apart.
+pub(crate) fn inverse_cdf_sample_blocked(
+    pool: &pool::WorkerPool,
+    threads: usize,
+    weights: &[f32],
+    u: f32,
+    partials: &mut [f32],
+) -> usize {
+    let v = weights.len();
+    if v <= VOCAB_CHUNK || threads <= 1 {
+        // single block (or no parallelism): the scalar reference IS the
+        // blocked graph
+        return inverse_cdf_sample(weights, u);
+    }
+    let nblk = v.div_ceil(VOCAB_CHUNK);
+    let parts = &mut partials[..nblk];
+    // stage 1: parallel per-block partial sums
+    pool::for_each_span(pool, threads, &mut *parts, 1, |first, span| {
+        for (k, s) in span.iter_mut().enumerate() {
+            let off = (first + k) * VOCAB_CHUNK;
+            let blk = &weights[off..(off + VOCAB_CHUNK).min(v)];
+            let mut part = 0.0f32;
+            for &w in blk {
+                part += w;
+            }
+            *s = part;
+        }
+    });
+    // stages 2-3: shared with the scalar reference
+    verify::inverse_cdf_from_partials(weights, parts, u)
 }
 
 #[cfg(test)]
@@ -680,6 +788,146 @@ mod tests {
             );
             assert_eq!((accept.clone(), tokens.clone()), run_oracle(&case));
         }
+    }
+
+    #[test]
+    fn consecutive_verify_steps_reuse_the_same_worker_threads() {
+        // the tentpole regression: the workspace-owned pool hands the
+        // SAME OS threads to every decode step — no per-step spawns —
+        // and shuts them down cleanly when the workspace drops
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+
+        let mut rng = Pcg32::seeded(81);
+        let cfg = force_parallel(KernelConfig::with_threads(4));
+        let mut ws = VerifyWorkspace::new(cfg);
+        let width = ws.pool().width();
+        assert!(width > 1, "threads=4 must spawn workers");
+
+        let lane_ids = |ws: &VerifyWorkspace| -> HashSet<std::thread::ThreadId> {
+            let ids = Mutex::new(HashSet::new());
+            ws.pool().run(width * 4, &|_| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+            ids.into_inner().unwrap()
+        };
+        let lanes = lane_ids(&ws);
+        assert_eq!(lanes.len(), width, "every lane participates");
+
+        let (mut accept, mut tokens) = (Vec::new(), Vec::new());
+        for step in 0..3 {
+            let case = make_case(&mut rng, 2, 3, 48);
+            spec_step_batch_ws(
+                &mut ws,
+                &case.z_p,
+                &case.z_q,
+                case.b,
+                case.gamma,
+                case.v,
+                &case.draft,
+                &case.u_acc,
+                &case.u_res,
+                &case.u_bonus,
+                &case.methods,
+                &mut accept,
+                &mut tokens,
+                None,
+            );
+            assert_eq!((accept.clone(), tokens.clone()), run_oracle(&case));
+            assert_eq!(lane_ids(&ws), lanes, "step {step}: same threads");
+        }
+        // drop joins the workers — must return, not hang or leak
+        drop(ws);
+    }
+
+    #[test]
+    fn blocked_inverse_cdf_matches_scalar_for_every_schedule() {
+        // direct parity of the chunk-parallel prefix-sum draw against
+        // the scalar reference, across thread counts and multi-block
+        // vocab sizes (incl. ragged final blocks and zero/NaN mass)
+        let mut rng = Pcg32::seeded(82);
+        let pool = pool::WorkerPool::new(4);
+        for v in [
+            VOCAB_CHUNK + 1,
+            2 * VOCAB_CHUNK,
+            2 * VOCAB_CHUNK + 513,
+            3 * VOCAB_CHUNK + 7,
+        ] {
+            let mut partials = vec![0.0f32; v.div_ceil(VOCAB_CHUNK)];
+            for case in 0..6 {
+                let mut w: Vec<f32> =
+                    (0..v).map(|_| rng.uniform_f32().max(0.0)).collect();
+                match case {
+                    // concentrate mass at a boundary-straddling index
+                    0 => {
+                        for x in w.iter_mut() {
+                            *x = 0.0;
+                        }
+                        w[VOCAB_CHUNK - 1] = 0.5;
+                        w[VOCAB_CHUNK] = 0.5;
+                    }
+                    // zero mass -> argmax arm
+                    1 => {
+                        for x in w.iter_mut() {
+                            *x = 0.0;
+                        }
+                    }
+                    // NaN total -> argmax arm
+                    2 => {
+                        w[v / 2] = f32::NAN;
+                    }
+                    _ => {}
+                }
+                for u in [0.0f32, 0.25, 0.5, 0.999, rng.uniform_f32()] {
+                    let expect = inverse_cdf_sample(&w, u);
+                    for threads in [2usize, 3, 8] {
+                        let got = inverse_cdf_sample_blocked(
+                            &pool,
+                            threads,
+                            &w,
+                            u,
+                            &mut partials,
+                        );
+                        assert_eq!(
+                            got, expect,
+                            "v={v} case={case} u={u} threads={threads}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_block_sampling_parity_across_methods_threads_chunks() {
+        // the b=1 blocked-prefix-sum path inside the full step: v spans
+        // multiple VOCAB_CHUNK blocks, so the resample/bonus draw runs
+        // the parallel prefix-sum lookup — must stay bit-identical to
+        // the scalar oracle for all four methods × threads × chunks
+        forall(
+            "blocked-cdf step parity",
+            Config { cases: 8, ..Config::default() },
+            |rng, size| {
+                let v = VOCAB_CHUNK + 257 + size * 101;
+                let gamma = 1 + (size % 3);
+                let case = make_case(rng, 1, gamma, v);
+                let expect = run_oracle(&case);
+                for threads in [2usize, 3, 8] {
+                    for chunk in [64usize, VOCAB_CHUNK] {
+                        let mut cfg = force_parallel(KernelConfig::with_threads(threads));
+                        cfg.chunk = chunk;
+                        let got = run_ws(&case, cfg);
+                        if got != expect {
+                            return Err(format!(
+                                "threads={threads} chunk={chunk} γ={gamma} v={v}: \
+                                 {got:?} != {expect:?}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

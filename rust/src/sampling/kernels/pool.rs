@@ -1,25 +1,301 @@
-//! Scoped fork-join primitives for the segment-parallel verification
-//! kernels.
+//! Persistent worker pool for the segment-parallel verification kernels.
 //!
-//! Safety model: **no `unsafe`**. Work is partitioned *before* any
-//! thread is spawned — each worker receives a disjoint `&mut` span
-//! produced by `split_at_mut`, so the borrow checker proves data-race
-//! freedom. Threads come from `std::thread::scope`, so tasks can borrow
-//! the caller's stack data (logit slices, workspace buffers) without
-//! lifetime erasure, and every region joins before returning.
+//! PR 3's scoped fork-join spawned OS threads for every parallel region —
+//! the CPU analogue of per-step kernel-launch overhead the paper's §3
+//! kernels exist to avoid. This module replaces it with a
+//! [`WorkerPool`]: long-lived workers spawned **once** (lazily, on the
+//! verifier's first parallel region), parked on a condvar between
+//! regions, and woken by an epoch ticket per dispatch. A steady-state
+//! parallel region costs two condvar transitions instead of N
+//! `thread::spawn`s, so softmax/sigmoid construction, residual building
+//! and inverse-CDF sampling reuse the same threads across the whole
+//! decode loop. Workers shut down (and are joined) when the pool — and
+//! therefore the owning verifier — is dropped; a verifier that never
+//! enters a parallel region never spawns any.
 //!
-//! Determinism: the partition is a pure function of
-//! `(len, unit, threads)` and each task writes only values that are a
-//! pure function of its own input segment, so outputs are independent of
-//! scheduling, thread count, and span boundaries. Reductions that would
-//! reassociate floating-point sums are not performed here at all — the
-//! kernel layer folds fixed-order per-chunk partials instead (see
+//! ## Safety model
+//!
+//! Unlike the scoped implementation, a persistent pool cannot let the
+//! borrow checker prove task lifetimes, so this module contains the
+//! crate's only `unsafe` — three narrow, invariant-guarded uses:
+//!
+//! 1. **lifetime erasure** of the dispatched closure reference
+//!    ([`WorkerPool::run`]): sound because `run` blocks until every
+//!    worker has retired the epoch before returning, so the erased
+//!    `&dyn Fn` never outlives the caller's borrow (a panicking task
+//!    still retires its epoch via the bookkeeping in the worker loop,
+//!    and the caller's own share runs under `catch_unwind` so workers
+//!    are always drained before unwinding past the borrowed data);
+//! 2. **span derivation** in [`for_each_span`] / [`for_each_span2`]:
+//!    each task index reconstructs its disjoint `&mut` span from a base
+//!    pointer using the same pure partition arithmetic as PR 3's
+//!    `split_at_mut` chain (`share` / `first_unit` cover every unit
+//!    exactly once), so no two tasks alias;
+//! 3. `Send`/`Sync` assertions for the erased job pointer and the span
+//!    base pointer, justified by (1) and (2).
+//!
+//! ## Determinism
+//!
+//! Unchanged from PR 3, and load-bearing for the bit-identical claim:
+//! the partition is a pure function of `(len, unit, threads)` — not of
+//! the pool width or scheduling — and each task writes only values that
+//! are a pure function of its own input segment. Reductions that would
+//! reassociate floating-point sums are never performed here; the kernel
+//! layer folds fixed-order per-chunk partials instead (see
 //! [`crate::sampling::verify::VOCAB_CHUNK`]).
 //!
-//! A parallel region costs one `thread::scope` (a few tens of
-//! microseconds for the spawns); [`crate::sampling::kernels::KernelConfig`]
-//! gates regions on a minimum problem size so small matrices stay on the
-//! scalar path.
+//! Regions must not nest: a task must not call back into
+//! [`WorkerPool::run`] on the same pool (debug-asserted). The kernel
+//! layer only ever runs its regions sequentially.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// A dispatched region: a lifetime-erased task closure plus the task
+/// count. Held in the shared state only while [`WorkerPool::run`] is
+/// blocked, which is what makes the erasure sound.
+#[derive(Clone, Copy)]
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    tasks: usize,
+}
+
+// SAFETY: the pointee is `Sync` (it is a `&dyn Fn(usize) + Sync`), and
+// `WorkerPool::run` guarantees it stays alive until every worker has
+// retired the epoch that carries this job.
+unsafe impl Send for Job {}
+
+struct State {
+    /// bumped once per dispatched region; workers run a job exactly once
+    epoch: u64,
+    job: Option<Job>,
+    /// workers that have not yet retired the current epoch
+    remaining: usize,
+    /// a worker's task panicked during the current epoch
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers park here between regions
+    work: Condvar,
+    /// the dispatching thread parks here until `remaining == 0`
+    done: Condvar,
+}
+
+/// Long-lived worker threads executing closure batches over an epoch
+/// barrier. Width-`n` pools own `n - 1` OS threads — the dispatching
+/// thread always takes a share of the work, so `WorkerPool::new(1)` is
+/// the inline (scalar) degenerate case with no threads at all.
+///
+/// Workers are spawned **lazily, once**, on the first parallel
+/// dispatch: an engine whose verifier never enters a parallel region
+/// (HLO backend, autoregressive mode, matrices below
+/// [`crate::sampling::kernels::KernelConfig::min_parallel_elems`])
+/// never pays for parked threads at all.
+pub struct WorkerPool {
+    /// total lane count (workers + dispatcher) this pool was sized for
+    width: usize,
+    shared: Arc<Shared>,
+    /// spawned on first parallel dispatch, joined on drop
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("width", &self.width())
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Create a pool of total width `threads` (the caller counts as one
+    /// lane, so `threads - 1` OS threads will serve it; `threads <= 1`
+    /// means every [`WorkerPool::run`] call degenerates to an inline
+    /// loop). Worker threads are not spawned here — the first parallel
+    /// dispatch spawns them, once.
+    pub fn new(threads: usize) -> Self {
+        WorkerPool {
+            width: threads.max(1),
+            shared: Arc::new(Shared {
+                state: Mutex::new(State {
+                    epoch: 0,
+                    job: None,
+                    remaining: 0,
+                    panicked: false,
+                    shutdown: false,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Total parallel lanes: owned workers + the dispatching thread.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Spawn the worker threads if this is the first parallel dispatch.
+    fn ensure_spawned(&self) {
+        let n_workers = self.width - 1;
+        let mut handles = self.handles.lock().unwrap();
+        if !handles.is_empty() {
+            return;
+        }
+        handles.extend((0..n_workers).map(|w| {
+            let shared = self.shared.clone();
+            thread::Builder::new()
+                .name(format!("specd-verify-{w}"))
+                .spawn(move || worker_loop(&shared, w, n_workers))
+                .expect("spawning verify worker")
+        }));
+    }
+
+    /// Execute `f(0) .. f(tasks - 1)`, each exactly once, distributed
+    /// over the pool's lanes (task `i` runs on lane `i % width`, the
+    /// dispatching thread being lane 0). Blocks until every task has
+    /// completed. Panics in any task are re-raised here after the whole
+    /// region has drained, leaving the pool serviceable.
+    ///
+    /// One dispatcher at a time: a region must have fully drained before
+    /// the next is dispatched, so concurrent `run` calls on the same
+    /// pool (or a task calling back into `run`) are a precondition
+    /// violation — asserted, in release builds too, because the epoch
+    /// protocol (and the closure-lifetime erasure riding on it) would
+    /// otherwise be corrupted silently.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        let n_workers = self.width - 1;
+        if n_workers == 0 || tasks <= 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        self.ensure_spawned();
+
+        // SAFETY: the erased reference is only reachable through
+        // `State.job`, and this function does not return (or unwind past
+        // `f`'s borrow) until `remaining == 0`, i.e. until no worker can
+        // touch it anymore.
+        let erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            let idle = st.job.is_none() && st.remaining == 0;
+            if idle {
+                st.epoch = st.epoch.wrapping_add(1);
+                st.job = Some(Job {
+                    task: erased,
+                    tasks,
+                });
+                st.remaining = n_workers;
+                self.shared.work.notify_all();
+            }
+            drop(st);
+            // asserted after releasing the guard: panicking while
+            // holding it would poison the mutex and turn this clean
+            // precondition report into a double-panic abort in Drop
+            assert!(
+                idle,
+                "concurrent or nested WorkerPool::run on the same pool"
+            );
+        }
+
+        // the dispatcher's own share: lane 0 of `n_workers + 1`
+        let caller = catch_unwind(AssertUnwindSafe(|| {
+            let stride = n_workers + 1;
+            let mut i = 0;
+            while i < tasks {
+                f(i);
+                i += stride;
+            }
+        }));
+
+        let worker_panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            std::mem::replace(&mut st.panicked, false)
+        };
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("verify worker task panicked");
+        }
+    }
+
+    #[cfg(test)]
+    fn shared_weak(&self) -> std::sync::Weak<Shared> {
+        Arc::downgrade(&self.shared)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            // poison-tolerant: Drop may run while unwinding from a
+            // panic elsewhere, and a second panic here would abort
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        let handles = self.handles.get_mut().unwrap_or_else(|e| e.into_inner());
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, w: usize, n_workers: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch advanced without a job");
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the dispatcher blocks until this worker retires the
+        // epoch below, so the erased closure is still alive.
+        let task = unsafe { &*job.task };
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            let stride = n_workers + 1;
+            let mut i = w + 1; // lane w+1 (lane 0 is the dispatcher)
+            while i < job.tasks {
+                task(i);
+                i += stride;
+            }
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if res.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
 
 /// Unit count of contiguous run `w` when `n_units` are split across
 /// `workers` runs (earlier runs absorb the remainder).
@@ -27,11 +303,54 @@ fn share(n_units: usize, workers: usize, w: usize) -> usize {
     n_units / workers + usize::from(w < n_units % workers)
 }
 
+/// First unit index of run `w` — the closed form of summing [`share`]
+/// over the preceding runs, so every task can locate its span in O(1)
+/// without a serial `split_at_mut` chain.
+fn first_unit(n_units: usize, workers: usize, w: usize) -> usize {
+    w * (n_units / workers) + w.min(n_units % workers)
+}
+
+/// Base pointer of a partitioned buffer, smuggled into span tasks.
+///
+/// SAFETY: tasks derive disjoint spans from it (see [`for_each_span`]),
+/// and the pool guarantees all tasks finish before the buffer's borrow
+/// ends, so this is the moral equivalent of `split_at_mut` handing each
+/// scoped thread its own `&mut` span.
+///
+/// Tasks must go through [`SendPtr::get`] — naming the raw-pointer
+/// field inside a closure would make 2021-edition precise capture grab
+/// the bare `*mut T` (which is neither `Send` nor `Sync`) instead of
+/// this wrapper.
+struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+// manual impls: the derived ones would demand `T: Copy`/`T: Clone`,
+// but copying the wrapper never copies the pointee
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 /// Run `f(first_unit, span)` over disjoint contiguous spans of `data`,
 /// split at `unit`-element boundaries (only the final unit may be
-/// ragged). `f` runs on up to `threads` scoped threads, the last span on
-/// the calling thread; `threads <= 1` degenerates to one inline call.
-pub fn for_each_span<T, F>(threads: usize, data: &mut [T], unit: usize, f: F)
+/// ragged). Up to `threads` spans execute on the pool's lanes, the
+/// partition being identical to PR 3's scoped version — a pure function
+/// of `(len, unit, threads)`, independent of the pool width.
+/// `threads <= 1` or a single span degenerates to one inline call; on a
+/// width-1 pool the spans run sequentially on the caller (same
+/// partition, same results).
+pub fn for_each_span<T, F>(pool: &WorkerPool, threads: usize, data: &mut [T], unit: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
@@ -46,23 +365,20 @@ where
         f(0, data);
         return;
     }
-    std::thread::scope(|scope| {
-        let f = &f;
-        let mut rest = data;
-        let mut first = 0usize;
-        for w in 0..workers {
-            let units = share(n_units, workers, w);
-            let take = (units * unit).min(rest.len());
-            let (span, tail) = rest.split_at_mut(take);
-            rest = tail;
-            let start = first;
-            first += units;
-            if w + 1 == workers {
-                f(start, span);
-            } else {
-                scope.spawn(move || f(start, span));
-            }
-        }
+    let len = data.len();
+    let base = SendPtr(data.as_mut_ptr());
+    pool.run(workers, &|w| {
+        let first = first_unit(n_units, workers, w);
+        let units = share(n_units, workers, w);
+        let start = first * unit;
+        let end = (start + units * unit).min(len);
+        // SAFETY: [first, first + units) ranges are disjoint across `w`
+        // and cover [0, n_units) exactly (share/first_unit), so the byte
+        // ranges [start, end) never overlap; `base` outlives the region
+        // because `pool.run` blocks until every task completes.
+        let span =
+            unsafe { std::slice::from_raw_parts_mut(base.get().add(start), end - start) };
+        f(first, span);
     });
 }
 
@@ -70,6 +386,7 @@ where
 /// unit `i` of `a` (stride `unit_a`) pairs with unit `i` of `b` (stride
 /// `unit_b`). Both buffers must contain the same number of units.
 pub fn for_each_span2<A, B, F>(
+    pool: &WorkerPool,
     threads: usize,
     a: &mut [A],
     unit_a: usize,
@@ -86,39 +403,42 @@ pub fn for_each_span2<A, B, F>(
         return;
     }
     let n_units = a.len().div_ceil(unit_a);
-    debug_assert_eq!(n_units, b.len().div_ceil(unit_b), "unit count mismatch");
+    // hard assert: a mismatched pair would make the span arithmetic
+    // below index past `b` (this is a safe pub fn — the precondition
+    // must hold in release builds too, and the check is O(1))
+    assert_eq!(n_units, b.len().div_ceil(unit_b), "unit count mismatch");
     let workers = threads.clamp(1, n_units.max(1));
     if workers == 1 {
         f(0, a, b);
         return;
     }
-    std::thread::scope(|scope| {
-        let f = &f;
-        let mut rest_a = a;
-        let mut rest_b = b;
-        let mut first = 0usize;
-        for w in 0..workers {
-            let units = share(n_units, workers, w);
-            let take_a = (units * unit_a).min(rest_a.len());
-            let take_b = (units * unit_b).min(rest_b.len());
-            let (span_a, tail_a) = rest_a.split_at_mut(take_a);
-            let (span_b, tail_b) = rest_b.split_at_mut(take_b);
-            rest_a = tail_a;
-            rest_b = tail_b;
-            let start = first;
-            first += units;
-            if w + 1 == workers {
-                f(start, span_a, span_b);
-            } else {
-                scope.spawn(move || f(start, span_a, span_b));
-            }
-        }
+    let (len_a, len_b) = (a.len(), b.len());
+    let base_a = SendPtr(a.as_mut_ptr());
+    let base_b = SendPtr(b.as_mut_ptr());
+    pool.run(workers, &|w| {
+        let first = first_unit(n_units, workers, w);
+        let units = share(n_units, workers, w);
+        let start_a = first * unit_a;
+        let end_a = (start_a + units * unit_a).min(len_a);
+        let start_b = first * unit_b;
+        let end_b = (start_b + units * unit_b).min(len_b);
+        // SAFETY: as in `for_each_span`, unit ranges are disjoint and
+        // covering in both buffers, and the pool blocks until all tasks
+        // complete.
+        let (span_a, span_b) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(base_a.get().add(start_a), end_a - start_a),
+                std::slice::from_raw_parts_mut(base_b.get().add(start_b), end_b - start_b),
+            )
+        };
+        f(first, span_a, span_b);
     });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -131,16 +451,38 @@ mod tests {
                 for w in 1..workers {
                     assert!(share(n, workers, w) <= share(n, workers, w - 1));
                 }
+                // first_unit is the prefix sum of share
+                let mut acc = 0usize;
+                for w in 0..workers {
+                    assert_eq!(first_unit(n, workers, w), acc, "n={n} workers={workers} w={w}");
+                    acc += share(n, workers, w);
+                }
             }
         }
     }
 
     #[test]
+    fn run_executes_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for tasks in [0usize, 1, 2, 3, 4, 5, 17, 100] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "tasks={tasks}"
+            );
+        }
+    }
+
+    #[test]
     fn spans_cover_every_element_exactly_once() {
+        let pool = WorkerPool::new(4);
         for threads in [1usize, 2, 3, 8, 17] {
             for (len, unit) in [(12usize, 4usize), (13, 4), (1, 4), (64, 1), (10, 100)] {
                 let mut data = vec![0u32; len];
-                for_each_span(threads, &mut data, unit, |_first, span| {
+                for_each_span(&pool, threads, &mut data, unit, |_first, span| {
                     for e in span.iter_mut() {
                         *e += 1;
                     }
@@ -152,12 +494,13 @@ mod tests {
 
     #[test]
     fn first_unit_index_matches_span_offset() {
+        let pool = WorkerPool::new(4);
         let len = 23;
         let unit = 4;
         let base = vec![0u8; len];
         let base_ptr = base.as_ptr() as usize;
         let mut data = base;
-        for_each_span(4, &mut data, unit, |first, span| {
+        for_each_span(&pool, 4, &mut data, unit, |first, span| {
             let off = span.as_ptr() as usize - base_ptr;
             assert_eq!(off, first * unit);
         });
@@ -165,9 +508,10 @@ mod tests {
 
     #[test]
     fn results_are_thread_count_invariant() {
+        let pool = WorkerPool::new(8);
         let compute = |threads: usize| {
             let mut data: Vec<f64> = (0..997).map(|i| i as f64 * 0.25).collect();
-            for_each_span(threads, &mut data, 64, |first, span| {
+            for_each_span(&pool, threads, &mut data, 64, |first, span| {
                 for (k, e) in span.iter_mut().enumerate() {
                     *e = (*e + (first * 64 + k) as f64).sqrt();
                 }
@@ -182,10 +526,11 @@ mod tests {
 
     #[test]
     fn span2_partitions_in_lockstep() {
+        let pool = WorkerPool::new(3);
         // a: 6 units of 8, b: 6 units of 1
         let mut a = vec![1u32; 48];
         let mut b = vec![0u32; 6];
-        for_each_span2(3, &mut a, 8, &mut b, 1, |first, sa, sb| {
+        for_each_span2(&pool, 3, &mut a, 8, &mut b, 1, |first, sa, sb| {
             for (k, out) in sb.iter_mut().enumerate() {
                 let blk = &sa[k * 8..(k + 1) * 8];
                 *out = blk.iter().sum::<u32>() + (first + k) as u32;
@@ -197,22 +542,73 @@ mod tests {
         assert!(a.iter().all(|&x| x == 1));
     }
 
-    #[test]
-    fn runs_on_multiple_threads_when_asked() {
-        // with enough units, more than one OS thread actually
-        // participates (each worker records its ThreadId)
-        let calls = AtomicUsize::new(0);
-        let tids = std::sync::Mutex::new(std::collections::HashSet::new());
-        let mut data = vec![0u8; 1024];
-        for_each_span(4, &mut data, 1, |_, _span| {
-            calls.fetch_add(1, Ordering::Relaxed);
-            tids.lock().unwrap().insert(std::thread::current().id());
-            std::thread::sleep(std::time::Duration::from_millis(1));
+    fn participating_ids(pool: &WorkerPool, tasks: usize) -> HashSet<thread::ThreadId> {
+        let ids = Mutex::new(HashSet::new());
+        pool.run(tasks, &|_| {
+            ids.lock().unwrap().insert(thread::current().id());
         });
-        assert_eq!(calls.load(Ordering::Relaxed), 4, "one call per worker span");
-        assert!(
-            tids.lock().unwrap().len() > 1,
-            "parallel region must spawn real worker threads"
+        ids.into_inner().unwrap()
+    }
+
+    #[test]
+    fn consecutive_regions_reuse_the_same_worker_threads() {
+        // the tentpole regression: a region must NOT spawn fresh OS
+        // threads — the same parked workers serve every dispatch
+        let pool = WorkerPool::new(4);
+        let first = participating_ids(&pool, 16);
+        assert_eq!(
+            first.len(),
+            pool.width(),
+            "static lane striding must involve every lane"
         );
+        assert!(first.contains(&thread::current().id()));
+        for step in 0..3 {
+            assert_eq!(participating_ids(&pool, 16), first, "step {step}");
+        }
+    }
+
+    #[test]
+    fn drop_shuts_workers_down_cleanly() {
+        let pool = WorkerPool::new(4);
+        pool.run(8, &|_| {});
+        let weak = pool.shared_weak();
+        drop(pool);
+        // drop joins the workers, so no thread still holds the shared
+        // state afterwards
+        assert!(weak.upgrade().is_none(), "worker threads must have exited");
+    }
+
+    #[test]
+    fn task_panics_propagate_and_leave_the_pool_serviceable() {
+        let pool = WorkerPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must surface to the dispatcher");
+        // the pool must have drained the epoch and still work
+        let calls = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn width_one_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.width(), 1);
+        let here = thread::current().id();
+        pool.run(5, &|_| assert_eq!(thread::current().id(), here));
+        let mut data = vec![0u8; 100];
+        for_each_span(&pool, 8, &mut data, 10, |_, span| {
+            for e in span.iter_mut() {
+                *e += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
     }
 }

@@ -12,9 +12,11 @@
 //!
 //! [`kernels`] is the serving-path implementation of the same semantics:
 //! segment-parallel over matrix rows / vocab chunks (the §3 partitioning
-//! on CPU threads), zero-alloc via a preallocated [`kernels::VerifyWorkspace`],
-//! with per-slot [`Method`] dispatch for heterogeneous batches. The
-//! `native` verifier backend of [`crate::engine`] runs on it.
+//! on CPU threads), zero-alloc and zero-spawn at steady state via a
+//! preallocated [`kernels::VerifyWorkspace`] that owns a persistent
+//! worker pool, with per-slot [`Method`] dispatch for heterogeneous
+//! batches. The `native` verifier backend of [`crate::engine`] runs on
+//! it.
 
 pub mod filter;
 pub mod kernels;

@@ -10,17 +10,52 @@
 //! runs the segment-parallel, zero-alloc implementation in
 //! [`crate::sampling::kernels`], which reuses the per-row primitives
 //! below and is bit-identical to this oracle for every thread count and
-//! chunk size (row reductions here are already expressed as fixed-order
-//! folds over [`VOCAB_CHUNK`] blocks, the same reduction graph the
-//! parallel kernels execute).
+//! chunk size (row reductions here — softmax sums *and* the inverse-CDF
+//! totals/prefixes — are already expressed as fixed-order folds over
+//! [`VOCAB_CHUNK`] blocks, the same reduction graph the parallel
+//! kernels execute).
+//!
+//! ## Worked example
+//!
+//! One verification step, by hand: the draft proposes token 1 twice,
+//! the target agrees, so both drafts are accepted and a bonus token is
+//! drawn from the target's extra row.
+//!
+//! ```
+//! use specd::sampling::verify::{spec_step, Method};
+//!
+//! let v = 4;
+//! // draft logits (γ=2 rows): token 1 is strongly preferred
+//! let z_q = vec![
+//!     -4.0, 4.0, -4.0, -4.0,
+//!     -4.0, 4.0, -4.0, -4.0,
+//! ];
+//! // target logits (γ+1 rows): agrees with the draft; the bonus row
+//! // (row γ) puts everything on token 2
+//! let z_p = vec![
+//!     -4.0, 4.0, -4.0, -4.0,
+//!     -4.0, 4.0, -4.0, -4.0,
+//!     -9.0, -9.0, 9.0, -9.0,
+//! ];
+//! let out = spec_step(
+//!     &z_p, &z_q, v,
+//!     &[1, 1],      // the two drafted tokens
+//!     &[0.9, 0.9],  // acceptance uniforms (τ ≈ 1, so both accept)
+//!     0.5, 0.5,     // resample/bonus uniforms
+//!     Method::Exact, None,
+//! );
+//! assert_eq!(out.accept_len, 2);
+//! assert_eq!(out.tokens, vec![1, 1, 2]); // drafts + the bonus draw
+//! ```
 
 use crate::util::timer::Profiler;
 
-/// Fixed vocab-chunk size (elements) for row reductions. Both the scalar
-/// reference and the parallel kernels fold per-chunk partials in chunk
-/// order, so partitioning work across threads cannot reassociate the
-/// sums. For `v <= VOCAB_CHUNK` (every model vocab in the artifact set)
-/// this degenerates to the plain sequential sum.
+/// Fixed vocab-chunk size (elements) for row reductions — softmax row
+/// sums *and* the inverse-CDF totals/prefixes. Both the scalar reference
+/// and the parallel kernels fold per-chunk partials in chunk order, so
+/// partitioning work across threads cannot reassociate the sums. For
+/// `v <= VOCAB_CHUNK` (every model vocab in the artifact set) this
+/// degenerates to the plain sequential sum.
 pub const VOCAB_CHUNK: usize = 4096;
 
 /// Verification method (§3.2). `Baseline` and `Exact` are semantically
@@ -247,34 +282,118 @@ pub(crate) fn sigmoid16_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta:
     }
 }
 
-/// Draw from an unnormalised non-negative weight vector by inverse CDF —
-/// matches `ref.inverse_cdf_sample` (threshold `u * total` on the raw
-/// cumulative sum; zero-mass rows fall back to argmax).
+/// Draw from an unnormalised non-negative weight vector by inverse CDF
+/// (threshold `u * total`; zero-mass rows fall back to first-occurrence
+/// argmax, matching `jnp.argmax` in the AOT graphs).
+///
+/// Like the softmax row sums, the reduction graph is **blocked**: the
+/// total is a fixed-order fold of per-[`VOCAB_CHUNK`] partial sums, the
+/// winning block is located by walking that same prefix fold, and only
+/// the winning block is scanned element-wise (its running CDF seeded
+/// with the block's prefix). For `v <= VOCAB_CHUNK` — every model vocab
+/// in the artifact set — this degenerates bit-for-bit to the plain
+/// sequential scan. The blocked graph is what lets the kernel layer
+/// compute the partials chunk-parallel
+/// ([`crate::sampling::kernels`]'s `inverse_cdf_sample_blocked`) while
+/// staying bit-identical to this scalar reference.
+///
+/// Rounding guard: the block lookup tests `prefix + partial > thresh`
+/// while the in-block scan accumulates element-wise from `prefix`, and
+/// the two can disagree in the last ulp. When the scan of the selected
+/// block falls through, the block's final element is returned — that
+/// rule is part of the reference semantics, so every parallel schedule
+/// reproduces it exactly.
 // `!(total > 0)` below also catches NaN totals (fp16-overflow
 // residuals), matching the jnp graph's `where(total > 0, tok, argmax)` —
 // a rewrite to `total <= 0.0` would drop the NaN arm.
 #[allow(clippy::neg_cmp_op_on_partial_ord)]
 pub fn inverse_cdf_sample(weights: &[f32], u: f32) -> usize {
-    let total: f32 = weights.iter().sum();
-    if !(total > 0.0) {
-        // first-occurrence argmax, matching jnp.argmax in the AOT graphs
-        let mut best = 0usize;
-        for (i, w) in weights.iter().enumerate().skip(1) {
-            if *w > weights[best] {
-                best = i;
+    if weights.len() <= VOCAB_CHUNK {
+        // single block: the blocked graph degenerates to the plain
+        // one-pass scan bit-for-bit (a sequential sum IS the lone block
+        // partial, and the in-block scan starts from prefix 0.0), so
+        // take the cheap path — this is the hot slot-parallel case,
+        // every artifact vocab fits in one block
+        let total: f32 = weights.iter().sum();
+        if !(total > 0.0) {
+            return argmax_first(weights);
+        }
+        let thresh = u * total;
+        let mut cdf = 0.0f32;
+        for (i, w) in weights.iter().enumerate() {
+            cdf += w;
+            if cdf > thresh {
+                return i;
             }
         }
-        return best;
+        return weights.len() - 1;
+    }
+    // multi-block: per-block partials (each a sequential sum of its own
+    // block, the arithmetic every parallel schedule reproduces), then
+    // the shared fold/lookup/scan stages
+    let parts: Vec<f32> = weights
+        .chunks(VOCAB_CHUNK)
+        .map(|blk| {
+            let mut part = 0.0f32;
+            for &w in blk {
+                part += w;
+            }
+            part
+        })
+        .collect();
+    inverse_cdf_from_partials(weights, &parts, u)
+}
+
+/// Stages 2–3 of the blocked inverse-CDF reduction graph, shared
+/// verbatim by the scalar multi-block arm of [`inverse_cdf_sample`] and
+/// the chunk-parallel kernel twin (which computes `parts` on the worker
+/// pool): a fixed-order fold of the per-[`VOCAB_CHUNK`] partials into
+/// the total, a walk of the same prefix fold to locate the winning
+/// block, and an element-wise scan of that one block seeded with its
+/// prefix — including the fall-through-to-block-end rounding guard.
+/// Keeping this in one place is what keeps the two paths bit-identical
+/// by construction.
+// `!(total > 0)` also catches NaN totals (fp16-overflow residuals).
+#[allow(clippy::neg_cmp_op_on_partial_ord)]
+pub(crate) fn inverse_cdf_from_partials(weights: &[f32], parts: &[f32], u: f32) -> usize {
+    let v = weights.len();
+    let mut total = 0.0f32;
+    for &part in parts {
+        total += part;
+    }
+    if !(total > 0.0) {
+        return argmax_first(weights);
     }
     let thresh = u * total;
-    let mut cdf = 0.0f32;
-    for (i, w) in weights.iter().enumerate() {
-        cdf += w;
-        if cdf > thresh {
-            return i;
+    let mut prefix = 0.0f32;
+    for (bi, &part) in parts.iter().enumerate() {
+        if prefix + part > thresh {
+            let off = bi * VOCAB_CHUNK;
+            let blk = &weights[off..(off + VOCAB_CHUNK).min(v)];
+            let mut cdf = prefix;
+            for (i, &w) in blk.iter().enumerate() {
+                cdf += w;
+                if cdf > thresh {
+                    return off + i;
+                }
+            }
+            return off + blk.len() - 1;
+        }
+        prefix += part;
+    }
+    v - 1
+}
+
+/// First-occurrence argmax (the zero/NaN-mass fallback arm of
+/// [`inverse_cdf_sample`], matching `jnp.argmax` in the AOT graphs).
+pub(crate) fn argmax_first(weights: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, w) in weights.iter().enumerate().skip(1) {
+        if *w > weights[best] {
+            best = i;
         }
     }
-    weights.len() - 1
+    best
 }
 
 /// Acceptance ratio τ(x) = min(1, p/q) with the q==0 guard (Eq. 1).
@@ -480,6 +599,49 @@ mod tests {
         assert_eq!(inverse_cdf_sample(&w, 0.95), 2);
         assert_eq!(inverse_cdf_sample(&[0.0, 0.0, 1.0], 0.0), 2);
         assert_eq!(inverse_cdf_sample(&[0.0; 4], 0.5), 0); // zero mass -> argmax
+    }
+
+    #[test]
+    fn inverse_cdf_blocked_degenerates_to_sequential_for_small_v() {
+        // for v <= VOCAB_CHUNK the blocked graph must reproduce the plain
+        // sequential scan bit-for-bit (one block, prefix 0.0)
+        let mut rng = Pcg32::seeded(31);
+        for _ in 0..50 {
+            let v = 1 + rng.below(VOCAB_CHUNK as u32) as usize;
+            let w: Vec<f32> = (0..v).map(|_| rng.uniform_f32()).collect();
+            let u = rng.uniform_f32();
+            let total: f32 = w.iter().sum();
+            let thresh = u * total;
+            let mut cdf = 0.0f32;
+            let mut expect = v - 1;
+            for (i, &x) in w.iter().enumerate() {
+                cdf += x;
+                if cdf > thresh {
+                    expect = i;
+                    break;
+                }
+            }
+            assert_eq!(inverse_cdf_sample(&w, u), expect, "v={v} u={u}");
+        }
+    }
+
+    #[test]
+    fn inverse_cdf_multi_block_thresholds() {
+        // 2 full blocks + a ragged tail of uniform mass: sums of small
+        // integers are exact in f32, so indices are analytic
+        let v = 2 * VOCAB_CHUNK + 5;
+        let w = vec![1.0f32; v];
+        assert_eq!(inverse_cdf_sample(&w, 0.0), 0);
+        // thresh = 0.5 * v = 4098.5 -> first index with cdf 4099
+        assert_eq!(inverse_cdf_sample(&w, 0.5), v / 2);
+        // mass concentrated in the last block
+        let mut w = vec![0.0f32; v];
+        w[2 * VOCAB_CHUNK + 3] = 2.0;
+        assert_eq!(inverse_cdf_sample(&w, 0.9), 2 * VOCAB_CHUNK + 3);
+        // zero mass across multiple blocks -> first-occurrence argmax
+        let mut w = vec![0.0f32; v];
+        w[VOCAB_CHUNK + 17] = f32::NAN; // NaN total also takes the argmax arm
+        assert_eq!(inverse_cdf_sample(&w, 0.5), 0);
     }
 
     #[test]

@@ -132,6 +132,16 @@ impl Literal {
             .collect())
     }
 
+    /// Raw native-endian element bytes, row-major — the zero-copy read
+    /// side of [`Literal::create_from_shape_and_untyped_data`]. Callers
+    /// that reuse output buffers across steps (the engine's staging
+    /// workspaces) copy straight from this instead of allocating via
+    /// [`Literal::to_vec`]. The real bindings expose the same through
+    /// the literal's untyped-data accessor.
+    pub fn untyped_data(&self) -> &[u8] {
+        &self.bytes
+    }
+
     /// Destructure a tuple literal (stub literals are never tuples).
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
         unavailable()
@@ -218,6 +228,7 @@ mod tests {
         assert_eq!(shape.dims(), &[2, 3]);
         assert_eq!(shape.ty(), ElementType::F32);
         assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.untyped_data(), &bytes[..]);
         assert!(lit.to_vec::<i32>().is_err());
     }
 
