@@ -1,89 +1,44 @@
 //! End-to-end engine benchmark (Table 5's wall-clock quantity) plus the
-//! verify-path kernel comparison: scalar oracle vs the segment-parallel
-//! kernel layer at batch ≥ 4.
+//! verify-path kernel comparison (scalar oracle vs the segment-parallel
+//! kernel layer) and the **pipelined-vs-serial decode comparison** over
+//! the simulated model pair.
 //!
 //! ```text
 //! cargo bench --bench bench_e2e -- [--json <path>] [--smoke]
 //! ```
 //!
 //! `--json <path>` writes a machine-readable report (per-target
-//! mean/p50/p95, per-scope profiler totals, tokens/sec and the
-//! verify-path speedup), stamped with `{"schema": 1, "git_rev": …}` so
-//! the trajectory tooling described in `docs/PERF.md` can trust the
-//! format. Per-PR snapshots are committed as `BENCH_PR<N>.json`
-//! (currently `BENCH_PR3.json` → `BENCH_PR4.json`); CI's smoke step
-//! writes a throwaway `BENCH_CI.json`. `--smoke` runs single-iteration
-//! timings (CI smoke step).
+//! mean/p50/p95, per-scope profiler totals, tokens/sec, the verify-path
+//! speedup and the per-batch pipeline speedups), stamped with
+//! `{"schema": 1, "git_rev": …}` so the trajectory tooling described in
+//! `docs/PERF.md` can trust the format. Per-PR snapshots are committed
+//! as `BENCH_PR<N>.json`; CI's smoke step writes a throwaway
+//! `BENCH_CI.json`. `--smoke` runs single-iteration timings (CI
+//! executability gate).
 //!
-//! The verify-path section needs no artifacts; the decode section skips
-//! itself with a notice when the AOT artifacts are unavailable.
+//! The verify-path and pipeline sections need no artifacts (the latter
+//! decodes over [`specd::runtime::SimSpec`] models); the AOT decode
+//! section skips itself with a notice when artifacts are unavailable.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use specd::engine::{Backend, Engine, EngineConfig, GenRequest, Mode, SamplingParams};
-use specd::runtime::Runtime;
+use specd::engine::{
+    Backend, Engine, EngineConfig, GenRequest, Mode, PipelineMode, SamplingParams,
+};
+use specd::runtime::{Runtime, SimSpec};
 use specd::sampling::kernels::{spec_step_batch_ws, KernelConfig, VerifyWorkspace};
 use specd::sampling::{verify, Method};
 use specd::tokenizer::Tokenizer;
-use specd::util::bench::{bench, black_box, write_json, BenchConfig, BenchResult};
+use specd::util::bench::{
+    bench, black_box, snapshot_envelope, write_json, BenchConfig, BenchOpts, BenchResult,
+};
 use specd::util::json::{obj, Value};
 use specd::util::rng::Pcg32;
 use specd::util::stats::rel_improvement_pct;
 
-struct Opts {
-    json: Option<PathBuf>,
-    smoke: bool,
-}
-
-fn parse_opts() -> Opts {
-    let mut opts = Opts {
-        json: None,
-        smoke: false,
-    };
-    let mut args = std::env::args().skip(1);
-    while let Some(arg) = args.next() {
-        match arg.as_str() {
-            "--json" => {
-                let path = args.next().expect("--json needs a path");
-                opts.json = Some(PathBuf::from(path));
-            }
-            "--smoke" => opts.smoke = true,
-            // cargo bench passes --bench through to the target
-            "--bench" => {}
-            other => eprintln!("ignoring unknown arg {other:?}"),
-        }
-    }
-    opts
-}
-
 fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
-}
-
-/// Short git revision of the working tree, for the JSON stamp
-/// (trajectory tooling correlates snapshots with commits). A dirty
-/// tree measures code no commit contains, so it is marked with a
-/// `-dirty` suffix rather than silently attributed to HEAD.
-fn git_rev() -> String {
-    let git = |args: &[&str]| {
-        std::process::Command::new("git")
-            .args(args)
-            .output()
-            .ok()
-            .filter(|o| o.status.success())
-            .and_then(|o| String::from_utf8(o.stdout).ok())
-    };
-    let Some(rev) = git(&["rev-parse", "--short", "HEAD"]) else {
-        return "unknown".to_string();
-    };
-    let dirty = git(&["status", "--porcelain"]).is_some_and(|s| !s.trim().is_empty());
-    if dirty {
-        format!("{}-dirty", rev.trim())
-    } else {
-        rev.trim().to_string()
-    }
 }
 
 /// Scalar oracle vs parallel kernels on the native verify path at paper
@@ -172,6 +127,133 @@ fn verify_path_section(cfg: BenchConfig) -> (Value, f64) {
         ("speedup", Value::Num(speedup)),
     ]);
     (section, speedup)
+}
+
+/// The PR 5 tentpole quantity: the same decode workload through the
+/// serial loop and the pipelined scheduler, over the simulated model
+/// pair (no artifacts needed) on the native verify path. Outputs are
+/// asserted bit-identical before anything is timed; the speedup is pure
+/// scheduling.
+fn pipeline_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
+    let spec = SimSpec {
+        vocab: 4096,
+        seq_len: 512,
+        gmax: 10,
+        batches: vec![1, 2, 4],
+        seed: 0xC0FF_EE11,
+        // high draft/target agreement + a short pinned γ keep the
+        // all-accept rate (and so the prefetch hit rate) high — the
+        // regime speculative decoding is deployed in; the speculation
+        // is all-or-nothing per step, so its win scales with
+        // P(all B·γ drafts accepted)
+        agreement: 0.99,
+        // emulated device-dispatch latency per model call — the wall
+        // time the pipeline exists to hide verification behind
+        model_delay: Duration::from_micros(200),
+    };
+    println!(
+        "pipelined vs serial decode (sim models, V={} agreement={} delay={}us)\n",
+        spec.vocab,
+        spec.agreement,
+        spec.model_delay.as_micros()
+    );
+
+    let reqs = |b: usize| -> Vec<GenRequest> {
+        (0..2 * b as u64)
+            .map(|i| {
+                GenRequest::new(
+                    i,
+                    vec![1, 7 + i as i32, 9, 23, 41, 5],
+                    SamplingParams::default()
+                        .with_max_new_tokens(48)
+                        .with_temperature(0.8)
+                        .with_seed(1000 + i),
+                )
+            })
+            .collect()
+    };
+    let engine = |b: usize, pipeline: PipelineMode| -> Engine {
+        let rt = Arc::new(Runtime::simulated(spec.clone()));
+        Engine::new(
+            rt,
+            EngineConfig {
+                pair: "sim".into(),
+                batch: b,
+                method: Method::Exact,
+                backend: Backend::Native,
+                mode: Mode::Speculative,
+                gamma_init: 3,
+                gamma_pinned: true,
+                self_draft: false,
+                pipeline,
+                seed: 7,
+            },
+        )
+        .expect("sim engine")
+    };
+
+    let mut rows: Vec<Value> = Vec::new();
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for b in [1usize, 2, 4] {
+        // correctness first: identical outputs, token for token
+        let serial_out = engine(b, PipelineMode::Off).generate(reqs(b)).unwrap();
+        let mut pipe_engine = engine(b, PipelineMode::On);
+        let pipe_out = pipe_engine.generate(reqs(b)).unwrap();
+        assert_eq!(serial_out.len(), pipe_out.len());
+        for (x, y) in serial_out.iter().zip(&pipe_out) {
+            assert_eq!(
+                x.token_ids, y.token_ids,
+                "pipelined decode must be bit-identical to serial (B={b})"
+            );
+        }
+        let (launched, hits) = pipe_engine.pipeline_stats().unwrap();
+        let hit_rate = if launched > 0 {
+            hits as f64 / launched as f64
+        } else {
+            0.0
+        };
+        let tokens: usize = serial_out.iter().map(|r| r.token_ids.len()).sum();
+
+        let mut serial_engine = engine(b, PipelineMode::Off);
+        let serial = bench(&format!("decode/serial-b{b}"), cfg, || {
+            let out = serial_engine.generate(reqs(b)).unwrap();
+            black_box(out);
+        });
+        println!("{}", serial.row());
+        let mut pipe_engine = engine(b, PipelineMode::On);
+        let pipelined = bench(&format!("decode/pipelined-b{b}"), cfg, || {
+            let out = pipe_engine.generate(reqs(b)).unwrap();
+            black_box(out);
+        });
+        println!("{}", pipelined.row());
+
+        let speedup = serial.mean_secs() / pipelined.mean_secs();
+        println!(
+            "  B={b}: {tokens} tokens/run, prefetch hit rate {:.0}%, \
+             pipeline speedup {speedup:.2}x\n",
+            hit_rate * 100.0
+        );
+        rows.push(obj(vec![
+            ("batch", b.into()),
+            ("tokens_per_run", tokens.into()),
+            ("hit_rate", Value::Num(hit_rate)),
+            ("serial", serial.to_json()),
+            ("pipelined", pipelined.to_json()),
+            ("speedup", Value::Num(speedup)),
+        ]));
+        speedups.push((b, speedup));
+    }
+
+    let section = obj(vec![
+        ("vocab", spec.vocab.into()),
+        ("agreement", Value::Num(spec.agreement as f64)),
+        (
+            "model_delay_us",
+            (spec.model_delay.as_micros() as i64).into(),
+        ),
+        ("rows", Value::Arr(rows)),
+    ]);
+    (section, speedups)
 }
 
 fn run_decode(
@@ -291,45 +373,37 @@ fn e2e_section() -> Option<(Value, Value)> {
 }
 
 fn main() {
-    let opts = parse_opts();
-    let cfg = if opts.smoke {
-        BenchConfig {
-            warmup_iters: 1,
-            min_iters: 1,
-            max_iters: 1,
-            max_time: Duration::from_millis(500),
-        }
-    } else {
-        BenchConfig {
-            warmup_iters: 3,
-            min_iters: 15,
-            max_iters: 300,
-            max_time: Duration::from_secs(2),
-        }
-    };
+    let opts = BenchOpts::from_args();
+    let cfg = opts.config();
 
     let (verify_json, speedup) = verify_path_section(cfg);
+    let (pipeline_json, pipeline_speedups) = pipeline_section(cfg);
     let e2e = e2e_section();
 
-    if let Some(path) = opts.json {
+    if let Some(path) = &opts.json {
         let (e2e_json, scopes_json) = match e2e {
             Some((rows, scopes)) => (rows, scopes),
             None => (Value::Null, Value::Null),
         };
-        let report = obj(vec![
-            // schema version first: bump it whenever a key changes
-            // meaning, so trajectory tooling can refuse formats it does
-            // not understand instead of misreading them
-            ("schema", 1i64.into()),
-            ("git_rev", git_rev().into()),
-            ("bench", "bench_e2e".into()),
-            ("smoke", opts.smoke.into()),
-            ("verify_path", verify_json),
-            ("verify_speedup", Value::Num(speedup)),
-            ("e2e", e2e_json),
-            ("scopes", scopes_json),
-        ]);
-        write_json(&path, &report).expect("writing bench json");
+        let pipeline_speedup_json = Value::Arr(
+            pipeline_speedups
+                .iter()
+                .map(|(b, s)| obj(vec![("batch", (*b).into()), ("speedup", Value::Num(*s))]))
+                .collect(),
+        );
+        let report = snapshot_envelope(
+            "bench_e2e",
+            opts.smoke,
+            vec![
+                ("verify_path", verify_json),
+                ("verify_speedup", Value::Num(speedup)),
+                ("pipeline", pipeline_json),
+                ("pipeline_speedups", pipeline_speedup_json),
+                ("e2e", e2e_json),
+                ("scopes", scopes_json),
+            ],
+        );
+        write_json(path, &report).expect("writing bench json");
         println!("wrote {}", path.display());
     }
 }

@@ -20,6 +20,25 @@
 //!    sequences, length, context), refill from the admission queue,
 //!    adaptive-γ update (+2 on all-accept / −1).
 //!
+//! ## The pipelined scheduler
+//!
+//! With [`PipelineMode`] enabled (the default on the native verify
+//! backend), phases 1–2 of step N+1 run **concurrently** with phase 3
+//! of step N: after step N's logits are staged and its verification
+//! uniforms drawn, the engine predicts step N's commit under the
+//! all-accept assumption (the γ drafts plus a bonus token computed with
+//! the verifier's exact arithmetic), ships step N+1's model block to a
+//! dedicated dispatcher lane against that speculative state, and only
+//! then runs step N's verification kernels on the worker pool. Step N's
+//! commit is the pipeline barrier: a correct prediction lets step N+1
+//! adopt the prefetched buffers and RNG streams wholesale; any
+//! mismatch discards them and step N+1 dispatches serially from
+//! untouched state. Either way the observable outputs — committed
+//! tokens, streaming deltas, stats counters, per-slot RNG streams — are
+//! **bit-identical** to the serial loop for any seed (asserted by the
+//! `it_pipeline` parity suite). The machinery lives in
+//! [`crate::engine::pipeline`].
+//!
 //! Per-request policy lives in [`SamplingParams`] and is honored
 //! per-slot: target/draft temperatures, top-k/top-p truncation of the
 //! target distribution (logit masking shared with the sampling oracle),
@@ -30,16 +49,15 @@
 //! incremental output, and [`Engine::cancel`] frees a slot mid-decode.
 //!
 //! The heavy per-step allocations are gone at steady state: model
-//! inputs are borrowed from preallocated step buffers as
-//! [`crate::runtime::TensorView`]s (no per-step logit/token clones),
-//! model *outputs* are staged into engine-owned reusable buffers via
-//! [`crate::runtime::LoadedExecutable::run_views_into`] (no per-step
-//! `to_vec` of the draft/score logits), and the verification path
-//! writes into the engine-owned reusable [`VerifyOutput`] / kernel
-//! workspace, whose persistent worker pool also removes the per-step
-//! thread spawns. (Small bookkeeping allocations remain — the
-//! γ-availability set built per step, streaming deltas — all O(batch),
-//! none proportional to γ·V.)
+//! inputs are borrowed from the preallocated [`StepBuffers`] generation
+//! as [`crate::runtime::TensorView`]s, model *outputs* are staged into
+//! the generation's reusable buffers via
+//! [`crate::runtime::LoadedExecutable::run_views_into`], and the
+//! verification path writes into the engine-owned reusable
+//! [`VerifyOutput`] / kernel workspace, whose persistent worker pool
+//! also removes the per-step thread spawns. The pipeline adds a second
+//! [`StepBuffers`] generation that ping-pongs with the first — still no
+//! allocation proportional to γ·V in the loop.
 //!
 //! Every uniform consumed anywhere in the stack comes from per-request
 //! PCG32 streams, so generation is deterministic given request seeds.
@@ -50,12 +68,15 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{HostTensor, LoadedExecutable, Runtime, TensorView};
-use crate::sampling::{self, Method};
+use crate::runtime::{LoadedExecutable, Runtime, TensorView};
+use crate::sampling::{self, kernels, verify, Method};
 use crate::tokenizer;
 use crate::util::rng::Pcg32;
 
 use super::gamma::GammaController;
+use super::pipeline::{
+    run_model_block, BlockDims, BlockSlot, PipelineCtl, PipelineMode, StepBuffers,
+};
 use super::request::{
     match_stop_suffix, FinishReason, GenRequest, GenResult, SamplingParams,
 };
@@ -73,7 +94,7 @@ pub enum Mode {
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// model pair from the manifest ("base" / "large")
+    /// model pair from the manifest ("base" / "large" / "sim")
     pub pair: String,
     /// slot count; must match an artifact batch size
     pub batch: usize,
@@ -86,6 +107,9 @@ pub struct EngineConfig {
     /// self-speculative drafting (§A.7): draft with the first half of the
     /// *target* model's layers instead of the separate draft network
     pub self_draft: bool,
+    /// overlap next-step model dispatch with CPU verification
+    /// (`auto` = on for [`Backend::Native`] speculative decoding)
+    pub pipeline: PipelineMode,
     pub seed: u64,
 }
 
@@ -100,6 +124,7 @@ impl Default for EngineConfig {
             gamma_init: 5,
             gamma_pinned: false,
             self_draft: false,
+            pipeline: PipelineMode::Auto,
             seed: 0,
         }
     }
@@ -108,7 +133,7 @@ impl Default for EngineConfig {
 /// Per-slot decoding state.
 struct Slot {
     req: GenRequest,
-    /// token buffer of length S (prompt + generated + in-flight drafts)
+    /// token buffer of length S (prompt + generated)
     tokens: Vec<i32>,
     /// valid committed length (prompt + generated)
     len: usize,
@@ -145,14 +170,13 @@ pub struct Engine {
     seq_len: usize,
     vocab: usize,
     gmax: usize,
-    // preallocated step buffers (hot path, no per-step allocation)
-    tokens_buf: Vec<i32>,
-    lens_buf: Vec<i32>,
-    u_buf: Vec<f32>,
-    temp_buf: Vec<f32>,
-    zq_buf: Vec<f32>,
-    zp_buf: Vec<f32>,
-    draft_buf: Vec<i32>,
+    /// current staging generation (model inputs/outputs + logit
+    /// matrices); the pipeline ping-pongs a second generation through
+    /// the dispatcher lane
+    bufs: StepBuffers,
+    /// per-slot block views for the serial dispatch path (reused)
+    block_slots: Vec<BlockSlot>,
+    // verification uniforms (drawn on the engine thread each step)
     uacc_buf: Vec<f32>,
     ures_buf: Vec<f32>,
     ubonus_buf: Vec<f32>,
@@ -162,12 +186,16 @@ pub struct Engine {
     /// reusable verification output buffers (accept lengths + emitted
     /// tokens), filled in place by the verifier each step
     verify_out: VerifyOutput,
-    /// reusable model-output staging buffers, refilled in place by
-    /// [`crate::runtime::LoadedExecutable::run_views_into`] — the
-    /// workspace pattern extended to the draft/score model calls, so
-    /// their per-step output `to_vec`s are gone too
-    draft_out: Vec<HostTensor>,
-    target_out: Vec<HostTensor>,
+    /// pipelined-scheduler state; `None` = strict serial loop
+    pipeline: Option<PipelineCtl>,
+    /// bumped on every slot-set mutation (admit fill, finish, cancel);
+    /// an in-flight prefetch launched under an older epoch is discarded
+    /// at the barrier
+    slot_epoch: u64,
+    /// scratch row for the bonus-token prediction (V elements)
+    bonus_row: Vec<f32>,
+    /// scratch tail for predicted stop-sequence matching
+    stop_scratch: Vec<i32>,
 }
 
 impl Engine {
@@ -213,6 +241,11 @@ impl Engine {
             GammaController::new(config.gamma_init, 1, max_gamma)
         };
         let b = config.batch;
+        let pipeline = if config.pipeline.enabled(config.mode, config.backend) {
+            Some(PipelineCtl::new())
+        } else {
+            None
+        };
         Ok(Engine {
             verifier,
             gamma,
@@ -227,20 +260,17 @@ impl Engine {
             seq_len,
             vocab,
             gmax,
-            tokens_buf: vec![0; b * seq_len],
-            lens_buf: vec![1; b],
-            u_buf: vec![0.0; b],
-            temp_buf: vec![0.0; b],
-            zq_buf: vec![0.0; b * gmax * vocab],
-            zp_buf: vec![0.0; b * (gmax + 1) * vocab],
-            draft_buf: vec![0; b * gmax],
+            bufs: StepBuffers::new(b, seq_len, gmax, vocab),
+            block_slots: Vec::with_capacity(b),
             uacc_buf: vec![0.0; b * gmax],
             ures_buf: vec![0.0; b],
             ubonus_buf: vec![0.0; b],
             methods_buf: vec![config.method; b],
             verify_out: VerifyOutput::default(),
-            draft_out: Vec::new(),
-            target_out: Vec::new(),
+            pipeline,
+            slot_epoch: 0,
+            bonus_row: vec![0.0; vocab],
+            stop_scratch: Vec::new(),
             runtime,
             config,
         })
@@ -364,6 +394,12 @@ impl Engine {
                     latency: s.started.elapsed().as_secs_f64(),
                 });
                 self.stats.finished += 1;
+                // the slot set changed: any in-flight prefetch was built
+                // against the old set — invalidate it at the barrier
+                self.slot_epoch += 1;
+                if let Some(ctl) = &self.pipeline {
+                    ctl.cancel_inflight();
+                }
                 return true;
             }
         }
@@ -381,6 +417,12 @@ impl Engine {
 
     pub fn gamma(&self) -> usize {
         self.gamma.gamma()
+    }
+
+    /// Pipelined-scheduler counters `(prefetches launched, barrier
+    /// hits)`; `None` when the pipeline is disabled.
+    pub fn pipeline_stats(&self) -> Option<(u64, u64)> {
+        self.pipeline.as_ref().map(|ctl| (ctl.launched, ctl.hits))
     }
 
     /// Submit-all + run-to-completion convenience.
@@ -443,6 +485,7 @@ impl Engine {
                         accepted: 0,
                         started: Instant::now(),
                     });
+                    self.slot_epoch += 1;
                 }
             }
         }
@@ -477,20 +520,20 @@ impl Engine {
         }
     }
 
-    /// γ wanted this step: the adaptive controller clamped by slot
-    /// headroom, then by per-request overrides — pinned slots bypass the
-    /// controller, plain overrides cap it; a heterogeneous batch resolves
-    /// to the most conservative value since γ is one per batched step.
-    /// The result is then snapped down to artifact availability — for a
-    /// heterogeneous batch, to the γ set common to every active slot's
-    /// verification method, so a γ pin can be served below its pinned
-    /// value when it shares the batch with method overrides (admission
-    /// guarantees an artifact with γ ≤ the override exists; trusted
-    /// in-process callers fall back to the smallest artifact).
-    fn step_gamma_want(&self, min_headroom: usize) -> usize {
+    /// γ wanted this step given a controller state and slot headroom:
+    /// the controller value clamped by per-request overrides — pinned
+    /// slots bypass the controller, plain overrides cap it; a
+    /// heterogeneous batch resolves to the most conservative value since
+    /// γ is one per batched step. Static so the pipeline's next-step
+    /// planning can evaluate it against a *cloned* controller.
+    fn gamma_want(
+        gamma: &GammaController,
+        slots: &[Option<Slot>],
+        min_headroom: usize,
+    ) -> usize {
         let mut cap: Option<usize> = None;
         let mut pinned: Option<usize> = None;
-        for sl in self.slots.iter().flatten() {
+        for sl in slots.iter().flatten() {
             if let Some(g) = sl.req.params.gamma {
                 if sl.req.params.gamma_pinned {
                     pinned = Some(pinned.map_or(g, |p| p.min(g)));
@@ -502,12 +545,23 @@ impl Engine {
         // a pin replaces the controller value, not the other slots' caps
         let mut want = match pinned {
             Some(g) => g,
-            None => self.gamma.effective(min_headroom),
+            None => gamma.effective(min_headroom),
         };
         if let Some(c) = cap {
             want = want.min(c);
         }
         want.min(min_headroom.saturating_sub(1)).max(1)
+    }
+
+    /// Snap a wanted γ down to artifact availability (the γ set common
+    /// to every active slot's verification method).
+    fn snap_gamma(avail: &[usize], want: usize) -> usize {
+        avail
+            .iter()
+            .copied()
+            .filter(|&g| g <= want)
+            .max()
+            .unwrap_or_else(|| avail.first().copied().unwrap_or(1))
     }
 
     /// Execute one decode step across all active slots.
@@ -528,122 +582,75 @@ impl Engine {
         for i in 0..b {
             match &self.slots[i] {
                 Some(slot) => {
-                    self.tokens_buf[i * s..(i + 1) * s].copy_from_slice(&slot.tokens);
-                    self.lens_buf[i] = (slot.len + extra) as i32;
+                    self.bufs.tokens[i * s..(i + 1) * s].copy_from_slice(&slot.tokens);
+                    self.bufs.lens[i] = (slot.len + extra) as i32;
                 }
                 None => {
-                    self.tokens_buf[i * s..(i + 1) * s].fill(tokenizer::PAD);
-                    self.lens_buf[i] = 1;
+                    self.bufs.tokens[i * s..(i + 1) * s].fill(tokenizer::PAD);
+                    self.bufs.lens[i] = 1;
                 }
             }
         }
     }
 
-    fn step_speculative(&mut self, step_started: Instant) -> Result<()> {
-        let (b, s, v) = (self.config.batch, self.seq_len, self.vocab);
-
-        // γ for this step: controller value clamped by slot headroom and
-        // per-request overrides, snapped to artifact availability.
-        let min_headroom = self
-            .slots
-            .iter()
-            .flatten()
-            .map(|sl| sl.headroom(s))
-            .min()
-            .unwrap_or(2);
-        let want = self.step_gamma_want(min_headroom);
-        self.fill_methods();
-        // a batched step runs one γ across all slots, so a heterogeneous
-        // batch snaps to the γ values every slot's method can serve.
-        // Admission checks each override pairwise against the engine
-        // method, so the intersection can only go empty when two
-        // *different* overrides have disjoint artifact γ sets — fail the
-        // step with a real message rather than limping into a γ no
-        // method can load.
-        let avail = self.verifier.available_gammas_common(&self.methods_buf);
-        if avail.is_empty() {
-            bail!(
-                "active requests' verification methods share no verify \
-                 artifact gamma (methods in play: {:?})",
-                self.methods_buf.iter().map(|m| m.name()).collect::<Vec<_>>()
-            );
-        }
-        let gamma = avail
-            .iter()
-            .copied()
-            .filter(|&g| g <= want)
-            .max()
-            .unwrap_or_else(|| avail.first().copied().unwrap_or(1));
-
-        // model input shapes (inputs are borrowed views over the
-        // preallocated step buffers — no per-step clones)
-        let shape_bs = [b, s];
-        let shape_b = [b];
-
-        // --- 1. draft phase: γ sequential draft_step calls
-        {
-            let prof = self.runtime.profiler.clone();
-            let _g = prof.scope("step/draft");
-            for c in 0..gamma {
-                self.fill_model_inputs(c);
-                for i in 0..b {
-                    let (u, t) = match &mut self.slots[i] {
-                        Some(slot) => (
-                            slot.rng.uniform_f32(),
-                            Self::effective_temp(slot.req.params.draft_temp()),
-                        ),
-                        None => (0.0, 1.0),
-                    };
-                    self.u_buf[i] = u;
-                    self.temp_buf[i] = t;
+    /// Dispatch this step's model block (γ draft calls + score) on the
+    /// engine thread — the serial path, also the miss fallback.
+    fn dispatch_block_serial(&mut self, gamma: usize) -> Result<()> {
+        let b = self.config.batch;
+        // token rows from committed slot state (lens is refilled per
+        // model call inside the block, so `extra` is irrelevant here)
+        self.fill_model_inputs(0);
+        self.block_slots.clear();
+        for i in 0..b {
+            match &self.slots[i] {
+                Some(slot) => {
+                    self.block_slots.push(BlockSlot {
+                        active: true,
+                        len: slot.len,
+                        rng: slot.rng.clone(),
+                        draft_temp: Self::effective_temp(slot.req.params.draft_temp()),
+                    });
                 }
-                self.draft_step.run_views_into(
-                    &[
-                        TensorView::i32(&shape_bs, &self.tokens_buf),
-                        TensorView::i32(&shape_b, &self.lens_buf),
-                        TensorView::f32(&shape_b, &self.u_buf),
-                        TensorView::f32(&shape_b, &self.temp_buf),
-                    ],
-                    &mut self.draft_out,
-                )?;
-                let toks = self.draft_out[0].as_i32()?;
-                let logits = self.draft_out[1].as_f32()?;
-                for i in 0..b {
-                    if let Some(slot) = &mut self.slots[i] {
-                        slot.tokens[slot.len + c] = toks[i];
-                        self.draft_buf[i * gamma + c] = toks[i];
-                    }
-                    self.zq_buf[(i * gamma + c) * v..(i * gamma + c + 1) * v]
-                        .copy_from_slice(&logits[i * v..(i + 1) * v]);
+                None => {
+                    self.block_slots.push(BlockSlot::inactive());
                 }
             }
         }
-
-        // --- 2. target scoring: one call, slice the last γ+1 positions
-        {
-            let prof = self.runtime.profiler.clone();
-            let _g = prof.scope("step/score");
-            self.fill_model_inputs(gamma);
-            self.target_score.run_views_into(
-                &[
-                    TensorView::i32(&shape_bs, &self.tokens_buf),
-                    TensorView::i32(&shape_b, &self.lens_buf),
-                ],
-                &mut self.target_out,
-            )?;
-            let win = self.target_out[0].as_f32()?; // (B, GMAX+1, V)
-            let w = self.gmax + 1;
-            for i in 0..b {
-                for j in 0..=gamma {
-                    let src = (i * w + (w - (gamma + 1) + j)) * v;
-                    let dst = (i * (gamma + 1) + j) * v;
-                    self.zp_buf[dst..dst + v].copy_from_slice(&win[src..src + v]);
-                }
+        let dims = BlockDims {
+            b,
+            s: self.seq_len,
+            v: self.vocab,
+            gmax: self.gmax,
+        };
+        let res = run_model_block(
+            &self.draft_step,
+            &self.target_score,
+            &self.runtime.profiler,
+            &mut self.bufs,
+            &mut self.block_slots,
+            dims,
+            gamma,
+            false,
+            None,
+        );
+        // the block consumed per-slot uniforms: persist the advanced RNG
+        // streams (even on error — matching the old partial-step
+        // semantics where draws happened directly on the live slots)
+        for i in 0..b {
+            if let Some(slot) = &mut self.slots[i] {
+                slot.rng = self.block_slots[i].rng.clone();
             }
         }
+        res.map(|_| ())
+    }
 
-        // --- temperature scaling (verification distributions must match
-        // the sampling temperature; see effective_temp)
+    /// Per-request temperature scaling + top-k/top-p truncation of the
+    /// staged logits (verification distributions must match the sampling
+    /// temperature; q is left untruncated — it must remain the true
+    /// proposal the drafts were sampled from; rejection sampling then
+    /// yields the truncated target regardless of q's support).
+    fn scale_and_filter(&mut self, gamma: usize) {
+        let (b, v) = (self.config.batch, self.vocab);
         for i in 0..b {
             let t = match &self.slots[i] {
                 Some(slot) => Self::effective_temp(slot.req.params.temperature),
@@ -651,19 +658,14 @@ impl Engine {
             };
             if (t - 1.0).abs() > 1e-6 {
                 let inv = 1.0 / t;
-                for x in &mut self.zp_buf[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v] {
+                for x in &mut self.bufs.zp[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v] {
                     *x *= inv;
                 }
-                for x in &mut self.zq_buf[i * gamma * v..(i + 1) * gamma * v] {
+                for x in &mut self.bufs.zq[i * gamma * v..(i + 1) * gamma * v] {
                     *x *= inv;
                 }
             }
         }
-
-        // --- per-request top-k/top-p truncation of the target
-        // distribution (q is left untouched: it must remain the true
-        // proposal the drafts were sampled from; rejection sampling then
-        // yields the truncated target regardless of q's support)
         for i in 0..b {
             let (k, p) = match &self.slots[i] {
                 Some(slot) => (slot.req.params.top_k, slot.req.params.top_p),
@@ -675,14 +677,18 @@ impl Engine {
             for j in 0..=gamma {
                 let off = (i * (gamma + 1) + j) * v;
                 sampling::filter::mask_logits_top_k_top_p(
-                    &mut self.zp_buf[off..off + v],
+                    &mut self.bufs.zp[off..off + v],
                     k,
                     p,
                 );
             }
         }
+    }
 
-        // --- 3. verification (the paper's kernel, one fused call)
+    /// Draw this step's verification uniforms (acceptance thresholds,
+    /// resample, bonus) from each slot's RNG stream.
+    fn draw_verify_uniforms(&mut self, gamma: usize) {
+        let b = self.config.batch;
         for i in 0..b {
             let (ua, ur, ub2) = match &mut self.slots[i] {
                 Some(slot) => {
@@ -699,10 +705,249 @@ impl Engine {
             self.ures_buf[i] = ur;
             self.ubonus_buf[i] = ub2;
         }
+    }
+
+    /// Whether the predicted commit rows leave every active slot still
+    /// decoding — the prefetch launch condition. Replays the commit
+    /// loop's exact finish checks (EOS, stop-sequence suffix across the
+    /// step boundary, length, context headroom) against the prediction
+    /// without touching live state.
+    fn prediction_keeps_all_slots(&mut self, gamma: usize, predicted: &[i32]) -> bool {
+        let (b, s) = (self.config.batch, self.seq_len);
+        for i in 0..b {
+            let Some(slot) = &self.slots[i] else { continue };
+            let row = &predicted[i * (gamma + 1)..(i + 1) * (gamma + 1)];
+            // context: the next step needs ≥ 2 tokens of headroom
+            if s.saturating_sub(slot.len + gamma + 1) < 2 {
+                return false;
+            }
+            let max_stop = slot.req.stop_ids.iter().map(Vec::len).max().unwrap_or(0);
+            self.stop_scratch.clear();
+            if max_stop > 1 {
+                let from = slot.generated.len().saturating_sub(max_stop - 1);
+                self.stop_scratch.extend_from_slice(&slot.generated[from..]);
+            }
+            let mut gen_len = slot.generated.len();
+            for &tok in row {
+                if tok == tokenizer::EOS {
+                    return false;
+                }
+                if max_stop > 0 {
+                    self.stop_scratch.push(tok);
+                    if match_stop_suffix(&self.stop_scratch, &slot.req.stop_ids).is_some() {
+                        return false;
+                    }
+                }
+                gen_len += 1;
+                if gen_len >= slot.req.params.max_new_tokens {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Predict this step's commit under the all-accept assumption and,
+    /// when every active slot would keep decoding, ship the next step's
+    /// model block to the dispatcher lane against the speculative state.
+    ///
+    /// The bonus token is computed with the verifier's exact arithmetic
+    /// ([`kernels::construct_prob_row`] + [`verify::inverse_cdf_sample`]
+    /// over the scaled/filtered bonus row), so on the native backend a
+    /// fully-accepted step emits *bit-for-bit* the predicted row and the
+    /// barrier can adopt the prefetch. Refuses to launch when any
+    /// predicted token would finish a slot (EOS / stop sequence / length
+    /// / context), when γ would hit slot headroom, or when a prefetch is
+    /// already in flight.
+    fn maybe_launch_prefetch(&mut self, gamma: usize, avail: &[usize]) {
+        let (b, s, v) = (self.config.batch, self.seq_len, self.vocab);
+        {
+            let Some(ctl) = &mut self.pipeline else { return };
+            // lane_free also reclaims a drained miss's buffers; a lane
+            // still busy with a cancelled block means no spare
+            // generation — skip this step's launch rather than queue
+            if ctl.has_inflight() || !ctl.lane_free() {
+                return;
+            }
+        }
+        let mut predicted = self
+            .pipeline
+            .as_mut()
+            .expect("pipeline checked above")
+            .take_predicted();
+        predicted.resize(b * (gamma + 1), -1);
+
+        // --- predict the commit row of every active slot
+        for i in 0..b {
+            if self.slots[i].is_none() {
+                continue;
+            }
+            let row = &mut predicted[i * (gamma + 1)..(i + 1) * (gamma + 1)];
+            row[..gamma].copy_from_slice(&self.bufs.draft[i * gamma..(i + 1) * gamma]);
+            let zrow = &self.bufs.zp[(i * (gamma + 1) + gamma) * v..][..v];
+            kernels::construct_prob_row(zrow, &mut self.bonus_row[..v], self.methods_buf[i]);
+            row[gamma] = verify::inverse_cdf_sample(&self.bonus_row[..v], self.ubonus_buf[i])
+                as i32;
+        }
+
+        // --- refuse when the predicted commit would finish any slot
+        if !self.prediction_keeps_all_slots(gamma, &predicted) {
+            self.pipeline
+                .as_mut()
+                .expect("pipeline checked above")
+                .recycle_predicted(predicted);
+            return;
+        }
+
+        // --- plan the next step's γ against the speculative state: the
+        // controller after an all-accept update, headroom after the
+        // predicted commit, the same availability set (same slots)
+        let mut gctl = self.gamma.clone();
+        gctl.update(true);
+        let min_headroom_next = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|sl| s.saturating_sub(sl.len + gamma + 1))
+            .min()
+            .unwrap_or(2);
+        let want = Self::gamma_want(&gctl, &self.slots, min_headroom_next);
+        let gamma_next = Self::snap_gamma(avail, want);
+
+        // --- assemble the speculative block state (cloned RNGs, token
+        // rows = committed context + predicted commit; live slots are
+        // never touched)
+        let ctl = self.pipeline.as_mut().expect("pipeline checked above");
+        let mut bufs = ctl.take_spare(b, s, self.gmax, v);
+        let mut bslots = ctl.take_slots();
+        for i in 0..b {
+            let row = &mut bufs.tokens[i * s..(i + 1) * s];
+            match &self.slots[i] {
+                Some(slot) => {
+                    row.copy_from_slice(&slot.tokens);
+                    for (k, &tok) in predicted[i * (gamma + 1)..(i + 1) * (gamma + 1)]
+                        .iter()
+                        .enumerate()
+                    {
+                        row[slot.len + k] = tok;
+                    }
+                    bslots.push(BlockSlot {
+                        active: true,
+                        len: slot.len + gamma + 1,
+                        rng: slot.rng.clone(),
+                        draft_temp: Self::effective_temp(slot.req.params.draft_temp()),
+                    });
+                }
+                None => {
+                    row.fill(tokenizer::PAD);
+                    bslots.push(BlockSlot::inactive());
+                }
+            }
+        }
+        let dims = BlockDims {
+            b,
+            s,
+            v,
+            gmax: self.gmax,
+        };
+        ctl.launch(
+            self.draft_step.clone(),
+            self.target_score.clone(),
+            self.runtime.profiler.clone(),
+            bufs,
+            bslots,
+            dims,
+            gamma_next,
+            predicted,
+            self.slot_epoch,
+        );
+    }
+
+    fn step_speculative(&mut self, step_started: Instant) -> Result<()> {
+        let (b, s, v) = (self.config.batch, self.seq_len, self.vocab);
+
+        // --- 0. pipeline barrier reclaim: a hit prefetch from the
+        // previous step hands this step its whole model block
+        let adopted = match &mut self.pipeline {
+            Some(ctl) => ctl.resolve(self.slot_epoch),
+            None => None,
+        };
+
+        // --- 1. plan γ for this step: controller value clamped by slot
+        // headroom and per-request overrides, snapped to artifact
+        // availability. A batched step runs one γ across all slots, so a
+        // heterogeneous batch snaps to the γ values every slot's method
+        // can serve. Admission checks each override pairwise against the
+        // engine method, so the intersection can only go empty when two
+        // *different* overrides have disjoint artifact γ sets — fail the
+        // step with a real message rather than limping into a γ no
+        // method can load.
+        let min_headroom = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|sl| sl.headroom(s))
+            .min()
+            .unwrap_or(2);
+        self.fill_methods();
+        let avail = self.verifier.available_gammas_common(&self.methods_buf);
+        if avail.is_empty() {
+            bail!(
+                "active requests' verification methods share no verify \
+                 artifact gamma (methods in play: {:?})",
+                self.methods_buf.iter().map(|m| m.name()).collect::<Vec<_>>()
+            );
+        }
+        let want = Self::gamma_want(&self.gamma, &self.slots, min_headroom);
+        let gamma = Self::snap_gamma(&avail, want);
+
+        // --- 2. model block: adopt the prefetched generation (its
+        // drafts ARE this step's drafts and its RNG clones ARE the
+        // post-draft streams), or dispatch serially
+        let mut have_block = false;
+        if let Some((pbufs, pslots, pgamma)) = adopted {
+            if pgamma == gamma {
+                for (i, bs) in pslots.iter().enumerate() {
+                    if let Some(slot) = &mut self.slots[i] {
+                        slot.rng = bs.rng.clone();
+                    }
+                }
+                let old = std::mem::replace(&mut self.bufs, *pbufs);
+                if let Some(ctl) = &mut self.pipeline {
+                    ctl.park(Box::new(old));
+                    ctl.park_slots(pslots);
+                }
+                have_block = true;
+            } else {
+                // defensive: an unchanged slot set replans the same γ
+                // today, but if a future controller/headroom change ever
+                // diverges the replan from the prefetch's plan, the
+                // correct behaviour is exactly this — discard and redo
+                // serially from untouched state
+                if let Some(ctl) = &mut self.pipeline {
+                    ctl.park(pbufs);
+                    ctl.park_slots(pslots);
+                }
+            }
+        }
+        if !have_block {
+            self.dispatch_block_serial(gamma)?;
+        }
+
+        // --- temperature scaling + per-request filtering, then this
+        // step's verification uniforms
+        self.scale_and_filter(gamma);
+        self.draw_verify_uniforms(gamma);
+
+        // --- overlap window: ship the next step's model block to the
+        // dispatcher lane before running this step's verification
+        self.maybe_launch_prefetch(gamma, &avail);
+
+        // --- 3. verification (the paper's kernel, one fused call)
         let ins = VerifyInputs {
-            z_p: &self.zp_buf[..b * (gamma + 1) * v],
-            z_q: &self.zq_buf[..b * gamma * v],
-            draft: &self.draft_buf[..b * gamma],
+            z_p: &self.bufs.zp[..b * (gamma + 1) * v],
+            z_q: &self.bufs.zq[..b * gamma * v],
+            draft: &self.bufs.draft[..b * gamma],
             u_acc: &self.uacc_buf[..b * gamma],
             u_res: &self.ures_buf,
             u_bonus: &self.ubonus_buf,
@@ -713,6 +958,30 @@ impl Engine {
             &ins,
             &mut self.verify_out,
         )?;
+
+        // --- pipeline barrier verdict: the prefetch survives iff every
+        // active slot accepted all γ drafts AND emitted exactly the
+        // predicted row (native: guaranteed equal on all-accept; HLO:
+        // the bonus draw may differ in the last ulp — a miss)
+        let hit = match self.pipeline.as_ref().and_then(PipelineCtl::inflight_predicted) {
+            Some((pred, _gamma_next)) => {
+                let mut h = true;
+                for i in 0..b {
+                    if self.slots[i].is_none() {
+                        continue;
+                    }
+                    if self.verify_out.accept_len[i] as usize != gamma
+                        || self.verify_out.out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)]
+                            != pred[i * (gamma + 1)..(i + 1) * (gamma + 1)]
+                    {
+                        h = false;
+                        break;
+                    }
+                }
+                Some(h)
+            }
+            None => None,
+        };
 
         // --- 4. commit
         let mut all_accepted = true;
@@ -778,7 +1047,14 @@ impl Engine {
                     latency: slot.started.elapsed().as_secs_f64(),
                 });
                 self.stats.finished += 1;
+                self.slot_epoch += 1;
             }
+        }
+
+        // record the barrier verdict (a miss raises the prefetch's
+        // cancel flag so it abandons remaining model calls)
+        if let (Some(ctl), Some(h)) = (&mut self.pipeline, hit) {
+            ctl.note_outcome(h);
         }
 
         self.gamma.update(all_accepted);
@@ -802,8 +1078,8 @@ impl Engine {
                 Some(slot) => (slot.rng.uniform_f32(), slot.req.params.temperature),
                 None => (0.0, 1.0),
             };
-            self.u_buf[i] = u;
-            self.temp_buf[i] = t;
+            self.bufs.u[i] = u;
+            self.bufs.temp[i] = t;
         }
         let shape_bs = [b, s];
         let shape_b = [b];
@@ -812,15 +1088,15 @@ impl Engine {
             let _g = prof.scope("step/target_step");
             self.target_step.run_views_into(
                 &[
-                    TensorView::i32(&shape_bs, &self.tokens_buf),
-                    TensorView::i32(&shape_b, &self.lens_buf),
-                    TensorView::f32(&shape_b, &self.u_buf),
-                    TensorView::f32(&shape_b, &self.temp_buf),
+                    TensorView::i32(&shape_bs, &self.bufs.tokens),
+                    TensorView::i32(&shape_b, &self.bufs.lens),
+                    TensorView::f32(&shape_b, &self.bufs.u),
+                    TensorView::f32(&shape_b, &self.bufs.temp),
                 ],
-                &mut self.target_out,
+                &mut self.bufs.target_out,
             )?;
         }
-        let toks = self.target_out[0].as_i32()?;
+        let toks = self.bufs.target_out[0].as_i32()?;
         let mut emitted = 0usize;
         for i in 0..b {
             let Some(slot) = &mut self.slots[i] else { continue };
@@ -861,6 +1137,7 @@ impl Engine {
                     latency: slot.started.elapsed().as_secs_f64(),
                 });
                 self.stats.finished += 1;
+                self.slot_epoch += 1;
             }
         }
         self.stats
@@ -900,10 +1177,13 @@ impl std::fmt::Debug for Engine {
             .field("pair", &self.config.pair)
             .field("batch", &self.config.batch)
             .field("method", &self.config.method.name())
+            .field("pipeline", &self.pipeline.is_some())
             .field("active", &self.active())
             .field("pending", &self.pending())
             .finish()
     }
 }
 
-// Engine construction/decode tests need artifacts: rust/tests/it_engine.rs.
+// Engine construction/decode tests need artifacts (rust/tests/it_engine.rs)
+// or the simulated runtime (rust/tests/it_pipeline.rs, which also asserts
+// the pipelined scheduler bit-identical to this serial loop).

@@ -12,16 +12,21 @@
 //!   methods (`baseline` / `exact` / `sigmoid`) plus a pure-rust `native`
 //!   oracle backend
 //! * [`core`] — continuous-batching decode loop over the PJRT artifacts
+//! * [`pipeline`] — the pipelined decode scheduler: double-buffered step
+//!   staging and the speculative prefetch that overlaps next-step model
+//!   dispatch with CPU verification (bit-identical to the serial loop)
 //! * [`stats`] — acceptance/time accounting for the paper's tables
 
 pub mod core;
 pub mod gamma;
+pub mod pipeline;
 pub mod request;
 pub mod stats;
 pub mod verifier;
 
 pub use core::{Engine, EngineConfig, Mode};
 pub use gamma::GammaController;
+pub use pipeline::PipelineMode;
 pub use request::{
     match_stop_suffix, FinishReason, GenRequest, GenResult, SamplingParams,
 };

@@ -1,0 +1,668 @@
+//! The pipelined decode scheduler's moving parts: double-buffered step
+//! staging, the shared model-block dispatch, and the speculative
+//! prefetch control that overlaps step *N*'s CPU verification with step
+//! *N+1*'s model dispatch.
+//!
+//! ## Why this exists
+//!
+//! PR 3/4 made the verification *kernels* concurrent; the decode loop
+//! around them stayed a strict serial chain: `draft → score → verify →
+//! commit`, every phase waiting on the previous one. But the engine's
+//! verification is CPU work on the persistent
+//! [`crate::sampling::kernels::pool::WorkerPool`], while draft/score are
+//! executable dispatches — two different substrates that can genuinely
+//! run at the same time. This module overlaps them: once step N's score
+//! logits are staged, the engine **speculates that every draft of step N
+//! will be accepted**, predicts step N's full commit (the γ drafted
+//! tokens plus the bonus token, computed with the *exact* verification
+//! arithmetic so a correct prediction is bit-for-bit the verifier's
+//! output), and ships step N+1's whole model block — γ draft calls plus
+//! the score call, reading speculative post-commit state — onto the
+//! [`DispatchLane`]. The engine thread then runs step N's verification
+//! kernels as usual. At the pipeline barrier (step N's commit):
+//!
+//! * **hit** — verification accepted everything and emitted exactly the
+//!   predicted tokens: step N+1 adopts the prefetched buffers and the
+//!   advanced RNG clones, skipping its entire draft/score phase;
+//! * **miss** — any rejection, token mismatch, or slot-set change: the
+//!   prefetch is cancelled and discarded, and step N+1 dispatches
+//!   serially from untouched state.
+//!
+//! Observable state is **never** mutated speculatively — predictions
+//! live in their own buffer generation and RNG clones, and are adopted
+//! only after the barrier proves them equal to the serial outcome — so
+//! committed tokens, deltas, stats counters, and every per-slot RNG
+//! stream are bit-identical to the serial engine for any seed, hit or
+//! miss (the `it_pipeline` parity suite asserts this across methods ×
+//! seeds × batch sizes, including mid-decode cancellation).
+//!
+//! ## Workspace generations
+//!
+//! Two [`StepBuffers`] generations ping-pong: the engine verifies out of
+//! the *current* generation while the lane's job fills the *spare* one.
+//! Ownership transfers wholesale (boxed moves through the job channel),
+//! so there is no sharing to synchronise; a generation is reused every
+//! other step, and the prediction-row / block-slot scratch round-trips
+//! through [`PipelineCtl`] the same way. Steady-state prefetches
+//! therefore allocate nothing proportional to γ·V — what remains per
+//! launch is O(1) plumbing (the result channel and the boxed lane
+//! job).
+//!
+//! ## The dispatcher-lane invariant
+//!
+//! Verify regions are only ever dispatched by the engine thread; the
+//! lane's job runs executable calls against buffers it owns and never
+//! touches the worker pool. The pool's single-dispatcher invariant
+//! therefore holds with the pipeline on, and the two substrates overlap
+//! freely. See `kernels/pool.rs` for the lane's contract.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{HostTensor, LoadedExecutable, TensorView};
+use crate::sampling::kernels::pool::DispatchLane;
+use crate::util::rng::Pcg32;
+use crate::util::timer::Profiler;
+
+use super::core::Mode;
+use super::verifier::Backend;
+
+/// Whether the engine overlaps model dispatch with CPU verification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// pipeline whenever the engine decodes speculatively
+    On,
+    /// strict serial decode loop (the pre-PR-5 behaviour)
+    Off,
+    /// pipeline on the native verify backend only (the default): the
+    /// HLO backend's bonus draw may differ from the native prediction
+    /// in the last ulp, which the barrier treats as a miss — correct,
+    /// but a wasted prefetch, so `auto` keeps HLO serial
+    Auto,
+}
+
+impl PipelineMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "on" => Some(PipelineMode::On),
+            "off" => Some(PipelineMode::Off),
+            "auto" => Some(PipelineMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::On => "on",
+            PipelineMode::Off => "off",
+            PipelineMode::Auto => "auto",
+        }
+    }
+
+    /// Resolve against the engine's decode mode and verify backend.
+    pub fn enabled(self, mode: Mode, backend: Backend) -> bool {
+        match self {
+            PipelineMode::Off => false,
+            PipelineMode::On => mode == Mode::Speculative,
+            PipelineMode::Auto => mode == Mode::Speculative && backend == Backend::Native,
+        }
+    }
+}
+
+/// One generation of per-step staging: model inputs, staged model
+/// outputs, and the verification logit matrices for one speculative
+/// block. The engine owns one *current* generation; the pipeline
+/// ping-pongs a second *spare* through the dispatcher lane. Buffers are
+/// sized at construction for the engine's fixed `(B, S, GMAX, V)` —
+/// those dimensions are engine-constant, which is what lets a parked
+/// generation be reused verbatim ([`PipelineCtl::take_spare`]
+/// debug-asserts it) — and are refilled in place every block.
+#[derive(Debug)]
+pub struct StepBuffers {
+    /// model token input, `B · S` (row i = slot i's context + drafts)
+    pub tokens: Vec<i32>,
+    /// model length input, `B`
+    pub lens: Vec<i32>,
+    /// per-call sampling uniforms, `B`
+    pub u: Vec<f32>,
+    /// per-call sampling temperatures, `B`
+    pub temp: Vec<f32>,
+    /// draft logits staging, `B · GMAX · V`
+    pub zq: Vec<f32>,
+    /// target logits staging, `B · (GMAX+1) · V`
+    pub zp: Vec<f32>,
+    /// drafted token ids, `B · GMAX`
+    pub draft: Vec<i32>,
+    /// draft_step output staging (token + logits tensors)
+    pub draft_out: Vec<HostTensor>,
+    /// target_score / target_step output staging
+    pub target_out: Vec<HostTensor>,
+}
+
+impl StepBuffers {
+    pub fn new(b: usize, s: usize, gmax: usize, v: usize) -> Self {
+        StepBuffers {
+            tokens: vec![0; b * s],
+            lens: vec![1; b],
+            u: vec![0.0; b],
+            temp: vec![0.0; b],
+            zq: vec![0.0; b * gmax * v],
+            zp: vec![0.0; b * (gmax + 1) * v],
+            draft: vec![0; b * gmax],
+            draft_out: Vec::new(),
+            target_out: Vec::new(),
+        }
+    }
+}
+
+/// Problem dimensions threaded through a model block.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockDims {
+    pub b: usize,
+    pub s: usize,
+    pub v: usize,
+    pub gmax: usize,
+}
+
+/// Per-slot inputs to one model block. The serial path builds these
+/// views of live slots; the prefetch path builds them from speculative
+/// post-commit state with **cloned** RNGs (adopted into the live slots
+/// only on a barrier hit).
+#[derive(Debug)]
+pub struct BlockSlot {
+    pub active: bool,
+    /// committed (or speculatively committed) token count at block start
+    pub len: usize,
+    pub rng: Pcg32,
+    /// effective draft temperature for this slot
+    pub draft_temp: f32,
+}
+
+impl BlockSlot {
+    pub fn inactive() -> Self {
+        BlockSlot {
+            active: false,
+            len: 1,
+            rng: Pcg32::seeded(0),
+            draft_temp: 1.0,
+        }
+    }
+}
+
+/// Run one speculative block's model dispatch — γ sequential
+/// `draft_step` calls and one `target_score` call — staging the draft
+/// tokens, the raw draft logits (`zq`), and the sliced raw score window
+/// (`zp`) into `bufs`. Token rows of `bufs.tokens` must be pre-filled
+/// with each slot's context (PAD rows for inactive slots); drafted
+/// tokens are appended in place as they are sampled, so the model sees
+/// exactly the token stream the serial engine would feed it.
+///
+/// This is the one implementation both the serial path and the
+/// prefetch job execute — shared by construction so the two cannot
+/// drift. Temperature scaling and top-k/top-p filtering of the staged
+/// logits deliberately stay on the engine thread (one code path, after
+/// adoption), keeping this function a pure function of
+/// `(slot contexts, RNG states, executables)`.
+///
+/// Returns `Ok(false)` when `cancel` was raised between model calls (a
+/// barrier miss abandoning the block early); the buffers then hold a
+/// partial block and must be discarded by the caller.
+///
+/// `prefetch` selects the profiler scopes: a speculatively-dispatched
+/// block records under `prefetch/draft` / `prefetch/score` instead of
+/// `step/draft` / `step/score`, so the serial scopes keep measuring
+/// exactly the engine thread's critical path (a missed prefetch plus
+/// its serial redo would otherwise double-count; see `docs/PERF.md`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_model_block(
+    draft_step: &LoadedExecutable,
+    target_score: &LoadedExecutable,
+    profiler: &Profiler,
+    bufs: &mut StepBuffers,
+    slots: &mut [BlockSlot],
+    dims: BlockDims,
+    gamma: usize,
+    prefetch: bool,
+    cancel: Option<&AtomicBool>,
+) -> Result<bool> {
+    let BlockDims { b, s, v, gmax } = dims;
+    debug_assert_eq!(slots.len(), b);
+    let shape_bs = [b, s];
+    let shape_b = [b];
+    let cancelled = || cancel.is_some_and(|c| c.load(Ordering::Relaxed));
+    let (draft_scope, score_scope) = if prefetch {
+        ("prefetch/draft", "prefetch/score")
+    } else {
+        ("step/draft", "step/score")
+    };
+
+    // --- 1. draft phase: γ sequential draft_step calls
+    {
+        let _g = profiler.scope(draft_scope);
+        for c in 0..gamma {
+            if cancelled() {
+                return Ok(false);
+            }
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if slot.active {
+                    bufs.lens[i] = (slot.len + c) as i32;
+                    bufs.u[i] = slot.rng.uniform_f32();
+                    bufs.temp[i] = slot.draft_temp;
+                } else {
+                    bufs.lens[i] = 1;
+                    bufs.u[i] = 0.0;
+                    bufs.temp[i] = 1.0;
+                }
+            }
+            draft_step.run_views_into(
+                &[
+                    TensorView::i32(&shape_bs, &bufs.tokens),
+                    TensorView::i32(&shape_b, &bufs.lens),
+                    TensorView::f32(&shape_b, &bufs.u),
+                    TensorView::f32(&shape_b, &bufs.temp),
+                ],
+                &mut bufs.draft_out,
+            )?;
+            let toks = bufs.draft_out[0].as_i32()?;
+            let logits = bufs.draft_out[1].as_f32()?;
+            for (i, slot) in slots.iter().enumerate() {
+                bufs.draft[i * gamma + c] = toks[i];
+                if slot.active {
+                    bufs.tokens[i * s + slot.len + c] = toks[i];
+                }
+                bufs.zq[(i * gamma + c) * v..(i * gamma + c + 1) * v]
+                    .copy_from_slice(&logits[i * v..(i + 1) * v]);
+            }
+        }
+    }
+
+    // --- 2. target scoring: one call, slice the last γ+1 window rows
+    if cancelled() {
+        return Ok(false);
+    }
+    {
+        let _g = profiler.scope(score_scope);
+        for (i, slot) in slots.iter().enumerate() {
+            bufs.lens[i] = if slot.active {
+                (slot.len + gamma) as i32
+            } else {
+                1
+            };
+        }
+        target_score.run_views_into(
+            &[
+                TensorView::i32(&shape_bs, &bufs.tokens),
+                TensorView::i32(&shape_b, &bufs.lens),
+            ],
+            &mut bufs.target_out,
+        )?;
+        let win = bufs.target_out[0].as_f32()?; // (B, GMAX+1, V)
+        let w = gmax + 1;
+        for i in 0..b {
+            for j in 0..=gamma {
+                let src = (i * w + (w - (gamma + 1) + j)) * v;
+                let dst = (i * (gamma + 1) + j) * v;
+                bufs.zp[dst..dst + v].copy_from_slice(&win[src..src + v]);
+            }
+        }
+    }
+    Ok(true)
+}
+
+/// What the lane's prefetch job sends back at the barrier.
+pub(crate) struct PrefetchResult {
+    pub bufs: Box<StepBuffers>,
+    pub slots: Vec<BlockSlot>,
+    /// `Ok(true)` = full block staged; `Ok(false)` = cancelled early;
+    /// `Err` = a model call failed (the serial redo will resurface it)
+    pub outcome: Result<bool>,
+}
+
+/// A prefetch in flight on the dispatcher lane.
+pub(crate) struct InFlight {
+    rx: Receiver<PrefetchResult>,
+    cancel: Arc<AtomicBool>,
+    /// slot-set epoch at launch: any admit/cancel/finish invalidates
+    epoch: u64,
+    /// γ the block was dispatched with
+    pub gamma: usize,
+    /// predicted commit rows, `B · (γ+1)` (active rows meaningful)
+    pub predicted: Vec<i32>,
+    /// barrier verdict, set by the launching step's commit
+    resolved: Option<bool>,
+}
+
+/// Pipeline control state owned by the engine (present only when the
+/// pipeline is enabled): the dispatcher lane, the spare buffer
+/// generation, and the in-flight prefetch.
+pub(crate) struct PipelineCtl {
+    lane: DispatchLane,
+    spare: Option<Box<StepBuffers>>,
+    inflight: Option<InFlight>,
+    /// a discarded prefetch whose lane job had not finished when the
+    /// barrier resolved: the serial redo must not wait for it, so it
+    /// parks here (cancel flag raised) and its buffers are reclaimed —
+    /// without blocking — before the next launch
+    draining: Option<InFlight>,
+    /// recycled prediction-row scratch (`B · (γ+1)`), round-tripped
+    /// through [`InFlight`] so steady-state launches allocate nothing
+    predicted_spare: Vec<i32>,
+    /// recycled block-slot scratch, round-tripped through the job
+    slots_spare: Vec<BlockSlot>,
+    /// prefetches launched / adopted (observability + tests)
+    pub launched: u64,
+    pub hits: u64,
+}
+
+impl Drop for PipelineCtl {
+    fn drop(&mut self) {
+        // engine teardown with work in flight: raise the cancel flags
+        // so the lane job abandons its remaining model calls and the
+        // lane's own Drop (which joins after the queue drains) returns
+        // after at most one in-progress call instead of a whole block
+        self.cancel_inflight();
+        if let Some(d) = &self.draining {
+            d.cancel.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+impl PipelineCtl {
+    pub fn new() -> Self {
+        PipelineCtl {
+            lane: DispatchLane::new(),
+            spare: None,
+            inflight: None,
+            draining: None,
+            predicted_spare: Vec::new(),
+            slots_spare: Vec::new(),
+            launched: 0,
+            hits: 0,
+        }
+    }
+
+    /// Take the prediction-row scratch (cleared; returned via
+    /// [`PipelineCtl::recycle_predicted`] or a launch + barrier
+    /// round-trip).
+    pub fn take_predicted(&mut self) -> Vec<i32> {
+        let mut p = std::mem::take(&mut self.predicted_spare);
+        p.clear();
+        p
+    }
+
+    /// Hand back prediction scratch from an aborted launch attempt.
+    pub fn recycle_predicted(&mut self, predicted: Vec<i32>) {
+        self.predicted_spare = predicted;
+    }
+
+    /// Take the block-slot scratch (cleared; round-trips through the
+    /// lane job and back via [`PipelineCtl::resolve`] /
+    /// [`PipelineCtl::park_slots`]).
+    pub fn take_slots(&mut self) -> Vec<BlockSlot> {
+        let mut s = std::mem::take(&mut self.slots_spare);
+        s.clear();
+        s
+    }
+
+    /// Hand back the block-slot scratch after a hit adoption.
+    pub fn park_slots(&mut self, slots: Vec<BlockSlot>) {
+        self.slots_spare = slots;
+    }
+
+    pub fn has_inflight(&self) -> bool {
+        self.inflight.is_some()
+    }
+
+    /// Predicted commit rows of the in-flight prefetch (barrier compare).
+    pub fn inflight_predicted(&self) -> Option<(&[i32], usize)> {
+        self.inflight
+            .as_ref()
+            .map(|inf| (inf.predicted.as_slice(), inf.gamma))
+    }
+
+    /// The spare buffer generation (allocating on first use / after a
+    /// lost generation). Dimensions are engine-constant, so a parked
+    /// generation is reused verbatim.
+    pub fn take_spare(&mut self, b: usize, s: usize, gmax: usize, v: usize) -> Box<StepBuffers> {
+        match self.spare.take() {
+            Some(bufs) => {
+                debug_assert_eq!(bufs.tokens.len(), b * s, "engine dims are constant");
+                debug_assert_eq!(bufs.zp.len(), b * (gmax + 1) * v);
+                bufs
+            }
+            None => Box::new(StepBuffers::new(b, s, gmax, v)),
+        }
+    }
+
+    /// Park a buffer generation for the next prefetch.
+    pub fn park(&mut self, bufs: Box<StepBuffers>) {
+        self.spare = Some(bufs);
+    }
+
+    /// Ship a speculative model block onto the dispatcher lane.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch(
+        &mut self,
+        draft_step: Arc<LoadedExecutable>,
+        target_score: Arc<LoadedExecutable>,
+        profiler: Arc<Profiler>,
+        mut bufs: Box<StepBuffers>,
+        mut slots: Vec<BlockSlot>,
+        dims: BlockDims,
+        gamma: usize,
+        predicted: Vec<i32>,
+        epoch: u64,
+    ) {
+        debug_assert!(self.inflight.is_none(), "one prefetch in flight at a time");
+        let cancel = Arc::new(AtomicBool::new(false));
+        let cancel_job = cancel.clone();
+        let (tx, rx) = channel::<PrefetchResult>();
+        self.lane.submit(Box::new(move || {
+            let outcome = run_model_block(
+                &draft_step,
+                &target_score,
+                &profiler,
+                &mut bufs,
+                &mut slots,
+                dims,
+                gamma,
+                true,
+                Some(&cancel_job),
+            );
+            let _ = tx.send(PrefetchResult {
+                bufs,
+                slots,
+                outcome,
+            });
+        }));
+        self.inflight = Some(InFlight {
+            rx,
+            cancel,
+            epoch,
+            gamma,
+            predicted,
+            resolved: None,
+        });
+        self.launched += 1;
+    }
+
+    /// Record the barrier verdict for the in-flight prefetch (called by
+    /// the launching step's commit). A miss raises the cancel flag so
+    /// the job abandons remaining model calls.
+    pub fn note_outcome(&mut self, hit: bool) {
+        if let Some(inf) = &mut self.inflight {
+            inf.resolved = Some(hit);
+            if !hit {
+                inf.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Raise the cancel flag on any in-flight prefetch (slot-set
+    /// changes between steps; the epoch check would discard it anyway —
+    /// this just stops it burning model time).
+    pub fn cancel_inflight(&self) {
+        if let Some(inf) = &self.inflight {
+            inf.cancel.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Barrier reclaim at the next step's start. For a recorded **hit**
+    /// with an unchanged slot set, blocks until the lane job hands its
+    /// buffers back (the step needs that block anyway — the wait *is*
+    /// the tail of the overlap) and returns them for adoption iff the
+    /// block completed cleanly. For a **miss** (or stale epoch, or
+    /// unresolved error path), raises the cancel flag and reclaims
+    /// **without blocking**: a still-running job parks in the draining
+    /// slot so the serial redo starts immediately — misses never wait
+    /// on the lane.
+    pub fn resolve(
+        &mut self,
+        current_epoch: u64,
+    ) -> Option<(Box<StepBuffers>, Vec<BlockSlot>, usize)> {
+        let inf = self.inflight.take()?;
+        let adopt = inf.resolved == Some(true) && inf.epoch == current_epoch;
+        if !adopt {
+            inf.cancel.store(true, Ordering::Relaxed);
+            self.stash_draining(inf);
+            return None;
+        }
+        let InFlight {
+            rx,
+            gamma,
+            predicted,
+            ..
+        } = inf;
+        self.predicted_spare = predicted;
+        match rx.recv() {
+            Ok(r) => {
+                if matches!(r.outcome, Ok(true)) {
+                    // counted at the adoption point (not the verdict),
+                    // so a verdict-hit discarded by a slot-set change
+                    // between steps never inflates the hit rate
+                    self.hits += 1;
+                    Some((r.bufs, r.slots, gamma))
+                } else {
+                    // model error / cancelled: the serial redo will
+                    // resurface any real failure
+                    self.spare = Some(r.bufs);
+                    self.slots_spare = r.slots;
+                    None
+                }
+            }
+            // the job panicked: the lane survives, this generation's
+            // buffers are lost (reallocated on the next launch)
+            Err(_) => None,
+        }
+    }
+
+    /// Move a discarded in-flight prefetch to the draining slot,
+    /// reclaiming its buffers right away when the job already finished.
+    fn stash_draining(&mut self, inf: InFlight) {
+        debug_assert!(self.draining.is_none(), "at most one draining prefetch");
+        match inf.rx.try_recv() {
+            Ok(r) => {
+                self.predicted_spare = inf.predicted;
+                self.spare = Some(r.bufs);
+                self.slots_spare = r.slots;
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => self.draining = Some(inf),
+            // job panicked: buffers lost, scratch still reclaimable
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                self.predicted_spare = inf.predicted;
+            }
+        }
+    }
+
+    /// Reclaim the draining prefetch's buffers if its job has finished;
+    /// returns whether the lane is free for a new launch (a launch
+    /// while the old job still runs would queue behind it and tie up
+    /// both buffer generations, so the caller skips that step instead).
+    pub fn lane_free(&mut self) -> bool {
+        let Some(d) = self.draining.take() else {
+            return true;
+        };
+        match d.rx.try_recv() {
+            Ok(r) => {
+                self.predicted_spare = d.predicted;
+                self.spare = Some(r.bufs);
+                self.slots_spare = r.slots;
+                true
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => {
+                self.draining = Some(d);
+                false
+            }
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                self.predicted_spare = d.predicted;
+                true
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for PipelineCtl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PipelineCtl")
+            .field("inflight", &self.inflight.is_some())
+            .field("launched", &self.launched)
+            .field("hits", &self.hits)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_mode_parse_and_resolution() {
+        assert_eq!(PipelineMode::parse("on"), Some(PipelineMode::On));
+        assert_eq!(PipelineMode::parse("off"), Some(PipelineMode::Off));
+        assert_eq!(PipelineMode::parse("auto"), Some(PipelineMode::Auto));
+        assert_eq!(PipelineMode::parse("x"), None);
+        assert_eq!(PipelineMode::Auto.name(), "auto");
+
+        assert!(PipelineMode::On.enabled(Mode::Speculative, Backend::Hlo));
+        assert!(PipelineMode::On.enabled(Mode::Speculative, Backend::Native));
+        assert!(!PipelineMode::On.enabled(Mode::Autoregressive, Backend::Native));
+        assert!(!PipelineMode::Off.enabled(Mode::Speculative, Backend::Native));
+        assert!(PipelineMode::Auto.enabled(Mode::Speculative, Backend::Native));
+        assert!(!PipelineMode::Auto.enabled(Mode::Speculative, Backend::Hlo));
+    }
+
+    #[test]
+    fn step_buffers_sized_for_block_shape() {
+        let b = StepBuffers::new(2, 8, 3, 16);
+        assert_eq!(b.tokens.len(), 16);
+        assert_eq!(b.zq.len(), 2 * 3 * 16);
+        assert_eq!(b.zp.len(), 2 * 4 * 16);
+        assert_eq!(b.draft.len(), 6);
+    }
+
+    #[test]
+    fn ctl_spare_ping_pongs_and_reallocates_when_lost() {
+        let mut ctl = PipelineCtl::new();
+        let a = ctl.take_spare(1, 8, 2, 4);
+        let ptr = a.tokens.as_ptr();
+        ctl.park(a);
+        let b = ctl.take_spare(1, 8, 2, 4);
+        assert_eq!(b.tokens.as_ptr(), ptr, "parked generation is reused");
+        // not parked back: the next take allocates fresh
+        drop(b);
+        let c = ctl.take_spare(1, 8, 2, 4);
+        assert_eq!(c.tokens.len(), 8);
+    }
+
+    #[test]
+    fn resolve_without_inflight_is_none() {
+        let mut ctl = PipelineCtl::new();
+        assert!(ctl.resolve(0).is_none());
+        ctl.note_outcome(true); // no-op without an in-flight prefetch
+        assert!(!ctl.has_inflight());
+        assert!(ctl.lane_free(), "nothing draining on a fresh ctl");
+    }
+}

@@ -1,20 +1,28 @@
 //! Verification backends.
 //!
 //! [`Backend::Hlo`] runs the fused AOT artifact for each method present
-//! in the batch (one PJRT call per distinct method per decode step — the
-//! paper's kernel path), staging outputs into a verifier-owned reusable
-//! buffer; [`Backend::Native`] runs the segment-parallel kernel layer
-//! ([`crate::sampling::kernels`]): slot-parallel with per-row method
-//! dispatch, zero steady-state allocation via the verifier-owned
-//! [`VerifyWorkspace`], and bit-identical to the scalar oracle used as
-//! the cross-check in integration tests.
+//! in the batch — the paper's kernel path. A heterogeneous batch needs
+//! one artifact execution per **distinct** method; those executions are
+//! independent (each consumes the same borrowed inputs and fills its
+//! own staging generation), so they run as a **parallel slot-level
+//! schedule** on the workspace's worker pool instead of the old serial
+//! `for` loop: each pool lane executes one method group, and the rows
+//! each method owns are gathered into the caller's [`VerifyOutput`]
+//! afterwards in deterministic first-occurrence order. A single-method
+//! batch (the common case) degenerates to one inline call — no pool
+//! region, no workers spawned. [`Backend::Native`] runs the
+//! segment-parallel kernel layer ([`crate::sampling::kernels`]):
+//! slot-parallel with per-row method dispatch, zero steady-state
+//! allocation via the verifier-owned [`VerifyWorkspace`], and
+//! bit-identical to the scalar oracle used as the cross-check in
+//! integration tests.
 //!
 //! The verifier owns the workspace's persistent worker pool: workers
 //! spawn lazily on the first parallel verify region (at most once per
 //! engine) and are parked, reused by every subsequent decode step, and
 //! joined when the verifier drops. A verifier that never runs a
-//! parallel region — HLO backend, autoregressive mode, small matrices —
-//! never spawns any.
+//! parallel region — single-method HLO batches, autoregressive mode,
+//! small matrices — never spawns any.
 //!
 //! ## Worked example
 //!
@@ -54,8 +62,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{HostTensor, Runtime, TensorView};
-use crate::sampling::kernels::{self, KernelConfig, VerifyWorkspace};
+use crate::runtime::{HostTensor, LoadedExecutable, Runtime, TensorView};
+use crate::sampling::kernels::{self, pool, KernelConfig, VerifyWorkspace};
 use crate::sampling::Method;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,9 +119,22 @@ fn distinct_methods(methods: &[Method]) -> Vec<Method> {
     out
 }
 
+/// One method group of a parallel HLO dispatch: the group's executable,
+/// its α/β constants (sigmoid methods), its output staging generation,
+/// and the error slot its pool task reports through. Built per step
+/// over borrows of the verifier-owned staging generations, executed as
+/// one pool task each, then drained serially for the row gather.
+struct GroupRun<'a> {
+    exe: Arc<LoadedExecutable>,
+    ab: Option<[f32; 2]>,
+    out: &'a mut Vec<HostTensor>,
+    err: Option<anyhow::Error>,
+}
+
 /// Method + backend dispatcher, loading per-γ executables lazily. Owns
 /// the kernel workspace (buffers + persistent worker pool) for the
-/// native backend and the output staging buffer for the HLO backend.
+/// native backend and the per-method-group output staging generations
+/// for the HLO backend.
 pub struct Verifier {
     runtime: Arc<Runtime>,
     pub method: Method,
@@ -122,8 +143,10 @@ pub struct Verifier {
     vocab: usize,
     ws: VerifyWorkspace,
     /// reusable HLO artifact output staging (accept + tokens tensors),
-    /// refilled in place each dispatch
-    hlo_out: Vec<HostTensor>,
+    /// one generation per distinct method in the step's batch, refilled
+    /// in place each dispatch — generation count grows to the
+    /// high-water distinct-method count and is then stable
+    hlo_out: Vec<Vec<HostTensor>>,
 }
 
 impl Verifier {
@@ -242,6 +265,9 @@ impl Verifier {
                     .iter()
                     .map(|m| self.runtime.load_verify(m.name(), b, gamma, v))
                     .collect::<Result<Vec<_>>>()?;
+                while self.hlo_out.len() < distinct.len() {
+                    self.hlo_out.push(Vec::new());
+                }
 
                 let started = Instant::now();
                 let _scope = self.runtime.profiler.scope("verify");
@@ -250,22 +276,54 @@ impl Verifier {
                 let shape_g = [b, gamma];
                 let shape_b = [b];
                 let shape_ab = [2usize];
-                for (m, exe) in distinct.iter().zip(&exes) {
-                    let mut inputs = vec![
-                        TensorView::f32(&shape_p, ins.z_p),
-                        TensorView::f32(&shape_q, ins.z_q),
-                        TensorView::i32(&shape_g, ins.draft),
-                        TensorView::f32(&shape_g, ins.u_acc),
-                        TensorView::f32(&shape_b, ins.u_res),
-                        TensorView::f32(&shape_b, ins.u_bonus),
-                    ];
-                    let ab = m.alpha_beta().map(|(alpha, beta)| [alpha, beta]);
-                    if let Some(pair) = &ab {
-                        inputs.push(TensorView::f32(&shape_ab, pair));
+
+                // parallel slot-level schedule: every distinct method's
+                // artifact executes as its own pool task against its own
+                // staging generation (disjoint &mut via the span
+                // partition, unit = one group). A single-method batch
+                // degenerates to one inline call — no pool region.
+                let mut groups: Vec<GroupRun<'_>> = distinct
+                    .iter()
+                    .zip(&exes)
+                    .zip(self.hlo_out.iter_mut())
+                    .map(|((m, exe), staging)| GroupRun {
+                        exe: exe.clone(),
+                        ab: m.alpha_beta().map(|(alpha, beta)| [alpha, beta]),
+                        out: staging,
+                        err: None,
+                    })
+                    .collect();
+                let lanes = self.ws.cfg.threads.min(groups.len());
+                pool::for_each_span(self.ws.pool(), lanes, &mut groups, 1, |_, span| {
+                    for g in span.iter_mut() {
+                        let mut inputs = vec![
+                            TensorView::f32(&shape_p, ins.z_p),
+                            TensorView::f32(&shape_q, ins.z_q),
+                            TensorView::i32(&shape_g, ins.draft),
+                            TensorView::f32(&shape_g, ins.u_acc),
+                            TensorView::f32(&shape_b, ins.u_res),
+                            TensorView::f32(&shape_b, ins.u_bonus),
+                        ];
+                        if let Some(pair) = &g.ab {
+                            inputs.push(TensorView::f32(&shape_ab, pair));
+                        }
+                        if let Err(e) = g.exe.run_views_into(&inputs, g.out) {
+                            g.err = Some(e);
+                        }
                     }
-                    exe.run_views_into(&inputs, &mut self.hlo_out)?;
-                    let accept = self.hlo_out[0].as_i32()?;
-                    let tokens = self.hlo_out[1].as_i32()?;
+                });
+                for g in groups.iter_mut() {
+                    if let Some(e) = g.err.take() {
+                        return Err(e);
+                    }
+                }
+                drop(groups);
+
+                // deterministic gather: each row takes its own method's
+                // group output, in first-occurrence method order
+                for (gi, m) in distinct.iter().enumerate() {
+                    let accept = self.hlo_out[gi][0].as_i32()?;
+                    let tokens = self.hlo_out[gi][1].as_i32()?;
                     for row in 0..b {
                         if methods[row] == *m {
                             out.accept_len[row] = accept[row];

@@ -36,6 +36,19 @@
 //! Verification dispatches a per-slot [`sampling::Method`], which is
 //! what lets per-request method overrides run on any batch size.
 //!
+//! ## Pipelined decode scheduler
+//!
+//! The decode loop itself is pipelined ([`engine::pipeline`],
+//! `--pipeline on|off|auto`): step N's CPU verification runs
+//! concurrently with step N+1's draft/score model dispatch on a
+//! dedicated dispatcher lane, via all-accept commit speculation that is
+//! adopted only when the barrier proves it equal to the serial outcome
+//! — so outputs (tokens, deltas, stats, RNG streams) stay
+//! **bit-identical** to the serial loop for any seed. A deterministic
+//! in-process model simulator ([`runtime::Runtime::simulated`],
+//! `SPECD_SIM=1`) runs the whole engine without PJRT, which is what the
+//! pipelined-vs-serial parity suite and decode benches are built on.
+//!
 //! `docs/ARCHITECTURE.md` walks the whole decode path end-to-end and
 //! maps the paper's §3 onto these modules; `docs/PERF.md` documents the
 //! benchmark methodology and the tracked perf trajectory.

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use specd::engine::{Backend, Engine, EngineConfig, Mode, SamplingParams};
+use specd::engine::{Backend, Engine, EngineConfig, Mode, PipelineMode, SamplingParams};
 use specd::runtime::Runtime;
 use specd::sampling::Method;
 use specd::server::{Server, ServerConfig};
@@ -81,7 +81,11 @@ fn help_text() -> &'static str {
      \x20 v1 one-shot lines (no \"v\" key) still round-trip unchanged.\n\
      \n\
      common options: --method baseline|exact|sigmoid, --backend hlo|native,\n\
-     --pair base|large, --batch N, --alpha/--beta, --n <examples>, --seed"
+     --pair base|large, --batch N, --alpha/--beta, --n <examples>, --seed,\n\
+     --pipeline on|off|auto (overlap next-step model dispatch with CPU\n\
+     verification; auto = on for --backend native; bit-identical outputs);\n\
+     SPECD_SIM=1 serves the artifact-free simulated model pair (--pair sim\n\
+     --backend native)"
 }
 
 fn parse_method(p: &specd::util::cli::Parsed) -> Result<Method> {
@@ -111,6 +115,11 @@ fn engine_opts(cmd: Command) -> Command {
         .opt("beta", "1000", "sigmoid beta")
         .opt("gamma", "5", "initial draft length")
         .flag("self-draft", "draft via target-layer skipping (self-speculative)")
+        .opt(
+            "pipeline",
+            "auto",
+            "pipelined decode scheduler (on|off|auto; auto = native backend only)",
+        )
         .opt("seed", "0", "rng seed")
 }
 
@@ -161,6 +170,8 @@ fn build_engine(p: &specd::util::cli::Parsed, mode: Mode) -> Result<(Engine, Tok
         gamma_init: p.usize("gamma").map_err(|e| anyhow!(e))?,
         gamma_pinned: false,
         self_draft: p.flag("self-draft"),
+        pipeline: PipelineMode::parse(p.str("pipeline"))
+            .ok_or_else(|| anyhow!("bad --pipeline (want on|off|auto)"))?,
         seed: p.u64("seed").map_err(|e| anyhow!(e))?,
     };
     Ok((Engine::new(runtime, config)?, tokenizer))

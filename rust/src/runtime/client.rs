@@ -11,6 +11,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::manifest::{ArtifactEntry, Manifest};
+use super::sim::{SimExec, SimKind, SimSpec};
 use super::tensor::{HostTensor, TensorView};
 use crate::util::timer::Profiler;
 
@@ -47,10 +48,20 @@ impl MemoryGauge {
     }
 }
 
+/// How an executable actually runs: a compiled PJRT artifact, or the
+/// deterministic in-process simulator ([`crate::runtime::sim`]) when the
+/// runtime was opened with [`Runtime::simulated`]. The engine never sees
+/// the difference — both sit behind [`LoadedExecutable::run_views_into`]
+/// with identical shape validation and scope accounting.
+enum ExecBackend {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Sim(SimExec),
+}
+
 /// A compiled artifact plus its manifest record.
 pub struct LoadedExecutable {
     pub entry: ArtifactEntry,
-    exe: xla::PjRtLoadedExecutable,
+    exec: ExecBackend,
     profiler: Arc<Profiler>,
     gauge: Arc<MemoryGauge>,
 }
@@ -112,24 +123,31 @@ impl LoadedExecutable {
         self.gauge.alloc(in_bytes);
 
         let started = Instant::now();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(TensorView::to_literal)
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.entry.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?
-            .to_tuple()
-            .context("untupling result")?;
-        outputs.truncate(tuple.len());
-        for (i, lit) in tuple.iter().enumerate() {
-            match outputs.get_mut(i) {
-                Some(slot) => slot.copy_from_literal(lit)?,
-                None => outputs.push(HostTensor::from_literal(lit)?),
+        match &self.exec {
+            ExecBackend::Pjrt(exe) => {
+                let literals: Vec<xla::Literal> = inputs
+                    .iter()
+                    .map(TensorView::to_literal)
+                    .collect::<Result<_>>()?;
+                let result = exe
+                    .execute::<xla::Literal>(&literals)
+                    .with_context(|| format!("executing {}", self.entry.name))?;
+                let tuple = result[0][0]
+                    .to_literal_sync()
+                    .context("fetching result literal")?
+                    .to_tuple()
+                    .context("untupling result")?;
+                outputs.truncate(tuple.len());
+                for (i, lit) in tuple.iter().enumerate() {
+                    match outputs.get_mut(i) {
+                        Some(slot) => slot.copy_from_literal(lit)?,
+                        None => outputs.push(HostTensor::from_literal(lit)?),
+                    }
+                }
+            }
+            ExecBackend::Sim(sim) => {
+                sim.run(inputs, outputs)
+                    .with_context(|| format!("simulating {}", self.entry.name))?;
             }
         }
         let elapsed = started.elapsed();
@@ -148,12 +166,18 @@ impl LoadedExecutable {
     }
 }
 
-/// PJRT CPU runtime with an executable cache keyed by artifact name.
+/// Artifact runtime with an executable cache keyed by artifact name:
+/// either a PJRT CPU client over the AOT HLO artifacts, or the
+/// in-process deterministic simulator ([`Runtime::simulated`]) serving
+/// the same executable contracts with no artifacts at all.
 pub struct Runtime {
     pub manifest: Manifest,
     pub profiler: Arc<Profiler>,
     pub gauge: Arc<MemoryGauge>,
-    client: xla::PjRtClient,
+    /// `None` when this runtime simulates its models
+    client: Option<xla::PjRtClient>,
+    /// `Some` when this runtime simulates its models
+    sim: Option<SimSpec>,
     cache: Mutex<HashMap<String, Arc<LoadedExecutable>>>,
 }
 
@@ -173,14 +197,50 @@ impl Runtime {
             manifest,
             profiler: Arc::new(Profiler::new()),
             gauge: Arc::new(MemoryGauge::default()),
-            client,
+            client: Some(client),
+            sim: None,
             cache: Mutex::new(HashMap::new()),
         })
     }
 
-    /// Default location (`artifacts/` or `$SPECD_ARTIFACTS`).
+    /// Build a runtime over the deterministic model simulator: a
+    /// synthetic manifest (model pair `"sim"`) and [`SimExec`]
+    /// executables behind the usual [`LoadedExecutable`] surface. No
+    /// artifacts, no PJRT — the decode loop, the native verification
+    /// kernels, and the pipelined scheduler all run end-to-end on it
+    /// (the verify HLO path does not: pair it with `Backend::Native`).
+    pub fn simulated(spec: SimSpec) -> Self {
+        let manifest =
+            Manifest::synthetic("sim", spec.vocab, spec.seq_len, spec.gmax, &spec.batches);
+        crate::info!(
+            "runtime: simulated models v={} s={} gmax={}",
+            spec.vocab,
+            spec.seq_len,
+            spec.gmax
+        );
+        Runtime {
+            manifest,
+            profiler: Arc::new(Profiler::new()),
+            gauge: Arc::new(MemoryGauge::default()),
+            client: None,
+            sim: Some(spec),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Default location (`artifacts/` or `$SPECD_ARTIFACTS`), or the
+    /// simulated runtime when `SPECD_SIM=1` (model pair `"sim"`,
+    /// native-backend verification).
     pub fn open_default() -> Result<Self> {
+        if std::env::var("SPECD_SIM").is_ok_and(|v| v == "1" || v == "true") {
+            return Ok(Self::simulated(SimSpec::from_env()));
+        }
         Self::open(&crate::artifacts_dir())
+    }
+
+    /// Whether this runtime serves simulated models.
+    pub fn is_simulated(&self) -> bool {
+        self.sim.is_some()
     }
 
     /// Load (compile) an artifact by name, with caching.
@@ -189,17 +249,33 @@ impl Runtime {
             return Ok(exe.clone());
         }
         let entry = self.manifest.by_name(name)?.clone();
-        let _scope = self.profiler.scope(&format!("compile/{name}"));
-        let proto = xla::HloModuleProto::from_text_file(&entry.file)
-            .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
+        let exec = match (&self.client, &self.sim) {
+            (_, Some(spec)) => {
+                let kind = SimKind::parse(&entry.kind).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "simulated runtime has no {:?} executables \
+                         (verification uses Backend::Native)",
+                        entry.kind
+                    )
+                })?;
+                ExecBackend::Sim(SimExec::new(kind, entry.b, spec.clone()))
+            }
+            (Some(client), None) => {
+                let _scope = self.profiler.scope(&format!("compile/{name}"));
+                let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                    .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                ExecBackend::Pjrt(
+                    client
+                        .compile(&comp)
+                        .with_context(|| format!("compiling {name}"))?,
+                )
+            }
+            (None, None) => unreachable!("runtime without client or simulator"),
+        };
         let loaded = Arc::new(LoadedExecutable {
             entry,
-            exe,
+            exec,
             profiler: self.profiler.clone(),
             gauge: self.gauge.clone(),
         });
@@ -244,6 +320,48 @@ unsafe impl Sync for LoadedExecutable {}
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn simulated_runtime_serves_model_executables() {
+        let rt = Runtime::simulated(SimSpec {
+            vocab: 32,
+            seq_len: 16,
+            gmax: 4,
+            batches: vec![1, 2],
+            ..SimSpec::default()
+        });
+        assert!(rt.is_simulated());
+        let exe = rt.load_model("draft_step", "sim", 2).unwrap();
+        assert_eq!(exe.entry.kind, "draft_step");
+        // cached on repeat loads
+        let again = rt.load_model("draft_step", "sim", 2).unwrap();
+        assert!(Arc::ptr_eq(&exe, &again));
+        assert_eq!(rt.cached_count(), 1);
+        // shape validation runs against the synthetic manifest
+        let tokens = vec![0i32; 2 * 16];
+        let lens = vec![1i32; 2];
+        let u = vec![0.5f32; 2];
+        let temp = vec![1.0f32; 2];
+        let mut out = Vec::new();
+        exe.run_views_into(
+            &[
+                TensorView::i32(&[2, 16], &tokens),
+                TensorView::i32(&[2], &lens),
+                TensorView::f32(&[2], &u),
+                TensorView::f32(&[2], &temp),
+            ],
+            &mut out,
+        )
+        .unwrap();
+        assert_eq!(out[0].as_i32().unwrap().len(), 2);
+        assert_eq!(out[1].as_f32().unwrap().len(), 2 * 32);
+        // a wrong shape is rejected before execution
+        assert!(exe
+            .run_views_into(&[TensorView::i32(&[2, 16], &tokens)], &mut out)
+            .is_err());
+        // verify artifacts do not exist on the sim path
+        assert!(rt.load_verify("exact", 2, 5, 32).is_err());
+    }
 
     #[test]
     fn memory_gauge_tracks_peak() {

@@ -142,6 +142,75 @@ impl Manifest {
         })
     }
 
+    /// Build an in-memory manifest describing a simulated model pair
+    /// (no files behind the entries — the runtime serves them via
+    /// [`crate::runtime::sim::SimExec`]). One `draft_step` /
+    /// `target_step` / `target_score` triple per batch size, with the
+    /// same iospecs the AOT artifacts carry, so the engine-side shape
+    /// validation is identical on both execution paths.
+    pub fn synthetic(
+        pair: &str,
+        vocab: usize,
+        seq_len: usize,
+        gmax: usize,
+        batches: &[usize],
+    ) -> Self {
+        let mut entries: Vec<ArtifactEntry> = Vec::new();
+        let f32s = |shape: Vec<usize>| ("float32".to_string(), shape);
+        let i32s = |shape: Vec<usize>| ("int32".to_string(), shape);
+        for &b in batches {
+            for kind in ["draft_step", "target_step"] {
+                entries.push(ArtifactEntry {
+                    name: format!("{kind}_{pair}_b{b}"),
+                    file: PathBuf::new(),
+                    kind: kind.to_string(),
+                    method: None,
+                    pair: Some(pair.to_string()),
+                    b,
+                    g: 0,
+                    v: vocab,
+                    s: seq_len,
+                    inputs: vec![
+                        i32s(vec![b, seq_len]),
+                        i32s(vec![b]),
+                        f32s(vec![b]),
+                        f32s(vec![b]),
+                    ],
+                    outputs: vec![i32s(vec![b]), f32s(vec![b, vocab])],
+                });
+            }
+            entries.push(ArtifactEntry {
+                name: format!("target_score_{pair}_b{b}"),
+                file: PathBuf::new(),
+                kind: "target_score".to_string(),
+                method: None,
+                pair: Some(pair.to_string()),
+                b,
+                g: gmax,
+                v: vocab,
+                s: seq_len,
+                inputs: vec![i32s(vec![b, seq_len]), i32s(vec![b])],
+                outputs: vec![f32s(vec![b, gmax + 1, vocab])],
+            });
+        }
+        let by_name = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        let mut pairs = HashMap::new();
+        pairs.insert(pair.to_string(), (0usize, 0usize));
+        Manifest {
+            dir: PathBuf::from("<sim>"),
+            vocab_size: vocab,
+            seq_len,
+            gmax,
+            pairs,
+            entries,
+            by_name,
+        }
+    }
+
     pub fn by_name(&self, name: &str) -> Result<&ArtifactEntry> {
         self.by_name
             .get(name)
@@ -227,6 +296,21 @@ mod tests {
         let m = Manifest::from_json(DOC, Path::new("/tmp/a")).unwrap();
         assert_eq!(m.verify_gammas("exact", 1, 128), vec![2, 5]);
         assert!(m.verify_gammas("sigmoid", 1, 128).is_empty());
+    }
+
+    #[test]
+    fn synthetic_manifest_mirrors_artifact_contracts() {
+        let m = Manifest::synthetic("sim", 64, 32, 5, &[1, 4]);
+        assert_eq!(m.vocab_size, 64);
+        assert_eq!(m.model_batches("sim"), vec![1, 4]);
+        let d = m.model("draft_step", "sim", 4).unwrap();
+        assert_eq!(d.inputs.len(), 4);
+        assert_eq!(d.inputs[0], ("int32".to_string(), vec![4, 32]));
+        assert_eq!(d.outputs[1], ("float32".to_string(), vec![4, 64]));
+        let sc = m.model("target_score", "sim", 1).unwrap();
+        assert_eq!(sc.outputs[0], ("float32".to_string(), vec![1, 6, 64]));
+        // no verify artifacts: the sim path pairs with Backend::Native
+        assert!(m.verify_gammas("exact", 1, 64).is_empty());
     }
 
     #[test]

@@ -4,11 +4,17 @@
 //! * [`tensor`] — host-side tensor type + literal conversion
 //! * [`manifest`] — typed view of `artifacts/manifest.json`
 //! * [`client`] — PJRT CPU client wrapper, executable cache, memory gauge
+//! * [`sim`] — deterministic in-process model simulator
+//!   ([`Runtime::simulated`]): the artifact-free execution path behind
+//!   the same [`LoadedExecutable`] surface, used by the pipelined-decode
+//!   parity tests and benches
 
 pub mod client;
 pub mod manifest;
+pub mod sim;
 pub mod tensor;
 
 pub use client::{LoadedExecutable, Runtime};
 pub use manifest::{ArtifactEntry, Manifest};
+pub use sim::{SimExec, SimKind, SimSpec};
 pub use tensor::{HostTensor, TensorView};

@@ -1,0 +1,466 @@
+//! Deterministic in-process model simulator — the artifact-free twin of
+//! the PJRT execution path.
+//!
+//! The vendored `xla` crate is a typed stub: it compiles the full PJRT
+//! surface but reports "runtime unavailable" at client creation, so a
+//! container without the native XLA library can never execute the AOT
+//! artifacts — and, before this module existed, could never drive the
+//! decode loop at all. [`SimExec`] fills that hole: a pure-Rust toy
+//! language model implementing the *exact* artifact contracts
+//! (`draft_step` / `target_step` / `target_score` input/output shapes,
+//! internal temperature-scaled sampling from a supplied uniform), so the
+//! whole engine — continuous batching, the adaptive-γ controller, the
+//! native verification kernels, and the pipelined decode scheduler — runs
+//! end-to-end with no artifacts. The pipelined-vs-serial parity tests and
+//! the decode sections of `bench_e2e` are built on it.
+//!
+//! ## Model
+//!
+//! Logits are a pure hash of the context window (the last
+//! [`CTX_WINDOW`] committed tokens) and the candidate token id, mixed
+//! with the spec seed via splitmix64. Draft and target share a common
+//! logit component and add model-specific perturbations scaled by
+//! `1 - agreement`, so speculative acceptance rates are tunable:
+//! `agreement = 1.0` gives identical models (acceptance 1), `0.0` gives
+//! independent models. Everything is computed per batch row from that
+//! row's tokens alone, so outputs are **bit-identical across batch
+//! sizes and call schedules** — the property the pipelined scheduler's
+//! parity tests lean on (a prefetched model call must produce the same
+//! bits as the same call issued serially).
+//!
+//! ## Latency emulation
+//!
+//! `model_delay` busy-spins each call for a fixed duration before
+//! computing, emulating the device-dispatch latency the pipelined
+//! scheduler exists to hide. The delay never affects outputs — only
+//! where the wall-clock goes.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::tensor::{HostTensor, TensorView};
+use crate::sampling::verify;
+
+/// Context tokens hashed into each logit row.
+pub const CTX_WINDOW: usize = 6;
+
+/// Configuration of a simulated model pair + runtime dimensions.
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub gmax: usize,
+    /// batch sizes the synthetic manifest advertises
+    pub batches: Vec<usize>,
+    /// model-pair seed: distinct seeds are distinct model pairs
+    pub seed: u64,
+    /// draft/target agreement in `[0, 1]` (1.0 = identical logits)
+    pub agreement: f32,
+    /// per-call busy-wait emulating device dispatch latency
+    pub model_delay: Duration,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            vocab: 128,
+            seq_len: 256,
+            gmax: 10,
+            batches: vec![1, 2, 3, 4, 8],
+            seed: 0xC0FF_EE11,
+            agreement: 0.9,
+            model_delay: Duration::ZERO,
+        }
+    }
+}
+
+impl SimSpec {
+    /// Default spec with `SPECD_SIM_DELAY_US` / `SPECD_SIM_AGREEMENT`
+    /// environment overrides applied (the knobs the decode benches use).
+    pub fn from_env() -> Self {
+        let mut spec = SimSpec::default();
+        if let Ok(v) = std::env::var("SPECD_SIM_DELAY_US") {
+            if let Ok(us) = v.parse::<u64>() {
+                spec.model_delay = Duration::from_micros(us);
+            }
+        }
+        if let Ok(v) = std::env::var("SPECD_SIM_AGREEMENT") {
+            if let Ok(a) = v.parse::<f32>() {
+                spec.agreement = a.clamp(0.0, 1.0);
+            }
+        }
+        spec
+    }
+}
+
+/// Which artifact contract a [`SimExec`] implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimKind {
+    /// `(tokens[B,S], lens[B], u[B], temp[B]) -> (toks[B], logits[B,V])`,
+    /// sampling from the draft model's distribution
+    DraftStep,
+    /// same contract as [`SimKind::DraftStep`], target model
+    TargetStep,
+    /// `(tokens[B,S], lens[B]) -> logits[B, GMAX+1, V]`: target logits
+    /// for the trailing `GMAX+1` context lengths (row `GMAX` = full
+    /// context `lens[i]`, row `GMAX - k` = context `lens[i] - k`)
+    TargetScore,
+}
+
+impl SimKind {
+    pub fn parse(kind: &str) -> Option<SimKind> {
+        match kind {
+            "draft_step" | "draft_self_step" => Some(SimKind::DraftStep),
+            "target_step" => Some(SimKind::TargetStep),
+            "target_score" => Some(SimKind::TargetScore),
+            _ => None,
+        }
+    }
+}
+
+/// One simulated executable (kind + batch size + model spec).
+#[derive(Debug, Clone)]
+pub struct SimExec {
+    pub kind: SimKind,
+    pub batch: usize,
+    spec: SimSpec,
+}
+
+/// splitmix64 — the one mixing primitive everything derives from.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Map a hash to a logit in roughly `[-scale, scale)`.
+fn hash_logit(h: u64, scale: f32) -> f32 {
+    let unit = (h >> 40) as f32 * (1.0 / (1u64 << 24) as f32); // [0, 1)
+    (unit * 2.0 - 1.0) * scale
+}
+
+const DRAFT_SALT: u64 = 0x5EED_D12A_F700_0001;
+const TARGET_SALT: u64 = 0x5EED_7A26_E700_0002;
+
+impl SimExec {
+    pub fn new(kind: SimKind, batch: usize, spec: SimSpec) -> Self {
+        SimExec { kind, batch, spec }
+    }
+
+    /// Hash of the last [`CTX_WINDOW`] tokens of `tokens[..len]`.
+    fn ctx_hash(&self, tokens: &[i32], len: usize) -> u64 {
+        let len = len.min(tokens.len()).max(1);
+        let start = len.saturating_sub(CTX_WINDOW);
+        let mut h = mix(self.spec.seed ^ (len as u64).wrapping_mul(0x9E37));
+        for &t in &tokens[start..len] {
+            h = mix(h ^ (t as u64).wrapping_add(0x1234_5678));
+        }
+        h
+    }
+
+    /// Fill one logit row for the given model role (`true` = draft).
+    fn logits_into(&self, ctx: u64, draft: bool, out: &mut [f32]) {
+        let noise = 1.0 - self.spec.agreement.clamp(0.0, 1.0);
+        let salt = if draft { DRAFT_SALT } else { TARGET_SALT };
+        for (j, e) in out.iter_mut().enumerate() {
+            let shared = hash_logit(mix(ctx ^ j as u64), 3.0);
+            let own = hash_logit(mix(ctx ^ j as u64 ^ salt), 3.0);
+            *e = shared + noise * own;
+        }
+    }
+
+    /// Sample a token from temperature-scaled `logits` via inverse CDF
+    /// (the same arithmetic the AOT step graphs bake in: scale, stable
+    /// softmax, threshold at `u`). `temp <= 0` is greedy argmax.
+    fn sample(logits: &[f32], temp: f32, u: f32, scratch: &mut Vec<f32>) -> i32 {
+        scratch.clear();
+        if temp <= 0.0 {
+            let mut best = 0usize;
+            for (i, &x) in logits.iter().enumerate().skip(1) {
+                if x > logits[best] {
+                    best = i;
+                }
+            }
+            return best as i32;
+        }
+        let inv = 1.0 / temp;
+        scratch.extend(logits.iter().map(|&x| x * inv));
+        let row = &mut scratch[..];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for e in row.iter_mut() {
+            *e = (*e - max).exp();
+            sum += *e;
+        }
+        let inv_sum = 1.0 / sum;
+        for e in row.iter_mut() {
+            *e *= inv_sum;
+        }
+        verify::inverse_cdf_sample(row, u) as i32
+    }
+
+    fn spin(&self) {
+        if self.spec.model_delay.is_zero() {
+            return;
+        }
+        let t0 = Instant::now();
+        while t0.elapsed() < self.spec.model_delay {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Execute against borrowed inputs, staging outputs in place (the
+    /// sim twin of the PJRT execute path in
+    /// [`crate::runtime::LoadedExecutable::run_views_into`]; shape
+    /// validation happens there, against the synthetic manifest).
+    pub fn run(&self, inputs: &[TensorView<'_>], outputs: &mut Vec<HostTensor>) -> Result<()> {
+        self.spin();
+        let (b, s, v, w) = (
+            self.batch,
+            self.spec.seq_len,
+            self.spec.vocab,
+            self.spec.gmax + 1,
+        );
+        let tokens = match inputs.first() {
+            Some(TensorView::I32 { data, .. }) => *data,
+            _ => bail!("sim: input 0 must be i32 tokens"),
+        };
+        let lens = match inputs.get(1) {
+            Some(TensorView::I32 { data, .. }) => *data,
+            _ => bail!("sim: input 1 must be i32 lens"),
+        };
+        match self.kind {
+            SimKind::DraftStep | SimKind::TargetStep => {
+                let u = match inputs.get(2) {
+                    Some(TensorView::F32 { data, .. }) => *data,
+                    _ => bail!("sim: input 2 must be f32 uniforms"),
+                };
+                let temp = match inputs.get(3) {
+                    Some(TensorView::F32 { data, .. }) => *data,
+                    _ => bail!("sim: input 3 must be f32 temperatures"),
+                };
+                let draft = self.kind == SimKind::DraftStep;
+                // write straight into the caller's reusable staging
+                // tensors — the sim side of the run_views_into
+                // workspace pattern, no per-call output allocation
+                ensure_slots(outputs, 2);
+                outputs.truncate(2);
+                let (toks_slot, logits_slot) = outputs.split_at_mut(1);
+                let toks = prep_i32(&mut toks_slot[0], &[b]);
+                let logits = prep_f32(&mut logits_slot[0], &[b, v]);
+                let mut scratch: Vec<f32> = Vec::with_capacity(v);
+                for i in 0..b {
+                    let row = &mut logits[i * v..(i + 1) * v];
+                    let ctx = self.ctx_hash(&tokens[i * s..(i + 1) * s], lens[i] as usize);
+                    self.logits_into(ctx, draft, row);
+                    toks[i] = Self::sample(row, temp[i], u[i], &mut scratch);
+                }
+            }
+            SimKind::TargetScore => {
+                ensure_slots(outputs, 1);
+                outputs.truncate(1);
+                let logits = prep_f32(&mut outputs[0], &[b, w, v]);
+                for i in 0..b {
+                    let len = lens[i] as usize;
+                    let row_tokens = &tokens[i * s..(i + 1) * s];
+                    for k in 0..w {
+                        // row w-1 is the full context; earlier rows walk
+                        // back one token each (clamped at context 1)
+                        let cl = len.saturating_sub(w - 1 - k).max(1);
+                        let ctx = self.ctx_hash(row_tokens, cl);
+                        let row = &mut logits[(i * w + k) * v..(i * w + k + 1) * v];
+                        self.logits_into(ctx, false, row);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Grow `outputs` to at least `n` slots (placeholders are retyped by
+/// the prep helpers on first use).
+fn ensure_slots(outputs: &mut Vec<HostTensor>, n: usize) {
+    while outputs.len() < n {
+        outputs.push(HostTensor::i32(&[0], Vec::new()));
+    }
+}
+
+/// Shape an i32 output slot in place (reusing its capacity; a
+/// wrong-dtype placeholder is replaced) and return its data buffer.
+fn prep_i32<'a>(slot: &'a mut HostTensor, shape: &[usize]) -> &'a mut Vec<i32> {
+    let n: usize = shape.iter().product();
+    if !matches!(slot, HostTensor::I32 { .. }) {
+        *slot = HostTensor::i32(&[0], Vec::new());
+    }
+    match slot {
+        HostTensor::I32 { shape: sh, data } => {
+            sh.clear();
+            sh.extend_from_slice(shape);
+            data.clear();
+            data.resize(n, 0);
+            data
+        }
+        _ => unreachable!("slot retyped above"),
+    }
+}
+
+/// Shape an f32 output slot in place (reusing its capacity; a
+/// wrong-dtype placeholder is replaced) and return its data buffer.
+fn prep_f32<'a>(slot: &'a mut HostTensor, shape: &[usize]) -> &'a mut Vec<f32> {
+    let n: usize = shape.iter().product();
+    if !matches!(slot, HostTensor::F32 { .. }) {
+        *slot = HostTensor::f32(&[0], Vec::new());
+    }
+    match slot {
+        HostTensor::F32 { shape: sh, data } => {
+            sh.clear();
+            sh.extend_from_slice(shape);
+            data.clear();
+            data.resize(n, 0.0);
+            data
+        }
+        _ => unreachable!("slot retyped above"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SimSpec {
+        SimSpec {
+            vocab: 32,
+            seq_len: 16,
+            gmax: 4,
+            ..SimSpec::default()
+        }
+    }
+
+    fn run_draft(exec: &SimExec, tokens: Vec<i32>, lens: Vec<i32>) -> (Vec<i32>, Vec<f32>) {
+        let b = exec.batch;
+        let s = exec.spec.seq_len;
+        let u = vec![0.37f32; b];
+        let temp = vec![0.8f32; b];
+        let mut out = Vec::new();
+        exec.run(
+            &[
+                TensorView::i32(&[b, s], &tokens),
+                TensorView::i32(&[b], &lens),
+                TensorView::f32(&[b], &u),
+                TensorView::f32(&[b], &temp),
+            ],
+            &mut out,
+        )
+        .unwrap();
+        (
+            out[0].as_i32().unwrap().to_vec(),
+            out[1].as_f32().unwrap().to_vec(),
+        )
+    }
+
+    #[test]
+    fn deterministic_and_shape_correct() {
+        let exec = SimExec::new(SimKind::DraftStep, 2, spec());
+        let tokens: Vec<i32> = (0..2 * 16).map(|i| (i % 30) as i32).collect();
+        let lens = vec![5, 9];
+        let (t1, l1) = run_draft(&exec, tokens.clone(), lens.clone());
+        let (t2, l2) = run_draft(&exec, tokens, lens);
+        assert_eq!(t1, t2);
+        assert_eq!(l1, l2);
+        assert_eq!(t1.len(), 2);
+        assert_eq!(l1.len(), 2 * 32);
+        assert!(t1.iter().all(|&t| (0..32).contains(&t)));
+    }
+
+    #[test]
+    fn rows_are_batch_independent() {
+        // row i of a batched call equals the same row run at batch 1 —
+        // the property the pipelined scheduler's prefetch relies on
+        let sp = spec();
+        let b2 = SimExec::new(SimKind::DraftStep, 2, sp.clone());
+        let b1 = SimExec::new(SimKind::DraftStep, 1, sp.clone());
+        let tokens: Vec<i32> = (0..2 * 16).map(|i| ((i * 7) % 30) as i32).collect();
+        let lens = vec![4, 11];
+        let (t, l) = run_draft(&b2, tokens.clone(), lens.clone());
+        for i in 0..2 {
+            let (ti, li) = run_draft(&b1, tokens[i * 16..(i + 1) * 16].to_vec(), vec![lens[i]]);
+            assert_eq!(ti[0], t[i], "row {i}");
+            assert_eq!(li, l[i * 32..(i + 1) * 32].to_vec(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn score_last_row_matches_step_logits() {
+        // target_score row GMAX (full context) must be the same logits
+        // target_step computes at that context
+        let sp = spec();
+        let score = SimExec::new(SimKind::TargetScore, 1, sp.clone());
+        let step = SimExec::new(SimKind::TargetStep, 1, sp.clone());
+        let tokens: Vec<i32> = (0..16).map(|i| ((i * 3) % 30) as i32).collect();
+        let lens = vec![7];
+        let mut out = Vec::new();
+        score
+            .run(
+                &[
+                    TensorView::i32(&[1, 16], &tokens),
+                    TensorView::i32(&[1], &lens),
+                ],
+                &mut out,
+            )
+            .unwrap();
+        let win = out[0].as_f32().unwrap().to_vec();
+        let w = sp.gmax + 1;
+        assert_eq!(win.len(), w * 32);
+        let (_, step_logits) = {
+            let u = vec![0.5f32];
+            let temp = vec![1.0f32];
+            let mut o = Vec::new();
+            step.run(
+                &[
+                    TensorView::i32(&[1, 16], &tokens),
+                    TensorView::i32(&[1], &lens),
+                    TensorView::f32(&[1], &u),
+                    TensorView::f32(&[1], &temp),
+                ],
+                &mut o,
+            )
+            .unwrap();
+            (o[0].as_i32().unwrap().to_vec(), o[1].as_f32().unwrap().to_vec())
+        };
+        assert_eq!(&win[(w - 1) * 32..w * 32], &step_logits[..]);
+    }
+
+    #[test]
+    fn agreement_moves_draft_toward_target() {
+        let mut hi = spec();
+        hi.agreement = 1.0;
+        let mut lo = spec();
+        lo.agreement = 0.0;
+        let tokens: Vec<i32> = (0..16).map(|i| (i % 30) as i32).collect();
+        let ctx_len = 6usize;
+        let row = |sp: &SimSpec, draft: bool| {
+            let e = SimExec::new(SimKind::DraftStep, 1, sp.clone());
+            let mut out = vec![0.0f32; sp.vocab];
+            let ctx = e.ctx_hash(&tokens, ctx_len);
+            e.logits_into(ctx, draft, &mut out);
+            out
+        };
+        // full agreement: draft == target exactly
+        assert_eq!(row(&hi, true), row(&hi, false));
+        // zero agreement: they differ
+        assert_ne!(row(&lo, true), row(&lo, false));
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let logits = vec![0.1f32, 2.0, -1.0, 0.5];
+        let mut scratch = Vec::new();
+        assert_eq!(SimExec::sample(&logits, 0.0, 0.99, &mut scratch), 1);
+        // and at finite temperature u=0 picks the first token with mass
+        let t = SimExec::sample(&logits, 1.0, 0.0, &mut scratch);
+        assert_eq!(t, 0);
+    }
+}

@@ -109,6 +109,10 @@ pub struct KernelConfig {
     /// the old scoped-spawn cost, but at the model vocab of the toy
     /// artifact set the whole verify step is cheaper still)
     pub min_parallel_elems: usize,
+    /// pin pool workers to distinct cores at spawn (opt-in via
+    /// `SPECD_VERIFY_PIN=1`; best-effort, no-op where unsupported, and
+    /// never affects results — placement only)
+    pub pin_cores: bool,
 }
 
 impl Default for KernelConfig {
@@ -121,6 +125,7 @@ impl Default for KernelConfig {
             threads,
             chunk: VOCAB_CHUNK,
             min_parallel_elems: 64 * 1024,
+            pin_cores: false,
         }
     }
 }
@@ -142,7 +147,7 @@ impl KernelConfig {
     }
 
     /// Default config with `SPECD_VERIFY_THREADS` / `SPECD_VERIFY_CHUNK`
-    /// environment overrides applied.
+    /// / `SPECD_VERIFY_PIN` environment overrides applied.
     pub fn from_env() -> Self {
         let mut cfg = KernelConfig::default();
         if let Some(t) = env_usize("SPECD_VERIFY_THREADS") {
@@ -150,6 +155,9 @@ impl KernelConfig {
         }
         if let Some(c) = env_usize("SPECD_VERIFY_CHUNK") {
             cfg.chunk = c.max(1);
+        }
+        if let Ok(v) = std::env::var("SPECD_VERIFY_PIN") {
+            cfg.pin_cores = v == "1" || v == "true";
         }
         cfg
     }
@@ -192,7 +200,7 @@ pub struct VerifyWorkspace {
 impl VerifyWorkspace {
     pub fn new(cfg: KernelConfig) -> Self {
         VerifyWorkspace {
-            pool: pool::WorkerPool::new(cfg.threads),
+            pool: pool::WorkerPool::with_affinity(cfg.threads, cfg.pin_cores),
             cfg,
             p: Vec::new(),
             q: Vec::new(),
@@ -427,6 +435,18 @@ fn construct_matrix(
             }
         });
     }
+}
+
+/// `dst = P(src)` for one logit row under `method` — softmax for
+/// `Baseline`/`Exact`, the element-wise sigmoid approximations
+/// otherwise. This is the single probability-construction primitive
+/// every kernel schedule routes through, exported so other layers that
+/// must reproduce a verification row **bit-for-bit** (the pipelined
+/// scheduler's bonus-token prediction in
+/// [`crate::engine`]) share the exact arithmetic graph
+/// instead of reimplementing it.
+pub fn construct_prob_row(src: &[f32], dst: &mut [f32], method: Method) {
+    construct_row_from(src, dst, method)
 }
 
 fn construct_row_from(src: &[f32], dst: &mut [f32], method: Method) {

@@ -13,11 +13,32 @@
 //! therefore the owning verifier — is dropped; a verifier that never
 //! enters a parallel region never spawns any.
 //!
+//! Two further pieces of thread substrate live here:
+//!
+//! * [`DispatchLane`] — a single long-lived thread executing owned
+//!   FIFO jobs, used by the engine's pipelined decode scheduler to keep
+//!   a **model dispatch** (draft/score executable calls) in flight while
+//!   the engine thread runs **verify regions** on the [`WorkerPool`].
+//!   The lane is *not* a pool lane and never dispatches pool regions,
+//!   so the pool's single-dispatcher invariant (below) is preserved by
+//!   construction: at any instant the pool has at most one dispatching
+//!   thread (the engine thread), and the lane's in-flight job touches
+//!   only buffers it owns.
+//! * opt-in **core affinity** ([`WorkerPool::with_affinity`], surfaced
+//!   as `SPECD_VERIFY_PIN=1`): workers pin themselves to distinct CPUs
+//!   at spawn — drawn from the process's *allowed* affinity mask, so
+//!   cpuset-restricted containers pin correctly — so steady-state
+//!   verify regions stop migrating between cores (and away from their
+//!   warmed caches). Pinning is best-effort — a no-op on non-Linux
+//!   targets or when the mask cannot be read — and never affects
+//!   results.
+//!
 //! ## Safety model
 //!
 //! Unlike the scoped implementation, a persistent pool cannot let the
 //! borrow checker prove task lifetimes, so this module contains the
-//! crate's only `unsafe` — three narrow, invariant-guarded uses:
+//! crate's only `unsafe` apart from the affinity syscall below — three
+//! narrow, invariant-guarded uses:
 //!
 //! 1. **lifetime erasure** of the dispatched closure reference
 //!    ([`WorkerPool::run`]): sound because `run` blocks until every
@@ -49,8 +70,76 @@
 //! layer only ever runs its regions sequentially.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+
+// ---------------------------------------------------------------------------
+// core affinity (opt-in, best-effort)
+
+/// glibc's cpu_set_t: 1024 bits. Declared directly so the vendored
+/// crate set stays libc-free; std already links libc.
+#[cfg(target_os = "linux")]
+#[repr(C)]
+struct CpuSet {
+    bits: [u64; 16],
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut CpuSet) -> i32;
+}
+
+/// The CPU ids this thread is allowed to run on, in ascending order —
+/// the pin targets are drawn from this set, so pinning works inside
+/// cgroup/cpuset-restricted containers whose allowed CPUs are not
+/// contiguous from 0 (e.g. `--cpuset-cpus=4,5`). Empty when the mask
+/// cannot be read (and on non-Linux targets), which disables pinning.
+#[cfg(target_os = "linux")]
+pub(crate) fn allowed_cpus() -> Vec<usize> {
+    let mut set = CpuSet { bits: [0; 16] };
+    // SAFETY: `set` is a properly-sized, initialised mask buffer and
+    // outlives the call; pid 0 addresses the calling thread.
+    let ok = unsafe { sched_getaffinity(0, std::mem::size_of::<CpuSet>(), &mut set) == 0 };
+    if !ok {
+        return Vec::new();
+    }
+    let mut cpus = Vec::new();
+    for (blk, &bits) in set.bits.iter().enumerate() {
+        for bit in 0..64 {
+            if bits & (1u64 << bit) != 0 {
+                cpus.push(blk * 64 + bit);
+            }
+        }
+    }
+    cpus
+}
+
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn allowed_cpus() -> Vec<usize> {
+    Vec::new()
+}
+
+/// Pin the calling thread to one CPU id (an id from [`allowed_cpus`]).
+/// Returns whether the pin took effect. Linux-only (via
+/// `sched_setaffinity(0, …)`, which targets the calling *thread*); a
+/// strict no-op elsewhere and on syscall failure, so enabling the
+/// option can never break a run — only co-locate it.
+#[cfg(target_os = "linux")]
+pub(crate) fn pin_current_thread(cpu: usize) -> bool {
+    let cpu = cpu % (16 * 64);
+    let mut set = CpuSet { bits: [0; 16] };
+    set.bits[cpu / 64] |= 1u64 << (cpu % 64);
+    // SAFETY: `set` is a properly-initialised cpu_set_t-sized mask and
+    // outlives the call; pid 0 addresses the calling thread.
+    unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
 
 /// A dispatched region: a lifetime-erased task closure plus the task
 /// count. Held in the shared state only while [`WorkerPool::run`] is
@@ -98,6 +187,8 @@ struct Shared {
 pub struct WorkerPool {
     /// total lane count (workers + dispatcher) this pool was sized for
     width: usize,
+    /// pin workers to distinct CPUs at spawn (best-effort, opt-in)
+    pin_cores: bool,
     shared: Arc<Shared>,
     /// spawned on first parallel dispatch, joined on drop
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
@@ -118,8 +209,23 @@ impl WorkerPool {
     /// loop). Worker threads are not spawned here — the first parallel
     /// dispatch spawns them, once.
     pub fn new(threads: usize) -> Self {
+        Self::with_affinity(threads, false)
+    }
+
+    /// Like [`WorkerPool::new`], with opt-in core pinning: each worker
+    /// pins itself at spawn to a distinct CPU drawn from the process's
+    /// **allowed** affinity mask — lane index modulo the allowed set,
+    /// so pinning works inside cpuset-restricted containers whose CPUs
+    /// are not contiguous from 0. The dispatching thread — lane 0 — is
+    /// the caller and is never pinned (pinning a thread the pool does
+    /// not own would leak policy). Best-effort: a no-op where
+    /// unsupported. Closes the ROADMAP NUMA/core-pinning follow-up;
+    /// surfaced via `SPECD_VERIFY_PIN=1`
+    /// ([`crate::sampling::kernels::KernelConfig::from_env`]).
+    pub fn with_affinity(threads: usize, pin_cores: bool) -> Self {
         WorkerPool {
             width: threads.max(1),
+            pin_cores,
             shared: Arc::new(Shared {
                 state: Mutex::new(State {
                     epoch: 0,
@@ -147,11 +253,30 @@ impl WorkerPool {
         if !handles.is_empty() {
             return;
         }
+        // pin targets come from the *allowed* CPU mask, so pinning works
+        // in cpuset-restricted containers; an unreadable mask (or a
+        // non-Linux target) yields an empty set and disables pinning
+        let cpus = if self.pin_cores {
+            allowed_cpus()
+        } else {
+            Vec::new()
+        };
         handles.extend((0..n_workers).map(|w| {
             let shared = self.shared.clone();
+            // worker w serves lane w+1 (lane 0 = the dispatching caller)
+            let target = if cpus.is_empty() {
+                None
+            } else {
+                Some(cpus[(w + 1) % cpus.len()])
+            };
             thread::Builder::new()
                 .name(format!("specd-verify-{w}"))
-                .spawn(move || worker_loop(&shared, w, n_workers))
+                .spawn(move || {
+                    if let Some(cpu) = target {
+                        let _ = pin_current_thread(cpu);
+                    }
+                    worker_loop(&shared, w, n_workers)
+                })
                 .expect("spawning verify worker")
         }));
     }
@@ -293,6 +418,93 @@ fn worker_loop(shared: &Shared, w: usize, n_workers: usize) {
         st.remaining -= 1;
         if st.remaining == 0 {
             shared.done.notify_one();
+        }
+    }
+}
+
+/// An owned job shipped onto the [`DispatchLane`].
+pub type LaneJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// A dedicated dispatcher lane: one long-lived thread running owned
+/// jobs FIFO. The engine's pipelined decode scheduler ships the *model
+/// dispatch* of the next speculative block here (draft + score
+/// executable calls into buffers the job owns), so it stays in flight
+/// while the engine thread dispatches *verify regions* on the
+/// [`WorkerPool`] — the two substrates overlap without ever sharing a
+/// dispatcher, which is what keeps the pool's single-dispatcher
+/// invariant intact.
+///
+/// Invariants (documented contract, relied on by the engine):
+///
+/// * jobs run **in submission order**, one at a time — a second submit
+///   queues behind the first;
+/// * a panicking job is contained (`catch_unwind`) and the lane keeps
+///   serving — the submitter observes the failure through its own
+///   result channel going dead, never through a poisoned lane;
+/// * jobs must own everything they touch (`'static`) and must **not**
+///   dispatch regions on a [`WorkerPool`] that some other thread
+///   dispatches to — the pool asserts against concurrent dispatch;
+/// * dropping the lane joins the thread after the queue drains.
+///
+/// The thread spawns lazily on the first [`DispatchLane::submit`], so
+/// engines that never pipeline never pay for it.
+#[derive(Default)]
+pub struct DispatchLane {
+    tx: Option<Sender<LaneJob>>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for DispatchLane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DispatchLane")
+            .field("spawned", &self.handle.is_some())
+            .finish()
+    }
+}
+
+impl DispatchLane {
+    pub fn new() -> Self {
+        DispatchLane::default()
+    }
+
+    /// Ship a job to the lane (spawning the lane thread on first use).
+    /// Returns immediately; completion is signalled by whatever channel
+    /// the job itself carries.
+    pub fn submit(&mut self, job: LaneJob) {
+        if self.tx.is_none() {
+            let (tx, rx): (Sender<LaneJob>, Receiver<LaneJob>) = channel();
+            let handle = thread::Builder::new()
+                .name("specd-dispatch".into())
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // a panicking job must not kill the lane: the
+                        // submitter's result channel reports the failure
+                        let _ = catch_unwind(AssertUnwindSafe(job));
+                    }
+                })
+                .expect("spawning dispatch lane");
+            self.tx = Some(tx);
+            self.handle = Some(handle);
+        }
+        self.tx
+            .as_ref()
+            .expect("lane sender")
+            .send(job)
+            .expect("dispatch lane thread gone");
+    }
+
+    /// Whether the lane thread has been spawned (observability/tests).
+    pub fn spawned(&self) -> bool {
+        self.handle.is_some()
+    }
+}
+
+impl Drop for DispatchLane {
+    fn drop(&mut self) {
+        // closing the channel ends the recv loop after queued jobs drain
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
         }
     }
 }
@@ -595,6 +807,98 @@ mod tests {
             calls.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(calls.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn dispatch_lane_runs_jobs_in_order_and_joins() {
+        let mut lane = DispatchLane::new();
+        assert!(!lane.spawned(), "lane spawns lazily");
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        for i in 0..4 {
+            let log = log.clone();
+            let tx = tx.clone();
+            lane.submit(Box::new(move || {
+                log.lock().unwrap().push(i);
+                let _ = tx.send(());
+            }));
+        }
+        assert!(lane.spawned());
+        for _ in 0..4 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(&*log.lock().unwrap(), &[0, 1, 2, 3], "FIFO order");
+        drop(lane); // joins cleanly
+    }
+
+    #[test]
+    fn dispatch_lane_survives_panicking_jobs() {
+        let mut lane = DispatchLane::new();
+        lane.submit(Box::new(|| panic!("boom")));
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        lane.submit(Box::new(move || {
+            let _ = tx.send(7);
+        }));
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap(),
+            7,
+            "lane must keep serving after a job panic"
+        );
+    }
+
+    #[test]
+    fn lane_and_pool_regions_overlap_without_violating_single_dispatcher() {
+        // the tentpole invariant: a lane job in flight while this thread
+        // dispatches pool regions — both make progress, no assertion trips
+        let pool = WorkerPool::new(3);
+        let mut lane = DispatchLane::new();
+        let (tx, rx) = std::sync::mpsc::channel::<usize>();
+        lane.submit(Box::new(move || {
+            // an owned, pool-free "model dispatch"
+            let s: usize = (0..100_000).sum();
+            let _ = tx.send(s);
+        }));
+        let mut data = vec![0u32; 4096];
+        for _ in 0..5 {
+            for_each_span(&pool, 3, &mut data, 64, |_, span| {
+                for e in span.iter_mut() {
+                    *e += 1;
+                }
+            });
+        }
+        assert!(data.iter().all(|&x| x == 5));
+        assert!(rx.recv_timeout(std::time::Duration::from_secs(5)).is_ok());
+    }
+
+    #[test]
+    fn pinned_pool_produces_identical_results() {
+        // pinning is placement-only: same partition, same bits, clean drop
+        let plain = WorkerPool::new(4);
+        let pinned = WorkerPool::with_affinity(4, true);
+        let run = |pool: &WorkerPool| {
+            let mut data: Vec<f64> = (0..777).map(|i| i as f64 * 0.5).collect();
+            for_each_span(pool, 4, &mut data, 32, |first, span| {
+                for (k, e) in span.iter_mut().enumerate() {
+                    *e = (*e + (first * 32 + k) as f64).sqrt();
+                }
+            });
+            data
+        };
+        assert_eq!(run(&plain), run(&pinned));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn pinning_within_the_allowed_mask_succeeds() {
+        // the allowed mask is readable and non-empty (we are running on
+        // *some* CPU), and pinning a scratch thread — not the test
+        // runner — to a CPU drawn from it succeeds even under
+        // restricted cpusets (where CPU 0 may not be allowed at all)
+        let cpus = allowed_cpus();
+        assert!(!cpus.is_empty(), "sched_getaffinity should succeed");
+        let cpu = cpus[0];
+        let ok = thread::spawn(move || pin_current_thread(cpu)).join().unwrap();
+        assert!(ok, "pinning to allowed CPU {cpu} should succeed");
     }
 
     #[test]

@@ -7,7 +7,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::{Backend, Engine, EngineConfig, GenRequest, Mode, SamplingParams};
+use crate::engine::{
+    Backend, Engine, EngineConfig, GenRequest, Mode, PipelineMode, SamplingParams,
+};
 use crate::runtime::Runtime;
 use crate::sampling::Method;
 use crate::tokenizer::Tokenizer;
@@ -91,6 +93,7 @@ pub fn run_method(
         gamma_init,
         gamma_pinned,
         self_draft: false,
+        pipeline: PipelineMode::Auto,
         seed: ctx.seed,
     };
     let mut engine = Engine::new(ctx.runtime.clone(), config)?;

@@ -110,6 +110,99 @@ pub fn write_json(path: &std::path::Path, report: &Value) -> std::io::Result<()>
     std::fs::write(path, format!("{}\n", report.dump()))
 }
 
+/// The shared `--json <path>` / `--smoke` flags of the bench targets
+/// (`bench_e2e`, `bench_verify`); see `docs/PERF.md` for the snapshot
+/// contract they feed.
+#[derive(Debug, Default)]
+pub struct BenchOpts {
+    pub json: Option<std::path::PathBuf>,
+    pub smoke: bool,
+}
+
+impl BenchOpts {
+    /// Parse from `std::env::args` (ignoring cargo's `--bench`
+    /// pass-through and unknown flags, with a notice).
+    pub fn from_args() -> Self {
+        let mut opts = BenchOpts::default();
+        let mut args = std::env::args().skip(1);
+        while let Some(arg) = args.next() {
+            match arg.as_str() {
+                "--json" => {
+                    let path = args.next().expect("--json needs a path");
+                    opts.json = Some(std::path::PathBuf::from(path));
+                }
+                "--smoke" => opts.smoke = true,
+                // cargo bench passes --bench through to the target
+                "--bench" => {}
+                other => eprintln!("ignoring unknown arg {other:?}"),
+            }
+        }
+        opts
+    }
+
+    /// The measurement config this invocation asked for: single-iteration
+    /// smoke timings (CI executability gate) or the full sampling run.
+    pub fn config(&self) -> BenchConfig {
+        if self.smoke {
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 1,
+                max_iters: 1,
+                max_time: Duration::from_millis(500),
+            }
+        } else {
+            BenchConfig {
+                warmup_iters: 3,
+                min_iters: 15,
+                max_iters: 300,
+                max_time: Duration::from_secs(2),
+            }
+        }
+    }
+}
+
+/// Short git revision of the working tree, for the snapshot stamp
+/// (trajectory tooling correlates snapshots with commits). A dirty
+/// tree measures code no commit contains, so it is marked with a
+/// `-dirty` suffix rather than silently attributed to HEAD.
+pub fn git_rev() -> String {
+    let git = |args: &[&str]| {
+        std::process::Command::new("git")
+            .args(args)
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+    };
+    let Some(rev) = git(&["rev-parse", "--short", "HEAD"]) else {
+        return "unknown".to_string();
+    };
+    let dirty = git(&["status", "--porcelain"]).is_some_and(|s| !s.trim().is_empty());
+    if dirty {
+        format!("{}-dirty", rev.trim())
+    } else {
+        rev.trim().to_string()
+    }
+}
+
+/// Assemble the schema-1 snapshot envelope shared by every bench
+/// target's `--json` mode: `{"schema":1,"git_rev":…,"bench":…,
+/// "smoke":…}` plus the target's own sections. Consumers must check
+/// `schema == 1 && !smoke` before trusting a file.
+pub fn snapshot_envelope(bench: &str, smoke: bool, sections: Vec<(&str, Value)>) -> Value {
+    let mut fields: Vec<(&str, Value)> = vec![
+        // schema version first: bump it whenever a key changes meaning,
+        // so trajectory tooling can refuse formats it does not
+        // understand instead of misreading them
+        ("schema", 1i64.into()),
+        ("git_rev", git_rev().into()),
+        ("bench", bench.into()),
+        ("smoke", smoke.into()),
+    ];
+    fields.extend(sections);
+    obj(fields)
+}
+
 /// Markdown-style table printer shared by bench targets and `specd table`.
 pub struct Table {
     headers: Vec<String>,
@@ -221,6 +314,35 @@ mod tests {
         // round-trips through the JSON layer
         let parsed = crate::util::json::parse(&v.dump()).unwrap();
         assert_eq!(parsed.get("name").unwrap().as_str(), Some("json-ish"));
+    }
+
+    #[test]
+    fn snapshot_envelope_carries_the_schema_stamp() {
+        let v = snapshot_envelope(
+            "bench_x",
+            true,
+            vec![("payload", Value::Num(1.0))],
+        );
+        assert_eq!(v.get("schema").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("bench_x"));
+        assert_eq!(v.get("smoke").and_then(Value::as_bool), Some(true));
+        assert!(v.get("git_rev").unwrap().as_str().is_some());
+        assert!(v.get("payload").is_some());
+        // round-trips through the JSON layer
+        let parsed = crate::util::json::parse(&v.dump()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn bench_opts_config_smoke_is_single_iteration() {
+        let smoke = BenchOpts {
+            json: None,
+            smoke: true,
+        };
+        let cfg = smoke.config();
+        assert_eq!((cfg.warmup_iters, cfg.min_iters, cfg.max_iters), (1, 1, 1));
+        let full = BenchOpts::default().config();
+        assert!(full.max_iters > full.min_iters);
     }
 
     #[test]

@@ -36,6 +36,7 @@ fn config(method: Method, backend: Backend) -> EngineConfig {
         gamma_init: 5,
         gamma_pinned: false,
         self_draft: false,
+        pipeline: specd::engine::PipelineMode::Auto,
         seed: 7,
     }
 }

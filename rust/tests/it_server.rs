@@ -33,6 +33,7 @@ fn start_server() -> Option<Arc<Server>> {
             gamma_init: 5,
             gamma_pinned: false,
             self_draft: false,
+            pipeline: specd::engine::PipelineMode::Auto,
             seed: 3,
         },
     )
