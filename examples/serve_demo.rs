@@ -52,7 +52,10 @@ fn run_config(label: &str, method: Method, mode: Mode) -> Result<(f64, f64, f64)
     let server = Arc::new(Server::start(
         engine,
         tokenizer,
-        ServerConfig { addr: "127.0.0.1:0".into() },
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
     )?);
     let addr = server.addr().to_string();
     {
@@ -118,7 +121,10 @@ fn protocol_v2_demo() -> Result<()> {
     let server = Arc::new(Server::start(
         engine,
         tokenizer,
-        ServerConfig { addr: "127.0.0.1:0".into() },
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
     )?);
     let addr = server.addr().to_string();
     {

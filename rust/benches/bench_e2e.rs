@@ -1,7 +1,8 @@
 //! End-to-end engine benchmark (Table 5's wall-clock quantity) plus the
 //! verify-path kernel comparison (scalar oracle vs the segment-parallel
-//! kernel layer) and the **pipelined-vs-serial decode comparison** over
-//! the simulated model pair.
+//! kernel layer), the **pipelined-vs-serial decode comparison** over
+//! the simulated model pair, and the **trace record-path overhead**
+//! gate (recorder attached vs `NullSink`; must stay under 2%).
 //!
 //! ```text
 //! cargo bench --bench bench_e2e -- [--json <path>] [--smoke]
@@ -30,6 +31,7 @@ use specd::runtime::{Runtime, SimSpec};
 use specd::sampling::kernels::{spec_step_batch_ws, KernelConfig, VerifyWorkspace};
 use specd::sampling::{verify, Method};
 use specd::tokenizer::Tokenizer;
+use specd::trace::{NullSink, TraceRecorder};
 use specd::util::bench::{
     bench, black_box, snapshot_envelope, write_json, BenchConfig, BenchOpts, BenchResult,
 };
@@ -256,6 +258,109 @@ fn pipeline_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
     (section, speedups)
 }
 
+/// The PR 6 gate: the same pipelined sim decode with a live trace
+/// recorder attached vs the default [`NullSink`]. Recording must stay
+/// near-zero-cost (< 2% wall-clock) — every hook site guards on
+/// `enabled()` before building an event, so the off path is one branch
+/// and the on path is digests + an in-memory push per step.
+fn trace_overhead_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
+    let spec = SimSpec {
+        vocab: 4096,
+        seq_len: 512,
+        gmax: 10,
+        batches: vec![1, 2, 4],
+        seed: 0xC0FF_EE11,
+        agreement: 0.99,
+        // the deployment-like regime the pipeline section measures:
+        // model dispatch dominates, as it does against real hardware
+        model_delay: Duration::from_micros(200),
+    };
+    println!(
+        "trace record-path overhead (pipelined sim decode, recorder on vs off, \
+         V={} delay={}us)\n",
+        spec.vocab,
+        spec.model_delay.as_micros()
+    );
+    let reqs = |b: usize| -> Vec<GenRequest> {
+        (0..2 * b as u64)
+            .map(|i| {
+                GenRequest::new(
+                    i,
+                    vec![1, 7 + i as i32, 9, 23, 41, 5],
+                    SamplingParams::default()
+                        .with_max_new_tokens(48)
+                        .with_temperature(0.8)
+                        .with_seed(1000 + i),
+                )
+            })
+            .collect()
+    };
+    let engine = |b: usize| -> Engine {
+        let rt = Arc::new(Runtime::simulated(spec.clone()));
+        Engine::new(
+            rt,
+            EngineConfig {
+                pair: "sim".into(),
+                batch: b,
+                method: Method::Exact,
+                backend: Backend::Native,
+                mode: Mode::Speculative,
+                gamma_init: 3,
+                gamma_pinned: true,
+                self_draft: false,
+                pipeline: PipelineMode::On,
+                seed: 7,
+            },
+        )
+        .expect("sim engine")
+    };
+
+    let mut rows: Vec<Value> = Vec::new();
+    let mut overheads: Vec<(usize, f64)> = Vec::new();
+    for b in [1usize, 2, 4] {
+        let mut e_off = engine(b);
+        let off = bench(&format!("decode/trace-off-b{b}"), cfg, || {
+            // re-attach the null sink each iteration so both closures
+            // pay the same per-run setup
+            e_off.set_trace(Arc::new(NullSink));
+            let out = e_off.generate(reqs(b)).unwrap();
+            black_box(out);
+        });
+        println!("{}", off.row());
+
+        let mut e_on = engine(b);
+        let mut events = 0usize;
+        let on = bench(&format!("decode/trace-on-b{b}"), cfg, || {
+            let rec = Arc::new(TraceRecorder::buffered(e_on.trace_header()));
+            e_on.set_trace(rec.clone());
+            let out = e_on.generate(reqs(b)).unwrap();
+            black_box(out);
+            events = rec.event_count();
+        });
+        println!("{}", on.row());
+
+        let overhead_pct = (on.mean_secs() / off.mean_secs() - 1.0) * 100.0;
+        println!("  B={b}: {events} events/run, record-path overhead {overhead_pct:+.2}%\n");
+        rows.push(obj(vec![
+            ("batch", b.into()),
+            ("events_per_run", events.into()),
+            ("trace_off", off.to_json()),
+            ("trace_on", on.to_json()),
+            ("overhead_pct", Value::Num(overhead_pct)),
+        ]));
+        overheads.push((b, overhead_pct));
+    }
+    let section = obj(vec![
+        ("vocab", spec.vocab.into()),
+        (
+            "model_delay_us",
+            (spec.model_delay.as_micros() as i64).into(),
+        ),
+        ("rows", Value::Arr(rows)),
+    ]);
+    (section, overheads)
+}
+
 fn run_decode(
     rt: &Arc<Runtime>,
     tok: &Tokenizer,
@@ -378,6 +483,13 @@ fn main() {
 
     let (verify_json, speedup) = verify_path_section(cfg);
     let (pipeline_json, pipeline_speedups) = pipeline_section(cfg);
+    let (trace_json, trace_overheads) = trace_overhead_section(cfg);
+    for (b, pct) in &trace_overheads {
+        assert!(
+            *pct < 2.0,
+            "trace record-path overhead {pct:.2}% at B={b} exceeds the 2% budget"
+        );
+    }
     let e2e = e2e_section();
 
     if let Some(path) = &opts.json {
@@ -399,6 +511,7 @@ fn main() {
                 ("verify_speedup", Value::Num(speedup)),
                 ("pipeline", pipeline_json),
                 ("pipeline_speedups", pipeline_speedup_json),
+                ("trace_overhead", trace_json),
                 ("e2e", e2e_json),
                 ("scopes", scopes_json),
             ],

@@ -71,6 +71,10 @@ use anyhow::{bail, Result};
 use crate::runtime::{LoadedExecutable, Runtime, TensorView};
 use crate::sampling::{self, kernels, verify, Method};
 use crate::tokenizer;
+use crate::trace::{
+    digest_f32, params_digest, AdmitEvent, NullSink, SimHeader, SlotStep, StepEvent,
+    TraceEvent, TraceHeader, TraceSink, TRACE_VERSION,
+};
 use crate::util::rng::Pcg32;
 
 use super::gamma::GammaController;
@@ -196,6 +200,10 @@ pub struct Engine {
     bonus_row: Vec<f32>,
     /// scratch tail for predicted stop-sequence matching
     stop_scratch: Vec<i32>,
+    /// trace capture hook ([`NullSink`] unless a recorder is attached
+    /// via [`Engine::set_trace`]) — disabled cost is one branch per
+    /// recording site
+    trace: Arc<dyn TraceSink>,
 }
 
 impl Engine {
@@ -271,9 +279,55 @@ impl Engine {
             slot_epoch: 0,
             bonus_row: vec![0.0; vocab],
             stop_scratch: Vec::new(),
+            trace: Arc::new(NullSink),
             runtime,
             config,
         })
+    }
+
+    /// Attach a trace sink (e.g. a [`crate::trace::TraceRecorder`]),
+    /// propagating it into the verifier and the pipelined scheduler. A
+    /// replay-checkable trace must be attached before any request is
+    /// submitted — the admit events carry the initial RNG positions.
+    pub fn set_trace(&mut self, sink: Arc<dyn TraceSink>) {
+        self.trace = sink.clone();
+        self.verifier.set_trace(sink.clone());
+        if let Some(ctl) = &mut self.pipeline {
+            ctl.set_trace(sink);
+        }
+    }
+
+    /// The trace header describing this engine's exact configuration —
+    /// what a [`crate::trace::TraceRecorder`] is constructed with.
+    pub fn trace_header(&self) -> TraceHeader {
+        TraceHeader {
+            version: TRACE_VERSION,
+            pair: self.config.pair.clone(),
+            batch: self.config.batch as u32,
+            seq_len: self.seq_len as u32,
+            vocab: self.vocab as u32,
+            gmax: self.gmax as u32,
+            engine_seed: self.config.seed,
+            method: self.config.method,
+            backend: match self.config.backend {
+                Backend::Hlo => "hlo",
+                Backend::Native => "native",
+            }
+            .into(),
+            mode: match self.config.mode {
+                Mode::Speculative => "speculative",
+                Mode::Autoregressive => "autoregressive",
+            }
+            .into(),
+            pipeline: self.config.pipeline.name().into(),
+            gamma_init: self.config.gamma_init as u32,
+            gamma_pinned: self.config.gamma_pinned,
+            self_draft: self.config.self_draft,
+            sim: self.runtime.sim_spec().map(|s| SimHeader {
+                seed: s.seed,
+                agreement: s.agreement,
+            }),
+        }
     }
 
     /// Enqueue a request (admitted into a slot on the next step).
@@ -379,9 +433,12 @@ impl Engine {
                 latency: 0.0,
             });
             self.stats.finished += 1;
+            if self.trace.enabled() {
+                self.trace.record(TraceEvent::Cancel { id, slot: None });
+            }
             return true;
         }
-        for slot in self.slots.iter_mut() {
+        for (i, slot) in self.slots.iter_mut().enumerate() {
             if slot.as_ref().is_some_and(|s| s.req.id == id) {
                 let s = slot.take().unwrap();
                 self.results.push(GenResult {
@@ -399,6 +456,12 @@ impl Engine {
                 self.slot_epoch += 1;
                 if let Some(ctl) = &self.pipeline {
                     ctl.cancel_inflight();
+                }
+                if self.trace.enabled() {
+                    self.trace.record(TraceEvent::Cancel {
+                        id,
+                        slot: Some(i as u32),
+                    });
                 }
                 return true;
             }
@@ -460,7 +523,7 @@ impl Engine {
     }
 
     fn admit(&mut self) {
-        for slot in self.slots.iter_mut() {
+        for (i, slot) in self.slots.iter_mut().enumerate() {
             if slot.is_none() {
                 if let Some(req) = self.queue.pop_front() {
                     let mut tokens = vec![tokenizer::PAD; self.seq_len];
@@ -474,6 +537,28 @@ impl Engine {
                     let len = prompt.len();
                     let seed = req.params.seed_or(req.id);
                     let rng = Pcg32::derive(self.config.seed ^ seed, req.id);
+                    if self.trace.enabled() {
+                        let (rng_state, rng_inc) = rng.state();
+                        let p = &req.params;
+                        self.trace.record(TraceEvent::Admit(AdmitEvent {
+                            slot: i as u32,
+                            id: req.id,
+                            prompt: prompt.clone(),
+                            stop_ids: req.stop_ids.clone(),
+                            max_new_tokens: p.max_new_tokens as u32,
+                            temperature: p.temperature,
+                            draft_temperature: p.draft_temperature,
+                            top_k: p.top_k as u32,
+                            top_p: p.top_p,
+                            gamma: p.gamma.unwrap_or(0) as u32,
+                            gamma_pinned: p.gamma_pinned,
+                            method: p.method,
+                            seed,
+                            params_digest: params_digest(p),
+                            rng_state,
+                            rng_inc,
+                        }));
+                    }
                     *slot = Some(Slot {
                         req,
                         tokens,
@@ -493,7 +578,9 @@ impl Engine {
 
     /// Speculative-mode clamp: rejection sampling needs q to be the real
     /// proposal distribution, so fully-greedy temps are nudged positive.
-    fn effective_temp(t: f32) -> f32 {
+    /// `pub(crate)` because the trace replay checker must apply the
+    /// exact same clamp.
+    pub(crate) fn effective_temp(t: f32) -> f32 {
         t.max(0.05)
     }
 
@@ -901,6 +988,36 @@ impl Engine {
         let want = Self::gamma_want(&self.gamma, &self.slots, min_headroom);
         let gamma = Self::snap_gamma(&avail, want);
 
+        // --- trace: snapshot each active slot's RNG stream position
+        // *before* the draft draws. In pipelined mode the live slot RNG
+        // at this point is still the pre-draft state (a hit prefetch
+        // advanced clones; adoption replaces the streams below), so the
+        // recorded position is identical in serial and pipelined runs —
+        // the trace is schedule-independent by construction.
+        let tracing = self.trace.enabled();
+        let mut tr_slots: Vec<SlotStep> = Vec::new();
+        if tracing {
+            for (i, slot) in self.slots.iter().enumerate() {
+                let Some(slot) = slot else { continue };
+                let (rng_state, rng_inc) = slot.rng.state();
+                tr_slots.push(SlotStep {
+                    slot: i as u32,
+                    id: slot.req.id,
+                    len_before: slot.len as u32,
+                    method: self.methods_buf[i],
+                    rng_state,
+                    rng_inc,
+                    draft: Vec::new(),
+                    zq_digest: 0,
+                    zp_digest: 0,
+                    accept_len: 0,
+                    out_row: Vec::new(),
+                    committed: Vec::new(),
+                    finish: None,
+                });
+            }
+        }
+
         // --- 2. model block: adopt the prefetched generation (its
         // drafts ARE this step's drafts and its RNG clones ARE the
         // post-draft streams), or dispatch serially
@@ -938,6 +1055,21 @@ impl Engine {
         // step's verification uniforms
         self.scale_and_filter(gamma);
         self.draw_verify_uniforms(gamma);
+
+        // --- trace: drafted tokens + digests of the exact logit
+        // tensors verification will consume (post scale/filter)
+        if tracing {
+            for ts in &mut tr_slots {
+                let i = ts.slot as usize;
+                ts.draft
+                    .extend_from_slice(&self.bufs.draft[i * gamma..(i + 1) * gamma]);
+                ts.zq_digest =
+                    digest_f32(&self.bufs.zq[i * gamma * v..(i + 1) * gamma * v]);
+                ts.zp_digest = digest_f32(
+                    &self.bufs.zp[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v],
+                );
+            }
+        }
 
         // --- overlap window: ship the next step's model block to the
         // dispatcher lane before running this step's verification
@@ -988,6 +1120,7 @@ impl Engine {
         let mut drafted_total = 0usize;
         let mut accepted_total = 0usize;
         let mut emitted_total = 0usize;
+        let mut ti = 0usize; // cursor into tr_slots (same active-slot order)
         for i in 0..b {
             let Some(slot) = &mut self.slots[i] else { continue };
             let alen = self.verify_out.accept_len[i] as usize;
@@ -1029,11 +1162,20 @@ impl Engine {
             let from = gen_before.min(slot.generated.len());
             let delta: Vec<i32> = slot.generated[from..].to_vec();
             emitted_total += delta.len();
-            if !delta.is_empty() {
-                self.deltas.push((slot.req.id, delta));
-            }
             if finish.is_none() && slot.headroom(s) < 2 {
                 finish = Some(FinishReason::Context);
+            }
+            if tracing {
+                let ts = &mut tr_slots[ti];
+                debug_assert_eq!(ts.slot as usize, i);
+                ts.accept_len = alen as u32;
+                ts.out_row.extend_from_slice(row);
+                ts.committed.extend_from_slice(&delta);
+                ts.finish = finish;
+                ti += 1;
+            }
+            if !delta.is_empty() {
+                self.deltas.push((slot.req.id, delta));
             }
             if let Some(reason) = finish {
                 let slot = self.slots[i].take().unwrap();
@@ -1055,6 +1197,13 @@ impl Engine {
         // cancel flag so it abandons remaining model calls)
         if let (Some(ctl), Some(h)) = (&mut self.pipeline, hit) {
             ctl.note_outcome(h);
+        }
+
+        if tracing {
+            self.trace.record(TraceEvent::Step(StepEvent {
+                gamma: gamma as u32,
+                slots: tr_slots,
+            }));
         }
 
         self.gamma.update(all_accepted);

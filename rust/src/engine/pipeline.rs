@@ -64,6 +64,7 @@ use anyhow::Result;
 
 use crate::runtime::{HostTensor, LoadedExecutable, TensorView};
 use crate::sampling::kernels::pool::DispatchLane;
+use crate::trace::{NullSink, PipelineEv, TraceEvent, TraceSink};
 use crate::util::rng::Pcg32;
 use crate::util::timer::Profiler;
 
@@ -355,6 +356,9 @@ pub(crate) struct PipelineCtl {
     /// prefetches launched / adopted (observability + tests)
     pub launched: u64,
     pub hits: u64,
+    /// trace hook for scheduler events (launch / hit / miss / discard /
+    /// lane cancel) — [`NullSink`] unless the engine attached a recorder
+    trace: Arc<dyn TraceSink>,
 }
 
 impl Drop for PipelineCtl {
@@ -381,7 +385,14 @@ impl PipelineCtl {
             slots_spare: Vec::new(),
             launched: 0,
             hits: 0,
+            trace: Arc::new(NullSink),
         }
+    }
+
+    /// Attach the engine's trace sink (propagated by
+    /// [`super::core::Engine::set_trace`]).
+    pub fn set_trace(&mut self, sink: Arc<dyn TraceSink>) {
+        self.trace = sink;
     }
 
     /// Take the prediction-row scratch (cleared; returned via
@@ -487,6 +498,12 @@ impl PipelineCtl {
             resolved: None,
         });
         self.launched += 1;
+        if self.trace.enabled() {
+            self.trace
+                .record(TraceEvent::Pipeline(PipelineEv::Launch {
+                    gamma: gamma as u32,
+                }));
+        }
     }
 
     /// Record the barrier verdict for the in-flight prefetch (called by
@@ -498,6 +515,13 @@ impl PipelineCtl {
             if !hit {
                 inf.cancel.store(true, Ordering::Relaxed);
             }
+            if self.trace.enabled() {
+                self.trace.record(TraceEvent::Pipeline(if hit {
+                    PipelineEv::BarrierHit
+                } else {
+                    PipelineEv::BarrierMiss
+                }));
+            }
         }
     }
 
@@ -507,6 +531,10 @@ impl PipelineCtl {
     pub fn cancel_inflight(&self) {
         if let Some(inf) = &self.inflight {
             inf.cancel.store(true, Ordering::Relaxed);
+            if self.trace.enabled() {
+                self.trace
+                    .record(TraceEvent::Pipeline(PipelineEv::CancelInflight));
+            }
         }
     }
 
@@ -527,6 +555,11 @@ impl PipelineCtl {
         let adopt = inf.resolved == Some(true) && inf.epoch == current_epoch;
         if !adopt {
             inf.cancel.store(true, Ordering::Relaxed);
+            // a barrier miss was already recorded at the verdict; this
+            // distinguishes the verdict-hit-but-stale-epoch discard
+            if inf.resolved != Some(false) && self.trace.enabled() {
+                self.trace.record(TraceEvent::Pipeline(PipelineEv::Discard));
+            }
             self.stash_draining(inf);
             return None;
         }

@@ -65,6 +65,7 @@ use anyhow::Result;
 use crate::runtime::{HostTensor, LoadedExecutable, Runtime, TensorView};
 use crate::sampling::kernels::{self, pool, KernelConfig, VerifyWorkspace};
 use crate::sampling::Method;
+use crate::trace::{NullSink, TraceEvent, TraceSink};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -147,6 +148,9 @@ pub struct Verifier {
     /// in place each dispatch — generation count grows to the
     /// high-water distinct-method count and is then stable
     hlo_out: Vec<Vec<HostTensor>>,
+    /// trace hook for verify-dispatch markers ([`NullSink`] unless the
+    /// engine attached a recorder)
+    trace: Arc<dyn TraceSink>,
 }
 
 impl Verifier {
@@ -167,7 +171,14 @@ impl Verifier {
             // autoregressive engine never pays for idle worker threads
             ws: VerifyWorkspace::new(KernelConfig::from_env()),
             hlo_out: Vec::new(),
+            trace: Arc::new(NullSink),
         }
+    }
+
+    /// Attach the engine's trace sink (propagated by
+    /// [`crate::engine::Engine::set_trace`]).
+    pub fn set_trace(&mut self, sink: Arc<dyn TraceSink>) {
+        self.trace = sink;
     }
 
     /// Replace the kernel scheduling config (bench/test knob; results
@@ -231,6 +242,12 @@ impl Verifier {
         debug_assert_eq!(ins.z_p.len(), b * (gamma + 1) * v);
         debug_assert_eq!(ins.z_q.len(), b * gamma * v);
         assert_eq!(methods.len(), b, "one method per batch row");
+        if self.trace.enabled() {
+            self.trace.record(TraceEvent::Verify {
+                gamma: gamma as u32,
+                groups: distinct_methods(methods).len() as u32,
+            });
+        }
         match self.backend {
             Backend::Native => {
                 let started = Instant::now();

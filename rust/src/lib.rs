@@ -49,6 +49,20 @@
 //! `SPECD_SIM=1`) runs the whole engine without PJRT, which is what the
 //! pipelined-vs-serial parity suite and decode benches are built on.
 //!
+//! ## Deterministic trace record/replay
+//!
+//! Both determinism claims above are checkable on any individual run,
+//! not just in the test suite: the engine streams a compact versioned
+//! execution trace ([`trace`]) — RNG stream *positions* rather than
+//! drawn floats, logit digests, per-slot methods, accept lengths,
+//! commit decisions, pipeline barrier events — through a near-zero-cost
+//! [`trace::TraceSink`]. The offline checker ([`trace::check`],
+//! `specd trace check`) replays a trace against the scalar oracle
+//! ([`sampling::verify`]) over the simulated model pair and reports the
+//! first divergent step and field; `specd trace fuzz` drives randomized
+//! pipelined schedules (mixed per-slot methods, mid-decode cancels)
+//! through record-then-check end to end.
+//!
 //! `docs/ARCHITECTURE.md` walks the whole decode path end-to-end and
 //! maps the paper's §3 onto these modules; `docs/PERF.md` documents the
 //! benchmark methodology and the tracked perf trajectory.
@@ -89,6 +103,7 @@ pub mod server;
 pub mod simulator;
 pub mod tables;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -6,9 +6,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use specd::engine::{Backend, Engine, EngineConfig, Mode, PipelineMode, SamplingParams};
-use specd::runtime::Runtime;
+use specd::runtime::{Runtime, SimSpec};
 use specd::sampling::Method;
 use specd::server::{Server, ServerConfig};
+use specd::trace::TraceRecorder;
 use specd::simulator::DeviceProfile;
 use specd::tables::{self, EvalContext, TableId};
 use specd::tokenizer::Tokenizer;
@@ -40,6 +41,7 @@ fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
         "client" => client(rest),
         "eval" => eval(rest),
         "table" | "figure" => table(rest),
+        "trace" => trace_cmd(rest),
         "help" | "--help" | "-h" => {
             println!("{}", help_text());
             Ok(())
@@ -59,6 +61,10 @@ fn help_text() -> &'static str {
      \x20 eval    --task asr|sum       workload evaluation (WER / ROUGE-1)\n\
      \x20 table   --id t1..t8|all      regenerate a paper table\n\
      \x20 figure  --id f3|f4|f5        regenerate a paper figure's data\n\
+     \x20 trace   record|check|export|fuzz   deterministic execution traces:\n\
+     \x20         record a pipelined sim decode, replay it offline against\n\
+     \x20         the scalar oracle, convert binary<->JSON-lines, or fuzz\n\
+     \x20         randomized schedules through record-then-check\n\
      \n\
      sampling params (run/client; every request carries a SamplingParams —\n\
      defaults: 64 new tokens, temperature 0.8, no truncation, no stops):\n\
@@ -80,12 +86,15 @@ fn help_text() -> &'static str {
      \x20 <- {\"v\":2,\"event\":\"error\",\"id\":1,\"code\":\"invalid_params\",\"error\":...}\n\
      \x20 v1 one-shot lines (no \"v\" key) still round-trip unchanged.\n\
      \n\
-     common options: --method baseline|exact|sigmoid, --backend hlo|native,\n\
+     common options: --method baseline|exact|sigmoid, --backend hlo|native|sim,\n\
      --pair base|large, --batch N, --alpha/--beta, --n <examples>, --seed,\n\
      --pipeline on|off|auto (overlap next-step model dispatch with CPU\n\
      verification; auto = on for --backend native; bit-identical outputs);\n\
-     SPECD_SIM=1 serves the artifact-free simulated model pair (--pair sim\n\
-     --backend native)"
+     --backend sim runs the artifact-free simulated model pair (native\n\
+     verification, synthetic tokenizer — no `make artifacts` needed), and\n\
+     SPECD_SIM=1 does the same for subcommands without the flag;\n\
+     serve --trace <path> streams a binary execution trace for\n\
+     `specd trace check` (toggle at runtime with the v2 `record` op)"
 }
 
 fn parse_method(p: &specd::util::cli::Parsed) -> Result<Method> {
@@ -108,7 +117,11 @@ fn parse_method_str(name: &str, alpha: f32, beta: f32) -> Result<Method> {
 
 fn engine_opts(cmd: Command) -> Command {
     cmd.opt("method", "exact", "verification method")
-        .opt("backend", "hlo", "verifier backend (hlo|native)")
+        .opt(
+            "backend",
+            "hlo",
+            "verifier backend (hlo|native), or sim for the artifact-free simulated pair",
+        )
         .opt("pair", "base", "model pair")
         .opt("batch", "1", "engine slots (must match artifacts)")
         .opt("alpha", "-1000", "sigmoid alpha")
@@ -158,6 +171,9 @@ fn sampling_params(p: &specd::util::cli::Parsed) -> Result<SamplingParams> {
 }
 
 fn build_engine(p: &specd::util::cli::Parsed, mode: Mode) -> Result<(Engine, Tokenizer)> {
+    if p.str("backend") == "sim" || p.str("pair") == "sim" {
+        return build_sim_engine(p, mode);
+    }
     let runtime = Arc::new(Runtime::open_default()?);
     let tokenizer = Tokenizer::load(&specd::artifacts_dir().join("tokenizer.json"))?;
     let config = EngineConfig {
@@ -175,6 +191,44 @@ fn build_engine(p: &specd::util::cli::Parsed, mode: Mode) -> Result<(Engine, Tok
         seed: p.u64("seed").map_err(|e| anyhow!(e))?,
     };
     Ok((Engine::new(runtime, config)?, tokenizer))
+}
+
+/// `--backend sim` / `--pair sim`: artifact-free engine over the
+/// simulated model pair — native verification, synthetic printable-ASCII
+/// tokenizer, `SPECD_SIM_DELAY_US` / `SPECD_SIM_AGREEMENT` honored.
+fn build_sim_engine(p: &specd::util::cli::Parsed, mode: Mode) -> Result<(Engine, Tokenizer)> {
+    if p.flag("self-draft") {
+        bail!("--self-draft needs real artifacts (unavailable with --backend sim)");
+    }
+    let batch = p.usize("batch").map_err(|e| anyhow!(e))?;
+    let mut spec = SimSpec::from_env();
+    if !spec.batches.contains(&batch) {
+        spec.batches.push(batch);
+    }
+    let vocab = spec.vocab;
+    let runtime = Arc::new(Runtime::simulated(spec));
+    let tokenizer = sim_tokenizer(vocab)?;
+    let config = EngineConfig {
+        pair: "sim".into(),
+        batch,
+        method: parse_method(p)?,
+        backend: Backend::Native,
+        mode,
+        gamma_init: p.usize("gamma").map_err(|e| anyhow!(e))?,
+        gamma_pinned: false,
+        self_draft: false,
+        pipeline: PipelineMode::parse(p.str("pipeline"))
+            .ok_or_else(|| anyhow!("bad --pipeline (want on|off|auto)"))?,
+        seed: p.u64("seed").map_err(|e| anyhow!(e))?,
+    };
+    Ok((Engine::new(runtime, config)?, tokenizer))
+}
+
+/// Printable-ASCII char tokenizer sized to the simulated vocab.
+fn sim_tokenizer(vocab: usize) -> Result<Tokenizer> {
+    let chars: Vec<char> = (' '..='~').collect();
+    let keep = chars.len().min(vocab.saturating_sub(3));
+    Tokenizer::from_chars(chars[..keep].to_vec(), vocab)
 }
 
 fn info(rest: &[String]) -> Result<()> {
@@ -246,14 +300,28 @@ fn run(rest: &[String]) -> Result<()> {
 
 fn serve(rest: &[String]) -> Result<()> {
     let cmd = engine_opts(Command::new("serve", "TCP JSON-lines server"))
-        .opt("addr", "127.0.0.1:7077", "bind address");
+        .opt("addr", "127.0.0.1:7077", "bind address")
+        .opt(
+            "trace",
+            "",
+            "stream a binary execution trace here (replay with `specd trace check`)",
+        );
     let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
     let (engine, tok) = build_engine(&p, Mode::Speculative)?;
+    let trace = if p.str("trace").is_empty() {
+        None
+    } else {
+        let path = std::path::PathBuf::from(p.str("trace"));
+        let rec = TraceRecorder::to_file(engine.trace_header(), &path).map_err(|e| anyhow!(e))?;
+        println!("recording execution trace to {}", path.display());
+        Some(Arc::new(rec))
+    };
     let server = Server::start(
         engine,
         tok,
         ServerConfig {
             addr: p.str("addr").to_string(),
+            trace,
         },
     )?;
     println!("listening on {} (ctrl-c to stop)", server.addr());
@@ -367,5 +435,188 @@ fn table(rest: &[String]) -> Result<()> {
     for id in ids {
         println!("{}", tables::generate(id, &ctx, device)?);
     }
+    Ok(())
+}
+
+fn trace_cmd(rest: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: specd trace record|check|export|fuzz [flags]\n\
+         \x20 record  --out t.bin [--jsonl --batch N --requests N --max-new N\n\
+         \x20         --seed S --agreement A --method M --gamma G --mixed-methods\n\
+         \x20         --pipeline on|off --cancel-at step:id[,step:id]]\n\
+         \x20 check   --trace t.bin        replay against the scalar oracle\n\
+         \x20 export  --trace t.bin --out t.jsonl   binary <-> JSON-lines\n\
+         \x20 fuzz    [--cases N --seed S --smoke]  randomized record-then-check";
+    let (sub, rest) = match rest.split_first() {
+        Some((s, r)) if !s.starts_with('-') => (s.as_str(), r.to_vec()),
+        _ => bail!("{USAGE}"),
+    };
+    match sub {
+        "record" => trace_record(&rest),
+        "check" => trace_check(&rest),
+        "export" => trace_export(&rest),
+        "fuzz" => trace_fuzz(&rest),
+        other => bail!("unknown trace subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+/// Build the deterministic decode schedule `trace record` drives from
+/// the parsed flags.
+fn trace_case(p: &specd::util::cli::Parsed) -> Result<specd::trace::fuzz::FuzzCase> {
+    let seed = p.u64("seed").map_err(|e| anyhow!(e))?;
+    Ok(specd::trace::fuzz::FuzzCase {
+        batch: p.usize("batch").map_err(|e| anyhow!(e))?,
+        agreement: p.f64("agreement").map_err(|e| anyhow!(e))? as f32,
+        engine_seed: seed.wrapping_mul(2).wrapping_add(11),
+        method: parse_method(p)?,
+        mixed_methods: p.flag("mixed-methods"),
+        n_reqs: p.usize("requests").map_err(|e| anyhow!(e))?,
+        max_new: p.usize("max-new").map_err(|e| anyhow!(e))?,
+        gamma_init: p.usize("gamma").map_err(|e| anyhow!(e))?,
+        pipeline: match p.str("pipeline") {
+            "on" => PipelineMode::On,
+            "off" => PipelineMode::Off,
+            other => bail!("bad --pipeline {other:?} (want on|off)"),
+        },
+        cancels: parse_cancels(p.str("cancel-at"))?,
+        seed,
+        ..specd::trace::fuzz::FuzzCase::default()
+    })
+}
+
+/// Parse `"step:id[,step:id...]"` mid-decode cancel schedules.
+fn parse_cancels(s: &str) -> Result<Vec<(usize, u64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (step, id) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad --cancel-at entry {part:?} (want step:id)"))?;
+        let step: usize = step
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad --cancel-at step {step:?}"))?;
+        let id: u64 = id
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad --cancel-at request id {id:?}"))?;
+        out.push((step, id));
+    }
+    Ok(out)
+}
+
+fn trace_record(rest: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "trace record",
+        "record a pipelined sim decode to a trace file",
+    )
+    .req("out", "output trace path")
+    .flag("jsonl", "write the JSON-lines export instead of binary framing")
+    .opt("batch", "2", "engine slots")
+    .opt("requests", "4", "requests to decode (queue churn beyond --batch)")
+    .opt("max-new", "16", "per-request new-token budget (varied per request)")
+    .opt("seed", "1", "schedule derivation seed")
+    .opt("agreement", "0.9", "draft/target agreement of the sim pair")
+    .opt("method", "exact", "default verification method")
+    .opt("alpha", "-1000", "sigmoid alpha")
+    .opt("beta", "1000", "sigmoid beta")
+    .opt("gamma", "4", "initial draft length")
+    .flag("mixed-methods", "sprinkle per-request method overrides")
+    .opt("pipeline", "on", "pipelined decode scheduler (on|off)")
+    .opt("cancel-at", "", "mid-decode cancels, \"step:id[,step:id]\"");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let case = trace_case(&p)?;
+    let (trace, _rec) = specd::trace::fuzz::record_case(&case)?;
+    let path = std::path::PathBuf::from(p.str("out"));
+    if p.flag("jsonl") {
+        specd::trace::format::save_jsonl(&trace, &path).map_err(|e| anyhow!(e))?;
+    } else {
+        specd::trace::format::save_binary(&trace, &path).map_err(|e| anyhow!(e))?;
+    }
+    println!(
+        "recorded {} events ({} requests, batch {}) -> {}",
+        trace.events.len(),
+        case.n_reqs,
+        case.batch,
+        path.display()
+    );
+    Ok(())
+}
+
+fn trace_check(rest: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "trace check",
+        "replay a recorded trace against the scalar oracle",
+    )
+    .req("trace", "trace file (binary or JSON lines, format sniffed)");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let trace = specd::trace::format::load(std::path::Path::new(p.str("trace")))
+        .map_err(|e| anyhow!(e))?;
+    let report = specd::trace::check(&trace).map_err(|e| anyhow!("trace unreplayable: {e}"))?;
+    println!(
+        "replayed {} steps / {} events: {} requests, {} cancels, {} tokens, \
+         {} pipeline events, {} verify dispatches",
+        report.steps,
+        report.events,
+        report.requests,
+        report.cancels,
+        report.tokens,
+        report.pipeline_events,
+        report.verify_events
+    );
+    match report.divergence {
+        None => {
+            println!("trace check: OK — bit-identical to the scalar oracle");
+            Ok(())
+        }
+        Some(d) => bail!("trace check: DIVERGED — {d}"),
+    }
+}
+
+fn trace_export(rest: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "trace export",
+        "convert a trace between binary framing and JSON lines",
+    )
+    .req("trace", "input trace file (format sniffed)")
+    .req("out", "output path (.jsonl/.json -> JSON lines, else binary)");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let trace = specd::trace::format::load(std::path::Path::new(p.str("trace")))
+        .map_err(|e| anyhow!(e))?;
+    let out = std::path::PathBuf::from(p.str("out"));
+    let jsonl = out
+        .extension()
+        .and_then(|e| e.to_str())
+        .is_some_and(|e| e.eq_ignore_ascii_case("jsonl") || e.eq_ignore_ascii_case("json"));
+    if jsonl {
+        specd::trace::format::save_jsonl(&trace, &out).map_err(|e| anyhow!(e))?;
+    } else {
+        specd::trace::format::save_binary(&trace, &out).map_err(|e| anyhow!(e))?;
+    }
+    println!("wrote {} events -> {}", trace.events.len(), out.display());
+    Ok(())
+}
+
+fn trace_fuzz(rest: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "trace fuzz",
+        "randomized pipelined schedules through record-then-check",
+    )
+    .opt("cases", "20", "number of derived cases")
+    .opt("seed", "7", "fuzz run seed (a failing case number reproduces)")
+    .flag("smoke", "quick 3-case run for CI");
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let cases = if p.flag("smoke") {
+        3
+    } else {
+        p.usize("cases").map_err(|e| anyhow!(e))?
+    };
+    let seed = p.u64("seed").map_err(|e| anyhow!(e))?;
+    let report = specd::trace::fuzz::fuzz(cases, seed, |line| println!("{line}"))?;
+    if let Some(f) = report.failure {
+        bail!("trace fuzz FAILED (seed {seed}): {f}");
+    }
+    println!(
+        "trace fuzz: {} cases clean ({} steps, {} tokens, {} pipeline events)",
+        report.cases, report.steps, report.tokens, report.pipeline_events
+    );
     Ok(())
 }

@@ -243,6 +243,14 @@ impl Runtime {
         self.sim.is_some()
     }
 
+    /// The simulator spec this runtime was opened with (`None` for a
+    /// PJRT artifact runtime). The trace recorder embeds it in the
+    /// trace header so `specd trace check` can rebuild the identical
+    /// model pair offline.
+    pub fn sim_spec(&self) -> Option<&SimSpec> {
+        self.sim.as_ref()
+    }
+
     /// Load (compile) an artifact by name, with caching.
     pub fn load(&self, name: &str) -> Result<Arc<LoadedExecutable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(name) {

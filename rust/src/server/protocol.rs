@@ -10,7 +10,16 @@
 //!            "stop":["\n"], "seed":7, "gamma":3, "gamma_pinned":true,
 //!            "method":"exact"}}
 //! {"v":2, "op":"cancel", "id":1}
+//! {"v":2, "op":"record", "id":2, "enable":true}
 //! ```
+//!
+//! `record` flips the server's trace-recording gate
+//! ([`crate::trace::TraceRecorder`]) when the server was started with
+//! `--trace`; it is acknowledged with
+//! `{"v":2,"event":"record","id":…,"enabled":…}` or rejected with code
+//! `no_recorder`. The `done` event additionally carries
+//! `latency_percentiles_ms` (p50/p90/p95/p99 over every request
+//! finished so far) when the serve loop has latency samples.
 //!
 //! `params` keys map 1:1 onto [`SamplingParams`] (absent keys take the
 //! shared defaults). v2 parsing is strict: unknown envelope or params
@@ -58,6 +67,9 @@ pub struct WireRequest {
 pub enum WireMsg {
     Generate(WireRequest),
     Cancel { id: u64 },
+    /// flip the server's trace-recording gate (v2 only; the server must
+    /// have been started with a trace sink attached)
+    Record { id: u64, enable: bool },
 }
 
 /// Structured protocol error: machine-readable code + human message.
@@ -143,7 +155,7 @@ fn parse_versioned(v: &Value, ver: i64) -> Result<WireMsg, WireError> {
             for (key, _) in fields {
                 if !matches!(
                     key.as_str(),
-                    "v" | "op" | "id" | "prompt" | "params" | "stream"
+                    "v" | "op" | "id" | "prompt" | "params" | "stream" | "enable"
                 ) {
                     return Err(bad(
                         Some(id),
@@ -166,11 +178,23 @@ fn parse_versioned(v: &Value, ver: i64) -> Result<WireMsg, WireError> {
             }
             Ok(WireMsg::Cancel { id })
         }
+        "record" => {
+            if ver < 2 {
+                return Err(bad(Some(id), "record requires protocol v2"));
+            }
+            let enable = match v.get("enable") {
+                None => true,
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| bad(Some(id), "enable must be a boolean"))?,
+            };
+            Ok(WireMsg::Record { id, enable })
+        }
         "generate" => parse_generate(v, ver, id),
         other => Err(WireError::new(
             Some(id),
             "unknown_op",
-            format!("unknown op {other:?} (expected \"generate\" or \"cancel\")"),
+            format!("unknown op {other:?} (expected \"generate\", \"cancel\" or \"record\")"),
         )),
     }
 }
@@ -405,6 +429,28 @@ pub fn render_cancel(id: u64) -> String {
     .dump()
 }
 
+/// Client-side: render a v2 record-toggle line.
+pub fn render_record(id: u64, enable: bool) -> String {
+    obj(vec![
+        ("v", 2i64.into()),
+        ("op", "record".into()),
+        ("id", (id as i64).into()),
+        ("enable", enable.into()),
+    ])
+    .dump()
+}
+
+/// Server-side: acknowledge a record toggle.
+pub fn render_record_ack(id: u64, enabled: bool) -> String {
+    obj(vec![
+        ("v", 2i64.into()),
+        ("event", "record".into()),
+        ("id", (id as i64).into()),
+        ("enabled", enabled.into()),
+    ])
+    .dump()
+}
+
 /// Server response payload (v1 response line / v2 done event).
 #[derive(Debug, Clone)]
 pub struct WireResponse {
@@ -444,8 +490,31 @@ pub fn render_response(resp: &WireResponse) -> String {
 
 /// v2 final summary event.
 pub fn render_done(resp: &WireResponse) -> String {
+    render_done_with(resp, None)
+}
+
+/// v2 final summary event, optionally carrying the server's running
+/// per-request latency percentiles (milliseconds, over every request
+/// finished so far on this engine — the `latency` summary the serve
+/// loop maintains).
+pub fn render_done_with(
+    resp: &WireResponse,
+    latency: Option<&crate::util::stats::Summary>,
+) -> String {
     let mut fields = vec![("v", 2i64.into()), ("event", "done".into())];
     fields.extend(summary_fields(resp));
+    if let Some(s) = latency {
+        fields.push((
+            "latency_percentiles_ms",
+            obj(vec![
+                ("n", s.n.into()),
+                ("p50", Value::Num(s.p50 * 1e3)),
+                ("p90", Value::Num(s.p90 * 1e3)),
+                ("p95", Value::Num(s.p95 * 1e3)),
+                ("p99", Value::Num(s.p99 * 1e3)),
+            ]),
+        ));
+    }
     obj(fields).dump()
 }
 
@@ -792,6 +861,50 @@ mod tests {
         assert_eq!(v.get("error").unwrap().as_str(), Some("bad prompt"));
         let line = render_error(None, "parse failure");
         assert!(json::parse(&line).unwrap().get("id").unwrap().is_null());
+    }
+
+    #[test]
+    fn parses_record_toggle() {
+        assert_eq!(
+            parse_line(r#"{"v":2,"op":"record","id":1,"enable":false}"#).unwrap(),
+            WireMsg::Record { id: 1, enable: false }
+        );
+        // enable defaults to true
+        assert_eq!(
+            parse_line(r#"{"v":2,"op":"record","id":2}"#).unwrap(),
+            WireMsg::Record { id: 2, enable: true }
+        );
+        // v2-only, strictly typed
+        assert_eq!(err_code(r#"{"op":"record","id":1}"#), "bad_request");
+        assert_eq!(
+            err_code(r#"{"v":2,"op":"record","id":1,"enable":"yes"}"#),
+            "bad_request"
+        );
+        // round trip through the client renderer
+        assert_eq!(
+            parse_line(&render_record(3, true)).unwrap(),
+            WireMsg::Record { id: 3, enable: true }
+        );
+        let v = json::parse(&render_record_ack(3, true)).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str(), Some("record"));
+        assert_eq!(v.get("enabled").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn done_event_carries_latency_percentiles() {
+        let mut series = crate::util::stats::Series::new();
+        for i in 1..=100 {
+            series.push(i as f64 * 1e-3);
+        }
+        let line = render_done_with(&sample_response(), Some(&series.summary()));
+        let v = json::parse(&line).unwrap();
+        let lp = v.get("latency_percentiles_ms").expect("percentiles");
+        assert_eq!(lp.get("n").unwrap().as_usize(), Some(100));
+        let p99 = lp.get("p99").unwrap().as_f64().unwrap();
+        let p50 = lp.get("p50").unwrap().as_f64().unwrap();
+        assert!(p99 > p50, "p99 {p99} should exceed p50 {p50}");
+        // plain render_done stays percentile-free
+        assert!(!render_done(&sample_response()).contains("latency_percentiles"));
     }
 
     #[test]

@@ -27,22 +27,28 @@ use anyhow::{Context, Result};
 
 use crate::engine::{Engine, GenRequest, SamplingParams};
 use crate::tokenizer::Tokenizer;
+use crate::trace::TraceRecorder;
+use crate::util::stats::Series;
 
 use super::protocol::{
-    parse_line, render_cancel, render_delta, render_done, render_error,
-    render_error_event, render_generate, render_response, WireError, WireMsg,
-    WireResponse,
+    parse_line, render_cancel, render_delta, render_done_with, render_error,
+    render_error_event, render_generate, render_record_ack, render_response,
+    WireError, WireMsg, WireResponse,
 };
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub addr: String,
+    /// trace recorder to attach to the engine at start; the v2 `record`
+    /// op toggles its gate at runtime (`None` = tracing unavailable)
+    pub trace: Option<Arc<TraceRecorder>>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:7077".into(),
+            trace: None,
         }
     }
 }
@@ -79,16 +85,22 @@ pub struct Server {
     job_tx: Sender<Job>,
     engine_handle: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
     shutdown: Arc<AtomicBool>,
+    /// the trace recorder attached to the engine, if any — the v2
+    /// `record` op flips its gate from connection threads
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl Server {
     /// Bind and spawn the engine thread. `addr` may use port 0 for an
     /// ephemeral port (tests); the bound address is available via
     /// [`Server::addr`].
-    pub fn start(engine: Engine, tokenizer: Tokenizer, cfg: ServerConfig) -> Result<Self> {
+    pub fn start(mut engine: Engine, tokenizer: Tokenizer, cfg: ServerConfig) -> Result<Self> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
+        if let Some(rec) = &cfg.trace {
+            engine.set_trace(rec.clone());
+        }
         let (job_tx, job_rx) = channel::<Job>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let engine_handle = {
@@ -105,6 +117,7 @@ impl Server {
             job_tx,
             engine_handle: std::sync::Mutex::new(Some(engine_handle)),
             shutdown,
+            trace: cfg.trace,
         })
     }
 
@@ -122,8 +135,9 @@ impl Server {
             let stream = stream.context("accept")?;
             let tx = self.job_tx.clone();
             let id_base = next_id.fetch_add(1 << 20, Ordering::Relaxed);
+            let trace = self.trace.clone();
             std::thread::spawn(move || {
-                if let Err(e) = connection_loop(stream, tx, id_base) {
+                if let Err(e) = connection_loop(stream, tx, id_base, trace) {
                     crate::debug!("connection ended: {e:#}");
                 }
             });
@@ -141,7 +155,12 @@ impl Server {
     }
 }
 
-fn connection_loop(stream: TcpStream, tx: Sender<Job>, id_base: u64) -> Result<()> {
+fn connection_loop(
+    stream: TcpStream,
+    tx: Sender<Job>,
+    id_base: u64,
+    trace: Option<Arc<TraceRecorder>>,
+) -> Result<()> {
     let peer = stream.peer_addr()?;
     crate::debug!("connection from {peer}");
     let reader = BufReader::new(stream.try_clone()?);
@@ -188,6 +207,26 @@ fn connection_loop(stream: TcpStream, tx: Sender<Job>, id_base: u64) -> Result<(
                 })))
                 .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
             }
+            Ok(WireMsg::Record { id, enable }) => match &trace {
+                Some(rec) => {
+                    // the gate is an atomic on the shared recorder — no
+                    // engine-thread round trip needed; events between
+                    // toggles are simply dropped (safe: the checker only
+                    // replays traces recorded from engine start)
+                    rec.set_enabled(enable);
+                    send_line(&writer, &render_record_ack(id, rec.is_enabled()));
+                }
+                None => {
+                    send_line(
+                        &writer,
+                        &render_error_event(&WireError::new(
+                            Some(id),
+                            "no_recorder",
+                            "server was started without --trace; recording unavailable",
+                        )),
+                    );
+                }
+            },
             Ok(WireMsg::Cancel { id }) => match ids.get(&id) {
                 Some(&engine_id) => {
                     tx.send(Job::Cancel {
@@ -235,6 +274,9 @@ fn engine_loop(
     shutdown: Arc<AtomicBool>,
 ) {
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    // per-request wall latencies since server start; summarized into the
+    // `latency_percentiles_ms` block of every v2 `done` event
+    let mut latency = Series::new();
     loop {
         if shutdown.load(Ordering::Relaxed) && inflight.is_empty() {
             break;
@@ -310,7 +352,7 @@ fn engine_loop(
 
         if engine.active() == 0 && engine.pending() == 0 {
             // drain results produced without stepping (queue cancels)
-            flush_results(&mut engine, &tokenizer, &mut inflight);
+            flush_results(&mut engine, &tokenizer, &mut inflight, &mut latency);
             continue;
         }
         if let Err(e) = engine.step() {
@@ -339,7 +381,7 @@ fn engine_loop(
                 }
             }
         }
-        flush_results(&mut engine, &tokenizer, &mut inflight);
+        flush_results(&mut engine, &tokenizer, &mut inflight, &mut latency);
     }
 }
 
@@ -347,9 +389,11 @@ fn flush_results(
     engine: &mut Engine,
     tokenizer: &Tokenizer,
     inflight: &mut HashMap<u64, Inflight>,
+    latency: &mut Series,
 ) {
     for result in engine.take_results() {
         if let Some(f) = inflight.remove(&result.id) {
+            latency.push(result.latency);
             let resp = WireResponse {
                 id: f.wire_id,
                 text: tokenizer.decode_until_stop(&result.token_ids),
@@ -358,7 +402,9 @@ fn flush_results(
             let line = if f.v1 {
                 render_response(&resp)
             } else {
-                render_done(&resp)
+                // percentiles over every request finished so far,
+                // including this one (so the first done already has n=1)
+                render_done_with(&resp, Some(&latency.summary()))
             };
             send_line(&f.stream, &line);
         }

@@ -1,0 +1,625 @@
+//! Offline trace replay against the scalar oracle.
+//!
+//! [`check`] re-executes a sim-recorded trace step by step: it rebuilds
+//! the deterministic simulated runtime from the header, reconstructs
+//! every slot's RNG stream from the recorded positions, re-runs the
+//! model block + scale/filter + the scalar `sampling/verify` oracle,
+//! and replays the engine's commit loop — diffing the trace at every
+//! stage. The first mismatch is reported as a [`Divergence`] with the
+//! step, slot, field and both values; a clean replay proves the
+//! recorded run (serial *or* pipelined) was bit-identical to the
+//! oracle.
+//!
+//! What is recorded vs re-derived:
+//!
+//! * **recorded**: per-slot RNG positions, drafted tokens, logit
+//!   digests, accept lengths, emitted rows, committed deltas, finish
+//!   reasons, per-slot methods, admission params;
+//! * **re-derived**: every uniform (re-drawn from the recorded RNG
+//!   positions in the engine's draw order), the logit tensors (the sim
+//!   models are pure functions of the token context), the oracle's
+//!   accept/emit decisions, and the commit/finish state machine.
+//!
+//! Replay needs the model to be reproducible offline, so only traces
+//! recorded against [`Runtime::simulated`] (`sim` header present) are
+//! checkable; real-hardware traces still round-trip and diff
+//! structurally, they just can't be re-executed here.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::core::Engine;
+use crate::engine::pipeline::{run_model_block, BlockDims, BlockSlot, StepBuffers};
+use crate::engine::{match_stop_suffix, FinishReason};
+use crate::runtime::{Runtime, SimSpec};
+use crate::sampling::{self, verify, Method};
+use crate::tokenizer;
+use crate::util::rng::Pcg32;
+
+use super::format::{digest_f32, finish_name, SlotStep, Trace, TraceEvent};
+
+/// First point where the trace and the oracle replay disagree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Divergence {
+    /// 1-based decode-step index (counting `Step` events)
+    pub step: usize,
+    /// slot index (engine batch row)
+    pub slot: u32,
+    /// request id occupying the slot
+    pub id: u64,
+    /// which recorded field disagreed ("draft", "zq_digest", ...)
+    pub field: &'static str,
+    /// human-readable recorded-vs-replayed values
+    pub detail: String,
+}
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "step {} slot {} (request {}): {} diverged — {}",
+            self.step, self.slot, self.id, self.field, self.detail
+        )
+    }
+}
+
+/// Replay summary; `divergence = None` means the whole trace replayed
+/// bit-identically against the oracle.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// decode steps replayed
+    pub steps: usize,
+    /// events consumed (all kinds)
+    pub events: usize,
+    /// requests admitted
+    pub requests: usize,
+    /// cancel events seen
+    pub cancels: usize,
+    /// committed tokens verified
+    pub tokens: usize,
+    /// pipeline scheduler events seen (launch/hit/miss/discard/cancel)
+    pub pipeline_events: usize,
+    /// verifier dispatch markers seen
+    pub verify_events: usize,
+    pub divergence: Option<Divergence>,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.divergence.is_none()
+    }
+}
+
+/// Replay-side slot state (the checker's `Slot`).
+struct ReplaySlot {
+    id: u64,
+    tokens: Vec<i32>,
+    len: usize,
+    generated: Vec<i32>,
+    /// the live RNG stream, advanced in lockstep with the engine's
+    rng: Pcg32,
+    // admission params
+    max_new_tokens: usize,
+    temperature: f32,
+    draft_temp: f32,
+    top_k: usize,
+    top_p: f32,
+    stop_ids: Vec<Vec<i32>>,
+    method: Option<Method>,
+}
+
+fn finish_str(f: Option<FinishReason>) -> &'static str {
+    f.map(finish_name).unwrap_or("-")
+}
+
+/// Replay `trace` against the scalar oracle. `Err` means the trace is
+/// structurally unreplayable (not sim-recorded, malformed slot refs);
+/// a semantic mismatch comes back as `report.divergence`.
+pub fn check(trace: &Trace) -> Result<CheckReport, String> {
+    let h = &trace.header;
+    let sim = h.sim.as_ref().ok_or_else(|| {
+        "replay requires a sim-recorded trace (header has no sim section); \
+         real-hardware traces can be exported/diffed but not re-executed"
+            .to_string()
+    })?;
+    if h.mode != "speculative" {
+        return Err(format!(
+            "replay supports speculative traces only (mode is {:?})",
+            h.mode
+        ));
+    }
+    if h.self_draft {
+        return Err("replay does not support self-draft traces".into());
+    }
+    if h.backend != "native" {
+        return Err(format!(
+            "sim traces verify on the native backend; header says {:?}",
+            h.backend
+        ));
+    }
+    let (b, s, v, gmax) = (
+        h.batch as usize,
+        h.seq_len as usize,
+        h.vocab as usize,
+        h.gmax as usize,
+    );
+    if b == 0 || v == 0 || gmax == 0 || s == 0 {
+        return Err("trace header has zero dims".into());
+    }
+
+    // --- rebuild the deterministic model pair the trace was recorded
+    // against (model_delay is performance-only — irrelevant to outputs)
+    let runtime = Arc::new(Runtime::simulated(SimSpec {
+        vocab: v,
+        seq_len: s,
+        gmax,
+        batches: vec![b],
+        seed: sim.seed,
+        agreement: sim.agreement,
+        model_delay: Duration::ZERO,
+    }));
+    let draft_step = runtime
+        .load_model("draft_step", &h.pair, b)
+        .map_err(|e| format!("cannot rebuild sim draft model: {e}"))?;
+    let target_score = runtime
+        .load_model("target_score", &h.pair, b)
+        .map_err(|e| format!("cannot rebuild sim score model: {e}"))?;
+    let dims = BlockDims { b, s, v, gmax };
+
+    let mut bufs = StepBuffers::new(b, s, gmax, v);
+    let mut bslots: Vec<BlockSlot> = Vec::with_capacity(b);
+    let mut uacc = vec![0.0f32; b * gmax];
+    let mut ures = vec![0.0f32; b];
+    let mut ubonus = vec![0.0f32; b];
+    let mut methods = vec![h.method; b];
+
+    let mut slots: Vec<Option<ReplaySlot>> = (0..b).map(|_| None).collect();
+    let mut report = CheckReport::default();
+    let mut last_verify_gamma: Option<u32> = None;
+
+    for ev in &trace.events {
+        report.events += 1;
+        match ev {
+            TraceEvent::Admit(a) => {
+                let i = a.slot as usize;
+                if i >= b {
+                    return Err(format!("admit event slot {i} out of range (batch {b})"));
+                }
+                if slots[i].is_some() {
+                    return Err(format!(
+                        "admit event for occupied slot {i} (request {})",
+                        a.id
+                    ));
+                }
+                if a.prompt.is_empty() || a.prompt.len() > s {
+                    return Err(format!(
+                        "admit event prompt length {} invalid for seq_len {s}",
+                        a.prompt.len()
+                    ));
+                }
+                let mut tokens = vec![tokenizer::PAD; s];
+                tokens[..a.prompt.len()].copy_from_slice(&a.prompt);
+                slots[i] = Some(ReplaySlot {
+                    id: a.id,
+                    len: a.prompt.len(),
+                    tokens,
+                    generated: Vec::new(),
+                    rng: Pcg32::from_state(a.rng_state, a.rng_inc),
+                    max_new_tokens: a.max_new_tokens as usize,
+                    temperature: a.temperature,
+                    draft_temp: a.draft_temperature.unwrap_or(a.temperature),
+                    top_k: a.top_k as usize,
+                    top_p: a.top_p,
+                    stop_ids: a.stop_ids.clone(),
+                    method: a.method,
+                });
+                report.requests += 1;
+            }
+            TraceEvent::Cancel { id, slot } => {
+                report.cancels += 1;
+                if let Some(i) = slot {
+                    let i = *i as usize;
+                    if i >= b {
+                        return Err(format!("cancel event slot {i} out of range"));
+                    }
+                    match slots[i].take() {
+                        Some(sl) if sl.id == *id => {}
+                        Some(sl) => {
+                            return Err(format!(
+                                "cancel event says slot {i} holds request {id}, \
+                                 replay has request {}",
+                                sl.id
+                            ));
+                        }
+                        None => {
+                            return Err(format!(
+                                "cancel event for empty slot {i} (request {id})"
+                            ));
+                        }
+                    }
+                }
+                // queue-side cancels never reached a slot: nothing to do
+            }
+            TraceEvent::Pipeline(_) => report.pipeline_events += 1,
+            TraceEvent::Verify { gamma, .. } => {
+                report.verify_events += 1;
+                last_verify_gamma = Some(*gamma);
+            }
+            TraceEvent::Step(step) => {
+                report.steps += 1;
+                let diverged = replay_step(
+                    &mut slots,
+                    step,
+                    ReplayCtx {
+                        step_idx: report.steps,
+                        dims,
+                        draft_step: &draft_step,
+                        target_score: &target_score,
+                        profiler: &runtime.profiler,
+                        header_method: h.method,
+                        last_verify_gamma: last_verify_gamma.take(),
+                    },
+                    &mut bufs,
+                    &mut bslots,
+                    &mut uacc,
+                    &mut ures,
+                    &mut ubonus,
+                    &mut methods,
+                    &mut report.tokens,
+                )?;
+                if let Some(d) = diverged {
+                    report.divergence = Some(d);
+                    return Ok(report);
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+struct ReplayCtx<'a> {
+    step_idx: usize,
+    dims: BlockDims,
+    draft_step: &'a crate::runtime::LoadedExecutable,
+    target_score: &'a crate::runtime::LoadedExecutable,
+    profiler: &'a crate::util::timer::Profiler,
+    header_method: Method,
+    /// γ of the Verify marker recorded just before this step, if any
+    last_verify_gamma: Option<u32>,
+}
+
+/// Replay one recorded decode step. Returns `Ok(Some(divergence))` on
+/// the first mismatch, `Ok(None)` on a bit-identical step.
+#[allow(clippy::too_many_arguments)]
+fn replay_step(
+    slots: &mut [Option<ReplaySlot>],
+    step: &super::format::StepEvent,
+    ctx: ReplayCtx<'_>,
+    bufs: &mut StepBuffers,
+    bslots: &mut Vec<BlockSlot>,
+    uacc: &mut [f32],
+    ures: &mut [f32],
+    ubonus: &mut [f32],
+    methods: &mut [Method],
+    tokens_verified: &mut usize,
+) -> Result<Option<Divergence>, String> {
+    let BlockDims { b, s, v, gmax } = ctx.dims;
+    let gamma = step.gamma as usize;
+    let sn = ctx.step_idx;
+    if gamma == 0 || gamma > gmax {
+        return Err(format!("step {sn}: gamma {gamma} outside 1..={gmax}"));
+    }
+
+    // --- structural pass: the recorded slot set must be exactly the
+    // replay-active set, in slot order, with matching ids / lengths /
+    // methods / RNG positions
+    let mut expect = slots
+        .iter()
+        .enumerate()
+        .filter_map(|(i, sl)| sl.as_ref().map(|sl| (i, sl.id)));
+    for ts in &step.slots {
+        let i = ts.slot as usize;
+        if i >= b {
+            return Err(format!("step {sn}: slot {i} out of range (batch {b})"));
+        }
+        match expect.next() {
+            Some((ei, eid)) if ei == i && eid == ts.id => {}
+            other => {
+                return Err(format!(
+                    "step {sn}: recorded slot {} (request {}) does not match \
+                     replay-active slot {:?}",
+                    i, ts.id, other
+                ));
+            }
+        }
+        let sl = slots[i].as_ref().expect("matched above");
+        if sl.len != ts.len_before as usize {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "len_before",
+                format!("recorded {}, replay has {}", ts.len_before, sl.len),
+            )));
+        }
+        if sl.len + gamma + 1 > s {
+            return Err(format!(
+                "step {sn}: slot {i} len {} + gamma {gamma} + 1 overflows seq_len {s}",
+                sl.len
+            ));
+        }
+        let want = sl.method.unwrap_or(ctx.header_method);
+        if ts.method != want {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "method",
+                format!(
+                    "recorded {:?}, admission params imply {:?}",
+                    ts.method.name(),
+                    want.name()
+                ),
+            )));
+        }
+        let (st, inc) = sl.rng.state();
+        if (st, inc) != (ts.rng_state, ts.rng_inc) {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "rng",
+                format!(
+                    "recorded position ({:#x}, {:#x}), replay stream is at \
+                     ({st:#x}, {inc:#x}) — uniforms out of sync",
+                    ts.rng_state, ts.rng_inc
+                ),
+            )));
+        }
+        if ts.draft.len() != gamma || ts.out_row.len() != gamma + 1 {
+            return Err(format!(
+                "step {sn}: slot {i} rows sized {}/{} for gamma {gamma}",
+                ts.draft.len(),
+                ts.out_row.len()
+            ));
+        }
+    }
+    if let Some((ei, eid)) = expect.next() {
+        return Err(format!(
+            "step {sn}: replay-active slot {ei} (request {eid}) missing from \
+             the recorded step"
+        ));
+    }
+    if let Some(vg) = ctx.last_verify_gamma {
+        if vg as usize != gamma {
+            return Err(format!(
+                "step {sn}: verify marker ran gamma {vg} but the step \
+                 committed gamma {gamma}"
+            ));
+        }
+    }
+
+    // --- model block from the recorded RNG positions (the engine's
+    // serial dispatch; a pipelined recording replays through here
+    // because the positions are schedule-independent)
+    bslots.clear();
+    for i in 0..b {
+        match &slots[i] {
+            Some(sl) => {
+                bufs.tokens[i * s..(i + 1) * s].copy_from_slice(&sl.tokens);
+                bslots.push(BlockSlot {
+                    active: true,
+                    len: sl.len,
+                    rng: sl.rng.clone(),
+                    draft_temp: Engine::effective_temp(sl.draft_temp),
+                });
+            }
+            None => {
+                bufs.tokens[i * s..(i + 1) * s].fill(tokenizer::PAD);
+                bslots.push(BlockSlot::inactive());
+            }
+        }
+    }
+    run_model_block(
+        ctx.draft_step,
+        ctx.target_score,
+        ctx.profiler,
+        bufs,
+        bslots,
+        ctx.dims,
+        gamma,
+        false,
+        None,
+    )
+    .map_err(|e| format!("step {sn}: sim model block failed: {e}"))?;
+
+    for ts in &step.slots {
+        let i = ts.slot as usize;
+        let got = &bufs.draft[i * gamma..(i + 1) * gamma];
+        if got != ts.draft.as_slice() {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "draft",
+                format!("recorded {:?}, replay drafted {:?}", ts.draft, got),
+            )));
+        }
+    }
+
+    // --- scale/filter exactly as the engine does, then digest-compare
+    // the tensors verification consumed
+    for i in 0..b {
+        let t = match &slots[i] {
+            Some(sl) => Engine::effective_temp(sl.temperature),
+            None => 1.0,
+        };
+        if (t - 1.0).abs() > 1e-6 {
+            let inv = 1.0 / t;
+            for x in &mut bufs.zp[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v] {
+                *x *= inv;
+            }
+            for x in &mut bufs.zq[i * gamma * v..(i + 1) * gamma * v] {
+                *x *= inv;
+            }
+        }
+    }
+    for i in 0..b {
+        let (k, p) = match &slots[i] {
+            Some(sl) => (sl.top_k, sl.top_p),
+            None => (0, 1.0),
+        };
+        if k == 0 && p >= 1.0 {
+            continue;
+        }
+        for j in 0..=gamma {
+            let off = (i * (gamma + 1) + j) * v;
+            sampling::filter::mask_logits_top_k_top_p(&mut bufs.zp[off..off + v], k, p);
+        }
+    }
+    for ts in &step.slots {
+        let i = ts.slot as usize;
+        let zq = digest_f32(&bufs.zq[i * gamma * v..(i + 1) * gamma * v]);
+        if zq != ts.zq_digest {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "zq_digest",
+                format!("recorded {:#x}, replay computed {zq:#x}", ts.zq_digest),
+            )));
+        }
+        let zp = digest_f32(&bufs.zp[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v]);
+        if zp != ts.zp_digest {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "zp_digest",
+                format!("recorded {:#x}, replay computed {zp:#x}", ts.zp_digest),
+            )));
+        }
+    }
+
+    // --- verification uniforms in the engine's draw order, from the
+    // block-advanced streams
+    for i in 0..b {
+        if bslots[i].active {
+            for c in 0..gamma {
+                uacc[i * gamma + c] = bslots[i].rng.uniform_f32();
+            }
+            ures[i] = bslots[i].rng.uniform_f32();
+            ubonus[i] = bslots[i].rng.uniform_f32();
+        } else {
+            uacc[i * gamma..(i + 1) * gamma].fill(1.0);
+            ures[i] = 0.0;
+            ubonus[i] = 0.0;
+        }
+    }
+
+    // --- per-slot methods with the engine's inactive-row padding
+    let pad = step
+        .slots
+        .first()
+        .map(|ts| ts.method)
+        .unwrap_or(ctx.header_method);
+    methods.fill(pad);
+    for ts in &step.slots {
+        methods[ts.slot as usize] = ts.method;
+    }
+
+    // --- the scalar oracle (the ground truth every backend must match)
+    let (accept_len, out_tokens) = verify::spec_step_batch(
+        &bufs.zp[..b * (gamma + 1) * v],
+        &bufs.zq[..b * gamma * v],
+        b,
+        gamma,
+        v,
+        &bufs.draft[..b * gamma],
+        &uacc[..b * gamma],
+        &ures[..b],
+        &ubonus[..b],
+        methods,
+        None,
+    );
+
+    // --- commit replay: the engine's exact finish state machine
+    for ts in &step.slots {
+        let i = ts.slot as usize;
+        let alen = accept_len[i] as usize;
+        if alen != ts.accept_len as usize {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "accept_len",
+                format!("recorded {}, oracle accepted {alen}", ts.accept_len),
+            )));
+        }
+        let row = &out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)];
+        if row != ts.out_row.as_slice() {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "out_tokens",
+                format!("recorded {:?}, oracle emitted {:?}", ts.out_row, row),
+            )));
+        }
+        let sl = slots[i].as_mut().expect("validated above");
+        let gen_before = sl.generated.len();
+        let mut finish: Option<FinishReason> = None;
+        for &tok in row.iter().take(alen + 1) {
+            sl.tokens[sl.len] = tok;
+            sl.len += 1;
+            sl.generated.push(tok);
+            if tok == tokenizer::EOS {
+                finish = Some(FinishReason::Stop);
+                break;
+            }
+            if let Some(m) = match_stop_suffix(&sl.generated, &sl.stop_ids) {
+                sl.generated.truncate(sl.generated.len() - m);
+                finish = Some(FinishReason::StopSeq);
+                break;
+            }
+            if sl.generated.len() >= sl.max_new_tokens {
+                finish = Some(FinishReason::Length);
+                break;
+            }
+        }
+        let from = gen_before.min(sl.generated.len());
+        let delta = &sl.generated[from..];
+        if finish.is_none() && s.saturating_sub(sl.len) < 2 {
+            finish = Some(FinishReason::Context);
+        }
+        if delta != ts.committed.as_slice() {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "committed",
+                format!("recorded {:?}, replay committed {:?}", ts.committed, delta),
+            )));
+        }
+        if finish != ts.finish {
+            return Ok(Some(div(
+                sn,
+                ts,
+                "finish",
+                format!(
+                    "recorded {}, replay decided {}",
+                    finish_str(ts.finish),
+                    finish_str(finish)
+                ),
+            )));
+        }
+        *tokens_verified += delta.len();
+        // carry the advanced stream into the next step (or free the slot)
+        sl.rng = bslots[i].rng.clone();
+        if finish.is_some() {
+            slots[i] = None;
+        }
+    }
+    Ok(None)
+}
+
+fn div(step: usize, ts: &SlotStep, field: &'static str, detail: String) -> Divergence {
+    Divergence {
+        step,
+        slot: ts.slot,
+        id: ts.id,
+        field,
+        detail,
+    }
+}

@@ -1,0 +1,1249 @@
+//! Trace event model + the two interchangeable encodings.
+//!
+//! A trace is a header followed by an ordered event stream. The design
+//! rule for what goes in an event: record exactly what the offline
+//! checker cannot re-derive from the oracle — RNG stream *positions*
+//! (never raw uniforms: a `(state, inc)` pair replays every draw
+//! bit-for-bit), committed tokens, finish decisions — plus cheap
+//! digests of what it *can* re-derive (draft tokens, logit tensors) so
+//! corruption is localised to the first divergent step instead of
+//! cascading.
+//!
+//! Two encodings round-trip losslessly:
+//!
+//! * **binary** — `SPTR` magic, `u32` version, then length-prefixed
+//!   frames (`tag:u8, len:u32, payload`). This is the on-disk format
+//!   the recorder streams, append-only so a crash mid-run leaves every
+//!   completed frame readable.
+//! * **JSON-lines** — one header line then one object per event, for
+//!   `jq`-style inspection and for shipping traces in bug reports.
+//!   `u64` fields (RNG states, digests, seeds, ids) are hex *strings*
+//!   because JSON numbers are f64 and would silently truncate them.
+//!
+//! Versioning rule: any change to recorded semantics (field meaning,
+//! draw order, digest function) bumps [`TRACE_VERSION`]; the checker
+//! refuses versions it does not know rather than guessing.
+
+use std::path::Path;
+
+use crate::engine::FinishReason;
+use crate::sampling::Method;
+use crate::util::json::{self, obj, Value};
+
+/// On-disk magic for binary traces.
+pub const TRACE_MAGIC: [u8; 4] = *b"SPTR";
+/// Current trace format version (see module docs for the bump rule).
+pub const TRACE_VERSION: u32 = 1;
+
+/// FNV-1a over the raw bit patterns of an f32 slice, mixed 8 bytes at a
+/// time. One shared digest for recorder and checker — the exact hash is
+/// irrelevant as long as both sides agree and it is cheap enough to run
+/// over `B·γ·V` logits per step without showing up in the bench.
+pub fn digest_f32(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut chunks = xs.chunks_exact(2);
+    for pair in &mut chunks {
+        let w = (pair[0].to_bits() as u64) | ((pair[1].to_bits() as u64) << 32);
+        h = (h ^ w).wrapping_mul(0x100000001b3);
+    }
+    for x in chunks.remainder() {
+        h = (h ^ x.to_bits() as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a over an i32 slice (token rows).
+pub fn digest_i32(xs: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in xs {
+        h = (h ^ (*x as u32 as u64)).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn mix(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100000001b3)
+}
+
+/// Digest over every [`crate::engine::SamplingParams`] field. The admit
+/// event also records the fields replay consumes directly; the digest
+/// is the change detector for everything else (and for fields added
+/// later without a format bump).
+pub fn params_digest(p: &crate::engine::SamplingParams) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    h = mix(h, p.max_new_tokens as u64);
+    h = mix(h, p.temperature.to_bits() as u64);
+    h = mix(
+        h,
+        p.draft_temperature
+            .map(|t| t.to_bits() as u64 | (1 << 60))
+            .unwrap_or(0),
+    );
+    h = mix(h, p.top_k as u64);
+    h = mix(h, p.top_p.to_bits() as u64);
+    for s in &p.stop {
+        for b in s.as_bytes() {
+            h = mix(h, *b as u64);
+        }
+        h = mix(h, 0x1FF);
+    }
+    h = mix(h, p.seed.map(|s| s ^ (1 << 63)).unwrap_or(1));
+    h = mix(h, p.gamma.map(|g| g as u64 | (1 << 60)).unwrap_or(0));
+    h = mix(h, p.gamma_pinned as u64);
+    match &p.method {
+        None => h = mix(h, 0xFE),
+        Some(m) => {
+            let (k, a, b) = method_parts(m);
+            h = mix(h, k as u64);
+            h = mix(h, a as u64);
+            h = mix(h, b as u64);
+        }
+    }
+    h
+}
+
+/// Simulator identity embedded in the header: together with the shape
+/// fields it is enough to rebuild the exact model pair offline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimHeader {
+    pub seed: u64,
+    pub agreement: f32,
+}
+
+/// Engine + model configuration at recording time. Everything the
+/// checker needs to reconstruct the run environment (shapes, seeds,
+/// policy), and nothing it can re-derive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceHeader {
+    pub version: u32,
+    pub pair: String,
+    pub batch: u32,
+    pub seq_len: u32,
+    pub vocab: u32,
+    pub gmax: u32,
+    pub engine_seed: u64,
+    pub method: Method,
+    /// verify backend name (`hlo` / `native`)
+    pub backend: String,
+    /// `speculative` / `autoregressive` — steps are only recorded for
+    /// speculative mode (the AR loop has no verify step to check)
+    pub mode: String,
+    /// pipeline mode name (`on` / `off` / `auto`)
+    pub pipeline: String,
+    pub gamma_init: u32,
+    pub gamma_pinned: bool,
+    pub self_draft: bool,
+    /// `Some` iff recorded against [`crate::runtime::Runtime::simulated`];
+    /// replay-checking requires it
+    pub sim: Option<SimHeader>,
+}
+
+/// A request entering a slot, with the exact sampling policy and the
+/// derived per-request RNG stream position before any draw.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmitEvent {
+    pub slot: u32,
+    pub id: u64,
+    /// post-truncation prompt tokens actually placed in the slot row
+    pub prompt: Vec<i32>,
+    pub stop_ids: Vec<Vec<i32>>,
+    pub max_new_tokens: u32,
+    pub temperature: f32,
+    pub draft_temperature: Option<f32>,
+    pub top_k: u32,
+    pub top_p: f32,
+    /// per-request γ cap (0 = none)
+    pub gamma: u32,
+    pub gamma_pinned: bool,
+    pub method: Option<Method>,
+    /// effective seed (`params.seed_or(id)`)
+    pub seed: u64,
+    /// digest over the full `SamplingParams` (change detector for
+    /// fields the replay does not consume directly)
+    pub params_digest: u64,
+    pub rng_state: u64,
+    pub rng_inc: u64,
+}
+
+/// One active slot's view of one speculative step: RNG position before
+/// the draft draws, the drafted tokens, digests of the logit tensors
+/// the verifier consumed (post temperature/top-k/top-p), and the commit
+/// outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotStep {
+    pub slot: u32,
+    pub id: u64,
+    pub len_before: u32,
+    pub method: Method,
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    /// γ drafted token ids
+    pub draft: Vec<i32>,
+    /// digest of the draft logit rows `z_q` fed to verification
+    pub zq_digest: u64,
+    /// digest of the target logit rows `z_p` fed to verification
+    pub zp_digest: u64,
+    pub accept_len: u32,
+    /// full γ+1 verifier output row (accepted prefix + resample/bonus)
+    pub out_row: Vec<i32>,
+    /// tokens actually streamed this step (post stop-sequence trim —
+    /// can be shorter than `accept_len + 1`, or retract to empty)
+    pub committed: Vec<i32>,
+    pub finish: Option<FinishReason>,
+}
+
+/// One engine speculative step over the active slot set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepEvent {
+    pub gamma: u32,
+    pub slots: Vec<SlotStep>,
+}
+
+/// Pipelined-scheduler events — informational for replay (the trace is
+/// schedule-independent by construction) but exactly what you want
+/// when diagnosing a divergence that only appears pipelined.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PipelineEv {
+    /// prefetch launched for the predicted next step
+    Launch { gamma: u32 },
+    /// barrier proved the all-accept prediction right; block adopted
+    BarrierHit,
+    /// prediction wrong; prefetched block discarded at the barrier
+    BarrierMiss,
+    /// prefetched block invalidated by slot-set change before adoption
+    Discard,
+    /// in-flight dispatch cancelled (slot cancel / engine drop)
+    CancelInflight,
+}
+
+/// The trace event stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    Admit(AdmitEvent),
+    Step(StepEvent),
+    Cancel { id: u64, slot: Option<u32> },
+    Pipeline(PipelineEv),
+    /// verifier dispatch marker (`groups` = distinct methods batched)
+    Verify { gamma: u32, groups: u32 },
+}
+
+/// A fully-loaded trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub header: TraceHeader,
+    pub events: Vec<TraceEvent>,
+}
+
+// ---------------------------------------------------------------------------
+// binary encoding
+
+const TAG_HEADER: u8 = 0;
+const TAG_ADMIT: u8 = 1;
+const TAG_STEP: u8 = 2;
+const TAG_CANCEL: u8 = 3;
+const TAG_PIPELINE: u8 = 4;
+const TAG_VERIFY: u8 = 5;
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn i64(&mut self, x: i64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f32(&mut self, x: f32) {
+        self.u32(x.to_bits());
+    }
+    fn bool(&mut self, x: bool) {
+        self.u8(x as u8);
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn vec_i32(&mut self, xs: &[i32]) {
+        self.u32(xs.len() as u32);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn method(&mut self, m: &Method) {
+        let (kind, a, b) = method_parts(m);
+        self.u8(kind);
+        self.i64(a);
+        self.i64(b);
+    }
+    fn opt_method(&mut self, m: &Option<Method>) {
+        match m {
+            None => self.u8(255),
+            Some(m) => self.method(m),
+        }
+    }
+    fn opt_f32(&mut self, x: Option<f32>) {
+        match x {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.f32(x);
+            }
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+type DecResult<T> = Result<T, String>;
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> DecResult<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "trace truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn done(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+    fn u8(&mut self) -> DecResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> DecResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> DecResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> DecResult<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> DecResult<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn bool(&mut self) -> DecResult<bool> {
+        Ok(self.u8()? != 0)
+    }
+    fn str(&mut self) -> DecResult<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|e| format!("bad utf8 in trace: {e}"))
+    }
+    fn vec_i32(&mut self) -> DecResult<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn method(&mut self) -> DecResult<Method> {
+        let kind = self.u8()?;
+        let a = self.i64()?;
+        let b = self.i64()?;
+        method_from_parts(kind, a, b)
+    }
+    fn opt_method(&mut self) -> DecResult<Option<Method>> {
+        let kind = self.u8()?;
+        if kind == 255 {
+            return Ok(None);
+        }
+        let a = self.i64()?;
+        let b = self.i64()?;
+        Ok(Some(method_from_parts(kind, a, b)?))
+    }
+    fn opt_f32(&mut self) -> DecResult<Option<f32>> {
+        if self.u8()? == 0 {
+            Ok(None)
+        } else {
+            Ok(Some(self.f32()?))
+        }
+    }
+}
+
+fn method_parts(m: &Method) -> (u8, i64, i64) {
+    match *m {
+        Method::Baseline => (0, 0, 0),
+        Method::Exact => (1, 0, 0),
+        Method::Sigmoid {
+            alpha_milli,
+            beta_milli,
+        } => (2, alpha_milli, beta_milli),
+        Method::Sigmoid16 {
+            alpha_milli,
+            beta_milli,
+        } => (3, alpha_milli, beta_milli),
+    }
+}
+
+fn method_from_parts(kind: u8, a: i64, b: i64) -> DecResult<Method> {
+    Ok(match kind {
+        0 => Method::Baseline,
+        1 => Method::Exact,
+        2 => Method::Sigmoid {
+            alpha_milli: a,
+            beta_milli: b,
+        },
+        3 => Method::Sigmoid16 {
+            alpha_milli: a,
+            beta_milli: b,
+        },
+        k => return Err(format!("unknown method kind {k} in trace")),
+    })
+}
+
+fn finish_code(f: FinishReason) -> u8 {
+    match f {
+        FinishReason::Length => 0,
+        FinishReason::Stop => 1,
+        FinishReason::StopSeq => 2,
+        FinishReason::Context => 3,
+        FinishReason::Cancelled => 4,
+    }
+}
+
+fn finish_from_code(c: u8) -> DecResult<FinishReason> {
+    Ok(match c {
+        0 => FinishReason::Length,
+        1 => FinishReason::Stop,
+        2 => FinishReason::StopSeq,
+        3 => FinishReason::Context,
+        4 => FinishReason::Cancelled,
+        c => return Err(format!("unknown finish code {c} in trace")),
+    })
+}
+
+/// Finish reason wire names, shared by the JSON encoding and reports.
+pub fn finish_name(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::StopSeq => "stop_seq",
+        FinishReason::Context => "context",
+        FinishReason::Cancelled => "cancel",
+    }
+}
+
+fn finish_from_name(s: &str) -> DecResult<FinishReason> {
+    Ok(match s {
+        "length" => FinishReason::Length,
+        "stop" => FinishReason::Stop,
+        "stop_seq" => FinishReason::StopSeq,
+        "context" => FinishReason::Context,
+        "cancel" => FinishReason::Cancelled,
+        s => return Err(format!("unknown finish reason {s:?} in trace")),
+    })
+}
+
+fn frame(out: &mut Vec<u8>, tag: u8, payload: &[u8]) {
+    out.push(tag);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Binary prelude: magic + version + header frame. The streaming
+/// recorder writes this once at open, then appends event frames.
+pub fn encode_prelude(h: &TraceHeader) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.str(&h.pair);
+    e.u32(h.batch);
+    e.u32(h.seq_len);
+    e.u32(h.vocab);
+    e.u32(h.gmax);
+    e.u64(h.engine_seed);
+    e.method(&h.method);
+    e.str(&h.backend);
+    e.str(&h.mode);
+    e.str(&h.pipeline);
+    e.u32(h.gamma_init);
+    e.bool(h.gamma_pinned);
+    e.bool(h.self_draft);
+    match &h.sim {
+        None => e.u8(0),
+        Some(s) => {
+            e.u8(1);
+            e.u64(s.seed);
+            e.f32(s.agreement);
+        }
+    }
+    let mut out = Vec::with_capacity(e.buf.len() + 16);
+    out.extend_from_slice(&TRACE_MAGIC);
+    out.extend_from_slice(&h.version.to_le_bytes());
+    frame(&mut out, TAG_HEADER, &e.buf);
+    out
+}
+
+/// One event as a self-contained binary frame.
+pub fn encode_event(ev: &TraceEvent) -> Vec<u8> {
+    let mut e = Enc::default();
+    let tag = match ev {
+        TraceEvent::Admit(a) => {
+            e.u32(a.slot);
+            e.u64(a.id);
+            e.vec_i32(&a.prompt);
+            e.u32(a.stop_ids.len() as u32);
+            for s in &a.stop_ids {
+                e.vec_i32(s);
+            }
+            e.u32(a.max_new_tokens);
+            e.f32(a.temperature);
+            e.opt_f32(a.draft_temperature);
+            e.u32(a.top_k);
+            e.f32(a.top_p);
+            e.u32(a.gamma);
+            e.bool(a.gamma_pinned);
+            e.opt_method(&a.method);
+            e.u64(a.seed);
+            e.u64(a.params_digest);
+            e.u64(a.rng_state);
+            e.u64(a.rng_inc);
+            TAG_ADMIT
+        }
+        TraceEvent::Step(s) => {
+            e.u32(s.gamma);
+            e.u32(s.slots.len() as u32);
+            for t in &s.slots {
+                e.u32(t.slot);
+                e.u64(t.id);
+                e.u32(t.len_before);
+                e.method(&t.method);
+                e.u64(t.rng_state);
+                e.u64(t.rng_inc);
+                e.vec_i32(&t.draft);
+                e.u64(t.zq_digest);
+                e.u64(t.zp_digest);
+                e.u32(t.accept_len);
+                e.vec_i32(&t.out_row);
+                e.vec_i32(&t.committed);
+                match t.finish {
+                    None => e.u8(255),
+                    Some(f) => e.u8(finish_code(f)),
+                }
+            }
+            TAG_STEP
+        }
+        TraceEvent::Cancel { id, slot } => {
+            e.u64(*id);
+            match slot {
+                None => e.u8(0),
+                Some(s) => {
+                    e.u8(1);
+                    e.u32(*s);
+                }
+            }
+            TAG_CANCEL
+        }
+        TraceEvent::Pipeline(p) => {
+            match p {
+                PipelineEv::Launch { gamma } => {
+                    e.u8(0);
+                    e.u32(*gamma);
+                }
+                PipelineEv::BarrierHit => e.u8(1),
+                PipelineEv::BarrierMiss => e.u8(2),
+                PipelineEv::Discard => e.u8(3),
+                PipelineEv::CancelInflight => e.u8(4),
+            }
+            TAG_PIPELINE
+        }
+        TraceEvent::Verify { gamma, groups } => {
+            e.u32(*gamma);
+            e.u32(*groups);
+            TAG_VERIFY
+        }
+    };
+    let mut out = Vec::with_capacity(e.buf.len() + 5);
+    frame(&mut out, tag, &e.buf);
+    out
+}
+
+/// Serialize a whole trace to the binary format.
+pub fn to_binary(t: &Trace) -> Vec<u8> {
+    let mut out = encode_prelude(&t.header);
+    for ev in &t.events {
+        out.extend_from_slice(&encode_event(ev));
+    }
+    out
+}
+
+fn decode_header(d: &mut Dec, version: u32) -> DecResult<TraceHeader> {
+    Ok(TraceHeader {
+        version,
+        pair: d.str()?,
+        batch: d.u32()?,
+        seq_len: d.u32()?,
+        vocab: d.u32()?,
+        gmax: d.u32()?,
+        engine_seed: d.u64()?,
+        method: d.method()?,
+        backend: d.str()?,
+        mode: d.str()?,
+        pipeline: d.str()?,
+        gamma_init: d.u32()?,
+        gamma_pinned: d.bool()?,
+        self_draft: d.bool()?,
+        sim: if d.u8()? == 0 {
+            None
+        } else {
+            Some(SimHeader {
+                seed: d.u64()?,
+                agreement: d.f32()?,
+            })
+        },
+    })
+}
+
+fn decode_event(tag: u8, payload: &[u8]) -> DecResult<TraceEvent> {
+    let mut d = Dec::new(payload);
+    let ev = match tag {
+        TAG_ADMIT => TraceEvent::Admit(AdmitEvent {
+            slot: d.u32()?,
+            id: d.u64()?,
+            prompt: d.vec_i32()?,
+            stop_ids: {
+                let n = d.u32()? as usize;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(d.vec_i32()?);
+                }
+                v
+            },
+            max_new_tokens: d.u32()?,
+            temperature: d.f32()?,
+            draft_temperature: d.opt_f32()?,
+            top_k: d.u32()?,
+            top_p: d.f32()?,
+            gamma: d.u32()?,
+            gamma_pinned: d.bool()?,
+            method: d.opt_method()?,
+            seed: d.u64()?,
+            params_digest: d.u64()?,
+            rng_state: d.u64()?,
+            rng_inc: d.u64()?,
+        }),
+        TAG_STEP => {
+            let gamma = d.u32()?;
+            let n = d.u32()? as usize;
+            let mut slots = Vec::with_capacity(n);
+            for _ in 0..n {
+                slots.push(SlotStep {
+                    slot: d.u32()?,
+                    id: d.u64()?,
+                    len_before: d.u32()?,
+                    method: d.method()?,
+                    rng_state: d.u64()?,
+                    rng_inc: d.u64()?,
+                    draft: d.vec_i32()?,
+                    zq_digest: d.u64()?,
+                    zp_digest: d.u64()?,
+                    accept_len: d.u32()?,
+                    out_row: d.vec_i32()?,
+                    committed: d.vec_i32()?,
+                    finish: match d.u8()? {
+                        255 => None,
+                        c => Some(finish_from_code(c)?),
+                    },
+                });
+            }
+            TraceEvent::Step(StepEvent { gamma, slots })
+        }
+        TAG_CANCEL => TraceEvent::Cancel {
+            id: d.u64()?,
+            slot: if d.u8()? == 0 { None } else { Some(d.u32()?) },
+        },
+        TAG_PIPELINE => TraceEvent::Pipeline(match d.u8()? {
+            0 => PipelineEv::Launch { gamma: d.u32()? },
+            1 => PipelineEv::BarrierHit,
+            2 => PipelineEv::BarrierMiss,
+            3 => PipelineEv::Discard,
+            4 => PipelineEv::CancelInflight,
+            k => return Err(format!("unknown pipeline event kind {k}")),
+        }),
+        TAG_VERIFY => TraceEvent::Verify {
+            gamma: d.u32()?,
+            groups: d.u32()?,
+        },
+        t => return Err(format!("unknown frame tag {t}")),
+    };
+    if !d.done() {
+        return Err(format!("{} trailing bytes in frame tag {tag}", payload.len() - d.pos));
+    }
+    Ok(ev)
+}
+
+/// Parse a binary trace.
+pub fn from_binary(bytes: &[u8]) -> DecResult<Trace> {
+    let mut d = Dec::new(bytes);
+    let magic = d.take(4)?;
+    if magic != TRACE_MAGIC {
+        return Err("not a specd binary trace (bad magic)".into());
+    }
+    let version = d.u32()?;
+    if version != TRACE_VERSION {
+        return Err(format!(
+            "trace version {version} not supported (checker knows version {TRACE_VERSION})"
+        ));
+    }
+    let tag = d.u8()?;
+    if tag != TAG_HEADER {
+        return Err(format!("expected header frame, got tag {tag}"));
+    }
+    let len = d.u32()? as usize;
+    let payload = d.take(len)?;
+    let header = decode_header(&mut Dec::new(payload), version)?;
+    let mut events = Vec::new();
+    while !d.done() {
+        let tag = d.u8()?;
+        let len = d.u32()? as usize;
+        let payload = d.take(len)?;
+        events.push(decode_event(tag, payload)?);
+    }
+    Ok(Trace { header, events })
+}
+
+// ---------------------------------------------------------------------------
+// JSON-lines encoding
+
+fn hex(x: u64) -> Value {
+    Value::Str(format!("{x:#x}"))
+}
+
+fn from_hex(v: &Value, key: &str) -> DecResult<u64> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| format!("trace json: {key} not a string"))?;
+    let s = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(s, 16).map_err(|e| format!("trace json: bad {key}: {e}"))
+}
+
+fn num(x: impl Into<f64>) -> Value {
+    Value::Num(x.into())
+}
+
+fn method_json(m: &Method) -> Value {
+    let (_, a, b) = method_parts(m);
+    obj(vec![
+        ("name", Value::Str(m.name().into())),
+        ("alpha_milli", num(a as f64)),
+        ("beta_milli", num(b as f64)),
+    ])
+}
+
+fn method_from_json(v: &Value) -> DecResult<Method> {
+    let name = v
+        .get("name")
+        .and_then(|n| n.as_str())
+        .ok_or("trace json: method missing name")?;
+    let a = v.get("alpha_milli").and_then(|x| x.as_i64()).unwrap_or(0);
+    let b = v.get("beta_milli").and_then(|x| x.as_i64()).unwrap_or(0);
+    let kind = match name {
+        "baseline" => 0,
+        "exact" => 1,
+        "sigmoid" => 2,
+        "sigmoid16" => 3,
+        n => return Err(format!("trace json: unknown method {n:?}")),
+    };
+    method_from_parts(kind, a, b)
+}
+
+fn tokens_json(xs: &[i32]) -> Value {
+    Value::Arr(xs.iter().map(|t| num(*t as f64)).collect())
+}
+
+fn tokens_from_json(v: &Value, key: &str) -> DecResult<Vec<i32>> {
+    v.as_arr()
+        .ok_or_else(|| format!("trace json: {key} not an array"))?
+        .iter()
+        .map(|t| {
+            t.as_i64()
+                .map(|x| x as i32)
+                .ok_or_else(|| format!("trace json: {key} holds a non-number"))
+        })
+        .collect()
+}
+
+fn get<'a>(v: &'a Value, key: &str) -> DecResult<&'a Value> {
+    v.get(key)
+        .ok_or_else(|| format!("trace json: missing key {key:?}"))
+}
+
+fn get_u32(v: &Value, key: &str) -> DecResult<u32> {
+    get(v, key)?
+        .as_i64()
+        .map(|x| x as u32)
+        .ok_or_else(|| format!("trace json: {key} not a number"))
+}
+
+fn get_f32(v: &Value, key: &str) -> DecResult<f32> {
+    get(v, key)?
+        .as_f64()
+        .map(|x| x as f32)
+        .ok_or_else(|| format!("trace json: {key} not a number"))
+}
+
+fn get_bool(v: &Value, key: &str) -> DecResult<bool> {
+    get(v, key)?
+        .as_bool()
+        .ok_or_else(|| format!("trace json: {key} not a bool"))
+}
+
+fn get_str<'a>(v: &'a Value, key: &str) -> DecResult<&'a str> {
+    get(v, key)?
+        .as_str()
+        .ok_or_else(|| format!("trace json: {key} not a string"))
+}
+
+fn header_json(h: &TraceHeader) -> Value {
+    obj(vec![
+        ("trace", Value::Str("specd".into())),
+        ("version", num(h.version as f64)),
+        ("pair", Value::Str(h.pair.clone())),
+        ("batch", num(h.batch as f64)),
+        ("seq_len", num(h.seq_len as f64)),
+        ("vocab", num(h.vocab as f64)),
+        ("gmax", num(h.gmax as f64)),
+        ("engine_seed", hex(h.engine_seed)),
+        ("method", method_json(&h.method)),
+        ("backend", Value::Str(h.backend.clone())),
+        ("mode", Value::Str(h.mode.clone())),
+        ("pipeline", Value::Str(h.pipeline.clone())),
+        ("gamma_init", num(h.gamma_init as f64)),
+        ("gamma_pinned", Value::Bool(h.gamma_pinned)),
+        ("self_draft", Value::Bool(h.self_draft)),
+        (
+            "sim",
+            match &h.sim {
+                None => Value::Null,
+                Some(s) => obj(vec![
+                    ("seed", hex(s.seed)),
+                    ("agreement", num(s.agreement as f64)),
+                ]),
+            },
+        ),
+    ])
+}
+
+fn header_from_json(v: &Value) -> DecResult<TraceHeader> {
+    if get_str(v, "trace")? != "specd" {
+        return Err("trace json: not a specd trace".into());
+    }
+    let version = get_u32(v, "version")?;
+    if version != TRACE_VERSION {
+        return Err(format!(
+            "trace version {version} not supported (checker knows version {TRACE_VERSION})"
+        ));
+    }
+    Ok(TraceHeader {
+        version,
+        pair: get_str(v, "pair")?.to_string(),
+        batch: get_u32(v, "batch")?,
+        seq_len: get_u32(v, "seq_len")?,
+        vocab: get_u32(v, "vocab")?,
+        gmax: get_u32(v, "gmax")?,
+        engine_seed: from_hex(get(v, "engine_seed")?, "engine_seed")?,
+        method: method_from_json(get(v, "method")?)?,
+        backend: get_str(v, "backend")?.to_string(),
+        mode: get_str(v, "mode")?.to_string(),
+        pipeline: get_str(v, "pipeline")?.to_string(),
+        gamma_init: get_u32(v, "gamma_init")?,
+        gamma_pinned: get_bool(v, "gamma_pinned")?,
+        self_draft: get_bool(v, "self_draft")?,
+        sim: match get(v, "sim")? {
+            Value::Null => None,
+            s => Some(SimHeader {
+                seed: from_hex(get(s, "seed")?, "sim.seed")?,
+                agreement: get_f32(s, "agreement")?,
+            }),
+        },
+    })
+}
+
+fn event_json(ev: &TraceEvent) -> Value {
+    match ev {
+        TraceEvent::Admit(a) => obj(vec![
+            ("ev", Value::Str("admit".into())),
+            ("slot", num(a.slot as f64)),
+            ("id", hex(a.id)),
+            ("prompt", tokens_json(&a.prompt)),
+            (
+                "stop_ids",
+                Value::Arr(a.stop_ids.iter().map(|s| tokens_json(s)).collect()),
+            ),
+            ("max_new_tokens", num(a.max_new_tokens as f64)),
+            ("temperature", num(a.temperature as f64)),
+            (
+                "draft_temperature",
+                a.draft_temperature
+                    .map(|t| num(t as f64))
+                    .unwrap_or(Value::Null),
+            ),
+            ("top_k", num(a.top_k as f64)),
+            ("top_p", num(a.top_p as f64)),
+            ("gamma", num(a.gamma as f64)),
+            ("gamma_pinned", Value::Bool(a.gamma_pinned)),
+            (
+                "method",
+                a.method.as_ref().map(method_json).unwrap_or(Value::Null),
+            ),
+            ("seed", hex(a.seed)),
+            ("params_digest", hex(a.params_digest)),
+            ("rng_state", hex(a.rng_state)),
+            ("rng_inc", hex(a.rng_inc)),
+        ]),
+        TraceEvent::Step(s) => obj(vec![
+            ("ev", Value::Str("step".into())),
+            ("gamma", num(s.gamma as f64)),
+            (
+                "slots",
+                Value::Arr(
+                    s.slots
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("slot", num(t.slot as f64)),
+                                ("id", hex(t.id)),
+                                ("len_before", num(t.len_before as f64)),
+                                ("method", method_json(&t.method)),
+                                ("rng_state", hex(t.rng_state)),
+                                ("rng_inc", hex(t.rng_inc)),
+                                ("draft", tokens_json(&t.draft)),
+                                ("zq_digest", hex(t.zq_digest)),
+                                ("zp_digest", hex(t.zp_digest)),
+                                ("accept_len", num(t.accept_len as f64)),
+                                ("out_row", tokens_json(&t.out_row)),
+                                ("committed", tokens_json(&t.committed)),
+                                (
+                                    "finish",
+                                    t.finish
+                                        .map(|f| Value::Str(finish_name(f).into()))
+                                        .unwrap_or(Value::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        TraceEvent::Cancel { id, slot } => obj(vec![
+            ("ev", Value::Str("cancel".into())),
+            ("id", hex(*id)),
+            (
+                "slot",
+                slot.map(|s| num(s as f64)).unwrap_or(Value::Null),
+            ),
+        ]),
+        TraceEvent::Pipeline(p) => {
+            let mut fields = vec![("ev", Value::Str("pipeline".into()))];
+            let kind = match p {
+                PipelineEv::Launch { gamma } => {
+                    fields.push(("gamma", num(*gamma as f64)));
+                    "launch"
+                }
+                PipelineEv::BarrierHit => "hit",
+                PipelineEv::BarrierMiss => "miss",
+                PipelineEv::Discard => "discard",
+                PipelineEv::CancelInflight => "cancel_inflight",
+            };
+            fields.push(("kind", Value::Str(kind.into())));
+            obj(fields)
+        }
+        TraceEvent::Verify { gamma, groups } => obj(vec![
+            ("ev", Value::Str("verify".into())),
+            ("gamma", num(*gamma as f64)),
+            ("groups", num(*groups as f64)),
+        ]),
+    }
+}
+
+fn event_from_json(v: &Value) -> DecResult<TraceEvent> {
+    Ok(match get_str(v, "ev")? {
+        "admit" => TraceEvent::Admit(AdmitEvent {
+            slot: get_u32(v, "slot")?,
+            id: from_hex(get(v, "id")?, "id")?,
+            prompt: tokens_from_json(get(v, "prompt")?, "prompt")?,
+            stop_ids: get(v, "stop_ids")?
+                .as_arr()
+                .ok_or("trace json: stop_ids not an array")?
+                .iter()
+                .map(|s| tokens_from_json(s, "stop_ids"))
+                .collect::<DecResult<_>>()?,
+            max_new_tokens: get_u32(v, "max_new_tokens")?,
+            temperature: get_f32(v, "temperature")?,
+            draft_temperature: match get(v, "draft_temperature")? {
+                Value::Null => None,
+                t => Some(
+                    t.as_f64()
+                        .ok_or("trace json: draft_temperature not a number")?
+                        as f32,
+                ),
+            },
+            top_k: get_u32(v, "top_k")?,
+            top_p: get_f32(v, "top_p")?,
+            gamma: get_u32(v, "gamma")?,
+            gamma_pinned: get_bool(v, "gamma_pinned")?,
+            method: match get(v, "method")? {
+                Value::Null => None,
+                m => Some(method_from_json(m)?),
+            },
+            seed: from_hex(get(v, "seed")?, "seed")?,
+            params_digest: from_hex(get(v, "params_digest")?, "params_digest")?,
+            rng_state: from_hex(get(v, "rng_state")?, "rng_state")?,
+            rng_inc: from_hex(get(v, "rng_inc")?, "rng_inc")?,
+        }),
+        "step" => TraceEvent::Step(StepEvent {
+            gamma: get_u32(v, "gamma")?,
+            slots: get(v, "slots")?
+                .as_arr()
+                .ok_or("trace json: slots not an array")?
+                .iter()
+                .map(|t| {
+                    Ok(SlotStep {
+                        slot: get_u32(t, "slot")?,
+                        id: from_hex(get(t, "id")?, "id")?,
+                        len_before: get_u32(t, "len_before")?,
+                        method: method_from_json(get(t, "method")?)?,
+                        rng_state: from_hex(get(t, "rng_state")?, "rng_state")?,
+                        rng_inc: from_hex(get(t, "rng_inc")?, "rng_inc")?,
+                        draft: tokens_from_json(get(t, "draft")?, "draft")?,
+                        zq_digest: from_hex(get(t, "zq_digest")?, "zq_digest")?,
+                        zp_digest: from_hex(get(t, "zp_digest")?, "zp_digest")?,
+                        accept_len: get_u32(t, "accept_len")?,
+                        out_row: tokens_from_json(get(t, "out_row")?, "out_row")?,
+                        committed: tokens_from_json(get(t, "committed")?, "committed")?,
+                        finish: match get(t, "finish")? {
+                            Value::Null => None,
+                            f => Some(finish_from_name(
+                                f.as_str().ok_or("trace json: finish not a string")?,
+                            )?),
+                        },
+                    })
+                })
+                .collect::<DecResult<_>>()?,
+        }),
+        "cancel" => TraceEvent::Cancel {
+            id: from_hex(get(v, "id")?, "id")?,
+            slot: match get(v, "slot")? {
+                Value::Null => None,
+                s => Some(s.as_i64().ok_or("trace json: slot not a number")? as u32),
+            },
+        },
+        "pipeline" => TraceEvent::Pipeline(match get_str(v, "kind")? {
+            "launch" => PipelineEv::Launch {
+                gamma: get_u32(v, "gamma")?,
+            },
+            "hit" => PipelineEv::BarrierHit,
+            "miss" => PipelineEv::BarrierMiss,
+            "discard" => PipelineEv::Discard,
+            "cancel_inflight" => PipelineEv::CancelInflight,
+            k => return Err(format!("trace json: unknown pipeline kind {k:?}")),
+        }),
+        "verify" => TraceEvent::Verify {
+            gamma: get_u32(v, "gamma")?,
+            groups: get_u32(v, "groups")?,
+        },
+        e => return Err(format!("trace json: unknown event {e:?}")),
+    })
+}
+
+/// Serialize a trace as JSON-lines (header line, then one event per line).
+pub fn to_jsonl(t: &Trace) -> String {
+    let mut out = header_json(&t.header).dump();
+    out.push('\n');
+    for ev in &t.events {
+        out.push_str(&event_json(ev).dump());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSON-lines trace.
+pub fn from_jsonl(text: &str) -> DecResult<Trace> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let first = lines.next().ok_or("trace json: empty input")?;
+    let header =
+        header_from_json(&json::parse(first).map_err(|e| format!("trace json header: {e}"))?)?;
+    let mut events = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let v = json::parse(line).map_err(|e| format!("trace json line {}: {e}", i + 2))?;
+        events.push(event_from_json(&v)?);
+    }
+    Ok(Trace { header, events })
+}
+
+// ---------------------------------------------------------------------------
+// file I/O
+
+/// Load a trace from disk, sniffing the format: `SPTR` magic → binary,
+/// anything else → JSON-lines.
+pub fn load(path: &Path) -> DecResult<Trace> {
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    if bytes.starts_with(&TRACE_MAGIC) {
+        from_binary(&bytes)
+    } else {
+        let text = String::from_utf8(bytes)
+            .map_err(|_| "trace is neither binary (no magic) nor utf-8 json-lines".to_string())?;
+        from_jsonl(&text)
+    }
+}
+
+/// Write a trace to disk in the binary format.
+pub fn save_binary(t: &Trace, path: &Path) -> DecResult<()> {
+    std::fs::write(path, to_binary(t)).map_err(|e| format!("cannot write {}: {e}", path.display()))
+}
+
+/// Write a trace to disk as JSON-lines.
+pub fn save_jsonl(t: &Trace, path: &Path) -> DecResult<()> {
+    std::fs::write(path, to_jsonl(t)).map_err(|e| format!("cannot write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        Trace {
+            header: TraceHeader {
+                version: TRACE_VERSION,
+                pair: "sim".into(),
+                batch: 2,
+                seq_len: 96,
+                vocab: 48,
+                gmax: 6,
+                engine_seed: 11,
+                method: Method::sigmoid(-1e3, 1e3),
+                backend: "native".into(),
+                mode: "speculative".into(),
+                pipeline: "on".into(),
+                gamma_init: 4,
+                gamma_pinned: false,
+                self_draft: false,
+                sim: Some(SimHeader {
+                    seed: 0xBEEF,
+                    agreement: 0.9,
+                }),
+            },
+            events: vec![
+                TraceEvent::Admit(AdmitEvent {
+                    slot: 0,
+                    id: 7,
+                    prompt: vec![1, 5, 9],
+                    stop_ids: vec![vec![4], vec![9, 2]],
+                    max_new_tokens: 16,
+                    temperature: 0.8,
+                    draft_temperature: Some(0.5),
+                    top_k: 12,
+                    top_p: 0.9,
+                    gamma: 3,
+                    gamma_pinned: true,
+                    method: Some(Method::Exact),
+                    seed: 0xFFFF_FFFF_FFFF_FFFE,
+                    params_digest: 0xDEAD_BEEF_DEAD_BEEF,
+                    rng_state: u64::MAX - 3,
+                    rng_inc: 15,
+                }),
+                TraceEvent::Pipeline(PipelineEv::Launch { gamma: 4 }),
+                TraceEvent::Step(StepEvent {
+                    gamma: 4,
+                    slots: vec![SlotStep {
+                        slot: 0,
+                        id: 7,
+                        len_before: 3,
+                        method: Method::Exact,
+                        rng_state: 0x0123_4567_89AB_CDEF,
+                        rng_inc: 15,
+                        draft: vec![3, 4, 5, 6],
+                        zq_digest: 0xAAAA_BBBB_CCCC_DDDD,
+                        zp_digest: 0x1111_2222_3333_4444,
+                        accept_len: 2,
+                        out_row: vec![3, 4, 8, 0, 0],
+                        committed: vec![3, 4, 8],
+                        finish: Some(FinishReason::StopSeq),
+                    }],
+                }),
+                TraceEvent::Pipeline(PipelineEv::BarrierMiss),
+                TraceEvent::Verify { gamma: 4, groups: 2 },
+                TraceEvent::Cancel { id: 9, slot: None },
+                TraceEvent::Cancel {
+                    id: 7,
+                    slot: Some(0),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn binary_round_trip() {
+        let t = sample_trace();
+        let bytes = to_binary(&t);
+        let back = from_binary(&bytes).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        let t = sample_trace();
+        let text = to_jsonl(&t);
+        let back = from_jsonl(&text).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn binary_jsonl_binary_round_trip() {
+        let t = sample_trace();
+        let back = from_jsonl(&to_jsonl(&from_binary(&to_binary(&t)).unwrap())).unwrap();
+        assert_eq!(to_binary(&back), to_binary(&t));
+    }
+
+    #[test]
+    fn truncated_binary_is_an_error_not_a_panic() {
+        let bytes = to_binary(&sample_trace());
+        for cut in [0, 3, 7, 12, bytes.len() - 1] {
+            assert!(from_binary(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(from_binary(b"NOPE0000").is_err());
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let mut bytes = to_binary(&sample_trace());
+        bytes[4] = 99;
+        let err = from_binary(&bytes).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn digest_is_order_sensitive() {
+        assert_ne!(digest_f32(&[1.0, 2.0, 3.0]), digest_f32(&[3.0, 2.0, 1.0]));
+        assert_ne!(digest_i32(&[1, 2]), digest_i32(&[2, 1]));
+        // single-bit flips move the digest
+        assert_ne!(
+            digest_f32(&[1.0, f32::from_bits(7)]),
+            digest_f32(&[1.0, f32::from_bits(6)])
+        );
+    }
+}

@@ -1,0 +1,312 @@
+//! Randomized record-then-check schedules (`specd trace fuzz`).
+//!
+//! Each [`FuzzCase`] drives a *pipelined* decode over the simulated
+//! model pair — methods × γ policies × batch sizes × stop sequences ×
+//! mid-decode cancels and queue churn — records it through the
+//! engine's [`crate::trace::TraceSink`] hook, then replays the trace
+//! through the offline oracle checker ([`crate::trace::check`]). Any
+//! divergence means either the engine, the pipelined scheduler, the
+//! native kernels, or the trace layer itself broke bit-identity — the
+//! report pins the first divergent step.
+//!
+//! Everything here is deterministic from the fuzz seed, so a failing
+//! case number reproduces exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::engine::{
+    Backend, Engine, EngineConfig, GenRequest, Mode, PipelineMode, SamplingParams,
+};
+use crate::runtime::{Runtime, SimSpec};
+use crate::sampling::Method;
+use crate::util::rng::Pcg32;
+
+use super::checker::{check, CheckReport};
+use super::format::Trace;
+use super::recorder::TraceRecorder;
+
+/// The verification methods the fuzzer mixes into batches — the HLO
+/// trio plus the fp16-overflow sigmoid whose NaN τ rejects every draft
+/// (the pipelined scheduler's worst case).
+pub fn method_pool() -> [Method; 5] {
+    [
+        Method::Exact,
+        Method::Baseline,
+        Method::sigmoid(-1e3, 1e3),
+        Method::sigmoid16(-1e3, 1e3),
+        Method::sigmoid16(-1e5, 1e5),
+    ]
+}
+
+/// One deterministic record-then-check schedule.
+#[derive(Debug, Clone)]
+pub struct FuzzCase {
+    pub batch: usize,
+    pub vocab: usize,
+    /// draft/target agreement of the sim pair
+    pub agreement: f32,
+    /// sim model-pair seed
+    pub model_seed: u64,
+    /// engine RNG base seed
+    pub engine_seed: u64,
+    /// engine default verification method
+    pub method: Method,
+    /// sprinkle per-request method overrides over the batch
+    pub mixed_methods: bool,
+    pub n_reqs: usize,
+    pub max_new: usize,
+    pub gamma_init: usize,
+    pub pipeline: PipelineMode,
+    /// `(after step k, request id)` mid-decode cancellations
+    pub cancels: Vec<(usize, u64)>,
+    /// derivation seed for per-request params/stops
+    pub seed: u64,
+}
+
+impl Default for FuzzCase {
+    fn default() -> Self {
+        FuzzCase {
+            batch: 2,
+            vocab: 64,
+            agreement: 0.9,
+            model_seed: 0xBEEF,
+            engine_seed: 11,
+            method: Method::Exact,
+            mixed_methods: false,
+            n_reqs: 4,
+            max_new: 16,
+            gamma_init: 4,
+            pipeline: PipelineMode::On,
+            cancels: Vec::new(),
+            seed: 1,
+        }
+    }
+}
+
+impl FuzzCase {
+    fn sim_spec(&self) -> SimSpec {
+        SimSpec {
+            vocab: self.vocab,
+            seq_len: 96,
+            gmax: 6,
+            batches: vec![self.batch],
+            seed: self.model_seed,
+            agreement: self.agreement,
+            model_delay: Duration::ZERO,
+        }
+    }
+
+    /// Build the engine this case decodes on (sim runtime, native
+    /// verification, pipelining per the case).
+    pub fn engine(&self) -> Result<Engine> {
+        let rt = Arc::new(Runtime::simulated(self.sim_spec()));
+        Engine::new(
+            rt,
+            EngineConfig {
+                pair: "sim".into(),
+                batch: self.batch,
+                method: self.method,
+                backend: Backend::Native,
+                mode: Mode::Speculative,
+                gamma_init: self.gamma_init,
+                gamma_pinned: false,
+                self_draft: false,
+                pipeline: self.pipeline,
+                seed: self.engine_seed,
+            },
+        )
+    }
+
+    /// The case's request load, derived deterministically from
+    /// `self.seed`: varied prompts, temperatures, top-k/p, γ caps and
+    /// pins, draft temperatures, token-level stop sequences, and —
+    /// when `mixed_methods` — per-request verification methods.
+    pub fn requests(&self) -> Vec<GenRequest> {
+        let mut rng = Pcg32::derive(self.seed, 0x7261_6365); // "race"
+        let pool = method_pool();
+        (0..self.n_reqs as u64)
+            .map(|i| {
+                let mut prompt = vec![1, 3 + i as i32, 9, 14];
+                for _ in 0..rng.below(4) {
+                    prompt.push(1 + rng.below(self.vocab as u32 - 2) as i32);
+                }
+                let max_new =
+                    1 + self.max_new / 2 + rng.below(self.max_new as u32 / 2 + 1) as usize;
+                let mut p = SamplingParams::default()
+                    .with_max_new_tokens(max_new)
+                    .with_temperature([0.0, 0.5, 0.8, 1.0, 1.2][rng.below(5) as usize])
+                    .with_seed(self.seed.wrapping_mul(131).wrapping_add(i));
+                match rng.below(6) {
+                    0 => p = p.with_top_k(12),
+                    1 => p = p.with_top_p(0.9),
+                    2 => p = p.with_gamma(3),
+                    3 => p = p.pin_gamma(2),
+                    4 => p = p.with_draft_temperature(0.1),
+                    _ => {}
+                }
+                if self.mixed_methods && rng.below(2) == 0 {
+                    p = p.with_method(pool[rng.below(pool.len() as u32) as usize]);
+                }
+                let mut r = GenRequest::new(i, prompt, p);
+                // token-level stops straight from the sim vocab (no
+                // tokenizer in the loop)
+                match rng.below(5) {
+                    0 => r.stop_ids = vec![vec![17]],
+                    1 => r.stop_ids = vec![vec![9, 4]],
+                    2 => r.stop_ids = vec![vec![5], vec![30, 2, 7]],
+                    _ => {}
+                }
+                r
+            })
+            .collect()
+    }
+}
+
+/// Run a case to completion with a buffered recorder attached,
+/// executing the cancel schedule mid-decode. Returns the trace.
+pub fn record_case(case: &FuzzCase) -> Result<(Trace, Arc<TraceRecorder>)> {
+    let mut e = case.engine()?;
+    let rec = Arc::new(TraceRecorder::buffered(e.trace_header()));
+    e.set_trace(rec.clone());
+    for r in case.requests() {
+        e.submit(r);
+    }
+    let mut step = 0usize;
+    while e.active() > 0 || e.pending() > 0 {
+        e.step()?;
+        e.take_deltas();
+        for &(at, id) in &case.cancels {
+            if at == step {
+                // unknown / already-finished ids are fine: the cancel
+                // is a no-op and nothing is recorded
+                let _ = e.cancel(id);
+            }
+        }
+        step += 1;
+        if step >= 10_000 {
+            bail!("fuzz case did not terminate in 10k steps: {case:?}");
+        }
+    }
+    Ok((rec.snapshot(), rec))
+}
+
+/// Record one case, then replay its trace against the oracle checker.
+pub fn run_case(case: &FuzzCase) -> Result<CheckReport> {
+    let (trace, _rec) = record_case(case)?;
+    check(&trace).map_err(|e| anyhow::anyhow!("trace unreplayable: {e}"))
+}
+
+/// Derive case `idx` of a fuzz run from the run seed.
+pub fn derive_case(run_seed: u64, idx: u64) -> FuzzCase {
+    let mut rng = Pcg32::derive(run_seed, idx.wrapping_add(1));
+    let pool = method_pool();
+    let batch = 1 + rng.below(4) as usize;
+    FuzzCase {
+        batch,
+        vocab: 48 + 16 * rng.below(2) as usize,
+        agreement: [0.5, 0.9, 0.97, 0.99][rng.below(4) as usize],
+        model_seed: 0xBEEF ^ (rng.next_u32() as u64),
+        engine_seed: rng.next_u32() as u64,
+        method: pool[rng.below(pool.len() as u32) as usize],
+        mixed_methods: rng.below(2) == 0,
+        n_reqs: batch + rng.below(2 + batch as u32) as usize,
+        max_new: 8 + rng.below(20) as usize,
+        gamma_init: 3 + rng.below(3) as usize,
+        pipeline: PipelineMode::On,
+        cancels: match rng.below(3) {
+            0 => Vec::new(),
+            1 => vec![(2, 0)],
+            _ => vec![(1, 0), (3, batch as u64)],
+        },
+        seed: run_seed ^ (idx.wrapping_mul(0x9E37_79B9)),
+    }
+}
+
+/// Fuzz-run summary.
+#[derive(Debug, Clone, Default)]
+pub struct FuzzReport {
+    pub cases: usize,
+    pub steps: usize,
+    pub tokens: usize,
+    pub pipeline_events: usize,
+    /// description of the first failing case, if any
+    pub failure: Option<String>,
+}
+
+impl FuzzReport {
+    pub fn ok(&self) -> bool {
+        self.failure.is_none()
+    }
+}
+
+/// Record-then-check `n_cases` derived schedules; stops at the first
+/// failure. `log` receives one progress line per case.
+pub fn fuzz(n_cases: usize, run_seed: u64, mut log: impl FnMut(String)) -> Result<FuzzReport> {
+    let mut report = FuzzReport::default();
+    for idx in 0..n_cases as u64 {
+        let case = derive_case(run_seed, idx);
+        let label = format!(
+            "case {idx}: b={} v={} agree={} method={} mixed={} reqs={} cancels={}",
+            case.batch,
+            case.vocab,
+            case.agreement,
+            case.method.name(),
+            case.mixed_methods,
+            case.n_reqs,
+            case.cancels.len()
+        );
+        match run_case(&case) {
+            Ok(cr) if cr.ok() => {
+                log(format!(
+                    "{label} — ok ({} steps, {} tokens)",
+                    cr.steps, cr.tokens
+                ));
+                report.cases += 1;
+                report.steps += cr.steps;
+                report.tokens += cr.tokens;
+                report.pipeline_events += cr.pipeline_events;
+            }
+            Ok(cr) => {
+                let d = cr.divergence.expect("not ok");
+                report.failure = Some(format!("{label} — DIVERGED: {d}"));
+                log(report.failure.clone().unwrap());
+                return Ok(report);
+            }
+            Err(e) => {
+                report.failure = Some(format!("{label} — ERROR: {e}"));
+                log(report.failure.clone().unwrap());
+                return Ok(report);
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_case_records_and_replays_clean() {
+        let case = FuzzCase {
+            mixed_methods: true,
+            cancels: vec![(2, 0)],
+            ..FuzzCase::default()
+        };
+        let report = run_case(&case).expect("replayable");
+        assert!(report.ok(), "divergence: {:?}", report.divergence);
+        assert!(report.steps > 0);
+        assert!(report.tokens > 0);
+        assert_eq!(report.requests, case.n_reqs);
+    }
+
+    #[test]
+    fn derived_cases_are_deterministic() {
+        let a = derive_case(42, 3);
+        let b = derive_case(42, 3);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+}

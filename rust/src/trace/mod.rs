@@ -1,0 +1,64 @@
+//! Deterministic trace record/replay.
+//!
+//! Bit-identical output against the scalar oracle is this stack's core
+//! invariant; until now it was only asserted by in-process parity
+//! tests. This subsystem makes any run — including real server load —
+//! checkable *after the fact*:
+//!
+//! * [`TraceSink`] — a near-zero-cost hook threaded through the engine
+//!   ([`crate::engine::core`]), the pipelined scheduler
+//!   ([`crate::engine::pipeline`]) and the verifier
+//!   ([`crate::engine::verifier`]). The default [`NullSink`] costs one
+//!   predictable branch per recording site.
+//! * [`format`] — the versioned event model with a binary-framed
+//!   on-disk encoding plus a JSON-lines export, round-tripping
+//!   losslessly.
+//! * [`recorder`] — a [`TraceRecorder`] sink that buffers in memory
+//!   (tests, fuzz) or streams frames to disk append-only (serving).
+//! * [`checker`] — the offline replay checker behind
+//!   `specd trace check`: re-executes a sim-recorded trace step by
+//!   step against the scalar `sampling/verify` oracle and reports the
+//!   first divergent step with full context.
+//! * [`fuzz`] — randomized record-then-check schedules
+//!   (methods × γ × batch × cancel/churn) behind `specd trace fuzz`.
+//!
+//! The key trick that keeps traces compact and exact: uniforms are
+//! recorded as **RNG stream positions** (`(state, inc)` of the
+//! per-request PCG32), not floats — the checker re-draws them
+//! bit-for-bit in the engine's draw order.
+
+pub mod checker;
+pub mod format;
+pub mod fuzz;
+pub mod recorder;
+
+pub use checker::{check, CheckReport, Divergence};
+pub use format::{
+    digest_f32, digest_i32, params_digest, AdmitEvent, PipelineEv, SimHeader, SlotStep,
+    StepEvent, Trace, TraceEvent, TraceHeader, TRACE_VERSION,
+};
+pub use recorder::TraceRecorder;
+
+/// Engine-side hook for trace capture. `&self` so one sink can be
+/// shared (`Arc<dyn TraceSink>`) by the engine, the pipeline
+/// controller and the verifier; implementations serialize internally.
+///
+/// Recording sites guard on [`TraceSink::enabled`] before building an
+/// event, so the disabled path does no allocation and no digesting.
+pub trait TraceSink: Send + Sync {
+    /// Whether recording sites should build and deliver events at all.
+    fn enabled(&self) -> bool;
+    /// Deliver one event. Must be cheap relative to a model step.
+    fn record(&self, ev: TraceEvent);
+}
+
+/// The default sink: recording off, every site reduced to one branch.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record(&self, _ev: TraceEvent) {}
+}

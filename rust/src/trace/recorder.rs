@@ -1,0 +1,186 @@
+//! The [`TraceRecorder`] sink: in-memory buffering or append-only
+//! streaming to disk.
+//!
+//! Streaming mode writes the binary prelude at open and one frame per
+//! event (flushed per record), so a crash or kill mid-run leaves every
+//! completed frame readable — exactly what you want from a trace that
+//! exists to debug incidents. The `enabled` gate is an `AtomicBool` so
+//! the server's `record` knob can flip it without pausing the engine;
+//! events between toggles are simply dropped, which is safe because
+//! the checker only requires traces recorded from engine start (the
+//! header + admit events carry all state).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use super::format::{self, Trace, TraceEvent, TraceHeader};
+use super::TraceSink;
+
+enum Store {
+    Memory(Vec<TraceEvent>),
+    File(BufWriter<File>),
+}
+
+/// A [`TraceSink`] that records.
+pub struct TraceRecorder {
+    header: TraceHeader,
+    enabled: AtomicBool,
+    store: Mutex<Store>,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("enabled", &self.is_enabled())
+            .field("pair", &self.header.pair)
+            .finish()
+    }
+}
+
+impl TraceRecorder {
+    /// In-memory recorder (tests, fuzz, benches). Snapshot with
+    /// [`TraceRecorder::snapshot`].
+    pub fn buffered(header: TraceHeader) -> Self {
+        TraceRecorder {
+            header,
+            enabled: AtomicBool::new(true),
+            store: Mutex::new(Store::Memory(Vec::new())),
+        }
+    }
+
+    /// Streaming recorder: writes the binary prelude now, then appends
+    /// one frame per recorded event.
+    pub fn to_file(header: TraceHeader, path: &Path) -> Result<Self, String> {
+        let file = File::create(path)
+            .map_err(|e| format!("cannot create trace file {}: {e}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(&format::encode_prelude(&header))
+            .and_then(|_| w.flush())
+            .map_err(|e| format!("cannot write trace header to {}: {e}", path.display()))?;
+        Ok(TraceRecorder {
+            header,
+            enabled: AtomicBool::new(true),
+            store: Mutex::new(Store::File(w)),
+        })
+    }
+
+    /// Flip the recording gate (the server `record` knob).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    /// Events recorded so far (0 for streaming recorders, which do not
+    /// retain events in memory).
+    pub fn event_count(&self) -> usize {
+        match &*self.store.lock().unwrap() {
+            Store::Memory(evs) => evs.len(),
+            Store::File(_) => 0,
+        }
+    }
+
+    /// Clone out the recorded trace (in-memory recorders).
+    pub fn snapshot(&self) -> Trace {
+        let events = match &*self.store.lock().unwrap() {
+            Store::Memory(evs) => evs.clone(),
+            Store::File(_) => Vec::new(),
+        };
+        Trace {
+            header: self.header.clone(),
+            events,
+        }
+    }
+
+    /// Flush buffered frames to disk (no-op for in-memory recorders).
+    pub fn flush(&self) -> Result<(), String> {
+        match &mut *self.store.lock().unwrap() {
+            Store::Memory(_) => Ok(()),
+            Store::File(w) => w.flush().map_err(|e| format!("trace flush failed: {e}")),
+        }
+    }
+}
+
+impl TraceSink for TraceRecorder {
+    fn enabled(&self) -> bool {
+        self.is_enabled()
+    }
+
+    fn record(&self, ev: TraceEvent) {
+        if !self.is_enabled() {
+            return;
+        }
+        match &mut *self.store.lock().unwrap() {
+            Store::Memory(evs) => evs.push(ev),
+            Store::File(w) => {
+                // per-event flush: an incident trace must survive a kill
+                let frame = format::encode_event(&ev);
+                let _ = w.write_all(&frame).and_then(|_| w.flush());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::Method;
+    use crate::trace::format::{PipelineEv, TRACE_VERSION};
+
+    fn header() -> TraceHeader {
+        TraceHeader {
+            version: TRACE_VERSION,
+            pair: "sim".into(),
+            batch: 1,
+            seq_len: 8,
+            vocab: 16,
+            gmax: 4,
+            engine_seed: 1,
+            method: Method::Exact,
+            backend: "native".into(),
+            mode: "speculative".into(),
+            pipeline: "off".into(),
+            gamma_init: 2,
+            gamma_pinned: false,
+            self_draft: false,
+            sim: None,
+        }
+    }
+
+    #[test]
+    fn buffered_records_and_gates() {
+        let r = TraceRecorder::buffered(header());
+        r.record(TraceEvent::Pipeline(PipelineEv::BarrierHit));
+        r.set_enabled(false);
+        r.record(TraceEvent::Pipeline(PipelineEv::BarrierMiss));
+        r.set_enabled(true);
+        r.record(TraceEvent::Cancel { id: 3, slot: None });
+        let t = r.snapshot();
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[1], TraceEvent::Cancel { id: 3, slot: None });
+    }
+
+    #[test]
+    fn streaming_file_round_trips() {
+        let dir = std::env::temp_dir().join("specd_trace_rec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let r = TraceRecorder::to_file(header(), &path).unwrap();
+        r.record(TraceEvent::Pipeline(PipelineEv::Launch { gamma: 3 }));
+        r.record(TraceEvent::Cancel { id: 9, slot: Some(0) });
+        drop(r);
+        let t = format::load(&path).unwrap();
+        assert_eq!(t.header, header());
+        assert_eq!(t.events.len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+}

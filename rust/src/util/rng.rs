@@ -87,6 +87,19 @@ impl Pcg32 {
         Self::new(seed ^ request_id.wrapping_mul(0x9E3779B97F4A7C15), request_id | 1)
     }
 
+    /// The generator's exact stream position `(state, inc)`. Together
+    /// with [`Pcg32::from_state`] this is how the trace layer records
+    /// drawn uniforms *as positions*: a recorded `(state, inc)` replays
+    /// every subsequent draw bit-for-bit, with no floats in the trace.
+    pub fn state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator at an exact recorded stream position.
+    pub fn from_state(state: u64, inc: u64) -> Self {
+        Pcg32 { state, inc }
+    }
+
     /// Fill a buffer with uniform f32s (hot path helper — no allocation).
     pub fn fill_uniform(&mut self, out: &mut [f32]) {
         for slot in out.iter_mut() {

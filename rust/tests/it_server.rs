@@ -44,6 +44,7 @@ fn start_server() -> Option<Arc<Server>> {
             tokenizer,
             ServerConfig {
                 addr: "127.0.0.1:0".into(), // ephemeral port
+                ..Default::default()
             },
         )
         .unwrap(),

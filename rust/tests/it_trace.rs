@@ -1,0 +1,238 @@
+//! Integration: the deterministic trace record/replay subsystem.
+//!
+//! Records real pipelined decodes over the simulated model pair, then
+//! exercises the full trace stack end to end: zero-divergence replay
+//! across batch sizes / mixed methods / mid-decode cancels, lossless
+//! binary <-> JSON-lines round-trips, and mutation tests proving the
+//! oracle checker flags corrupted traces at the exact step and field.
+//! Runs artifact-free (`Runtime::simulated`), so it is always on.
+
+use specd::trace::format::{self, SlotStep, StepEvent};
+use specd::trace::fuzz::{record_case, FuzzCase};
+use specd::trace::{check, Trace, TraceEvent};
+
+/// A schedule with enough going on to be worth checking: queue churn
+/// (more requests than slots), per-request method overrides, and a
+/// mid-decode cancel.
+fn busy_case(batch: usize) -> FuzzCase {
+    FuzzCase {
+        batch,
+        n_reqs: batch + 2,
+        mixed_methods: true,
+        cancels: vec![(2, 0)],
+        seed: 5 + batch as u64,
+        ..FuzzCase::default()
+    }
+}
+
+fn record(case: &FuzzCase) -> Trace {
+    let (trace, _rec) = record_case(case).expect("record");
+    trace
+}
+
+/// Index of the `i`-th (0-based) Step event that has at least one slot.
+fn nth_step(trace: &Trace, i: usize) -> usize {
+    trace
+        .events
+        .iter()
+        .enumerate()
+        .filter(|(_, ev)| matches!(ev, TraceEvent::Step(s) if !s.slots.is_empty()))
+        .map(|(idx, _)| idx)
+        .nth(i)
+        .expect("trace has enough steps")
+}
+
+/// 1-based decode-step number of event index `idx` (counting all Step
+/// events, matching the checker's step numbering).
+fn step_number(trace: &Trace, idx: usize) -> usize {
+    trace.events[..=idx]
+        .iter()
+        .filter(|ev| matches!(ev, TraceEvent::Step(_)))
+        .count()
+}
+
+fn step_mut(trace: &mut Trace, idx: usize) -> &mut StepEvent {
+    match &mut trace.events[idx] {
+        TraceEvent::Step(s) => s,
+        _ => panic!("event {idx} is not a step"),
+    }
+}
+
+/// A step whose first slot committed at least one token (so a token
+/// flip is observable in `committed`).
+fn step_with_commit(trace: &Trace) -> (usize, usize) {
+    for (idx, ev) in trace.events.iter().enumerate() {
+        if let TraceEvent::Step(s) = ev {
+            if s.slots.first().is_some_and(|sl| !sl.committed.is_empty()) {
+                return (idx, step_number(trace, idx));
+            }
+        }
+    }
+    panic!("no step committed tokens");
+}
+
+fn first_slot(s: &mut StepEvent) -> &mut SlotStep {
+    s.slots.first_mut().expect("step has slots")
+}
+
+#[test]
+fn pipelined_runs_replay_with_zero_divergence_across_batches() {
+    for batch in [1usize, 2, 4] {
+        let case = busy_case(batch);
+        let trace = record(&case);
+        let report = check(&trace)
+            .unwrap_or_else(|e| panic!("batch {batch}: trace unreplayable: {e}"));
+        assert!(
+            report.ok(),
+            "batch {batch}: {}",
+            report.divergence.unwrap()
+        );
+        assert_eq!(report.requests, case.n_reqs, "batch {batch}");
+        assert!(report.steps > 0 && report.tokens > 0, "batch {batch}");
+        assert!(
+            report.pipeline_events > 0,
+            "batch {batch}: pipelined run recorded no scheduler events"
+        );
+        assert!(report.verify_events > 0, "batch {batch}");
+    }
+}
+
+#[test]
+fn mid_decode_cancel_is_recorded_and_replays() {
+    let case = busy_case(2);
+    let trace = record(&case);
+    // the step-2 cancel of request 0 lands while it holds a slot
+    let slot_cancels = trace
+        .events
+        .iter()
+        .filter(|ev| matches!(ev, TraceEvent::Cancel { slot: Some(_), .. }))
+        .count();
+    assert!(slot_cancels >= 1, "expected an in-slot cancel event");
+    let report = check(&trace).expect("replayable");
+    assert!(report.ok(), "{}", report.divergence.unwrap());
+    assert_eq!(report.cancels, slot_cancels);
+}
+
+#[test]
+fn binary_and_jsonl_round_trips_are_lossless() {
+    let trace = record(&busy_case(2));
+    assert!(!trace.events.is_empty());
+
+    let bin = format::to_binary(&trace);
+    let back = format::from_binary(&bin).expect("binary decode");
+    assert_eq!(back, trace, "binary round-trip changed the trace");
+
+    let jsonl = format::to_jsonl(&trace);
+    let back = format::from_jsonl(&jsonl).expect("jsonl decode");
+    assert_eq!(back, trace, "jsonl round-trip changed the trace");
+
+    // cross-format: binary -> jsonl -> binary is still identical
+    let again = format::to_binary(&format::from_jsonl(&format::to_jsonl(&back)).unwrap());
+    assert_eq!(again, bin);
+}
+
+#[test]
+fn truncated_binary_is_an_error_not_a_panic() {
+    let bin = format::to_binary(&record(&busy_case(1)));
+    for cut in [bin.len() - 1, bin.len() - 3, bin.len() / 2, 7, 1] {
+        let err = format::from_binary(&bin[..cut]);
+        assert!(err.is_err(), "cut at {cut} decoded");
+    }
+    assert!(format::from_binary(b"not a trace").is_err());
+}
+
+#[test]
+fn flipped_committed_token_is_flagged_at_the_exact_step() {
+    let mut trace = record(&busy_case(2));
+    let (idx, step_no) = step_with_commit(&trace);
+    let slot = {
+        let s = step_mut(&mut trace, idx);
+        let sl = first_slot(s);
+        sl.committed[0] ^= 1; // flip the low bit of the first token
+        sl.slot
+    };
+    let report = check(&trace).expect("still structurally replayable");
+    let d = report.divergence.expect("corruption missed");
+    assert_eq!(d.step, step_no, "flagged at the wrong step: {d}");
+    assert_eq!(d.slot, slot, "flagged the wrong slot: {d}");
+    assert_eq!(d.field, "committed", "flagged the wrong field: {d}");
+}
+
+#[test]
+fn flipped_verifier_output_token_is_flagged() {
+    let mut trace = record(&busy_case(2));
+    let idx = nth_step(&trace, 1);
+    let step_no = step_number(&trace, idx);
+    {
+        let s = step_mut(&mut trace, idx);
+        let sl = first_slot(s);
+        sl.out_row[0] ^= 1;
+    }
+    let report = check(&trace).expect("replayable");
+    let d = report.divergence.expect("corruption missed");
+    assert_eq!(d.step, step_no, "{d}");
+    // the flipped emitted row is caught as an oracle output mismatch
+    // (or, if the flipped token also entered `committed`, there first —
+    // either way the step must match exactly)
+    assert!(
+        d.field == "out_tokens" || d.field == "committed",
+        "unexpected field: {d}"
+    );
+}
+
+#[test]
+fn perturbed_rng_position_is_flagged() {
+    let mut trace = record(&busy_case(2));
+    let idx = nth_step(&trace, 0);
+    let step_no = step_number(&trace, idx);
+    {
+        let s = step_mut(&mut trace, idx);
+        let sl = first_slot(s);
+        sl.rng_state = sl.rng_state.wrapping_add(1);
+    }
+    let report = check(&trace).expect("replayable");
+    let d = report.divergence.expect("corruption missed");
+    assert_eq!(d.step, step_no, "{d}");
+    assert_eq!(d.field, "rng", "{d}");
+}
+
+#[test]
+fn wrong_method_is_flagged_even_on_all_accept_steps() {
+    let mut trace = record(&busy_case(2));
+    let idx = nth_step(&trace, 0);
+    let step_no = step_number(&trace, idx);
+    {
+        let s = step_mut(&mut trace, idx);
+        let sl = first_slot(s);
+        sl.method = match sl.method {
+            specd::sampling::Method::Exact => specd::sampling::Method::Baseline,
+            _ => specd::sampling::Method::Exact,
+        };
+    }
+    let report = check(&trace).expect("replayable");
+    let d = report.divergence.expect("corruption missed");
+    assert_eq!(d.step, step_no, "{d}");
+    assert_eq!(d.field, "method", "{d}");
+}
+
+#[test]
+fn serial_and_pipelined_recordings_are_interchangeable() {
+    // same schedule, pipelining on vs off: the step/admit/cancel event
+    // streams must be identical (the trace is schedule-independent);
+    // only the pipeline markers differ
+    let strip = |t: &Trace| -> Vec<TraceEvent> {
+        t.events
+            .iter()
+            .filter(|ev| !matches!(ev, TraceEvent::Pipeline(_) | TraceEvent::Verify { .. }))
+            .cloned()
+            .collect()
+    };
+    let on = record(&busy_case(2));
+    let off = record(&FuzzCase {
+        pipeline: specd::engine::PipelineMode::Off,
+        ..busy_case(2)
+    });
+    assert_eq!(strip(&on), strip(&off));
+    let report = check(&off).expect("replayable");
+    assert!(report.ok(), "{}", report.divergence.unwrap());
+}
