@@ -1,0 +1,410 @@
+//! Continuous-batching serve-layer benchmark: hundreds of concurrent
+//! socket connections against a ragged-batch sim engine, measuring the
+//! SLO quantities the server reports (queue wait, decode latency,
+//! queue depth) plus connection-outcome accounting, and a second
+//! small-scale backpressure scenario exercising the bounded admission
+//! queue (`queue_full` / `shed`).
+//!
+//! ```text
+//! cargo bench --bench bench_serve -- [--json <path>] [--smoke]
+//! ```
+//!
+//! `--json <path>` writes a schema-1 snapshot (committed per-PR as
+//! `BENCH_PR<N>.json`, see `docs/PERF.md`); `--smoke` shrinks the
+//! connection count for CI and additionally **asserts** zero dropped
+//! and zero errored connections — the executability gate for the whole
+//! queue/refill/cancel path.
+//!
+//! No artifacts needed: the engine decodes the simulated model pair.
+//! Per-connection γ pins cycle {2, 5, 7} (with adaptive and
+//! method-override connections mixed in), so the engine batch is
+//! genuinely ragged throughout the run.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use specd::engine::{Backend, Engine, EngineConfig, Mode, PipelineMode, SamplingParams};
+use specd::runtime::{Runtime, SimSpec};
+use specd::sampling::Method;
+use specd::server::{Client, Server, ServerConfig};
+use specd::tokenizer::Tokenizer;
+use specd::util::bench::{snapshot_envelope, write_json, BenchOpts};
+use specd::util::json::{obj, Value};
+use specd::util::stats::Series;
+
+const BATCH: usize = 8;
+
+fn sim_engine(seed: u64) -> (Engine, Tokenizer) {
+    let spec = SimSpec {
+        vocab: 512,
+        seq_len: 256,
+        gmax: 8,
+        batches: vec![BATCH],
+        seed: 0xBEEF_CAFE,
+        agreement: 0.95,
+        model_delay: Duration::from_micros(50),
+    };
+    let vocab = spec.vocab;
+    let rt = Arc::new(Runtime::simulated(spec));
+    let engine = Engine::new(
+        rt,
+        EngineConfig {
+            pair: "sim".into(),
+            batch: BATCH,
+            method: Method::Exact,
+            backend: Backend::Native,
+            mode: Mode::Speculative,
+            gamma_init: 4,
+            gamma_pinned: false,
+            self_draft: false,
+            pipeline: PipelineMode::On,
+            seed,
+        },
+    )
+    .expect("sim engine");
+    let chars: Vec<char> = (' '..='~').collect();
+    let keep = chars.len().min(vocab - 3);
+    let tok = Tokenizer::from_chars(chars[..keep].to_vec(), vocab).expect("sim tokenizer");
+    (engine, tok)
+}
+
+fn start_server(seed: u64, queue_limit: usize, shed_after: Option<Duration>) -> Arc<Server> {
+    let (engine, tok) = sim_engine(seed);
+    Arc::new(
+        Server::start(
+            engine,
+            tok,
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                trace: None,
+                queue_limit,
+                shed_after,
+            },
+        )
+        .expect("server start"),
+    )
+}
+
+fn spawn_accept(server: &Arc<Server>) -> std::thread::JoinHandle<()> {
+    let server = server.clone();
+    std::thread::spawn(move || {
+        let _ = server.serve_forever();
+    })
+}
+
+/// Per-connection sampling params: γ pins cycling {2,5,7} keep the
+/// batch ragged; every 4th connection runs the adaptive controller and
+/// every 5th overrides the verification method.
+fn conn_params(idx: usize) -> SamplingParams {
+    let mut p = SamplingParams::default()
+        .with_max_new_tokens(12 + idx % 9)
+        .with_temperature([0.0f32, 0.7, 1.0][idx % 3])
+        .with_seed(9000 + idx as u64);
+    if idx % 4 != 3 {
+        p = p.pin_gamma([2usize, 5, 7][idx % 3]);
+    }
+    if idx % 5 == 0 {
+        p = p.with_method(Method::Baseline);
+    }
+    p
+}
+
+#[derive(Debug, Default, Clone)]
+struct ConnOutcome {
+    completed: usize,
+    cancelled: usize,
+    errors: usize,
+    dropped: usize,
+    tokens: usize,
+    /// client-side wall seconds from send to done
+    wall: Vec<f64>,
+    /// server-reported queue wait (ms) per done
+    queue_ms: Vec<f64>,
+    /// server-reported queue depth per done, in completion order
+    queue_depth: Vec<usize>,
+}
+
+/// One connection's lifecycle: a streaming generate (with a mid-stream
+/// cancel on every 5th connection), read to done/error.
+fn drive_connection(addr: &str, idx: usize) -> ConnOutcome {
+    let mut out = ConnOutcome::default();
+    let mut c = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(_) => {
+            out.dropped += 1;
+            return out;
+        }
+    };
+    let started = Instant::now();
+    if c.send_generate(1, "the scheduler accepts the drafted tokens", &conn_params(idx), true)
+        .is_err()
+    {
+        out.dropped += 1;
+        return out;
+    }
+    // churn: every 5th connection cancels — early enough that many are
+    // still in the admission queue, exercising the queued-cancel path
+    let cancels = idx % 5 == 2;
+    if cancels && c.send_cancel(1).is_err() {
+        out.dropped += 1;
+        return out;
+    }
+    loop {
+        let ev = match c.read_event() {
+            Ok(ev) => ev,
+            Err(_) => {
+                out.dropped += 1;
+                return out;
+            }
+        };
+        match ev.get("event").and_then(Value::as_str) {
+            Some("delta") => continue,
+            Some("done") => {
+                out.wall.push(started.elapsed().as_secs_f64());
+                out.tokens += ev.get("tokens").and_then(Value::as_usize).unwrap_or(0);
+                if let Some(q) = ev.get("queue_ms").and_then(Value::as_f64) {
+                    out.queue_ms.push(q);
+                }
+                if let Some(d) = ev.get("queue_depth").and_then(Value::as_usize) {
+                    out.queue_depth.push(d);
+                }
+                if ev.get("finish").and_then(Value::as_str) == Some("cancel") {
+                    out.cancelled += 1;
+                } else {
+                    out.completed += 1;
+                }
+                return out;
+            }
+            _ => {
+                out.errors += 1;
+                return out;
+            }
+        }
+    }
+}
+
+fn merge(into: &mut ConnOutcome, o: ConnOutcome) {
+    into.completed += o.completed;
+    into.cancelled += o.cancelled;
+    into.errors += o.errors;
+    into.dropped += o.dropped;
+    into.tokens += o.tokens;
+    into.wall.extend(o.wall);
+    into.queue_ms.extend(o.queue_ms);
+    into.queue_depth.extend(o.queue_depth);
+}
+
+/// The headline scenario: `conns` concurrent connections (one thread
+/// each) against one server. Returns the aggregate and the wall time.
+fn churn_scenario(conns: usize) -> (ConnOutcome, f64) {
+    let server = start_server(7, conns.max(16), None);
+    let accept = spawn_accept(&server);
+    let addr = server.addr().to_string();
+    let (tx, rx) = channel::<ConnOutcome>();
+    let started = Instant::now();
+    let mut handles = Vec::with_capacity(conns);
+    for idx in 0..conns {
+        let addr = addr.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let _ = tx.send(drive_connection(&addr, idx));
+        }));
+    }
+    drop(tx);
+    let mut agg = ConnOutcome::default();
+    for o in rx {
+        merge(&mut agg, o);
+    }
+    let wall = started.elapsed().as_secs_f64();
+    for h in handles {
+        let _ = h.join();
+    }
+    server.shutdown();
+    let _ = accept.join();
+    (agg, wall)
+}
+
+/// Backpressure scenario: a tiny admission queue plus an aggressive
+/// shed deadline under a connection burst — counts the structured
+/// `queue_full` / `shed` rejections the overload produces.
+fn backpressure_scenario(conns: usize) -> (usize, usize, usize, usize) {
+    let server = start_server(11, 2, Some(Duration::from_millis(250)));
+    let accept = spawn_accept(&server);
+    let addr = server.addr().to_string();
+    let (tx, rx) = channel::<&'static str>();
+    let mut handles = Vec::with_capacity(conns);
+    for idx in 0..conns {
+        let addr = addr.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let outcome = (|| -> anyhow::Result<&'static str> {
+                let mut c = Client::connect(&addr)?;
+                let params = SamplingParams::default()
+                    .with_max_new_tokens(24)
+                    .with_seed(idx as u64);
+                c.send_generate(1, "burst", &params, false)?;
+                let ev = c.read_event()?;
+                Ok(match ev.get("code").and_then(Value::as_str) {
+                    Some("queue_full") => "queue_full",
+                    Some("shed") => "shed",
+                    Some(_) => "error",
+                    None => "done",
+                })
+            })()
+            .unwrap_or("dropped");
+            let _ = tx.send(outcome);
+        }));
+    }
+    drop(tx);
+    let (mut done, mut full, mut shed, mut other) = (0usize, 0usize, 0usize, 0usize);
+    for o in rx {
+        match o {
+            "done" => done += 1,
+            "queue_full" => full += 1,
+            "shed" => shed += 1,
+            _ => other += 1,
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    server.shutdown();
+    let _ = accept.join();
+    (done, full, shed, other)
+}
+
+fn percentile_section(name: &str, samples_ms: &[f64]) -> (String, Value) {
+    let mut s = Series::new();
+    for &x in samples_ms {
+        s.push(x);
+    }
+    let sum = s.summary();
+    let line = format!(
+        "{name:<24} n={:<5} p50 {:>8.2}ms  p95 {:>8.2}ms  p99 {:>8.2}ms",
+        sum.n, sum.p50, sum.p95, sum.p99
+    );
+    let json = obj(vec![
+        ("n", sum.n.into()),
+        ("p50_ms", Value::Num(sum.p50)),
+        ("p90_ms", Value::Num(sum.p90)),
+        ("p95_ms", Value::Num(sum.p95)),
+        ("p99_ms", Value::Num(sum.p99)),
+        ("mean_ms", Value::Num(sum.mean)),
+    ]);
+    (line, json)
+}
+
+/// Downsample the completion-ordered queue-depth series to at most
+/// `cap` points for the snapshot.
+fn depth_series(depths: &[usize], cap: usize) -> Vec<Value> {
+    let stride = depths.len().div_ceil(cap).max(1);
+    depths
+        .iter()
+        .step_by(stride)
+        .map(|&d| (d as i64).into())
+        .collect()
+}
+
+fn main() {
+    let opts = BenchOpts::from_args();
+    let conns = if opts.smoke { 32 } else { 240 };
+
+    println!(
+        "serve-layer churn: {conns} concurrent connections, batch {BATCH}, \
+         ragged γ pins {{2,5,7}} + adaptive, 1-in-5 cancels\n"
+    );
+    let (agg, wall) = churn_scenario(conns);
+    let tps = agg.tokens as f64 / wall;
+    println!(
+        "connections: {} completed, {} cancelled, {} errors, {} dropped",
+        agg.completed, agg.cancelled, agg.errors, agg.dropped
+    );
+    println!("throughput : {} tokens in {wall:.2}s ({tps:.0} tok/s)\n", agg.tokens);
+    let (lat_line, lat_json) =
+        percentile_section("decode latency", &agg.wall.iter().map(|s| s * 1e3).collect::<Vec<_>>());
+    let (q_line, q_json) = percentile_section("queue wait", &agg.queue_ms);
+    println!("{lat_line}\n{q_line}");
+    let max_depth = agg.queue_depth.iter().copied().max().unwrap_or(0);
+    let mean_depth = if agg.queue_depth.is_empty() {
+        0.0
+    } else {
+        agg.queue_depth.iter().sum::<usize>() as f64 / agg.queue_depth.len() as f64
+    };
+    println!("queue depth              max {max_depth}  mean {mean_depth:.1}\n");
+
+    assert_eq!(
+        agg.completed + agg.cancelled + agg.errors + agg.dropped,
+        conns,
+        "every connection must be accounted for"
+    );
+    if opts.smoke {
+        assert_eq!(agg.dropped, 0, "smoke gate: no connection may drop");
+        assert_eq!(agg.errors, 0, "smoke gate: no connection may error");
+        assert!(agg.cancelled > 0, "smoke gate: cancel path must exercise");
+    }
+
+    let bconns = if opts.smoke { 16 } else { 64 };
+    println!("backpressure burst: {bconns} connections, queue_limit=2, shed-after=250ms\n");
+    let (done, full, shed, other) = backpressure_scenario(bconns);
+    println!(
+        "outcomes: {done} done, {full} queue_full, {shed} shed, {other} other\n"
+    );
+
+    if let Some(path) = &opts.json {
+        let report = snapshot_envelope(
+            "bench_serve",
+            opts.smoke,
+            vec![
+                (
+                    "serve",
+                    obj(vec![
+                        ("batch", BATCH.into()),
+                        (
+                            "connections",
+                            obj(vec![
+                                ("total", conns.into()),
+                                ("completed", agg.completed.into()),
+                                ("cancelled", agg.cancelled.into()),
+                                ("errors", agg.errors.into()),
+                                ("dropped", agg.dropped.into()),
+                            ]),
+                        ),
+                        ("latency", lat_json),
+                        ("queue_wait", q_json),
+                        (
+                            "queue_depth",
+                            obj(vec![
+                                ("max", max_depth.into()),
+                                ("mean", Value::Num(mean_depth)),
+                                ("series", Value::Arr(depth_series(&agg.queue_depth, 64))),
+                            ]),
+                        ),
+                        (
+                            "throughput",
+                            obj(vec![
+                                ("tokens", agg.tokens.into()),
+                                ("wall_s", Value::Num(wall)),
+                                ("tokens_per_sec", Value::Num(tps)),
+                            ]),
+                        ),
+                    ]),
+                ),
+                (
+                    "backpressure",
+                    obj(vec![
+                        ("connections", bconns.into()),
+                        ("queue_limit", 2i64.into()),
+                        ("shed_after_ms", 250i64.into()),
+                        ("done", done.into()),
+                        ("queue_full", full.into()),
+                        ("shed", shed.into()),
+                        ("other", other.into()),
+                    ]),
+                ),
+            ],
+        );
+        write_json(path, &report).expect("writing bench json");
+        println!("wrote {}", path.display());
+    }
+}

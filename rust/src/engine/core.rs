@@ -1,14 +1,15 @@
 //! The continuous-batching speculative decode loop.
 //!
 //! One decode step over B slots (inactive slots padded, masked by
-//! `lens`):
+//! `lens`), each active slot running its **own speculation depth γᵢ**
+//! (ragged batch):
 //!
-//! 1. **draft**: γ sequential `draft_step` calls — each samples one token
-//!    for every slot and returns the raw draft logits (collected into
-//!    z_q);
+//! 1. **draft**: max(γᵢ) sequential `draft_step` calls — slot i
+//!    participates in the first γᵢ of them, sampling one token per call
+//!    and staging the raw draft logits into its ragged z_q span;
 //! 2. **score**: one `target_score` call returning the target logits at
-//!    the last `GMAX+1` positions; the engine slices the (γ+1) rows the
-//!    verification needs;
+//!    the last `GMAX+1` positions; the engine slices the (γᵢ+1) rows
+//!    each slot's verification needs into its ragged z_p span;
 //! 3. **verify**: one fused verification call per decode step — the HLO
 //!    artifact, or the native segment-parallel kernel layer
 //!    ([`crate::sampling::kernels`]) — producing per-slot accepted
@@ -17,8 +18,21 @@
 //!    [`crate::sampling::Method`] (the engine default or a per-request
 //!    override, on any batch size);
 //! 4. **commit**: slot state update, finish detection (EOS, stop
-//!    sequences, length, context), refill from the admission queue,
-//!    adaptive-γ update (+2 on all-accept / −1).
+//!    sequences, length, context), mid-flight refill from the admission
+//!    queue, per-slot adaptive-γ update (+2 on all-accept / −1).
+//!
+//! ## Ragged batches (per-slot γ)
+//!
+//! Every slot owns a [`GammaController`]; each step plans a per-slot γ
+//! from that controller, the slot's context headroom, and its request's
+//! γ cap/pin, snapped to the slot method's artifact set. Row addressing
+//! uses the γ-prefix tables in [`StepBuffers`] (`q_off`/`p_off`):
+//! slot i's draft rows live at `q_off[i]..q_off[i]+γᵢ` and its target
+//! rows at `p_off[i]..p_off[i]+γᵢ+1`; inactive slots contribute zero
+//! rows. The native verify path consumes the ragged spans directly; the
+//! **HLO backend collapses the plan to one shared γ** before dispatch
+//! (its verify programs are rectangular `(method, B, γ)` artifacts), so
+//! genuinely ragged batches are native-only.
 //!
 //! ## The pipelined scheduler
 //!
@@ -42,9 +56,10 @@
 //! Per-request policy lives in [`SamplingParams`] and is honored
 //! per-slot: target/draft temperatures, top-k/top-p truncation of the
 //! target distribution (logit masking shared with the sampling oracle),
-//! stop sequences at commit, γ caps/pins, and verification-method
-//! overrides (a heterogeneous batch resolves γ to the values common to
-//! every method's artifact set). Committed tokens are additionally
+//! stop sequences at commit, γ caps/pins (applied to the slot's own
+//! controller, not the batch), and verification-method overrides (each
+//! slot's γ snaps to its own method's artifact set; only the HLO
+//! backend intersects across methods). Committed tokens are additionally
 //! surfaced through [`Engine::take_deltas`] so the server can stream
 //! incremental output, and [`Engine::cancel`] frees a slot mid-decode.
 //!
@@ -134,6 +149,35 @@ impl Default for EngineConfig {
     }
 }
 
+/// A structured admission rejection: a stable machine-readable `code`
+/// (surfaced verbatim as the wire-protocol error code by the server)
+/// plus a human-readable message. Generic parameter/model-limit
+/// violations carry the code `"rejected"`; conflicts that are specific
+/// enough to act on get their own code (e.g.
+/// `"method_gamma_conflict"`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdmitError {
+    pub code: &'static str,
+    pub msg: String,
+}
+
+impl AdmitError {
+    fn rejected(msg: impl Into<String>) -> Self {
+        AdmitError {
+            code: "rejected",
+            msg: msg.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
 /// Per-slot decoding state.
 struct Slot {
     req: GenRequest,
@@ -143,6 +187,9 @@ struct Slot {
     len: usize,
     generated: Vec<i32>,
     rng: Pcg32,
+    /// this slot's adaptive speculation-depth controller (pinned when
+    /// the request or the engine config pins γ)
+    gamma: GammaController,
     steps: usize,
     drafted: usize,
     accepted: usize,
@@ -161,7 +208,6 @@ pub struct Engine {
     pub config: EngineConfig,
     pub stats: EngineStats,
     verifier: Verifier,
-    gamma: GammaController,
     draft_step: Arc<LoadedExecutable>,
     target_step: Arc<LoadedExecutable>,
     target_score: Arc<LoadedExecutable>,
@@ -180,6 +226,12 @@ pub struct Engine {
     bufs: StepBuffers,
     /// per-slot block views for the serial dispatch path (reused)
     block_slots: Vec<BlockSlot>,
+    /// per-slot γ planned for the current step (0 = inactive slot);
+    /// the authoritative ragged shape every phase of the step shares
+    gammas_buf: Vec<usize>,
+    /// per-slot γ planned for the *next* step by the prefetch path
+    /// (scratch, same encoding)
+    gnext_buf: Vec<usize>,
     // verification uniforms (drawn on the engine thread each step)
     uacc_buf: Vec<f32>,
     ures_buf: Vec<f32>,
@@ -242,12 +294,6 @@ impl Engine {
                 vocab
             );
         }
-        let max_gamma = avail.iter().copied().max().unwrap_or(1).min(gmax);
-        let gamma = if config.gamma_pinned {
-            GammaController::pinned(config.gamma_init.min(max_gamma))
-        } else {
-            GammaController::new(config.gamma_init, 1, max_gamma)
-        };
         let b = config.batch;
         let pipeline = if config.pipeline.enabled(config.mode, config.backend) {
             Some(PipelineCtl::new())
@@ -256,7 +302,6 @@ impl Engine {
         };
         Ok(Engine {
             verifier,
-            gamma,
             draft_step,
             target_step,
             target_score,
@@ -270,6 +315,8 @@ impl Engine {
             gmax,
             bufs: StepBuffers::new(b, seq_len, gmax, vocab),
             block_slots: Vec::with_capacity(b),
+            gammas_buf: vec![0; b],
+            gnext_buf: vec![0; b],
             uacc_buf: vec![0.0; b * gmax],
             ures_buf: vec![0.0; b],
             ubonus_buf: vec![0.0; b],
@@ -340,15 +387,16 @@ impl Engine {
     }
 
     /// Validate a request against the params rules and the loaded model
-    /// (the wire-facing admission check).
-    pub fn admissible(&self, req: &GenRequest) -> Result<(), String> {
-        req.params.validate()?;
+    /// (the wire-facing admission check). Errors are structured
+    /// [`AdmitError`]s: the server forwards the code on the wire.
+    pub fn admissible(&self, req: &GenRequest) -> Result<(), AdmitError> {
+        req.params.validate().map_err(AdmitError::rejected)?;
         if req.prompt_ids.len() > self.seq_len {
-            return Err(format!(
+            return Err(AdmitError::rejected(format!(
                 "prompt is {} tokens but model context is {}",
                 req.prompt_ids.len(),
                 self.seq_len
-            ));
+            )));
         }
         if self.config.mode == Mode::Autoregressive
             && (req.params.top_k != 0 || req.params.top_p < 1.0)
@@ -356,47 +404,57 @@ impl Engine {
             // the autoregressive path samples inside the target_step
             // artifact, where the filter cannot be applied — reject
             // rather than silently ignore the knobs
-            return Err(
-                "top_k/top_p filtering requires the speculative pipeline".into()
-            );
+            return Err(AdmitError::rejected(
+                "top_k/top_p filtering requires the speculative pipeline",
+            ));
         }
         if let Some(m) = req.params.method {
             if self.config.mode == Mode::Speculative {
-                // per-slot dispatch serves overrides on any batch size;
-                // the requirements are artifact availability and — since
-                // a batched step runs one γ for every slot — at least
-                // one γ shared with the engine method AND every method
-                // already admitted (active slots + queue). Admitting a
-                // request that zeroes the intersection would make a
-                // later batch unrunnable and fail *other* clients'
-                // requests, so it is rejected here instead.
                 let avail = self.verifier.available_gammas_for(m);
                 if avail.is_empty() {
-                    return Err(format!(
+                    return Err(AdmitError::rejected(format!(
                         "no verify artifacts for method {:?}",
                         m.name()
-                    ));
+                    )));
                 }
-                let mut in_play: Vec<Method> = vec![self.config.method];
-                for s in self.slots.iter().flatten() {
-                    in_play.push(s.req.params.method.unwrap_or(self.config.method));
-                }
-                for r in &self.queue {
-                    in_play.push(r.params.method.unwrap_or(self.config.method));
-                }
-                let common = self.verifier.available_gammas_common(&in_play);
-                if !common.iter().any(|g| avail.contains(g)) {
-                    return Err(format!(
-                        "method {:?} shares no verify artifact gamma with \
-                         the engine method and currently admitted requests",
-                        m.name()
-                    ));
+                // The native backend runs each slot's γ under its own
+                // method — mixed-method batches need no shared γ. Only
+                // the HLO backend (rectangular verify programs, one γ
+                // per dispatch) must keep a non-empty γ intersection
+                // across every method in play (active slots + queue):
+                // admitting a request that zeroes it would make a later
+                // batch unrunnable and fail *other* clients' requests.
+                if self.config.backend == Backend::Hlo {
+                    let mut in_play: Vec<Method> = vec![self.config.method];
+                    for s in self.slots.iter().flatten() {
+                        in_play.push(s.req.params.method.unwrap_or(self.config.method));
+                    }
+                    for r in &self.queue {
+                        in_play.push(r.params.method.unwrap_or(self.config.method));
+                    }
+                    let common = self.verifier.available_gammas_common(&in_play);
+                    if !common.iter().any(|g| avail.contains(g)) {
+                        return Err(AdmitError {
+                            code: "method_gamma_conflict",
+                            msg: format!(
+                                "method {:?} (artifact gamma set {:?}) shares no \
+                                 verify artifact gamma with the engine method and \
+                                 currently admitted requests (common gamma set {:?})",
+                                m.name(),
+                                avail,
+                                common
+                            ),
+                        });
+                    }
                 }
             }
         }
         if let Some(g) = req.params.gamma {
             if g > self.gmax {
-                return Err(format!("gamma {} exceeds model gmax {}", g, self.gmax));
+                return Err(AdmitError::rejected(format!(
+                    "gamma {} exceeds model gmax {}",
+                    g, self.gmax
+                )));
             }
             if self.config.mode == Mode::Speculative {
                 let m = req.params.method.unwrap_or(self.config.method);
@@ -406,10 +464,10 @@ impl Engine {
                     .iter()
                     .any(|&x| x <= g)
                 {
-                    return Err(format!(
+                    return Err(AdmitError::rejected(format!(
                         "no verify artifact with gamma <= {g} for method {:?}",
                         m.name()
-                    ));
+                    )));
                 }
             }
         }
@@ -478,8 +536,24 @@ impl Engine {
         self.queue.len()
     }
 
-    pub fn gamma(&self) -> usize {
-        self.gamma.gamma()
+    /// Batch slots not yet claimed by an active or engine-queued
+    /// request. The serve layer submits from its bounded admission
+    /// queue only while this is nonzero, so a freed slot is refilled
+    /// on the very next loop pass (mid-flight refill) and the engine's
+    /// own queue never grows beyond the batch.
+    pub fn free_slots(&self) -> usize {
+        self.slots
+            .len()
+            .saturating_sub(self.active() + self.queue.len())
+    }
+
+    /// Per-slot γ controller values (0 = free slot) — observability
+    /// only; the per-step plan additionally clamps by headroom/caps.
+    pub fn slot_gammas(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .map(|s| s.as_ref().map_or(0, |sl| sl.gamma.gamma()))
+            .collect()
     }
 
     /// Pipelined-scheduler counters `(prefetches launched, barrier
@@ -522,57 +596,88 @@ impl Engine {
         std::mem::take(&mut self.deltas)
     }
 
+    /// The largest γ a slot running `method` can verify, clamped to the
+    /// model's GMAX — the upper bound of that slot's controller.
+    fn max_gamma_for(&self, method: Method) -> usize {
+        self.verifier
+            .available_gammas_for(method)
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1)
+            .min(self.gmax)
+            .max(1)
+    }
+
     fn admit(&mut self) {
-        for (i, slot) in self.slots.iter_mut().enumerate() {
-            if slot.is_none() {
-                if let Some(req) = self.queue.pop_front() {
-                    let mut tokens = vec![tokenizer::PAD; self.seq_len];
-                    let prompt: Vec<i32> = if req.prompt_ids.is_empty() {
-                        vec![tokenizer::BOS]
-                    } else {
-                        let keep = req.prompt_ids.len().min(self.seq_len / 2);
-                        req.prompt_ids[req.prompt_ids.len() - keep..].to_vec()
-                    };
-                    tokens[..prompt.len()].copy_from_slice(&prompt);
-                    let len = prompt.len();
-                    let seed = req.params.seed_or(req.id);
-                    let rng = Pcg32::derive(self.config.seed ^ seed, req.id);
-                    if self.trace.enabled() {
-                        let (rng_state, rng_inc) = rng.state();
-                        let p = &req.params;
-                        self.trace.record(TraceEvent::Admit(AdmitEvent {
-                            slot: i as u32,
-                            id: req.id,
-                            prompt: prompt.clone(),
-                            stop_ids: req.stop_ids.clone(),
-                            max_new_tokens: p.max_new_tokens as u32,
-                            temperature: p.temperature,
-                            draft_temperature: p.draft_temperature,
-                            top_k: p.top_k as u32,
-                            top_p: p.top_p,
-                            gamma: p.gamma.unwrap_or(0) as u32,
-                            gamma_pinned: p.gamma_pinned,
-                            method: p.method,
-                            seed,
-                            params_digest: params_digest(p),
-                            rng_state,
-                            rng_inc,
-                        }));
-                    }
-                    *slot = Some(Slot {
-                        req,
-                        tokens,
-                        len,
-                        generated: Vec::new(),
-                        rng,
-                        steps: 0,
-                        drafted: 0,
-                        accepted: 0,
-                        started: Instant::now(),
-                    });
-                    self.slot_epoch += 1;
-                }
+        for i in 0..self.config.batch {
+            if self.slots[i].is_some() {
+                continue;
             }
+            let Some(req) = self.queue.pop_front() else { return };
+            // mid-flight refill: this admission lands while other slots
+            // are still decoding (recorded in the trace so the checker
+            // replays ragged admission timing faithfully)
+            let refill = self.slots.iter().any(Option::is_some);
+            let mut tokens = vec![tokenizer::PAD; self.seq_len];
+            let prompt: Vec<i32> = if req.prompt_ids.is_empty() {
+                vec![tokenizer::BOS]
+            } else {
+                let keep = req.prompt_ids.len().min(self.seq_len / 2);
+                req.prompt_ids[req.prompt_ids.len() - keep..].to_vec()
+            };
+            tokens[..prompt.len()].copy_from_slice(&prompt);
+            let len = prompt.len();
+            let seed = req.params.seed_or(req.id);
+            let rng = Pcg32::derive(self.config.seed ^ seed, req.id);
+            let method = req.params.method.unwrap_or(self.config.method);
+            let max_g = self.max_gamma_for(method);
+            let init = self.config.gamma_init.clamp(1, max_g);
+            let gamma = if req.params.gamma_pinned {
+                GammaController::pinned(
+                    req.params.gamma.unwrap_or(init).clamp(1, max_g),
+                )
+            } else if self.config.gamma_pinned {
+                GammaController::pinned(init)
+            } else {
+                GammaController::new(self.config.gamma_init, 1, max_g)
+            };
+            if self.trace.enabled() {
+                let (rng_state, rng_inc) = rng.state();
+                let p = &req.params;
+                self.trace.record(TraceEvent::Admit(AdmitEvent {
+                    slot: i as u32,
+                    id: req.id,
+                    prompt: prompt.clone(),
+                    stop_ids: req.stop_ids.clone(),
+                    max_new_tokens: p.max_new_tokens as u32,
+                    temperature: p.temperature,
+                    draft_temperature: p.draft_temperature,
+                    top_k: p.top_k as u32,
+                    top_p: p.top_p,
+                    gamma: p.gamma.unwrap_or(0) as u32,
+                    gamma_pinned: p.gamma_pinned,
+                    method: p.method,
+                    seed,
+                    params_digest: params_digest(p),
+                    rng_state,
+                    rng_inc,
+                    refill,
+                }));
+            }
+            self.slots[i] = Some(Slot {
+                req,
+                tokens,
+                len,
+                generated: Vec::new(),
+                rng,
+                gamma,
+                steps: 0,
+                drafted: 0,
+                accepted: 0,
+                started: Instant::now(),
+            });
+            self.slot_epoch += 1;
         }
     }
 
@@ -607,37 +712,57 @@ impl Engine {
         }
     }
 
-    /// γ wanted this step given a controller state and slot headroom:
-    /// the controller value clamped by per-request overrides — pinned
-    /// slots bypass the controller, plain overrides cap it; a
-    /// heterogeneous batch resolves to the most conservative value since
-    /// γ is one per batched step. Static so the pipeline's next-step
-    /// planning can evaluate it against a *cloned* controller.
-    fn gamma_want(
-        gamma: &GammaController,
-        slots: &[Option<Slot>],
-        min_headroom: usize,
+    /// γ wanted by one slot this step: its controller value clamped by
+    /// the slot's own context headroom (pinned controllers bypass the
+    /// adaptive value but still clamp), capped by a non-pinned
+    /// per-request γ override, snapped down to the slot method's
+    /// artifact γ set. Static so the pipeline's next-step planning can
+    /// evaluate it against a *cloned* controller.
+    fn plan_slot_gamma(
+        verifier: &Verifier,
+        slot: &Slot,
+        ctl: &GammaController,
+        headroom: usize,
+        method: Method,
     ) -> usize {
-        let mut cap: Option<usize> = None;
-        let mut pinned: Option<usize> = None;
-        for sl in slots.iter().flatten() {
-            if let Some(g) = sl.req.params.gamma {
-                if sl.req.params.gamma_pinned {
-                    pinned = Some(pinned.map_or(g, |p| p.min(g)));
-                } else {
-                    cap = Some(cap.map_or(g, |c| c.min(g)));
+        let mut want = ctl.effective(headroom);
+        if !slot.req.params.gamma_pinned {
+            if let Some(cap) = slot.req.params.gamma {
+                want = want.min(cap).max(1);
+            }
+        }
+        Self::snap_gamma(&verifier.available_gammas_for(method), want)
+    }
+
+    /// HLO verify artifacts are rectangular `(method, B, γ)` programs —
+    /// one shared γ per dispatch. Collapse a per-slot plan (`0` =
+    /// inactive) to the most conservative active want, snapped to the γ
+    /// set common to every method in play. Errs when the active
+    /// methods' artifact γ sets have an empty intersection (admission
+    /// guards this; it can still surface on engine-default/override
+    /// combinations submitted in-process).
+    fn collapse_hlo_plan(
+        verifier: &Verifier,
+        methods: &[Method],
+        plan: &mut [usize],
+    ) -> Result<()> {
+        let avail = verifier.available_gammas_common(methods);
+        if avail.is_empty() {
+            bail!(
+                "active requests' verification methods share no verify \
+                 artifact gamma (methods in play: {:?})",
+                methods.iter().map(|m| m.name()).collect::<Vec<_>>()
+            );
+        }
+        if let Some(w) = plan.iter().copied().filter(|&g| g > 0).min() {
+            let g = Self::snap_gamma(&avail, w);
+            for x in plan.iter_mut() {
+                if *x > 0 {
+                    *x = g;
                 }
             }
         }
-        // a pin replaces the controller value, not the other slots' caps
-        let mut want = match pinned {
-            Some(g) => g,
-            None => gamma.effective(min_headroom),
-        };
-        if let Some(c) = cap {
-            want = want.min(c);
-        }
-        want.min(min_headroom.saturating_sub(1)).max(1)
+        Ok(())
     }
 
     /// Snap a wanted γ down to artifact availability (the γ set common
@@ -680,9 +805,10 @@ impl Engine {
         }
     }
 
-    /// Dispatch this step's model block (γ draft calls + score) on the
-    /// engine thread — the serial path, also the miss fallback.
-    fn dispatch_block_serial(&mut self, gamma: usize) -> Result<()> {
+    /// Dispatch this step's model block (max-γ draft calls + score) on
+    /// the engine thread — the serial path, also the miss fallback. The
+    /// per-slot γ plan rides in on each [`BlockSlot`].
+    fn dispatch_block_serial(&mut self) -> Result<()> {
         let b = self.config.batch;
         // token rows from committed slot state (lens is refilled per
         // model call inside the block, so `extra` is irrelevant here)
@@ -696,6 +822,7 @@ impl Engine {
                         len: slot.len,
                         rng: slot.rng.clone(),
                         draft_temp: Self::effective_temp(slot.req.params.draft_temp()),
+                        gamma: self.gammas_buf[i],
                     });
                 }
                 None => {
@@ -716,7 +843,6 @@ impl Engine {
             &mut self.bufs,
             &mut self.block_slots,
             dims,
-            gamma,
             false,
             None,
         );
@@ -736,33 +862,28 @@ impl Engine {
     /// temperature; q is left untruncated — it must remain the true
     /// proposal the drafts were sampled from; rejection sampling then
     /// yields the truncated target regardless of q's support).
-    fn scale_and_filter(&mut self, gamma: usize) {
+    fn scale_and_filter(&mut self) {
         let (b, v) = (self.config.batch, self.vocab);
         for i in 0..b {
-            let t = match &self.slots[i] {
-                Some(slot) => Self::effective_temp(slot.req.params.temperature),
-                None => 1.0,
-            };
+            let Some(slot) = &self.slots[i] else { continue };
+            let g = self.gammas_buf[i];
+            let (q0, p0) = (self.bufs.q_off[i], self.bufs.p_off[i]);
+            let t = Self::effective_temp(slot.req.params.temperature);
             if (t - 1.0).abs() > 1e-6 {
                 let inv = 1.0 / t;
-                for x in &mut self.bufs.zp[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v] {
+                for x in &mut self.bufs.zp[p0 * v..(p0 + g + 1) * v] {
                     *x *= inv;
                 }
-                for x in &mut self.bufs.zq[i * gamma * v..(i + 1) * gamma * v] {
+                for x in &mut self.bufs.zq[q0 * v..(q0 + g) * v] {
                     *x *= inv;
                 }
             }
-        }
-        for i in 0..b {
-            let (k, p) = match &self.slots[i] {
-                Some(slot) => (slot.req.params.top_k, slot.req.params.top_p),
-                None => (0, 1.0),
-            };
+            let (k, p) = (slot.req.params.top_k, slot.req.params.top_p);
             if k == 0 && p >= 1.0 {
                 continue;
             }
-            for j in 0..=gamma {
-                let off = (i * (gamma + 1) + j) * v;
+            for j in 0..=g {
+                let off = (p0 + j) * v;
                 sampling::filter::mask_logits_top_k_top_p(
                     &mut self.bufs.zp[off..off + v],
                     k,
@@ -772,23 +893,24 @@ impl Engine {
         }
     }
 
-    /// Draw this step's verification uniforms (acceptance thresholds,
-    /// resample, bonus) from each slot's RNG stream.
-    fn draw_verify_uniforms(&mut self, gamma: usize) {
+    /// Draw this step's verification uniforms (γᵢ acceptance
+    /// thresholds, resample, bonus) from each slot's RNG stream, staged
+    /// at the slot's ragged `q_off` span. Inactive slots own no rows
+    /// and consume no draws.
+    fn draw_verify_uniforms(&mut self) {
         let b = self.config.batch;
         for i in 0..b {
-            let (ua, ur, ub2) = match &mut self.slots[i] {
+            let g = self.gammas_buf[i];
+            let q0 = self.bufs.q_off[i];
+            let (ur, ub2) = match &mut self.slots[i] {
                 Some(slot) => {
-                    for c in 0..gamma {
-                        self.uacc_buf[i * gamma + c] = slot.rng.uniform_f32();
+                    for c in 0..g {
+                        self.uacc_buf[q0 + c] = slot.rng.uniform_f32();
                     }
-                    (true, slot.rng.uniform_f32(), slot.rng.uniform_f32())
+                    (slot.rng.uniform_f32(), slot.rng.uniform_f32())
                 }
-                None => (false, 0.0, 0.0),
+                None => (0.0, 0.0),
             };
-            if !ua {
-                self.uacc_buf[i * gamma..(i + 1) * gamma].fill(1.0);
-            }
             self.ures_buf[i] = ur;
             self.ubonus_buf[i] = ub2;
         }
@@ -799,13 +921,15 @@ impl Engine {
     /// loop's exact finish checks (EOS, stop-sequence suffix across the
     /// step boundary, length, context headroom) against the prediction
     /// without touching live state.
-    fn prediction_keeps_all_slots(&mut self, gamma: usize, predicted: &[i32]) -> bool {
+    fn prediction_keeps_all_slots(&mut self, predicted: &[i32]) -> bool {
         let (b, s) = (self.config.batch, self.seq_len);
         for i in 0..b {
             let Some(slot) = &self.slots[i] else { continue };
-            let row = &predicted[i * (gamma + 1)..(i + 1) * (gamma + 1)];
+            let g = self.gammas_buf[i];
+            let p0 = self.bufs.p_off[i];
+            let row = &predicted[p0..p0 + g + 1];
             // context: the next step needs ≥ 2 tokens of headroom
-            if s.saturating_sub(slot.len + gamma + 1) < 2 {
+            if s.saturating_sub(slot.len + g + 1) < 2 {
                 return false;
             }
             let max_stop = slot.req.stop_ids.iter().map(Vec::len).max().unwrap_or(0);
@@ -846,7 +970,7 @@ impl Engine {
     /// predicted token would finish a slot (EOS / stop sequence / length
     /// / context), when γ would hit slot headroom, or when a prefetch is
     /// already in flight.
-    fn maybe_launch_prefetch(&mut self, gamma: usize, avail: &[usize]) {
+    fn maybe_launch_prefetch(&mut self) {
         let (b, s, v) = (self.config.batch, self.seq_len, self.vocab);
         {
             let Some(ctl) = &mut self.pipeline else { return };
@@ -857,28 +981,33 @@ impl Engine {
                 return;
             }
         }
+        let total_p = self.bufs.total_p(b);
         let mut predicted = self
             .pipeline
             .as_mut()
             .expect("pipeline checked above")
             .take_predicted();
-        predicted.resize(b * (gamma + 1), -1);
+        predicted.resize(total_p, -1);
 
-        // --- predict the commit row of every active slot
+        // --- predict the commit row of every active slot (ragged rows:
+        // every element of predicted[..total_p] belongs to exactly one
+        // active slot, so this loop overwrites the whole buffer)
         for i in 0..b {
             if self.slots[i].is_none() {
                 continue;
             }
-            let row = &mut predicted[i * (gamma + 1)..(i + 1) * (gamma + 1)];
-            row[..gamma].copy_from_slice(&self.bufs.draft[i * gamma..(i + 1) * gamma]);
-            let zrow = &self.bufs.zp[(i * (gamma + 1) + gamma) * v..][..v];
+            let g = self.gammas_buf[i];
+            let (q0, p0) = (self.bufs.q_off[i], self.bufs.p_off[i]);
+            let row = &mut predicted[p0..p0 + g + 1];
+            row[..g].copy_from_slice(&self.bufs.draft[q0..q0 + g]);
+            let zrow = &self.bufs.zp[(p0 + g) * v..][..v];
             kernels::construct_prob_row(zrow, &mut self.bonus_row[..v], self.methods_buf[i]);
-            row[gamma] = verify::inverse_cdf_sample(&self.bonus_row[..v], self.ubonus_buf[i])
+            row[g] = verify::inverse_cdf_sample(&self.bonus_row[..v], self.ubonus_buf[i])
                 as i32;
         }
 
         // --- refuse when the predicted commit would finish any slot
-        if !self.prediction_keeps_all_slots(gamma, &predicted) {
+        if !self.prediction_keeps_all_slots(&predicted) {
             self.pipeline
                 .as_mut()
                 .expect("pipeline checked above")
@@ -886,20 +1015,39 @@ impl Engine {
             return;
         }
 
-        // --- plan the next step's γ against the speculative state: the
-        // controller after an all-accept update, headroom after the
-        // predicted commit, the same availability set (same slots)
-        let mut gctl = self.gamma.clone();
-        gctl.update(true);
-        let min_headroom_next = self
-            .slots
-            .iter()
-            .flatten()
-            .map(|sl| s.saturating_sub(sl.len + gamma + 1))
-            .min()
-            .unwrap_or(2);
-        let want = Self::gamma_want(&gctl, &self.slots, min_headroom_next);
-        let gamma_next = Self::snap_gamma(avail, want);
+        // --- plan each slot's next-step γ against the speculative
+        // state: its controller after an all-accept update, its
+        // headroom after the predicted (γᵢ+1)-token commit
+        for i in 0..b {
+            let g = match &self.slots[i] {
+                Some(slot) => {
+                    let committed = self.gammas_buf[i] + 1;
+                    let mut ctl2 = slot.gamma.clone();
+                    ctl2.update(true);
+                    Self::plan_slot_gamma(
+                        &self.verifier,
+                        slot,
+                        &ctl2,
+                        s.saturating_sub(slot.len + committed),
+                        self.methods_buf[i],
+                    )
+                }
+                None => 0,
+            };
+            self.gnext_buf[i] = g;
+        }
+        if self.config.backend == Backend::Hlo
+            && Self::collapse_hlo_plan(&self.verifier, &self.methods_buf, &mut self.gnext_buf)
+                .is_err()
+        {
+            // no runnable shared γ next step — don't prefetch; the next
+            // step's own plan reports the conflict
+            self.pipeline
+                .as_mut()
+                .expect("pipeline checked above")
+                .recycle_predicted(predicted);
+            return;
+        }
 
         // --- assemble the speculative block state (cloned RNGs, token
         // rows = committed context + predicted commit; live slots are
@@ -911,18 +1059,18 @@ impl Engine {
             let row = &mut bufs.tokens[i * s..(i + 1) * s];
             match &self.slots[i] {
                 Some(slot) => {
+                    let g = self.gammas_buf[i];
+                    let p0 = self.bufs.p_off[i];
                     row.copy_from_slice(&slot.tokens);
-                    for (k, &tok) in predicted[i * (gamma + 1)..(i + 1) * (gamma + 1)]
-                        .iter()
-                        .enumerate()
-                    {
+                    for (k, &tok) in predicted[p0..p0 + g + 1].iter().enumerate() {
                         row[slot.len + k] = tok;
                     }
                     bslots.push(BlockSlot {
                         active: true,
-                        len: slot.len + gamma + 1,
+                        len: slot.len + g + 1,
                         rng: slot.rng.clone(),
                         draft_temp: Self::effective_temp(slot.req.params.draft_temp()),
+                        gamma: self.gnext_buf[i],
                     });
                 }
                 None => {
@@ -944,7 +1092,6 @@ impl Engine {
             bufs,
             bslots,
             dims,
-            gamma_next,
             predicted,
             self.slot_epoch,
         );
@@ -960,33 +1107,28 @@ impl Engine {
             None => None,
         };
 
-        // --- 1. plan γ for this step: controller value clamped by slot
-        // headroom and per-request overrides, snapped to artifact
-        // availability. A batched step runs one γ across all slots, so a
-        // heterogeneous batch snaps to the γ values every slot's method
-        // can serve. Admission checks each override pairwise against the
-        // engine method, so the intersection can only go empty when two
-        // *different* overrides have disjoint artifact γ sets — fail the
-        // step with a real message rather than limping into a γ no
-        // method can load.
-        let min_headroom = self
-            .slots
-            .iter()
-            .flatten()
-            .map(|sl| sl.headroom(s))
-            .min()
-            .unwrap_or(2);
+        // --- 1. plan this step's per-slot γ: each slot's own
+        // controller clamped by its own headroom and request overrides,
+        // snapped to its method's artifact set. The HLO backend then
+        // collapses the ragged plan to one shared γ (rectangular verify
+        // programs); native takes it as-is.
         self.fill_methods();
-        let avail = self.verifier.available_gammas_common(&self.methods_buf);
-        if avail.is_empty() {
-            bail!(
-                "active requests' verification methods share no verify \
-                 artifact gamma (methods in play: {:?})",
-                self.methods_buf.iter().map(|m| m.name()).collect::<Vec<_>>()
-            );
+        for i in 0..b {
+            let g = match &self.slots[i] {
+                Some(slot) => Self::plan_slot_gamma(
+                    &self.verifier,
+                    slot,
+                    &slot.gamma,
+                    slot.headroom(s),
+                    self.methods_buf[i],
+                ),
+                None => 0,
+            };
+            self.gammas_buf[i] = g;
         }
-        let want = Self::gamma_want(&self.gamma, &self.slots, min_headroom);
-        let gamma = Self::snap_gamma(&avail, want);
+        if self.config.backend == Backend::Hlo {
+            Self::collapse_hlo_plan(&self.verifier, &self.methods_buf, &mut self.gammas_buf)?;
+        }
 
         // --- trace: snapshot each active slot's RNG stream position
         // *before* the draft draws. In pipelined mode the live slot RNG
@@ -1004,6 +1146,7 @@ impl Engine {
                     slot: i as u32,
                     id: slot.req.id,
                     len_before: slot.len as u32,
+                    gamma: self.gammas_buf[i] as u32,
                     method: self.methods_buf[i],
                     rng_state,
                     rng_inc,
@@ -1020,10 +1163,18 @@ impl Engine {
 
         // --- 2. model block: adopt the prefetched generation (its
         // drafts ARE this step's drafts and its RNG clones ARE the
-        // post-draft streams), or dispatch serially
+        // post-draft streams), or dispatch serially. Adoption requires
+        // the prefetch's per-slot γ plan to match this step's replan
+        // exactly (on a true hit it does: the commit was all-accept, so
+        // the live controllers took the same `update(true)` the plan
+        // was cloned against).
         let mut have_block = false;
-        if let Some((pbufs, pslots, pgamma)) = adopted {
-            if pgamma == gamma {
+        if let Some((pbufs, pslots)) = adopted {
+            let plan_matches = (0..b).all(|i| {
+                pslots[i].active == self.slots[i].is_some()
+                    && pslots[i].gamma == self.gammas_buf[i]
+            });
+            if plan_matches {
                 for (i, bs) in pslots.iter().enumerate() {
                     if let Some(slot) = &mut self.slots[i] {
                         slot.rng = bs.rng.clone();
@@ -1048,66 +1199,68 @@ impl Engine {
             }
         }
         if !have_block {
-            self.dispatch_block_serial(gamma)?;
+            self.dispatch_block_serial()?;
         }
 
         // --- temperature scaling + per-request filtering, then this
         // step's verification uniforms
-        self.scale_and_filter(gamma);
-        self.draw_verify_uniforms(gamma);
+        self.scale_and_filter();
+        self.draw_verify_uniforms();
 
         // --- trace: drafted tokens + digests of the exact logit
-        // tensors verification will consume (post scale/filter)
+        // tensors verification will consume (post scale/filter),
+        // sliced from each slot's ragged spans
         if tracing {
             for ts in &mut tr_slots {
                 let i = ts.slot as usize;
-                ts.draft
-                    .extend_from_slice(&self.bufs.draft[i * gamma..(i + 1) * gamma]);
-                ts.zq_digest =
-                    digest_f32(&self.bufs.zq[i * gamma * v..(i + 1) * gamma * v]);
-                ts.zp_digest = digest_f32(
-                    &self.bufs.zp[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v],
-                );
+                let g = self.gammas_buf[i];
+                let (q0, p0) = (self.bufs.q_off[i], self.bufs.p_off[i]);
+                ts.draft.extend_from_slice(&self.bufs.draft[q0..q0 + g]);
+                ts.zq_digest = digest_f32(&self.bufs.zq[q0 * v..(q0 + g) * v]);
+                ts.zp_digest = digest_f32(&self.bufs.zp[p0 * v..(p0 + g + 1) * v]);
             }
         }
 
         // --- overlap window: ship the next step's model block to the
         // dispatcher lane before running this step's verification
-        self.maybe_launch_prefetch(gamma, &avail);
+        self.maybe_launch_prefetch();
 
-        // --- 3. verification (the paper's kernel, one fused call)
+        // --- 3. verification (the paper's kernel, one fused ragged call)
+        let total_q = self.bufs.total_q(b);
+        let total_p = self.bufs.total_p(b);
         let ins = VerifyInputs {
-            z_p: &self.bufs.zp[..b * (gamma + 1) * v],
-            z_q: &self.bufs.zq[..b * gamma * v],
-            draft: &self.bufs.draft[..b * gamma],
-            u_acc: &self.uacc_buf[..b * gamma],
+            z_p: &self.bufs.zp[..total_p * v],
+            z_q: &self.bufs.zq[..total_q * v],
+            draft: &self.bufs.draft[..total_q],
+            u_acc: &self.uacc_buf[..total_q],
             u_res: &self.ures_buf,
             u_bonus: &self.ubonus_buf,
         };
-        let verify_secs = self.verifier.verify_into(
-            gamma,
+        let verify_secs = self.verifier.verify_ragged_into(
+            &self.gammas_buf,
+            &self.bufs.q_off,
+            &self.bufs.p_off,
             &self.methods_buf,
             &ins,
             &mut self.verify_out,
         )?;
 
         // --- pipeline barrier verdict: the prefetch survives iff every
-        // active slot accepted all γ drafts AND emitted exactly the
-        // predicted row (native: guaranteed equal on all-accept; HLO:
+        // active slot accepted all γᵢ drafts AND emitted exactly the
+        // predicted rows (native: guaranteed equal on all-accept; HLO:
         // the bonus draw may differ in the last ulp — a miss)
         let hit = match self.pipeline.as_ref().and_then(PipelineCtl::inflight_predicted) {
-            Some((pred, _gamma_next)) => {
-                let mut h = true;
-                for i in 0..b {
-                    if self.slots[i].is_none() {
-                        continue;
-                    }
-                    if self.verify_out.accept_len[i] as usize != gamma
-                        || self.verify_out.out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)]
-                            != pred[i * (gamma + 1)..(i + 1) * (gamma + 1)]
-                    {
-                        h = false;
-                        break;
+            Some(pred) => {
+                let mut h = pred.len() == total_p
+                    && self.verify_out.out_tokens[..total_p] == *pred;
+                if h {
+                    for i in 0..b {
+                        if self.slots[i].is_some()
+                            && self.verify_out.accept_len[i] as usize != self.gammas_buf[i]
+                        {
+                            h = false;
+                            break;
+                        }
                     }
                 }
                 Some(h)
@@ -1115,26 +1268,25 @@ impl Engine {
             None => None,
         };
 
-        // --- 4. commit
-        let mut all_accepted = true;
+        // --- 4. commit (per-slot ragged rows; each slot's controller
+        // updates on its own all-accept outcome)
         let mut drafted_total = 0usize;
         let mut accepted_total = 0usize;
         let mut emitted_total = 0usize;
         let mut ti = 0usize; // cursor into tr_slots (same active-slot order)
         for i in 0..b {
             let Some(slot) = &mut self.slots[i] else { continue };
+            let g = self.gammas_buf[i];
             let alen = self.verify_out.accept_len[i] as usize;
             slot.steps += 1;
-            slot.drafted += gamma;
+            slot.drafted += g;
             slot.accepted += alen;
-            drafted_total += gamma;
+            slot.gamma.update(alen == g);
+            drafted_total += g;
             accepted_total += alen;
-            if alen < gamma {
-                all_accepted = false;
-            }
 
-            let row =
-                &self.verify_out.out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)];
+            let p0 = self.bufs.p_off[i];
+            let row = &self.verify_out.out_tokens[p0..p0 + g + 1];
             let gen_before = slot.generated.len();
             let mut finish: Option<FinishReason> = None;
             for &tok in row.iter().take(alen + 1) {
@@ -1200,15 +1352,14 @@ impl Engine {
         }
 
         if tracing {
-            self.trace.record(TraceEvent::Step(StepEvent {
-                gamma: gamma as u32,
-                slots: tr_slots,
-            }));
+            self.trace.record(TraceEvent::Step(StepEvent { slots: tr_slots }));
         }
 
-        self.gamma.update(all_accepted);
+        // ragged step: record the deepest active speculation as the
+        // step's representative γ
+        let gamma_max = self.gammas_buf.iter().copied().max().unwrap_or(0);
         self.stats.record_step(
-            gamma,
+            gamma_max,
             drafted_total,
             accepted_total,
             emitted_total,

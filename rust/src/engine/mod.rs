@@ -24,7 +24,7 @@ pub mod request;
 pub mod stats;
 pub mod verifier;
 
-pub use core::{Engine, EngineConfig, Mode};
+pub use core::{AdmitError, Engine, EngineConfig, Mode};
 pub use gamma::GammaController;
 pub use pipeline::PipelineMode;
 pub use request::{

@@ -121,6 +121,17 @@ impl PipelineMode {
 /// those dimensions are engine-constant, which is what lets a parked
 /// generation be reused verbatim ([`PipelineCtl::take_spare`]
 /// debug-asserts it) — and are refilled in place every block.
+///
+/// ## Ragged row addressing
+///
+/// A block runs **per-slot γ**: slot *i* contributes `γᵢ` draft rows and
+/// `γᵢ + 1` target rows (zero rows when inactive), packed back-to-back.
+/// The γ-prefix tables [`StepBuffers::q_off`] / [`StepBuffers::p_off`]
+/// (rebuilt by [`run_model_block`] from the block's slots) give every
+/// layer the same row addressing: slot *i*'s draft rows live at
+/// `q_off[i]..q_off[i+1]` of `zq`/`draft`, its target rows at
+/// `p_off[i]..p_off[i+1]` of `zp`. Capacities stay at the rectangular
+/// worst case (`γᵢ ≤ GMAX`), so a ragged block never reallocates.
 #[derive(Debug)]
 pub struct StepBuffers {
     /// model token input, `B · S` (row i = slot i's context + drafts)
@@ -131,12 +142,17 @@ pub struct StepBuffers {
     pub u: Vec<f32>,
     /// per-call sampling temperatures, `B`
     pub temp: Vec<f32>,
-    /// draft logits staging, `B · GMAX · V`
+    /// draft logits staging, ragged rows (≤ `B · GMAX`) of `V`
     pub zq: Vec<f32>,
-    /// target logits staging, `B · (GMAX+1) · V`
+    /// target logits staging, ragged rows (≤ `B · (GMAX+1)`) of `V`
     pub zp: Vec<f32>,
-    /// drafted token ids, `B · GMAX`
+    /// drafted token ids, ragged (≤ `B · GMAX`)
     pub draft: Vec<i32>,
+    /// draft-row prefix table, `B + 1`: `q_off[i] = Σ_{j<i} γⱼ`
+    pub q_off: Vec<usize>,
+    /// target-row prefix table, `B + 1`: `p_off[i] = Σ_{j<i} (γⱼ + 1)`
+    /// over *active* slots (inactive slots contribute zero rows)
+    pub p_off: Vec<usize>,
     /// draft_step output staging (token + logits tensors)
     pub draft_out: Vec<HostTensor>,
     /// target_score / target_step output staging
@@ -153,9 +169,21 @@ impl StepBuffers {
             zq: vec![0.0; b * gmax * v],
             zp: vec![0.0; b * (gmax + 1) * v],
             draft: vec![0; b * gmax],
+            q_off: vec![0; b + 1],
+            p_off: vec![0; b + 1],
             draft_out: Vec::new(),
             target_out: Vec::new(),
         }
+    }
+
+    /// Total draft rows of the staged block (`q_off[B]`).
+    pub fn total_q(&self, b: usize) -> usize {
+        self.q_off[b]
+    }
+
+    /// Total target rows of the staged block (`p_off[B]`).
+    pub fn total_p(&self, b: usize) -> usize {
+        self.p_off[b]
     }
 }
 
@@ -180,6 +208,8 @@ pub struct BlockSlot {
     pub rng: Pcg32,
     /// effective draft temperature for this slot
     pub draft_temp: f32,
+    /// this slot's γ for the block (`0` when inactive)
+    pub gamma: usize,
 }
 
 impl BlockSlot {
@@ -189,17 +219,28 @@ impl BlockSlot {
             len: 1,
             rng: Pcg32::seeded(0),
             draft_temp: 1.0,
+            gamma: 0,
         }
     }
 }
 
-/// Run one speculative block's model dispatch — γ sequential
+/// Run one speculative block's model dispatch — `max γᵢ` sequential
 /// `draft_step` calls and one `target_score` call — staging the draft
 /// tokens, the raw draft logits (`zq`), and the sliced raw score window
-/// (`zp`) into `bufs`. Token rows of `bufs.tokens` must be pre-filled
-/// with each slot's context (PAD rows for inactive slots); drafted
-/// tokens are appended in place as they are sampled, so the model sees
-/// exactly the token stream the serial engine would feed it.
+/// (`zp`) into `bufs` at **ragged per-slot row offsets**. Each slot runs
+/// its own γ (from [`BlockSlot::gamma`]): draft call *c* samples for
+/// exactly the slots with `c < γᵢ`; a slot done drafting participates in
+/// the remaining calls as a PAD row (`len=1`, `u=0`, `temp=1`) and —
+/// crucially — **does not consume its RNG stream**, so a slot's draws
+/// depend only on its own γ, never on its batch neighbours'. The γ-prefix
+/// tables `bufs.q_off` / `bufs.p_off` are rebuilt here from the block's
+/// slots, so the serial path, the prefetch path, and the trace checker
+/// all derive identical row addressing from the same code.
+///
+/// Token rows of `bufs.tokens` must be pre-filled with each slot's
+/// context (PAD rows for inactive slots); drafted tokens are appended in
+/// place as they are sampled, so the model sees exactly the token stream
+/// the serial engine would feed it.
 ///
 /// This is the one implementation both the serial path and the
 /// prefetch job execute — shared by construction so the two cannot
@@ -225,7 +266,6 @@ pub fn run_model_block(
     bufs: &mut StepBuffers,
     slots: &mut [BlockSlot],
     dims: BlockDims,
-    gamma: usize,
     prefetch: bool,
     cancel: Option<&AtomicBool>,
 ) -> Result<bool> {
@@ -240,15 +280,35 @@ pub fn run_model_block(
         ("step/draft", "step/score")
     };
 
-    // --- 1. draft phase: γ sequential draft_step calls
+    // --- 0. γ-prefix tables for the block's ragged row layout
+    bufs.q_off.clear();
+    bufs.p_off.clear();
+    let (mut qo, mut po) = (0usize, 0usize);
+    let mut max_gamma = 0usize;
+    for slot in slots.iter() {
+        bufs.q_off.push(qo);
+        bufs.p_off.push(po);
+        if slot.active {
+            debug_assert!(slot.gamma >= 1 && slot.gamma <= gmax);
+            qo += slot.gamma;
+            po += slot.gamma + 1;
+            max_gamma = max_gamma.max(slot.gamma);
+        } else {
+            debug_assert_eq!(slot.gamma, 0, "inactive slots carry γ = 0");
+        }
+    }
+    bufs.q_off.push(qo);
+    bufs.p_off.push(po);
+
+    // --- 1. draft phase: max γᵢ sequential draft_step calls
     {
         let _g = profiler.scope(draft_scope);
-        for c in 0..gamma {
+        for c in 0..max_gamma {
             if cancelled() {
                 return Ok(false);
             }
             for (i, slot) in slots.iter_mut().enumerate() {
-                if slot.active {
+                if slot.active && c < slot.gamma {
                     bufs.lens[i] = (slot.len + c) as i32;
                     bufs.u[i] = slot.rng.uniform_f32();
                     bufs.temp[i] = slot.draft_temp;
@@ -270,17 +330,18 @@ pub fn run_model_block(
             let toks = bufs.draft_out[0].as_i32()?;
             let logits = bufs.draft_out[1].as_f32()?;
             for (i, slot) in slots.iter().enumerate() {
-                bufs.draft[i * gamma + c] = toks[i];
-                if slot.active {
+                if slot.active && c < slot.gamma {
+                    let r = bufs.q_off[i] + c;
+                    bufs.draft[r] = toks[i];
                     bufs.tokens[i * s + slot.len + c] = toks[i];
+                    bufs.zq[r * v..(r + 1) * v].copy_from_slice(&logits[i * v..(i + 1) * v]);
                 }
-                bufs.zq[(i * gamma + c) * v..(i * gamma + c + 1) * v]
-                    .copy_from_slice(&logits[i * v..(i + 1) * v]);
             }
         }
     }
 
-    // --- 2. target scoring: one call, slice the last γ+1 window rows
+    // --- 2. target scoring: one call, slice each slot's last γᵢ+1
+    //        window rows to its ragged zp span
     if cancelled() {
         return Ok(false);
     }
@@ -288,7 +349,7 @@ pub fn run_model_block(
         let _g = profiler.scope(score_scope);
         for (i, slot) in slots.iter().enumerate() {
             bufs.lens[i] = if slot.active {
-                (slot.len + gamma) as i32
+                (slot.len + slot.gamma) as i32
             } else {
                 1
             };
@@ -302,10 +363,14 @@ pub fn run_model_block(
         )?;
         let win = bufs.target_out[0].as_f32()?; // (B, GMAX+1, V)
         let w = gmax + 1;
-        for i in 0..b {
-            for j in 0..=gamma {
-                let src = (i * w + (w - (gamma + 1) + j)) * v;
-                let dst = (i * (gamma + 1) + j) * v;
+        for (i, slot) in slots.iter().enumerate() {
+            if !slot.active {
+                continue;
+            }
+            let g = slot.gamma;
+            for j in 0..=g {
+                let src = (i * w + (w - (g + 1) + j)) * v;
+                let dst = (bufs.p_off[i] + j) * v;
                 bufs.zp[dst..dst + v].copy_from_slice(&win[src..src + v]);
             }
         }
@@ -328,9 +393,8 @@ pub(crate) struct InFlight {
     cancel: Arc<AtomicBool>,
     /// slot-set epoch at launch: any admit/cancel/finish invalidates
     epoch: u64,
-    /// γ the block was dispatched with
-    pub gamma: usize,
-    /// predicted commit rows, `B · (γ+1)` (active rows meaningful)
+    /// predicted commit rows of the *launching* step, ragged per-slot
+    /// spans addressed by that step's `p_off` table
     pub predicted: Vec<i32>,
     /// barrier verdict, set by the launching step's commit
     resolved: Option<bool>,
@@ -427,11 +491,10 @@ impl PipelineCtl {
         self.inflight.is_some()
     }
 
-    /// Predicted commit rows of the in-flight prefetch (barrier compare).
-    pub fn inflight_predicted(&self) -> Option<(&[i32], usize)> {
-        self.inflight
-            .as_ref()
-            .map(|inf| (inf.predicted.as_slice(), inf.gamma))
+    /// Predicted commit rows of the in-flight prefetch (barrier
+    /// compare; ragged spans addressed by the launching step's `p_off`).
+    pub fn inflight_predicted(&self) -> Option<&[i32]> {
+        self.inflight.as_ref().map(|inf| inf.predicted.as_slice())
     }
 
     /// The spare buffer generation (allocating on first use / after a
@@ -463,7 +526,6 @@ impl PipelineCtl {
         mut bufs: Box<StepBuffers>,
         mut slots: Vec<BlockSlot>,
         dims: BlockDims,
-        gamma: usize,
         predicted: Vec<i32>,
         epoch: u64,
     ) {
@@ -471,6 +533,9 @@ impl PipelineCtl {
         let cancel = Arc::new(AtomicBool::new(false));
         let cancel_job = cancel.clone();
         let (tx, rx) = channel::<PrefetchResult>();
+        // traced launch γ = the block's largest per-slot γ (the number
+        // of draft calls the lane job will make)
+        let gamma_max = slots.iter().map(|sl| sl.gamma).max().unwrap_or(0);
         self.lane.submit(Box::new(move || {
             let outcome = run_model_block(
                 &draft_step,
@@ -479,7 +544,6 @@ impl PipelineCtl {
                 &mut bufs,
                 &mut slots,
                 dims,
-                gamma,
                 true,
                 Some(&cancel_job),
             );
@@ -493,7 +557,6 @@ impl PipelineCtl {
             rx,
             cancel,
             epoch,
-            gamma,
             predicted,
             resolved: None,
         });
@@ -501,7 +564,7 @@ impl PipelineCtl {
         if self.trace.enabled() {
             self.trace
                 .record(TraceEvent::Pipeline(PipelineEv::Launch {
-                    gamma: gamma as u32,
+                    gamma: gamma_max as u32,
                 }));
         }
     }
@@ -547,10 +610,7 @@ impl PipelineCtl {
     /// **without blocking**: a still-running job parks in the draining
     /// slot so the serial redo starts immediately — misses never wait
     /// on the lane.
-    pub fn resolve(
-        &mut self,
-        current_epoch: u64,
-    ) -> Option<(Box<StepBuffers>, Vec<BlockSlot>, usize)> {
+    pub fn resolve(&mut self, current_epoch: u64) -> Option<(Box<StepBuffers>, Vec<BlockSlot>)> {
         let inf = self.inflight.take()?;
         let adopt = inf.resolved == Some(true) && inf.epoch == current_epoch;
         if !adopt {
@@ -563,12 +623,7 @@ impl PipelineCtl {
             self.stash_draining(inf);
             return None;
         }
-        let InFlight {
-            rx,
-            gamma,
-            predicted,
-            ..
-        } = inf;
+        let InFlight { rx, predicted, .. } = inf;
         self.predicted_spare = predicted;
         match rx.recv() {
             Ok(r) => {
@@ -577,7 +632,7 @@ impl PipelineCtl {
                     // so a verdict-hit discarded by a slot-set change
                     // between steps never inflates the hit rate
                     self.hits += 1;
-                    Some((r.bufs, r.slots, gamma))
+                    Some((r.bufs, r.slots))
                 } else {
                     // model error / cancelled: the serial redo will
                     // resurface any real failure

@@ -36,20 +36,25 @@ pub struct SamplingParams {
     pub stop: Vec<String>,
     /// per-request RNG stream seed; `None` derives from the request id
     pub seed: Option<u64>,
-    /// per-request draft-length override: caps the adaptive controller
-    /// while this request is active (one γ per batched step, so
-    /// heterogeneous batches resolve to the most conservative value)
+    /// per-request draft-length override: caps this slot's adaptive
+    /// controller while the request is active. γ is per-slot — batches
+    /// are ragged, so other requests' γ values are unaffected (on the
+    /// HLO backend, whose artifacts are rectangular, the step still
+    /// collapses the per-slot plan to a shared γ)
     pub gamma: Option<usize>,
-    /// with `gamma`, bypass the adaptive controller entirely (pin).
-    /// A pin replaces the controller's value, not artifact reality: the
-    /// step still snaps γ down to the largest value every active slot's
-    /// verification method has artifacts for, so on a batch shared with
-    /// method-override requests the effective γ can sit below the pin.
+    /// with `gamma`, bypass this slot's adaptive controller entirely
+    /// (pin). A pin replaces the controller's value, not artifact
+    /// reality: the per-slot plan still snaps γ down to the largest
+    /// value the slot's verification method has artifacts for, and
+    /// clamps by the model pair's draft capacity and the request's
+    /// remaining sequence headroom.
     pub gamma_pinned: bool,
     /// per-request verification-method override, honored per-slot on any
     /// batch size (the verifier dispatches each batch row under its own
-    /// method). Admission requires verify artifacts for the method that
-    /// share at least one γ with the engine's default method.
+    /// method). On the HLO backend, admission requires verify artifacts
+    /// for the method that share at least one γ with the engine's
+    /// default method (`method_gamma_conflict` otherwise); the native
+    /// backend accepts any method at any γ.
     pub method: Option<Method>,
 }
 

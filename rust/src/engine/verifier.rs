@@ -132,6 +132,20 @@ struct GroupRun<'a> {
     err: Option<anyhow::Error>,
 }
 
+/// Dense staging for ragged→rectangular HLO dispatch: the AOT verify
+/// artifacts are compiled for a rectangular `(B, γ, V)` block, so a
+/// ragged step on the HLO backend scatters its row spans into this
+/// dense block (padding absent slots with reject-all uniforms), runs
+/// the normal grouped dispatch, and gathers the ragged rows back out.
+#[derive(Debug, Default)]
+struct HloStage {
+    z_p: Vec<f32>,
+    z_q: Vec<f32>,
+    draft: Vec<i32>,
+    u_acc: Vec<f32>,
+    dense: VerifyOutput,
+}
+
 /// Method + backend dispatcher, loading per-γ executables lazily. Owns
 /// the kernel workspace (buffers + persistent worker pool) for the
 /// native backend and the per-method-group output staging generations
@@ -148,6 +162,10 @@ pub struct Verifier {
     /// in place each dispatch — generation count grows to the
     /// high-water distinct-method count and is then stable
     hlo_out: Vec<Vec<HostTensor>>,
+    /// reusable dense staging for ragged HLO dispatch (the artifacts are
+    /// rectangular, so ragged rows scatter into a dense block and gather
+    /// back; see [`Verifier::verify_ragged_into`])
+    hlo_stage: HloStage,
     /// trace hook for verify-dispatch markers ([`NullSink`] unless the
     /// engine attached a recorder)
     trace: Arc<dyn TraceSink>,
@@ -171,6 +189,7 @@ impl Verifier {
             // autoregressive engine never pays for idle worker threads
             ws: VerifyWorkspace::new(KernelConfig::from_env()),
             hlo_out: Vec::new(),
+            hlo_stage: HloStage::default(),
             trace: Arc::new(NullSink),
         }
     }
@@ -207,9 +226,11 @@ impl Verifier {
     }
 
     /// γ values every method in `methods` can serve (set intersection).
-    /// A batched step runs one γ for all slots, so a heterogeneous batch
-    /// is limited to the γ values common to its methods. Falls back to
-    /// the default method's set when `methods` is empty.
+    /// The **HLO backend** executes one rectangular artifact per step, so
+    /// its heterogeneous batches are limited to the γ values common to
+    /// their methods (the native backend runs genuinely ragged per-slot γ
+    /// and never needs the intersection). Falls back to the default
+    /// method's set when `methods` is empty.
     pub fn available_gammas_common(&self, methods: &[Method]) -> Vec<usize> {
         let mut acc: Option<Vec<usize>> = None;
         for m in distinct_methods(methods) {
@@ -244,7 +265,7 @@ impl Verifier {
         assert_eq!(methods.len(), b, "one method per batch row");
         if self.trace.enabled() {
             self.trace.record(TraceEvent::Verify {
-                gamma: gamma as u32,
+                rows: (b * gamma) as u32,
                 groups: distinct_methods(methods).len() as u32,
             });
         }
@@ -352,6 +373,149 @@ impl Verifier {
                     }
                 }
                 Ok(started.elapsed().as_secs_f64())
+            }
+        }
+    }
+
+    /// Run verification over **ragged per-slot γ** row spans — the
+    /// engine's decode-loop entry point since the ragged-batch refactor.
+    ///
+    /// `gammas[i]` is slot *i*'s draft count (`0` = empty slot, no
+    /// rows); `q_off`/`p_off` are the γ-prefix tables addressing `ins`'s
+    /// packed rows (draft-side `Σ γᵢ` rows, target-side `Σ (γᵢ+1)`
+    /// rows). `out.accept_len` gets one entry per slot and
+    /// `out.out_tokens` the ragged `p_off`-addressed token rows.
+    ///
+    /// * **Native** runs [`kernels::spec_step_ragged_ws`] — genuinely
+    ///   ragged, any γ mix (uniform layouts delegate to the rectangular
+    ///   schedules unchanged).
+    /// * **HLO** artifacts are rectangular `(B, γ, V)` blocks, so this
+    ///   path requires every non-empty slot to share one γ (the engine
+    ///   guarantees it by collapsing per-slot γ wants on the HLO
+    ///   backend); the rows scatter into the dense staging block with
+    ///   reject-all pads for absent slots, run the normal grouped
+    ///   dispatch, and gather back.
+    pub fn verify_ragged_into(
+        &mut self,
+        gammas: &[usize],
+        q_off: &[usize],
+        p_off: &[usize],
+        methods: &[Method],
+        ins: &VerifyInputs<'_>,
+        out: &mut VerifyOutput,
+    ) -> Result<f64> {
+        let (b, v) = (self.batch, self.vocab);
+        assert_eq!(gammas.len(), b, "one γ per batch slot");
+        assert_eq!(methods.len(), b, "one method per batch slot");
+        debug_assert_eq!(q_off.len(), b + 1);
+        debug_assert_eq!(p_off.len(), b + 1);
+        let total_q = q_off[b];
+        let total_p = p_off[b];
+        debug_assert_eq!(ins.z_p.len(), total_p * v);
+        debug_assert_eq!(ins.z_q.len(), total_q * v);
+
+        match self.backend {
+            Backend::Native => {
+                if self.trace.enabled() {
+                    self.trace.record(TraceEvent::Verify {
+                        rows: total_q as u32,
+                        groups: distinct_methods(methods).len() as u32,
+                    });
+                }
+                let started = Instant::now();
+                let _scope = self.runtime.profiler.scope("verify");
+                kernels::spec_step_ragged_ws(
+                    &mut self.ws,
+                    ins.z_p,
+                    ins.z_q,
+                    b,
+                    gammas,
+                    q_off,
+                    p_off,
+                    v,
+                    ins.draft,
+                    ins.u_acc,
+                    ins.u_res,
+                    ins.u_bonus,
+                    methods,
+                    &mut out.accept_len,
+                    &mut out.out_tokens,
+                    Some(&self.runtime.profiler),
+                );
+                Ok(started.elapsed().as_secs_f64())
+            }
+            Backend::Hlo => {
+                let g = gammas.iter().copied().find(|&g| g > 0).unwrap_or(0);
+                if g == 0 {
+                    out.accept_len.clear();
+                    out.accept_len.resize(b, 0);
+                    out.out_tokens.clear();
+                    return Ok(0.0);
+                }
+                if let Some(&bad) = gammas.iter().find(|&&gi| gi != 0 && gi != g) {
+                    anyhow::bail!(
+                        "HLO verify artifacts are rectangular: per-slot γ must agree \
+                         (saw γ={bad} alongside γ={g})"
+                    );
+                }
+                // ragged layout happens to be dense already (every slot
+                // occupied at the same γ): no staging copy needed
+                if total_q == b * g {
+                    let secs = self.verify_into(g, methods, ins, out)?;
+                    return Ok(secs);
+                }
+                // scatter into the dense block; absent slots get
+                // reject-all uniforms (u_acc = 1.0 never accepts) and
+                // zero logits, and their outputs are dropped at gather
+                let mut st = std::mem::take(&mut self.hlo_stage);
+                st.z_p.clear();
+                st.z_p.resize(b * (g + 1) * v, 0.0);
+                st.z_q.clear();
+                st.z_q.resize(b * g * v, 0.0);
+                st.draft.clear();
+                st.draft.resize(b * g, 0);
+                st.u_acc.clear();
+                st.u_acc.resize(b * g, 1.0);
+                for i in 0..b {
+                    if gammas[i] != g {
+                        continue;
+                    }
+                    let (q0, p0) = (q_off[i], p_off[i]);
+                    st.z_p[i * (g + 1) * v..(i + 1) * (g + 1) * v]
+                        .copy_from_slice(&ins.z_p[p0 * v..(p0 + g + 1) * v]);
+                    st.z_q[i * g * v..(i + 1) * g * v]
+                        .copy_from_slice(&ins.z_q[q0 * v..(q0 + g) * v]);
+                    st.draft[i * g..(i + 1) * g].copy_from_slice(&ins.draft[q0..q0 + g]);
+                    st.u_acc[i * g..(i + 1) * g].copy_from_slice(&ins.u_acc[q0..q0 + g]);
+                }
+                let dense_ins = VerifyInputs {
+                    z_p: &st.z_p,
+                    z_q: &st.z_q,
+                    draft: &st.draft,
+                    u_acc: &st.u_acc,
+                    u_res: ins.u_res,
+                    u_bonus: ins.u_bonus,
+                };
+                let mut dense = std::mem::take(&mut st.dense);
+                let res = self.verify_into(g, methods, &dense_ins, &mut dense);
+                // gather the ragged rows back out
+                if res.is_ok() {
+                    out.accept_len.clear();
+                    out.accept_len.resize(b, 0);
+                    out.out_tokens.clear();
+                    out.out_tokens.resize(total_p, -1);
+                    for i in 0..b {
+                        if gammas[i] != g {
+                            continue;
+                        }
+                        out.accept_len[i] = dense.accept_len[i];
+                        out.out_tokens[p_off[i]..p_off[i] + g + 1]
+                            .copy_from_slice(&dense.out_tokens[i * (g + 1)..(i + 1) * (g + 1)]);
+                    }
+                }
+                st.dense = dense;
+                self.hlo_stage = st;
+                res
             }
         }
     }

@@ -84,7 +84,11 @@ fn help_text() -> &'static str {
      \x20 <- {\"v\":2,\"event\":\"done\",\"id\":1,\"text\":\"...\",\"finish\":\"length\",...}\n\
      \x20 -> {\"v\":2,\"op\":\"cancel\",\"id\":1}    frees the slot mid-decode\n\
      \x20 <- {\"v\":2,\"event\":\"error\",\"id\":1,\"code\":\"invalid_params\",\"error\":...}\n\
-     \x20 v1 one-shot lines (no \"v\" key) still round-trip unchanged.\n\
+     \x20 done events carry the SLO block: queue_ms, queue_depth, and\n\
+     \x20 latency / queue-wait percentiles; overload answers with codes\n\
+     \x20 queue_full (admission queue at --queue-limit) or shed (queued\n\
+     \x20 past --shed-after-ms); v1 one-shot lines (no \"v\" key) still\n\
+     \x20 round-trip unchanged.\n\
      \n\
      common options: --method baseline|exact|sigmoid, --backend hlo|native|sim,\n\
      --pair base|large, --batch N, --alpha/--beta, --n <examples>, --seed,\n\
@@ -305,6 +309,16 @@ fn serve(rest: &[String]) -> Result<()> {
             "trace",
             "",
             "stream a binary execution trace here (replay with `specd trace check`)",
+        )
+        .opt(
+            "queue-limit",
+            "512",
+            "admission-queue bound (past it requests get a queue_full error)",
+        )
+        .opt(
+            "shed-after-ms",
+            "0",
+            "load-shed queued requests waiting longer than this (0 = never)",
         );
     let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
     let (engine, tok) = build_engine(&p, Mode::Speculative)?;
@@ -316,12 +330,15 @@ fn serve(rest: &[String]) -> Result<()> {
         println!("recording execution trace to {}", path.display());
         Some(Arc::new(rec))
     };
+    let shed_ms = p.u64("shed-after-ms").map_err(|e| anyhow!(e))?;
     let server = Server::start(
         engine,
         tok,
         ServerConfig {
             addr: p.str("addr").to_string(),
             trace,
+            queue_limit: p.usize("queue-limit").map_err(|e| anyhow!(e))?,
+            shed_after: (shed_ms > 0).then(|| std::time::Duration::from_millis(shed_ms)),
         },
     )?;
     println!("listening on {} (ctrl-c to stop)", server.addr());
@@ -441,7 +458,8 @@ fn table(rest: &[String]) -> Result<()> {
 fn trace_cmd(rest: &[String]) -> Result<()> {
     const USAGE: &str = "usage: specd trace record|check|export|fuzz [flags]\n\
          \x20 record  --out t.bin [--jsonl --batch N --requests N --max-new N\n\
-         \x20         --seed S --agreement A --method M --gamma G --mixed-methods\n\
+         \x20         --seed S --agreement A --method M --gamma G --gmax G\n\
+         \x20         --gammas \"2,5,7\" --mixed-methods\n\
          \x20         --pipeline on|off --cancel-at step:id[,step:id]]\n\
          \x20 check   --trace t.bin        replay against the scalar oracle\n\
          \x20 export  --trace t.bin --out t.jsonl   binary <-> JSON-lines\n\
@@ -477,10 +495,26 @@ fn trace_case(p: &specd::util::cli::Parsed) -> Result<specd::trace::fuzz::FuzzCa
             "off" => PipelineMode::Off,
             other => bail!("bad --pipeline {other:?} (want on|off)"),
         },
+        gmax: p.usize("gmax").map_err(|e| anyhow!(e))?,
+        pin_gammas: parse_gammas(p.str("gammas"))?,
         cancels: parse_cancels(p.str("cancel-at"))?,
         seed,
         ..specd::trace::fuzz::FuzzCase::default()
     })
+}
+
+/// Parse the `--gammas "2,5,7"` per-request γ-pin cycle.
+fn parse_gammas(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            p.parse::<usize>()
+                .ok()
+                .filter(|&g| g > 0)
+                .ok_or_else(|| anyhow!("bad --gammas entry {p:?} (want positive integers)"))
+        })
+        .collect()
 }
 
 /// Parse `"step:id[,step:id...]"` mid-decode cancel schedules.
@@ -519,6 +553,12 @@ fn trace_record(rest: &[String]) -> Result<()> {
     .opt("alpha", "-1000", "sigmoid alpha")
     .opt("beta", "1000", "sigmoid beta")
     .opt("gamma", "4", "initial draft length")
+    .opt("gmax", "6", "sim model-pair draft capacity (per-slot γ ceiling)")
+    .opt(
+        "gammas",
+        "",
+        "pin request i's γ to entry i%len, e.g. \"2,5,7\" (ragged mixed-γ batches)",
+    )
     .flag("mixed-methods", "sprinkle per-request method overrides")
     .opt("pipeline", "on", "pipelined decode scheduler (on|off)")
     .opt("cancel-at", "", "mid-decode cancels, \"step:id[,step:id]\"");

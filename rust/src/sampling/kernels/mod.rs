@@ -300,11 +300,23 @@ pub fn spec_step_batch_ws(
     {
         let _g = profiler.map(|pr| pr.scope("verify/softmax"));
         construct_matrix(
-            pool, threads, chunk, z_p, &mut *p, v, gamma + 1, methods,
+            pool,
+            threads,
+            chunk,
+            z_p,
+            &mut *p,
+            v,
+            &|r| methods[r / (gamma + 1)],
             &mut partials[..],
         );
         construct_matrix(
-            pool, threads, chunk, z_q, &mut *q, v, gamma, methods,
+            pool,
+            threads,
+            chunk,
+            z_q,
+            &mut *q,
+            v,
+            &|r| methods[r / gamma],
             &mut partials[..],
         );
     }
@@ -394,7 +406,9 @@ pub fn spec_step_batch_ws(
 }
 
 /// Build probability rows from logits: `dst[r] = construct(src row r)`
-/// under the owning slot's method (`slot = r / rows_per_slot`).
+/// under `method_of(r)` — a row→method mapping so the rectangular
+/// schedules (`r / rows_per_slot`) and the ragged prefix-table lookup
+/// share one implementation.
 #[allow(clippy::too_many_arguments)]
 fn construct_matrix(
     pool: &pool::WorkerPool,
@@ -403,8 +417,7 @@ fn construct_matrix(
     src: &[f32],
     dst: &mut [f32],
     v: usize,
-    rows_per_slot: usize,
-    methods: &[Method],
+    method_of: &(dyn Fn(usize) -> Method + Sync),
     partials: &mut [f32],
 ) {
     let rows = dst.len() / v;
@@ -421,7 +434,7 @@ fn construct_matrix(
                 chunk,
                 &src[r * v..][..v],
                 &mut dst[r * v..][..v],
-                methods[r / rows_per_slot],
+                method_of(r),
                 &mut *partials,
             );
         }
@@ -431,9 +444,176 @@ fn construct_matrix(
         pool::for_each_span(pool, threads, dst, v, |first_row, span| {
             for (k, drow) in span.chunks_mut(v).enumerate() {
                 let r = first_row + k;
-                construct_row_from(&src[r * v..][..v], drow, methods[r / rows_per_slot]);
+                construct_row_from(&src[r * v..][..v], drow, method_of(r));
             }
         });
+    }
+}
+
+/// Slot owning ragged row `r` under prefix table `off` (`off[i] ≤ r <
+/// off[i+1]`; zero-row slots are skipped by construction).
+fn slot_of_row(off: &[usize], r: usize) -> usize {
+    off.partition_point(|&o| o <= r) - 1
+}
+
+/// One batched speculative verification step over **ragged per-slot γ**
+/// row spans.
+///
+/// Slot `i` runs `gammas[i]` drafts: its draft rows (`z_q`, `draft`,
+/// `u_acc`) live at `q_off[i]..q_off[i+1]` and its target rows (`z_p`,
+/// `out_tokens`) at `p_off[i]..p_off[i+1]`, with `q_off`/`p_off` the
+/// γ-prefix tables (`q_off[i] = Σ_{j<i} γⱼ`, `p_off[i] = Σ_{j<i}
+/// (γⱼ+1)` counting only slots with `γⱼ > 0`). A slot with `gammas[i] ==
+/// 0` (an empty engine slot) contributes no rows and gets `accept[i] =
+/// 0`.
+///
+/// When every slot carries the **same** non-zero γ the ragged layout
+/// coincides with the rectangular one and this delegates verbatim to
+/// [`spec_step_batch_ws`] — uniform batches keep the slot-parallel /
+/// chunk-parallel finish schedules (and their benchmarked performance)
+/// unchanged. Genuinely ragged batches run the same probability
+/// construction schedules (row→method resolved through the prefix
+/// table) and a sequential per-slot finish: [`pool::for_each_span2`]
+/// needs uniform span units, which ragged token spans don't have, and
+/// mixed-γ batches are bounded by the *largest* slot's model calls
+/// anyway. Either way the result is bit-identical to running the scalar
+/// oracle ([`verify::spec_step`]) per slot on its slices.
+#[allow(clippy::too_many_arguments)]
+pub fn spec_step_ragged_ws(
+    ws: &mut VerifyWorkspace,
+    z_p: &[f32],
+    z_q: &[f32],
+    b: usize,
+    gammas: &[usize],
+    q_off: &[usize],
+    p_off: &[usize],
+    v: usize,
+    draft: &[i32],
+    u_acc: &[f32],
+    u_res: &[f32],
+    u_bonus: &[f32],
+    methods: &[Method],
+    accept: &mut Vec<i32>,
+    out_tokens: &mut Vec<i32>,
+    profiler: Option<&Profiler>,
+) {
+    assert_eq!(gammas.len(), b, "one γ per batch slot");
+    assert_eq!(methods.len(), b, "one method per batch slot");
+    debug_assert_eq!(q_off.len(), b + 1);
+    debug_assert_eq!(p_off.len(), b + 1);
+    let total_q = q_off[b];
+    let total_p = p_off[b];
+    debug_assert_eq!(z_p.len(), total_p * v);
+    debug_assert_eq!(z_q.len(), total_q * v);
+    debug_assert_eq!(draft.len(), total_q);
+    debug_assert_eq!(u_acc.len(), total_q);
+    debug_assert_eq!(u_res.len(), b);
+    debug_assert_eq!(u_bonus.len(), b);
+
+    // uniform fast path: identical layout ⇒ identical schedules
+    if b > 0 && gammas[0] > 0 && gammas.iter().all(|&g| g == gammas[0]) {
+        return spec_step_batch_ws(
+            ws, z_p, z_q, b, gammas[0], v, draft, u_acc, u_res, u_bonus, methods, accept,
+            out_tokens, profiler,
+        );
+    }
+
+    accept.clear();
+    accept.resize(b, 0);
+    out_tokens.clear();
+    out_tokens.resize(total_p, -1);
+    if total_p == 0 {
+        return;
+    }
+
+    // --- segment plan + workspace bookkeeping
+    let gmax = gammas.iter().copied().max().unwrap_or(0);
+    let (threads, chunk) = {
+        let _g = profiler.map(|pr| pr.scope("verify/partition"));
+        ws.ensure(b, gmax, v);
+        let elems = (total_p + total_q) * v;
+        (ws.cfg.effective_threads(elems), ws.cfg.chunk.max(1))
+    };
+    let VerifyWorkspace {
+        p, q, residual, partials, pool, ..
+    } = ws;
+    let pool = &*pool;
+    let p = &mut p[..total_p * v];
+    let q = &mut q[..total_q * v];
+    let residual = &mut residual[..b * v];
+
+    // --- probability construction over the ragged rows
+    {
+        let _g = profiler.map(|pr| pr.scope("verify/softmax"));
+        construct_matrix(
+            pool,
+            threads,
+            chunk,
+            z_p,
+            &mut *p,
+            v,
+            &|r| methods[slot_of_row(p_off, r)],
+            &mut partials[..],
+        );
+        construct_matrix(
+            pool,
+            threads,
+            chunk,
+            z_q,
+            &mut *q,
+            v,
+            &|r| methods[slot_of_row(q_off, r)],
+            &mut partials[..],
+        );
+    }
+
+    // --- acceptance scan (τ at the drafted tokens)
+    {
+        let _g = profiler.map(|pr| pr.scope("verify/kernel"));
+        for i in 0..b {
+            let g = gammas[i];
+            let mut alen = g;
+            for c in 0..g {
+                let r = q_off[i] + c;
+                let x = draft[r] as usize;
+                let pp = p[(p_off[i] + c) * v + x];
+                let qq = q[r * v + x];
+                if !verify::accept_decision(pp, qq, u_acc[r], methods[i]) {
+                    alen = c;
+                    break;
+                }
+            }
+            accept[i] = alen as i32;
+        }
+    }
+
+    // --- resample / bonus: sequential per slot (ragged token spans
+    // have no uniform unit for the span2 schedule; see the docs above)
+    {
+        let _g = profiler.map(|pr| pr.scope("verify/finish"));
+        let p = &*p;
+        let q = &*q;
+        for i in 0..b {
+            let g = gammas[i];
+            if g == 0 {
+                continue;
+            }
+            let alen = accept[i] as usize;
+            let trow = &mut out_tokens[p_off[i]..p_off[i] + g + 1];
+            trow[..alen].copy_from_slice(&draft[q_off[i]..q_off[i] + alen]);
+            if alen == g {
+                let bonus = &p[(p_off[i] + g) * v..][..v];
+                trow[g] = inverse_cdf_sample(bonus, u_bonus[i]) as i32;
+            } else {
+                let res = &mut residual[i * v..][..v];
+                let prow = &p[(p_off[i] + alen) * v..][..v];
+                let qrow = &q[(q_off[i] + alen) * v..][..v];
+                for ((r, &pp), &qq) in res.iter_mut().zip(prow).zip(qrow) {
+                    *r = (pp - qq).max(0.0);
+                }
+                trow[alen] = inverse_cdf_sample(res, u_res[i]) as i32;
+            }
+        }
     }
 }
 
@@ -948,6 +1128,167 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    struct RaggedCase {
+        b: usize,
+        v: usize,
+        gammas: Vec<usize>,
+        q_off: Vec<usize>,
+        p_off: Vec<usize>,
+        z_p: Vec<f32>,
+        z_q: Vec<f32>,
+        draft: Vec<i32>,
+        u_acc: Vec<f32>,
+        u_res: Vec<f32>,
+        u_bonus: Vec<f32>,
+        methods: Vec<Method>,
+    }
+
+    fn make_ragged_case(rng: &mut Pcg32, gammas: &[usize], v: usize) -> RaggedCase {
+        let pool = [
+            Method::Baseline,
+            Method::Exact,
+            Method::sigmoid(-1e3, 1e3),
+            Method::sigmoid16(-1e3, 1e3),
+            Method::sigmoid16(-1e5, 1e5),
+        ];
+        let b = gammas.len();
+        let (mut q_off, mut p_off) = (vec![0usize], vec![0usize]);
+        for &g in gammas {
+            q_off.push(q_off.last().unwrap() + g);
+            p_off.push(p_off.last().unwrap() + if g > 0 { g + 1 } else { 0 });
+        }
+        let (tq, tp) = (q_off[b], p_off[b]);
+        RaggedCase {
+            b,
+            v,
+            gammas: gammas.to_vec(),
+            q_off,
+            p_off,
+            z_p: randn(rng, tp * v, 3.0),
+            z_q: randn(rng, tq * v, 3.0),
+            draft: (0..tq).map(|_| rng.below(v as u32) as i32).collect(),
+            u_acc: (0..tq).map(|_| rng.uniform_f32()).collect(),
+            u_res: (0..b).map(|_| rng.uniform_f32()).collect(),
+            u_bonus: (0..b).map(|_| rng.uniform_f32()).collect(),
+            methods: (0..b)
+                .map(|_| pool[rng.below(pool.len() as u32) as usize])
+                .collect(),
+        }
+    }
+
+    fn run_ragged_ws(case: &RaggedCase, cfg: KernelConfig) -> (Vec<i32>, Vec<i32>) {
+        let mut ws = VerifyWorkspace::new(cfg);
+        let (mut accept, mut tokens) = (Vec::new(), Vec::new());
+        spec_step_ragged_ws(
+            &mut ws,
+            &case.z_p,
+            &case.z_q,
+            case.b,
+            &case.gammas,
+            &case.q_off,
+            &case.p_off,
+            case.v,
+            &case.draft,
+            &case.u_acc,
+            &case.u_res,
+            &case.u_bonus,
+            &case.methods,
+            &mut accept,
+            &mut tokens,
+            None,
+        );
+        (accept, tokens)
+    }
+
+    /// The scalar oracle run per slot on its ragged slices.
+    fn run_ragged_oracle(case: &RaggedCase) -> (Vec<i32>, Vec<i32>) {
+        let v = case.v;
+        let mut accept = vec![0i32; case.b];
+        let mut tokens = vec![-1i32; case.p_off[case.b]];
+        for i in 0..case.b {
+            let g = case.gammas[i];
+            if g == 0 {
+                continue;
+            }
+            let (q0, p0) = (case.q_off[i], case.p_off[i]);
+            let out = crate::sampling::verify::spec_step(
+                &case.z_p[p0 * v..(p0 + g + 1) * v],
+                &case.z_q[q0 * v..(q0 + g) * v],
+                v,
+                &case.draft[q0..q0 + g],
+                &case.u_acc[q0..q0 + g],
+                case.u_res[i],
+                case.u_bonus[i],
+                case.methods[i],
+                None,
+            );
+            accept[i] = out.accept_len as i32;
+            tokens[p0..p0 + out.tokens.len()].copy_from_slice(&out.tokens);
+        }
+        (accept, tokens)
+    }
+
+    #[test]
+    fn ragged_kernel_bit_identical_to_per_slot_oracle() {
+        // mixed per-slot γ (incl. empty slots) × mixed methods × thread
+        // counts: the ragged step must equal the scalar oracle run on
+        // each slot's slices
+        forall(
+            "ragged kernel parity",
+            Config { cases: 40, ..Config::default() },
+            |rng, size| {
+                let v = 4 + size * 3;
+                let b = 1 + (size % 5);
+                let gammas: Vec<usize> = (0..b)
+                    .map(|_| match rng.below(8) {
+                        0 => 0, // empty slot
+                        k => 1 + (k as usize % 6),
+                    })
+                    .collect();
+                let case = make_ragged_case(rng, &gammas, v);
+                let expect = run_ragged_oracle(&case);
+                for threads in [1usize, 2, 8] {
+                    let cfg = force_parallel(KernelConfig::with_threads(threads));
+                    let got = run_ragged_ws(&case, cfg);
+                    if got != expect {
+                        return Err(format!(
+                            "threads={threads} γs={gammas:?} v={v}: {got:?} != {expect:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ragged_uniform_layout_delegates_to_rectangular_path() {
+        // all slots at the same γ: the ragged entry point must produce
+        // exactly the rectangular kernel's output (same layout, same
+        // schedules) — the engine relies on this for shared-γ parity
+        let mut rng = Pcg32::seeded(83);
+        for (b, g, v) in [(1usize, 3usize, 40usize), (3, 2, 24), (4, 5, 16)] {
+            let gammas = vec![g; b];
+            let case = make_ragged_case(&mut rng, &gammas, v);
+            let rect = Case {
+                b,
+                gamma: g,
+                v,
+                z_p: case.z_p.clone(),
+                z_q: case.z_q.clone(),
+                draft: case.draft.clone(),
+                u_acc: case.u_acc.clone(),
+                u_res: case.u_res.clone(),
+                u_bonus: case.u_bonus.clone(),
+                methods: case.methods.clone(),
+            };
+            for threads in [1usize, 4] {
+                let cfg = force_parallel(KernelConfig::with_threads(threads));
+                assert_eq!(run_ragged_ws(&case, cfg), run_ws(&rect, cfg), "b={b} γ={g}");
+            }
+        }
     }
 
     #[test]

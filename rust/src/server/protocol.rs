@@ -17,9 +17,27 @@
 //! ([`crate::trace::TraceRecorder`]) when the server was started with
 //! `--trace`; it is acknowledged with
 //! `{"v":2,"event":"record","id":…,"enabled":…}` or rejected with code
-//! `no_recorder`. The `done` event additionally carries
-//! `latency_percentiles_ms` (p50/p90/p95/p99 over every request
-//! finished so far) when the serve loop has latency samples.
+//! `no_recorder`.
+//!
+//! ## Admission queue & SLO metrics
+//!
+//! Generate requests pass through a bounded server-side admission
+//! queue and are submitted to the engine as batch slots free up
+//! (mid-flight refill). Overload produces structured error events:
+//! code `queue_full` when the queue is at capacity, `shed` when a
+//! queued request waited past the configured deadline, and the
+//! admission codes forwarded verbatim from
+//! [`crate::engine::AdmitError`] (e.g. `method_gamma_conflict`).
+//! Cancelling a still-queued request removes it from the queue and
+//! answers with a `done` event carrying `"finish":"cancel"` and zero
+//! tokens.
+//!
+//! The `done` event carries a per-request + server-wide SLO block
+//! ([`SloStats`]) when the serve loop produced it: `queue_ms` (this
+//! request's admission-queue wait), `queue_depth` (queue length at
+//! completion), `latency_percentiles_ms` and
+//! `queue_wait_percentiles_ms` (p50/p90/p95/p99 over every request
+//! finished so far).
 //!
 //! `params` keys map 1:1 onto [`SamplingParams`] (absent keys take the
 //! shared defaults). v2 parsing is strict: unknown envelope or params
@@ -28,9 +46,10 @@
 //! `{"name":"sigmoid","alpha":…,"beta":…}` — honored per-slot on any
 //! batch size (the engine dispatches each batch row under its own
 //! method); a `method` is rejected at admission (structured
-//! `{"event":"error","code":"rejected"}`) only when the engine has no
-//! verify artifacts for it, or none sharing a γ with the engine's
-//! default method.
+//! `{"event":"error","code":"rejected"}`, or
+//! `"code":"method_gamma_conflict"` on the HLO backend when the
+//! method's artifacts share no γ with the rest of the batch — the
+//! message lists the offending method and both γ sets).
 //!
 //! Responses are events. A streaming request receives incremental
 //! `{"v":2,"event":"delta","id":…,"text":…,"tokens":…}` lines as tokens
@@ -488,32 +507,46 @@ pub fn render_response(resp: &WireResponse) -> String {
     obj(summary_fields(resp)).dump()
 }
 
+/// Per-request + server-wide SLO block attached to v2 `done` events by
+/// the serve loop. Times are seconds; rendering converts to ms.
+#[derive(Debug, Clone)]
+pub struct SloStats {
+    /// this request's wait in the server admission queue
+    pub queue_wait: f64,
+    /// admission-queue depth when the request finished
+    pub queue_depth: usize,
+    /// decode-latency percentiles over every request finished so far
+    pub latency: crate::util::stats::Summary,
+    /// queue-wait percentiles over every request finished so far
+    pub queue: crate::util::stats::Summary,
+}
+
+fn percentiles_ms(s: &crate::util::stats::Summary) -> Value {
+    obj(vec![
+        ("n", s.n.into()),
+        ("p50", Value::Num(s.p50 * 1e3)),
+        ("p90", Value::Num(s.p90 * 1e3)),
+        ("p95", Value::Num(s.p95 * 1e3)),
+        ("p99", Value::Num(s.p99 * 1e3)),
+    ])
+}
+
 /// v2 final summary event.
 pub fn render_done(resp: &WireResponse) -> String {
     render_done_with(resp, None)
 }
 
-/// v2 final summary event, optionally carrying the server's running
-/// per-request latency percentiles (milliseconds, over every request
-/// finished so far on this engine — the `latency` summary the serve
-/// loop maintains).
-pub fn render_done_with(
-    resp: &WireResponse,
-    latency: Option<&crate::util::stats::Summary>,
-) -> String {
+/// v2 final summary event, optionally carrying the serve loop's SLO
+/// block (queue wait + queue depth for this request, latency and
+/// queue-wait percentiles over every request finished so far).
+pub fn render_done_with(resp: &WireResponse, slo: Option<&SloStats>) -> String {
     let mut fields = vec![("v", 2i64.into()), ("event", "done".into())];
     fields.extend(summary_fields(resp));
-    if let Some(s) = latency {
-        fields.push((
-            "latency_percentiles_ms",
-            obj(vec![
-                ("n", s.n.into()),
-                ("p50", Value::Num(s.p50 * 1e3)),
-                ("p90", Value::Num(s.p90 * 1e3)),
-                ("p95", Value::Num(s.p95 * 1e3)),
-                ("p99", Value::Num(s.p99 * 1e3)),
-            ]),
-        ));
+    if let Some(s) = slo {
+        fields.push(("queue_ms", Value::Num(s.queue_wait * 1e3)));
+        fields.push(("queue_depth", s.queue_depth.into()));
+        fields.push(("latency_percentiles_ms", percentiles_ms(&s.latency)));
+        fields.push(("queue_wait_percentiles_ms", percentiles_ms(&s.queue)));
     }
     obj(fields).dump()
 }
@@ -891,20 +924,34 @@ mod tests {
     }
 
     #[test]
-    fn done_event_carries_latency_percentiles() {
-        let mut series = crate::util::stats::Series::new();
+    fn done_event_carries_slo_block() {
+        let mut latency = crate::util::stats::Series::new();
+        let mut queue = crate::util::stats::Series::new();
         for i in 1..=100 {
-            series.push(i as f64 * 1e-3);
+            latency.push(i as f64 * 1e-3);
+            queue.push(i as f64 * 1e-4);
         }
-        let line = render_done_with(&sample_response(), Some(&series.summary()));
+        let slo = SloStats {
+            queue_wait: 0.002,
+            queue_depth: 7,
+            latency: latency.summary(),
+            queue: queue.summary(),
+        };
+        let line = render_done_with(&sample_response(), Some(&slo));
         let v = json::parse(&line).unwrap();
-        let lp = v.get("latency_percentiles_ms").expect("percentiles");
+        assert!((v.get("queue_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(v.get("queue_depth").unwrap().as_usize(), Some(7));
+        let lp = v.get("latency_percentiles_ms").expect("latency percentiles");
         assert_eq!(lp.get("n").unwrap().as_usize(), Some(100));
         let p99 = lp.get("p99").unwrap().as_f64().unwrap();
         let p50 = lp.get("p50").unwrap().as_f64().unwrap();
         assert!(p99 > p50, "p99 {p99} should exceed p50 {p50}");
-        // plain render_done stays percentile-free
-        assert!(!render_done(&sample_response()).contains("latency_percentiles"));
+        let qp = v.get("queue_wait_percentiles_ms").expect("queue percentiles");
+        assert_eq!(qp.get("n").unwrap().as_usize(), Some(100));
+        // plain render_done stays SLO-free
+        let plain = render_done(&sample_response());
+        assert!(!plain.contains("latency_percentiles"));
+        assert!(!plain.contains("queue_ms"));
     }
 
     #[test]

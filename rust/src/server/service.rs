@@ -12,8 +12,20 @@
 //! Admission is validated on the engine thread ([`Engine::admissible`]):
 //! malformed lines are rejected by the reader with structured error
 //! events, over-long prompts / unsupported per-request overrides are
-//! rejected before a slot is committed. A `cancel` op frees the request's
-//! slot mid-decode; the request finishes with `"finish":"cancel"`.
+//! rejected before a queue entry is committed. A `cancel` op frees the
+//! request's slot mid-decode (the request finishes with
+//! `"finish":"cancel"`) or, for a still-queued request, removes the
+//! queue entry and answers the cancelled `done` directly.
+//!
+//! Admitted requests wait in a bounded server-side queue and are
+//! submitted to the engine as batch slots free up (mid-flight refill —
+//! the engine's own queue never grows beyond its batch). Overload is
+//! answered with structured errors: `queue_full` at the queue bound,
+//! `shed` when a queued request overstays the configured deadline.
+//! Every v2 `done` carries the SLO block
+//! ([`super::protocol::SloStats`]): this request's queue wait, the
+//! queue depth at completion, and running latency / queue-wait
+//! percentiles.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -21,11 +33,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::engine::{Engine, GenRequest, SamplingParams};
+use crate::engine::{Engine, FinishReason, GenRequest, GenResult, SamplingParams};
 use crate::tokenizer::Tokenizer;
 use crate::trace::TraceRecorder;
 use crate::util::stats::Series;
@@ -33,7 +45,7 @@ use crate::util::stats::Series;
 use super::protocol::{
     parse_line, render_cancel, render_delta, render_done_with, render_error,
     render_error_event, render_generate, render_record_ack, render_response,
-    WireError, WireMsg, WireResponse,
+    SloStats, WireError, WireMsg, WireResponse,
 };
 
 #[derive(Debug, Clone)]
@@ -42,6 +54,13 @@ pub struct ServerConfig {
     /// trace recorder to attach to the engine at start; the v2 `record`
     /// op toggles its gate at runtime (`None` = tracing unavailable)
     pub trace: Option<Arc<TraceRecorder>>,
+    /// bound on the server-side admission queue — a generate arriving
+    /// while `queue_limit` requests already wait is answered with a
+    /// structured `queue_full` error instead of growing the queue
+    pub queue_limit: usize,
+    /// when set, queued requests that wait longer than this are load-shed
+    /// with a structured `shed` error instead of decoding stale work
+    pub shed_after: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -49,6 +68,8 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:7077".into(),
             trace: None,
+            queue_limit: 512,
+            shed_after: None,
         }
     }
 }
@@ -105,9 +126,13 @@ impl Server {
         let shutdown = Arc::new(AtomicBool::new(false));
         let engine_handle = {
             let shutdown = shutdown.clone();
+            let queue_limit = cfg.queue_limit.max(1);
+            let shed_after = cfg.shed_after;
             std::thread::Builder::new()
                 .name("specd-engine".into())
-                .spawn(move || engine_loop(engine, tokenizer, job_rx, shutdown))
+                .spawn(move || {
+                    engine_loop(engine, tokenizer, job_rx, shutdown, queue_limit, shed_after)
+                })
                 .context("spawning engine thread")?
         };
         crate::info!("server listening on {addr}");
@@ -265,6 +290,41 @@ struct Inflight {
     stream: SharedStream,
     streaming: bool,
     v1: bool,
+    /// seconds this request waited in the server admission queue
+    queue_wait: f64,
+}
+
+/// One admitted-but-not-yet-submitted request waiting for a batch slot.
+struct Queued {
+    job: Box<GenJob>,
+    enqueued: Instant,
+}
+
+/// The serve loop's running SLO series (seconds, per finished request).
+struct SloSeries {
+    latency: Series,
+    queue: Series,
+}
+
+impl SloSeries {
+    fn stats(&self, queue_wait: f64, queue_depth: usize) -> SloStats {
+        SloStats {
+            queue_wait,
+            queue_depth,
+            latency: self.latency.summary(),
+            queue: self.queue.summary(),
+        }
+    }
+}
+
+fn send_overload(job: &GenJob, code: &'static str, msg: String) {
+    let err = WireError::new(Some(job.wire_id), code, msg);
+    let line = if job.v1 {
+        render_error(Some(job.wire_id), &err.msg)
+    } else {
+        render_error_event(&err)
+    };
+    send_line(&job.stream, &line);
 }
 
 fn engine_loop(
@@ -272,19 +332,24 @@ fn engine_loop(
     tokenizer: Tokenizer,
     rx: Receiver<Job>,
     shutdown: Arc<AtomicBool>,
+    queue_limit: usize,
+    shed_after: Option<Duration>,
 ) {
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
-    // per-request wall latencies since server start; summarized into the
-    // `latency_percentiles_ms` block of every v2 `done` event
-    let mut latency = Series::new();
+    let mut queue: VecDeque<Queued> = VecDeque::new();
+    let mut slo = SloSeries {
+        latency: Series::new(),
+        queue: Series::new(),
+    };
     loop {
-        if shutdown.load(Ordering::Relaxed) && inflight.is_empty() {
+        if shutdown.load(Ordering::Relaxed) && inflight.is_empty() && queue.is_empty() {
             break;
         }
-        // admit everything queued; block briefly when idle
+        // pull socket work; block briefly only when fully idle
         let mut got = false;
         loop {
-            let job = if engine.active() == 0 && inflight.is_empty() && !got {
+            let job = if engine.active() == 0 && inflight.is_empty() && queue.is_empty() && !got
+            {
                 match rx.recv_timeout(Duration::from_millis(50)) {
                     Ok(j) => j,
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
@@ -298,44 +363,67 @@ fn engine_loop(
             };
             got = true;
             match job {
-                Job::Generate(job) => {
-                    let GenJob {
-                        engine_id,
-                        wire_id,
-                        stream,
-                        mut request,
-                        streaming,
-                        v1,
-                    } = *job;
-                    if let Some(text) = request.prompt_text.take() {
-                        request.prompt_ids = tokenizer.encode(&text);
+                Job::Generate(mut job) => {
+                    if let Some(text) = job.request.prompt_text.take() {
+                        job.request.prompt_ids = tokenizer.encode(&text);
                     }
-                    request = request.tokenize_stops(&tokenizer);
+                    job.request = job.request.clone().tokenize_stops(&tokenizer);
                     // admission: validate against params rules + model
-                    // limits instead of decoding garbage
-                    if let Err(msg) = engine.admissible(&request) {
-                        let err = WireError::new(Some(wire_id), "rejected", msg);
-                        let line = if v1 {
-                            render_error(Some(wire_id), &err.msg)
-                        } else {
-                            render_error_event(&err)
-                        };
-                        send_line(&stream, &line);
+                    // limits before committing a queue entry, forwarding
+                    // the engine's structured code (e.g.
+                    // `method_gamma_conflict`) to the client verbatim
+                    if let Err(err) = engine.admissible(&job.request) {
+                        send_overload(&job, err.code, err.msg);
                         continue;
                     }
-                    inflight.insert(
-                        engine_id,
-                        Inflight {
-                            wire_id,
-                            stream,
-                            streaming,
-                            v1,
-                        },
-                    );
-                    engine.submit(request);
+                    // backpressure: the queue is bounded; past the bound
+                    // the client is told immediately rather than waiting
+                    if queue.len() >= queue_limit {
+                        send_overload(
+                            &job,
+                            "queue_full",
+                            format!(
+                                "admission queue is full ({queue_limit} waiting); retry later"
+                            ),
+                        );
+                        continue;
+                    }
+                    queue.push_back(Queued {
+                        job,
+                        enqueued: Instant::now(),
+                    });
                 }
                 Job::Cancel { engine_id, wire_id } => {
-                    if engine.cancel(engine_id) {
+                    if let Some(pos) =
+                        queue.iter().position(|q| q.job.engine_id == engine_id)
+                    {
+                        // still queued: remove the entry and answer the
+                        // cancelled done directly — the engine never saw
+                        // this request
+                        let q = queue.remove(pos).expect("position is in range");
+                        let wait = q.enqueued.elapsed().as_secs_f64();
+                        slo.queue.push(wait);
+                        let resp = WireResponse {
+                            id: q.job.wire_id,
+                            text: String::new(),
+                            result: GenResult {
+                                id: engine_id,
+                                token_ids: Vec::new(),
+                                finish: FinishReason::Cancelled,
+                                steps: 0,
+                                drafted: 0,
+                                accepted: 0,
+                                latency: 0.0,
+                            },
+                        };
+                        let line = if q.job.v1 {
+                            render_response(&resp)
+                        } else {
+                            render_done_with(&resp, Some(&slo.stats(wait, queue.len())))
+                        };
+                        send_line(&q.job.stream, &line);
+                        crate::debug!("cancelled queued request {wire_id}");
+                    } else if engine.cancel(engine_id) {
                         // the Cancelled result flows out via the normal
                         // result drain below
                         crate::debug!("cancelled request {wire_id}");
@@ -350,9 +438,47 @@ fn engine_loop(
             }
         }
 
+        // load-shedding: queued requests past the wait deadline are
+        // answered with `shed` instead of decoding stale work
+        if let Some(deadline) = shed_after {
+            while let Some(pos) = queue.iter().position(|q| q.enqueued.elapsed() > deadline)
+            {
+                let q = queue.remove(pos).expect("position is in range");
+                let waited = q.enqueued.elapsed();
+                send_overload(
+                    &q.job,
+                    "shed",
+                    format!(
+                        "load shed after {} ms in queue (deadline {} ms)",
+                        waited.as_millis(),
+                        deadline.as_millis()
+                    ),
+                );
+            }
+        }
+
+        // mid-flight refill: submit queued requests into freed batch
+        // slots so the engine's own queue never outgrows its batch
+        while engine.free_slots() > 0 {
+            let Some(q) = queue.pop_front() else { break };
+            let wait = q.enqueued.elapsed().as_secs_f64();
+            let job = *q.job;
+            inflight.insert(
+                job.engine_id,
+                Inflight {
+                    wire_id: job.wire_id,
+                    stream: job.stream,
+                    streaming: job.streaming,
+                    v1: job.v1,
+                    queue_wait: wait,
+                },
+            );
+            engine.submit(job.request);
+        }
+
         if engine.active() == 0 && engine.pending() == 0 {
             // drain results produced without stepping (queue cancels)
-            flush_results(&mut engine, &tokenizer, &mut inflight, &mut latency);
+            flush_results(&mut engine, &tokenizer, &mut inflight, &mut slo, queue.len());
             continue;
         }
         if let Err(e) = engine.step() {
@@ -381,7 +507,7 @@ fn engine_loop(
                 }
             }
         }
-        flush_results(&mut engine, &tokenizer, &mut inflight, &mut latency);
+        flush_results(&mut engine, &tokenizer, &mut inflight, &mut slo, queue.len());
     }
 }
 
@@ -389,11 +515,13 @@ fn flush_results(
     engine: &mut Engine,
     tokenizer: &Tokenizer,
     inflight: &mut HashMap<u64, Inflight>,
-    latency: &mut Series,
+    slo: &mut SloSeries,
+    queue_depth: usize,
 ) {
     for result in engine.take_results() {
         if let Some(f) = inflight.remove(&result.id) {
-            latency.push(result.latency);
+            slo.latency.push(result.latency);
+            slo.queue.push(f.queue_wait);
             let resp = WireResponse {
                 id: f.wire_id,
                 text: tokenizer.decode_until_stop(&result.token_ids),
@@ -404,7 +532,7 @@ fn flush_results(
             } else {
                 // percentiles over every request finished so far,
                 // including this one (so the first done already has n=1)
-                render_done_with(&resp, Some(&latency.summary()))
+                render_done_with(&resp, Some(&slo.stats(f.queue_wait, queue_depth)))
             };
             send_line(&f.stream, &line);
         }

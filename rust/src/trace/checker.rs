@@ -10,11 +10,19 @@
 //! recorded run (serial *or* pipelined) was bit-identical to the
 //! oracle.
 //!
+//! Traces are ragged (format v2): every recorded slot carries its own
+//! γ, so replay rebuilds the step's γ-prefix tables exactly as the
+//! engine does and addresses draft/logit rows through them. A slot's
+//! uniforms depend only on its own RNG stream and its own γ, which is
+//! what lets the per-slot scalar oracle stand in for the batched
+//! ragged kernel.
+//!
 //! What is recorded vs re-derived:
 //!
-//! * **recorded**: per-slot RNG positions, drafted tokens, logit
+//! * **recorded**: per-slot γ and RNG positions, drafted tokens, logit
 //!   digests, accept lengths, emitted rows, committed deltas, finish
-//!   reasons, per-slot methods, admission params;
+//!   reasons, per-slot methods, admission params (incl. the mid-flight
+//!   refill flag);
 //! * **re-derived**: every uniform (re-drawn from the recorded RNG
 //!   positions in the engine's draw order), the logit tensors (the sim
 //!   models are pure functions of the token context), the oracle's
@@ -32,7 +40,7 @@ use crate::engine::core::Engine;
 use crate::engine::pipeline::{run_model_block, BlockDims, BlockSlot, StepBuffers};
 use crate::engine::{match_stop_suffix, FinishReason};
 use crate::runtime::{Runtime, SimSpec};
-use crate::sampling::{self, verify, Method};
+use crate::sampling::{self, verify};
 use crate::tokenizer;
 use crate::util::rng::Pcg32;
 
@@ -73,6 +81,8 @@ pub struct CheckReport {
     pub events: usize,
     /// requests admitted
     pub requests: usize,
+    /// mid-flight refill admissions (admitted while other slots decode)
+    pub refills: usize,
     /// cancel events seen
     pub cancels: usize,
     /// committed tokens verified
@@ -105,7 +115,7 @@ struct ReplaySlot {
     top_k: usize,
     top_p: f32,
     stop_ids: Vec<Vec<i32>>,
-    method: Option<Method>,
+    method: Option<crate::sampling::Method>,
 }
 
 fn finish_str(f: Option<FinishReason>) -> &'static str {
@@ -168,14 +178,10 @@ pub fn check(trace: &Trace) -> Result<CheckReport, String> {
 
     let mut bufs = StepBuffers::new(b, s, gmax, v);
     let mut bslots: Vec<BlockSlot> = Vec::with_capacity(b);
-    let mut uacc = vec![0.0f32; b * gmax];
-    let mut ures = vec![0.0f32; b];
-    let mut ubonus = vec![0.0f32; b];
-    let mut methods = vec![h.method; b];
 
     let mut slots: Vec<Option<ReplaySlot>> = (0..b).map(|_| None).collect();
     let mut report = CheckReport::default();
-    let mut last_verify_gamma: Option<u32> = None;
+    let mut last_verify_rows: Option<u32> = None;
 
     for ev in &trace.events {
         report.events += 1;
@@ -196,6 +202,26 @@ pub fn check(trace: &Trace) -> Result<CheckReport, String> {
                         "admit event prompt length {} invalid for seq_len {s}",
                         a.prompt.len()
                     ));
+                }
+                // the engine stamps `refill` when the admission lands
+                // while other slots are still mid-decode; replay sees
+                // the same slot occupancy, so the flag must agree
+                let mid_flight = slots.iter().any(Option::is_some);
+                if a.refill != mid_flight {
+                    report.divergence = Some(Divergence {
+                        step: report.steps,
+                        slot: a.slot,
+                        id: a.id,
+                        field: "refill",
+                        detail: format!(
+                            "recorded {}, replay occupancy implies {}",
+                            a.refill, mid_flight
+                        ),
+                    });
+                    return Ok(report);
+                }
+                if a.refill {
+                    report.refills += 1;
                 }
                 let mut tokens = vec![tokenizer::PAD; s];
                 tokens[..a.prompt.len()].copy_from_slice(&a.prompt);
@@ -241,9 +267,9 @@ pub fn check(trace: &Trace) -> Result<CheckReport, String> {
                 // queue-side cancels never reached a slot: nothing to do
             }
             TraceEvent::Pipeline(_) => report.pipeline_events += 1,
-            TraceEvent::Verify { gamma, .. } => {
+            TraceEvent::Verify { rows, .. } => {
                 report.verify_events += 1;
-                last_verify_gamma = Some(*gamma);
+                last_verify_rows = Some(*rows);
             }
             TraceEvent::Step(step) => {
                 report.steps += 1;
@@ -257,14 +283,10 @@ pub fn check(trace: &Trace) -> Result<CheckReport, String> {
                         target_score: &target_score,
                         profiler: &runtime.profiler,
                         header_method: h.method,
-                        last_verify_gamma: last_verify_gamma.take(),
+                        last_verify_rows: last_verify_rows.take(),
                     },
                     &mut bufs,
                     &mut bslots,
-                    &mut uacc,
-                    &mut ures,
-                    &mut ubonus,
-                    &mut methods,
                     &mut report.tokens,
                 )?;
                 if let Some(d) = diverged {
@@ -283,36 +305,28 @@ struct ReplayCtx<'a> {
     draft_step: &'a crate::runtime::LoadedExecutable,
     target_score: &'a crate::runtime::LoadedExecutable,
     profiler: &'a crate::util::timer::Profiler,
-    header_method: Method,
-    /// γ of the Verify marker recorded just before this step, if any
-    last_verify_gamma: Option<u32>,
+    header_method: crate::sampling::Method,
+    /// row count of the Verify marker recorded just before this step
+    last_verify_rows: Option<u32>,
 }
 
 /// Replay one recorded decode step. Returns `Ok(Some(divergence))` on
 /// the first mismatch, `Ok(None)` on a bit-identical step.
-#[allow(clippy::too_many_arguments)]
 fn replay_step(
     slots: &mut [Option<ReplaySlot>],
     step: &super::format::StepEvent,
     ctx: ReplayCtx<'_>,
     bufs: &mut StepBuffers,
     bslots: &mut Vec<BlockSlot>,
-    uacc: &mut [f32],
-    ures: &mut [f32],
-    ubonus: &mut [f32],
-    methods: &mut [Method],
     tokens_verified: &mut usize,
 ) -> Result<Option<Divergence>, String> {
     let BlockDims { b, s, v, gmax } = ctx.dims;
-    let gamma = step.gamma as usize;
     let sn = ctx.step_idx;
-    if gamma == 0 || gamma > gmax {
-        return Err(format!("step {sn}: gamma {gamma} outside 1..={gmax}"));
-    }
 
     // --- structural pass: the recorded slot set must be exactly the
     // replay-active set, in slot order, with matching ids / lengths /
-    // methods / RNG positions
+    // methods / RNG positions; each slot carries its own γ
+    let mut gammas = vec![0usize; b];
     let mut expect = slots
         .iter()
         .enumerate()
@@ -322,6 +336,13 @@ fn replay_step(
         if i >= b {
             return Err(format!("step {sn}: slot {i} out of range (batch {b})"));
         }
+        let gamma = ts.gamma as usize;
+        if gamma == 0 || gamma > gmax {
+            return Err(format!(
+                "step {sn}: slot {i} gamma {gamma} outside 1..={gmax}"
+            ));
+        }
+        gammas[i] = gamma;
         match expect.next() {
             Some((ei, eid)) if ei == i && eid == ts.id => {}
             other => {
@@ -387,18 +408,22 @@ fn replay_step(
              the recorded step"
         ));
     }
-    if let Some(vg) = ctx.last_verify_gamma {
-        if vg as usize != gamma {
+    let total_rows: usize = gammas.iter().sum();
+    if let Some(vr) = ctx.last_verify_rows {
+        if vr as usize != total_rows {
             return Err(format!(
-                "step {sn}: verify marker ran gamma {vg} but the step \
-                 committed gamma {gamma}"
+                "step {sn}: verify marker dispatched {vr} draft rows but the \
+                 step's per-slot gammas sum to {total_rows}"
             ));
         }
     }
 
     // --- model block from the recorded RNG positions (the engine's
     // serial dispatch; a pipelined recording replays through here
-    // because the positions are schedule-independent)
+    // because the positions are schedule-independent). Each slot
+    // participates in exactly its own γ draft sub-steps, so the
+    // γ-prefix tables `run_model_block` leaves in `bufs` match the
+    // engine's row addressing.
     bslots.clear();
     for i in 0..b {
         match &slots[i] {
@@ -409,6 +434,7 @@ fn replay_step(
                     len: sl.len,
                     rng: sl.rng.clone(),
                     draft_temp: Engine::effective_temp(sl.draft_temp),
+                    gamma: gammas[i],
                 });
             }
             None => {
@@ -424,7 +450,6 @@ fn replay_step(
         bufs,
         bslots,
         ctx.dims,
-        gamma,
         false,
         None,
     )
@@ -432,7 +457,8 @@ fn replay_step(
 
     for ts in &step.slots {
         let i = ts.slot as usize;
-        let got = &bufs.draft[i * gamma..(i + 1) * gamma];
+        let q0 = bufs.q_off[i];
+        let got = &bufs.draft[q0..q0 + gammas[i]];
         if got != ts.draft.as_slice() {
             return Ok(Some(div(
                 sn,
@@ -443,39 +469,36 @@ fn replay_step(
         }
     }
 
-    // --- scale/filter exactly as the engine does, then digest-compare
-    // the tensors verification consumed
+    // --- scale/filter exactly as the engine does over the ragged row
+    // spans, then digest-compare the tensors verification consumed
     for i in 0..b {
-        let t = match &slots[i] {
-            Some(sl) => Engine::effective_temp(sl.temperature),
-            None => 1.0,
-        };
+        let Some(sl) = &slots[i] else { continue };
+        let g = gammas[i];
+        let (q0, p0) = (bufs.q_off[i], bufs.p_off[i]);
+        let t = Engine::effective_temp(sl.temperature);
         if (t - 1.0).abs() > 1e-6 {
             let inv = 1.0 / t;
-            for x in &mut bufs.zp[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v] {
+            for x in &mut bufs.zp[p0 * v..(p0 + g + 1) * v] {
                 *x *= inv;
             }
-            for x in &mut bufs.zq[i * gamma * v..(i + 1) * gamma * v] {
+            for x in &mut bufs.zq[q0 * v..(q0 + g) * v] {
                 *x *= inv;
             }
         }
-    }
-    for i in 0..b {
-        let (k, p) = match &slots[i] {
-            Some(sl) => (sl.top_k, sl.top_p),
-            None => (0, 1.0),
-        };
+        let (k, p) = (sl.top_k, sl.top_p);
         if k == 0 && p >= 1.0 {
             continue;
         }
-        for j in 0..=gamma {
-            let off = (i * (gamma + 1) + j) * v;
+        for j in 0..=g {
+            let off = (p0 + j) * v;
             sampling::filter::mask_logits_top_k_top_p(&mut bufs.zp[off..off + v], k, p);
         }
     }
     for ts in &step.slots {
         let i = ts.slot as usize;
-        let zq = digest_f32(&bufs.zq[i * gamma * v..(i + 1) * gamma * v]);
+        let g = gammas[i];
+        let (q0, p0) = (bufs.q_off[i], bufs.p_off[i]);
+        let zq = digest_f32(&bufs.zq[q0 * v..(q0 + g) * v]);
         if zq != ts.zq_digest {
             return Ok(Some(div(
                 sn,
@@ -484,7 +507,7 @@ fn replay_step(
                 format!("recorded {:#x}, replay computed {zq:#x}", ts.zq_digest),
             )));
         }
-        let zp = digest_f32(&bufs.zp[i * (gamma + 1) * v..(i + 1) * (gamma + 1) * v]);
+        let zp = digest_f32(&bufs.zp[p0 * v..(p0 + g + 1) * v]);
         if zp != ts.zp_digest {
             return Ok(Some(div(
                 sn,
@@ -495,52 +518,31 @@ fn replay_step(
         }
     }
 
-    // --- verification uniforms in the engine's draw order, from the
-    // block-advanced streams
-    for i in 0..b {
-        if bslots[i].active {
-            for c in 0..gamma {
-                uacc[i * gamma + c] = bslots[i].rng.uniform_f32();
-            }
-            ures[i] = bslots[i].rng.uniform_f32();
-            ubonus[i] = bslots[i].rng.uniform_f32();
-        } else {
-            uacc[i * gamma..(i + 1) * gamma].fill(1.0);
-            ures[i] = 0.0;
-            ubonus[i] = 0.0;
-        }
-    }
-
-    // --- per-slot methods with the engine's inactive-row padding
-    let pad = step
-        .slots
-        .first()
-        .map(|ts| ts.method)
-        .unwrap_or(ctx.header_method);
-    methods.fill(pad);
-    for ts in &step.slots {
-        methods[ts.slot as usize] = ts.method;
-    }
-
-    // --- the scalar oracle (the ground truth every backend must match)
-    let (accept_len, out_tokens) = verify::spec_step_batch(
-        &bufs.zp[..b * (gamma + 1) * v],
-        &bufs.zq[..b * gamma * v],
-        b,
-        gamma,
-        v,
-        &bufs.draft[..b * gamma],
-        &uacc[..b * gamma],
-        &ures[..b],
-        &ubonus[..b],
-        methods,
-        None,
-    );
-
-    // --- commit replay: the engine's exact finish state machine
+    // --- verification uniforms in the engine's draw order (per slot:
+    // γᵢ acceptance draws, one residual, one bonus; inactive slots
+    // consume nothing), then the per-slot scalar oracle — the ground
+    // truth every batched backend must match row for row
     for ts in &step.slots {
         let i = ts.slot as usize;
-        let alen = accept_len[i] as usize;
+        let g = gammas[i];
+        let (q0, p0) = (bufs.q_off[i], bufs.p_off[i]);
+        let uacc: Vec<f32> = (0..g).map(|_| bslots[i].rng.uniform_f32()).collect();
+        let ures = bslots[i].rng.uniform_f32();
+        let ubonus = bslots[i].rng.uniform_f32();
+        let out = verify::spec_step(
+            &bufs.zp[p0 * v..(p0 + g + 1) * v],
+            &bufs.zq[q0 * v..(q0 + g) * v],
+            v,
+            &bufs.draft[q0..q0 + g],
+            &uacc,
+            ures,
+            ubonus,
+            ts.method,
+            None,
+        );
+
+        // --- commit replay: the engine's exact finish state machine
+        let alen = out.accept_len;
         if alen != ts.accept_len as usize {
             return Ok(Some(div(
                 sn,
@@ -549,19 +551,18 @@ fn replay_step(
                 format!("recorded {}, oracle accepted {alen}", ts.accept_len),
             )));
         }
-        let row = &out_tokens[i * (gamma + 1)..(i + 1) * (gamma + 1)];
-        if row != ts.out_row.as_slice() {
+        if out.tokens != ts.out_row.as_slice() {
             return Ok(Some(div(
                 sn,
                 ts,
                 "out_tokens",
-                format!("recorded {:?}, oracle emitted {:?}", ts.out_row, row),
+                format!("recorded {:?}, oracle emitted {:?}", ts.out_row, out.tokens),
             )));
         }
         let sl = slots[i].as_mut().expect("validated above");
         let gen_before = sl.generated.len();
         let mut finish: Option<FinishReason> = None;
-        for &tok in row.iter().take(alen + 1) {
+        for &tok in out.tokens.iter().take(alen + 1) {
             sl.tokens[sl.len] = tok;
             sl.len += 1;
             sl.generated.push(tok);

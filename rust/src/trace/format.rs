@@ -23,6 +23,12 @@
 //! Versioning rule: any change to recorded semantics (field meaning,
 //! draw order, digest function) bumps [`TRACE_VERSION`]; the checker
 //! refuses versions it does not know rather than guessing.
+//!
+//! Version history: **v1** — rectangular batches, one γ per step event.
+//! **v2** — ragged per-slot γ: each [`SlotStep`] carries its own
+//! `gamma` (the step event has no shared γ), admit events record
+//! whether the admission was a mid-flight `refill`, and the verify
+//! marker counts ragged `rows` (Σ γᵢ) instead of a γ.
 
 use std::path::Path;
 
@@ -32,8 +38,9 @@ use crate::util::json::{self, obj, Value};
 
 /// On-disk magic for binary traces.
 pub const TRACE_MAGIC: [u8; 4] = *b"SPTR";
-/// Current trace format version (see module docs for the bump rule).
-pub const TRACE_VERSION: u32 = 1;
+/// Current trace format version (see module docs for the bump rule and
+/// version history).
+pub const TRACE_VERSION: u32 = 2;
 
 /// FNV-1a over the raw bit patterns of an f32 slice, mixed 8 bytes at a
 /// time. One shared digest for recorder and checker — the exact hash is
@@ -163,17 +170,23 @@ pub struct AdmitEvent {
     pub params_digest: u64,
     pub rng_state: u64,
     pub rng_inc: u64,
+    /// true when this admission landed while other slots were still
+    /// decoding (continuous-batching mid-flight refill)
+    pub refill: bool,
 }
 
-/// One active slot's view of one speculative step: RNG position before
-/// the draft draws, the drafted tokens, digests of the logit tensors
-/// the verifier consumed (post temperature/top-k/top-p), and the commit
-/// outcome.
+/// One active slot's view of one speculative step: the slot's own γ,
+/// RNG position before the draft draws, the drafted tokens, digests of
+/// the logit tensors the verifier consumed (post
+/// temperature/top-k/top-p), and the commit outcome.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SlotStep {
     pub slot: u32,
     pub id: u64,
     pub len_before: u32,
+    /// this slot's speculation depth for the step (ragged batches:
+    /// slots differ)
+    pub gamma: u32,
     pub method: Method,
     pub rng_state: u64,
     pub rng_inc: u64,
@@ -192,10 +205,10 @@ pub struct SlotStep {
     pub finish: Option<FinishReason>,
 }
 
-/// One engine speculative step over the active slot set.
+/// One engine speculative step over the active slot set (each slot
+/// records its own γ — see [`SlotStep::gamma`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepEvent {
-    pub gamma: u32,
     pub slots: Vec<SlotStep>,
 }
 
@@ -204,7 +217,8 @@ pub struct StepEvent {
 /// when diagnosing a divergence that only appears pipelined.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PipelineEv {
-    /// prefetch launched for the predicted next step
+    /// prefetch launched for the predicted next step (`gamma` = the
+    /// deepest per-slot γ planned for the prefetched block)
     Launch { gamma: u32 },
     /// barrier proved the all-accept prediction right; block adopted
     BarrierHit,
@@ -223,8 +237,9 @@ pub enum TraceEvent {
     Step(StepEvent),
     Cancel { id: u64, slot: Option<u32> },
     Pipeline(PipelineEv),
-    /// verifier dispatch marker (`groups` = distinct methods batched)
-    Verify { gamma: u32, groups: u32 },
+    /// verifier dispatch marker (`rows` = total draft rows verified,
+    /// Σ γᵢ over active slots; `groups` = distinct methods batched)
+    Verify { rows: u32, groups: u32 },
 }
 
 /// A fully-loaded trace.
@@ -517,15 +532,16 @@ pub fn encode_event(ev: &TraceEvent) -> Vec<u8> {
             e.u64(a.params_digest);
             e.u64(a.rng_state);
             e.u64(a.rng_inc);
+            e.bool(a.refill);
             TAG_ADMIT
         }
         TraceEvent::Step(s) => {
-            e.u32(s.gamma);
             e.u32(s.slots.len() as u32);
             for t in &s.slots {
                 e.u32(t.slot);
                 e.u64(t.id);
                 e.u32(t.len_before);
+                e.u32(t.gamma);
                 e.method(&t.method);
                 e.u64(t.rng_state);
                 e.u64(t.rng_inc);
@@ -566,8 +582,8 @@ pub fn encode_event(ev: &TraceEvent) -> Vec<u8> {
             }
             TAG_PIPELINE
         }
-        TraceEvent::Verify { gamma, groups } => {
-            e.u32(*gamma);
+        TraceEvent::Verify { rows, groups } => {
+            e.u32(*rows);
             e.u32(*groups);
             TAG_VERIFY
         }
@@ -640,9 +656,9 @@ fn decode_event(tag: u8, payload: &[u8]) -> DecResult<TraceEvent> {
             params_digest: d.u64()?,
             rng_state: d.u64()?,
             rng_inc: d.u64()?,
+            refill: d.bool()?,
         }),
         TAG_STEP => {
-            let gamma = d.u32()?;
             let n = d.u32()? as usize;
             let mut slots = Vec::with_capacity(n);
             for _ in 0..n {
@@ -650,6 +666,7 @@ fn decode_event(tag: u8, payload: &[u8]) -> DecResult<TraceEvent> {
                     slot: d.u32()?,
                     id: d.u64()?,
                     len_before: d.u32()?,
+                    gamma: d.u32()?,
                     method: d.method()?,
                     rng_state: d.u64()?,
                     rng_inc: d.u64()?,
@@ -665,7 +682,7 @@ fn decode_event(tag: u8, payload: &[u8]) -> DecResult<TraceEvent> {
                     },
                 });
             }
-            TraceEvent::Step(StepEvent { gamma, slots })
+            TraceEvent::Step(StepEvent { slots })
         }
         TAG_CANCEL => TraceEvent::Cancel {
             id: d.u64()?,
@@ -680,7 +697,7 @@ fn decode_event(tag: u8, payload: &[u8]) -> DecResult<TraceEvent> {
             k => return Err(format!("unknown pipeline event kind {k}")),
         }),
         TAG_VERIFY => TraceEvent::Verify {
-            gamma: d.u32()?,
+            rows: d.u32()?,
             groups: d.u32()?,
         },
         t => return Err(format!("unknown frame tag {t}")),
@@ -909,10 +926,10 @@ fn event_json(ev: &TraceEvent) -> Value {
             ("params_digest", hex(a.params_digest)),
             ("rng_state", hex(a.rng_state)),
             ("rng_inc", hex(a.rng_inc)),
+            ("refill", Value::Bool(a.refill)),
         ]),
         TraceEvent::Step(s) => obj(vec![
             ("ev", Value::Str("step".into())),
-            ("gamma", num(s.gamma as f64)),
             (
                 "slots",
                 Value::Arr(
@@ -923,6 +940,7 @@ fn event_json(ev: &TraceEvent) -> Value {
                                 ("slot", num(t.slot as f64)),
                                 ("id", hex(t.id)),
                                 ("len_before", num(t.len_before as f64)),
+                                ("gamma", num(t.gamma as f64)),
                                 ("method", method_json(&t.method)),
                                 ("rng_state", hex(t.rng_state)),
                                 ("rng_inc", hex(t.rng_inc)),
@@ -967,9 +985,9 @@ fn event_json(ev: &TraceEvent) -> Value {
             fields.push(("kind", Value::Str(kind.into())));
             obj(fields)
         }
-        TraceEvent::Verify { gamma, groups } => obj(vec![
+        TraceEvent::Verify { rows, groups } => obj(vec![
             ("ev", Value::Str("verify".into())),
-            ("gamma", num(*gamma as f64)),
+            ("rows", num(*rows as f64)),
             ("groups", num(*groups as f64)),
         ]),
     }
@@ -1009,9 +1027,9 @@ fn event_from_json(v: &Value) -> DecResult<TraceEvent> {
             params_digest: from_hex(get(v, "params_digest")?, "params_digest")?,
             rng_state: from_hex(get(v, "rng_state")?, "rng_state")?,
             rng_inc: from_hex(get(v, "rng_inc")?, "rng_inc")?,
+            refill: get_bool(v, "refill")?,
         }),
         "step" => TraceEvent::Step(StepEvent {
-            gamma: get_u32(v, "gamma")?,
             slots: get(v, "slots")?
                 .as_arr()
                 .ok_or("trace json: slots not an array")?
@@ -1021,6 +1039,7 @@ fn event_from_json(v: &Value) -> DecResult<TraceEvent> {
                         slot: get_u32(t, "slot")?,
                         id: from_hex(get(t, "id")?, "id")?,
                         len_before: get_u32(t, "len_before")?,
+                        gamma: get_u32(t, "gamma")?,
                         method: method_from_json(get(t, "method")?)?,
                         rng_state: from_hex(get(t, "rng_state")?, "rng_state")?,
                         rng_inc: from_hex(get(t, "rng_inc")?, "rng_inc")?,
@@ -1058,7 +1077,7 @@ fn event_from_json(v: &Value) -> DecResult<TraceEvent> {
             k => return Err(format!("trace json: unknown pipeline kind {k:?}")),
         }),
         "verify" => TraceEvent::Verify {
-            gamma: get_u32(v, "gamma")?,
+            rows: get_u32(v, "rows")?,
             groups: get_u32(v, "groups")?,
         },
         e => return Err(format!("trace json: unknown event {e:?}")),
@@ -1161,28 +1180,48 @@ mod tests {
                     params_digest: 0xDEAD_BEEF_DEAD_BEEF,
                     rng_state: u64::MAX - 3,
                     rng_inc: 15,
+                    refill: true,
                 }),
                 TraceEvent::Pipeline(PipelineEv::Launch { gamma: 4 }),
                 TraceEvent::Step(StepEvent {
-                    gamma: 4,
-                    slots: vec![SlotStep {
-                        slot: 0,
-                        id: 7,
-                        len_before: 3,
-                        method: Method::Exact,
-                        rng_state: 0x0123_4567_89AB_CDEF,
-                        rng_inc: 15,
-                        draft: vec![3, 4, 5, 6],
-                        zq_digest: 0xAAAA_BBBB_CCCC_DDDD,
-                        zp_digest: 0x1111_2222_3333_4444,
-                        accept_len: 2,
-                        out_row: vec![3, 4, 8, 0, 0],
-                        committed: vec![3, 4, 8],
-                        finish: Some(FinishReason::StopSeq),
-                    }],
+                    slots: vec![
+                        SlotStep {
+                            slot: 0,
+                            id: 7,
+                            len_before: 3,
+                            gamma: 4,
+                            method: Method::Exact,
+                            rng_state: 0x0123_4567_89AB_CDEF,
+                            rng_inc: 15,
+                            draft: vec![3, 4, 5, 6],
+                            zq_digest: 0xAAAA_BBBB_CCCC_DDDD,
+                            zp_digest: 0x1111_2222_3333_4444,
+                            accept_len: 2,
+                            out_row: vec![3, 4, 8, 0, 0],
+                            committed: vec![3, 4, 8],
+                            finish: Some(FinishReason::StopSeq),
+                        },
+                        // ragged sibling: same step, different γ
+                        SlotStep {
+                            slot: 1,
+                            id: 8,
+                            len_before: 5,
+                            gamma: 2,
+                            method: Method::Baseline,
+                            rng_state: 0x5555_6666_7777_8888,
+                            rng_inc: 17,
+                            draft: vec![10, 11],
+                            zq_digest: 0x9999_0000_9999_0000,
+                            zp_digest: 0x4242_4242_4242_4242,
+                            accept_len: 2,
+                            out_row: vec![10, 11, 12],
+                            committed: vec![10, 11, 12],
+                            finish: None,
+                        },
+                    ],
                 }),
                 TraceEvent::Pipeline(PipelineEv::BarrierMiss),
-                TraceEvent::Verify { gamma: 4, groups: 2 },
+                TraceEvent::Verify { rows: 6, groups: 2 },
                 TraceEvent::Cancel { id: 9, slot: None },
                 TraceEvent::Cancel {
                     id: 7,

@@ -59,6 +59,12 @@ pub struct FuzzCase {
     pub n_reqs: usize,
     pub max_new: usize,
     pub gamma_init: usize,
+    /// sim model-pair γ capacity (per-slot γ plans are clamped under it)
+    pub gmax: usize,
+    /// when non-empty, pin request `i`'s γ to `pin_gammas[i % len]` —
+    /// forces genuinely ragged mixed-γ batches regardless of the
+    /// random per-request params
+    pub pin_gammas: Vec<usize>,
     pub pipeline: PipelineMode,
     /// `(after step k, request id)` mid-decode cancellations
     pub cancels: Vec<(usize, u64)>,
@@ -79,6 +85,8 @@ impl Default for FuzzCase {
             n_reqs: 4,
             max_new: 16,
             gamma_init: 4,
+            gmax: 6,
+            pin_gammas: Vec::new(),
             pipeline: PipelineMode::On,
             cancels: Vec::new(),
             seed: 1,
@@ -91,7 +99,7 @@ impl FuzzCase {
         SimSpec {
             vocab: self.vocab,
             seq_len: 96,
-            gmax: 6,
+            gmax: self.gmax,
             batches: vec![self.batch],
             seed: self.model_seed,
             agreement: self.agreement,
@@ -149,6 +157,10 @@ impl FuzzCase {
                 }
                 if self.mixed_methods && rng.below(2) == 0 {
                     p = p.with_method(pool[rng.below(pool.len() as u32) as usize]);
+                }
+                if !self.pin_gammas.is_empty() {
+                    let g = self.pin_gammas[i as usize % self.pin_gammas.len()];
+                    p = p.pin_gamma(g);
                 }
                 let mut r = GenRequest::new(i, prompt, p);
                 // token-level stops straight from the sim vocab (no
@@ -215,6 +227,13 @@ pub fn derive_case(run_seed: u64, idx: u64) -> FuzzCase {
         n_reqs: batch + rng.below(2 + batch as u32) as usize,
         max_new: 8 + rng.below(20) as usize,
         gamma_init: 3 + rng.below(3) as usize,
+        gmax: [6, 8][rng.below(2) as usize],
+        // a third of the cases force a genuinely ragged batch (pins
+        // above gmax clamp at admission, which is itself worth fuzzing)
+        pin_gammas: match rng.below(3) {
+            0 => vec![2, 5, 7],
+            _ => Vec::new(),
+        },
         pipeline: PipelineMode::On,
         cancels: match rng.below(3) {
             0 => Vec::new(),
@@ -301,6 +320,21 @@ mod tests {
         assert!(report.steps > 0);
         assert!(report.tokens > 0);
         assert_eq!(report.requests, case.n_reqs);
+    }
+
+    #[test]
+    fn ragged_pinned_case_replays_clean() {
+        let case = FuzzCase {
+            batch: 3,
+            n_reqs: 6,
+            gmax: 8,
+            pin_gammas: vec![2, 5, 7],
+            mixed_methods: true,
+            ..FuzzCase::default()
+        };
+        let report = run_case(&case).expect("replayable");
+        assert!(report.ok(), "divergence: {:?}", report.divergence);
+        assert!(report.refills > 0, "queue churn should mid-flight refill");
     }
 
     #[test]

@@ -23,10 +23,14 @@ use specd::sampling::Method;
 use specd::util::proptest::{forall, Config};
 
 fn sim_spec(vocab: usize, agreement: f32) -> SimSpec {
+    sim_spec_g(vocab, agreement, 6)
+}
+
+fn sim_spec_g(vocab: usize, agreement: f32, gmax: usize) -> SimSpec {
     SimSpec {
         vocab,
         seq_len: 96,
-        gmax: 6,
+        gmax,
         batches: vec![1, 2, 3, 4],
         seed: 0xBEEF,
         agreement,
@@ -35,6 +39,17 @@ fn sim_spec(vocab: usize, agreement: f32) -> SimSpec {
 }
 
 fn engine(spec: &SimSpec, batch: usize, method: Method, pipeline: PipelineMode) -> Engine {
+    engine_gamma(spec, batch, method, pipeline, 4, false)
+}
+
+fn engine_gamma(
+    spec: &SimSpec,
+    batch: usize,
+    method: Method,
+    pipeline: PipelineMode,
+    gamma_init: usize,
+    gamma_pinned: bool,
+) -> Engine {
     let rt = Arc::new(Runtime::simulated(spec.clone()));
     Engine::new(
         rt,
@@ -44,8 +59,8 @@ fn engine(spec: &SimSpec, batch: usize, method: Method, pipeline: PipelineMode) 
             method,
             backend: Backend::Native,
             mode: Mode::Speculative,
-            gamma_init: 4,
-            gamma_pinned: false,
+            gamma_init,
+            gamma_pinned,
             self_draft: false,
             pipeline,
             seed: 11,
@@ -307,6 +322,112 @@ fn parity_when_queue_exceeds_slots() {
     for method in [Method::Exact, Method::sigmoid(-1e3, 1e3)] {
         assert_parity(&spec, 2, method, &base_reqs(6, 12, 77));
     }
+}
+
+#[test]
+fn ragged_uniform_pins_match_engine_pinned_gamma() {
+    // the ragged-batch refactor's degenerate case, as a property: an
+    // engine whose slots are all request-pinned to the same γ must be
+    // bit-identical to the pre-ragged shared-γ path (engine-level
+    // gamma_pinned) — across methods × seeds × B ∈ {1,2,4} × γ, for
+    // both the serial and pipelined schedulers
+    let methods = [
+        Method::Exact,
+        Method::Baseline,
+        Method::sigmoid(-1e3, 1e3),
+        Method::sigmoid16(-1e3, 1e3),
+    ];
+    forall(
+        "ragged uniform-γ parity",
+        Config { cases: 16, ..Config::default() },
+        |rng, size| {
+            let method = methods[rng.below(methods.len() as u32) as usize];
+            let batch = [1usize, 2, 4][size % 3];
+            let g = 2 + rng.below(4) as usize;
+            let spec = sim_spec(64, [0.5f32, 0.9, 0.99][rng.below(3) as usize]);
+            let max_new = 8 + rng.below(12) as usize;
+            let seed0 = 100 + rng.below(1000) as u64;
+            let pipeline = if rng.below(2) == 0 {
+                PipelineMode::On
+            } else {
+                PipelineMode::Off
+            };
+            let shared = run_observed(
+                engine_gamma(&spec, batch, method, pipeline, g, true),
+                base_reqs(batch as u64, max_new, seed0),
+            );
+            let mut reqs = base_reqs(batch as u64, max_new, seed0);
+            for r in &mut reqs {
+                r.params = r.params.clone().pin_gamma(g);
+            }
+            let ragged = run_observed(
+                engine_gamma(&spec, batch, method, pipeline, g, false),
+                reqs,
+            );
+            if shared != ragged {
+                return Err(format!(
+                    "uniform per-slot pins diverged from shared γ: \
+                     method={} batch={batch} γ={g}",
+                    method.name()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mixed_gamma_batch_admits_and_decodes() {
+    // the PR 7 acceptance scenario: one batch, per-slot γ ∈ {2,5,7},
+    // mixed verification methods — admits, decodes to completion, and
+    // stays bit-identical between the serial and pipelined schedulers
+    let spec = sim_spec_g(64, 0.95, 8);
+    let mut reqs = base_reqs(3, 16, 610);
+    reqs[0].params = reqs[0].params.clone().pin_gamma(2);
+    reqs[1].params = reqs[1].params.clone().pin_gamma(5).with_method(Method::Baseline);
+    reqs[2].params = reqs[2]
+        .params
+        .clone()
+        .pin_gamma(7)
+        .with_method(Method::sigmoid(-1e3, 1e3));
+    let serial = run_observed(
+        engine(&spec, 3, Method::Exact, PipelineMode::Off),
+        reqs.clone(),
+    );
+    for r in &serial.results {
+        assert!(!r.1.is_empty(), "every request must emit tokens");
+    }
+    assert_eq!(serial.results.len(), 3);
+    // the γ series must actually reach the large pin (headroom permitting)
+    assert!(serial.gamma_max >= 5.0, "γ=7 pin never took effect");
+    let piped = run_observed(
+        engine(&spec, 3, Method::Exact, PipelineMode::On),
+        reqs,
+    );
+    assert_eq!(serial, piped, "mixed-γ pipelined decode diverged");
+}
+
+#[test]
+fn ragged_refill_is_deterministic() {
+    // mid-flight refill with heterogeneous γ: more requests than slots,
+    // each queue drain admits into a batch whose other slots carry
+    // different γ values — repeat runs and serial/pipelined must agree
+    let spec = sim_spec_g(48, 0.9, 8);
+    let reqs = || {
+        let mut rs = base_reqs(7, 12, 88);
+        for (k, r) in rs.iter_mut().enumerate() {
+            r.params = r.params.clone().pin_gamma([2usize, 5, 7][k % 3]);
+        }
+        rs
+    };
+    let run = |pipeline: PipelineMode| {
+        run_observed(engine(&spec, 3, Method::Exact, pipeline), reqs())
+    };
+    let a = run(PipelineMode::On);
+    let b = run(PipelineMode::On);
+    assert_eq!(a, b, "ragged refill schedule must be deterministic");
+    let serial = run(PipelineMode::Off);
+    assert_eq!(serial, a, "ragged refill diverged from serial");
 }
 
 #[test]

@@ -1,13 +1,16 @@
 //! Integration: TCP server round-trips over a real engine — protocol v2
 //! (streaming, per-request overrides, cancellation) and the v1 shim.
 //!
-//! These tests need built artifacts (`make artifacts`); they skip with a
-//! notice when the runtime cannot be opened.
+//! The artifact-backed tests need `make artifacts` and skip with a
+//! notice when the runtime cannot be opened; the admission-queue tests
+//! (bounded queue, queued-cancel, mid-flight refill, SLO metrics) run
+//! over `Runtime::simulated` and are always on.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use specd::engine::{Backend, Engine, EngineConfig, Mode, SamplingParams};
-use specd::runtime::Runtime;
+use specd::runtime::{Runtime, SimSpec};
 use specd::sampling::Method;
 use specd::server::{Client, Server, ServerConfig};
 use specd::tokenizer::Tokenizer;
@@ -49,6 +52,54 @@ fn start_server() -> Option<Arc<Server>> {
         )
         .unwrap(),
     ))
+}
+
+/// An artifact-free server over the simulated model pair: a tiny batch
+/// so a single in-flight request saturates the engine and admission
+/// queueing is deterministic from the client's point of view.
+fn start_sim_server(batch: usize, queue_limit: usize) -> Arc<Server> {
+    let spec = SimSpec {
+        vocab: 128,
+        seq_len: 192,
+        gmax: 8,
+        batches: vec![batch],
+        seed: 0xC0FFEE,
+        agreement: 0.9,
+        model_delay: Duration::from_micros(500),
+    };
+    let vocab = spec.vocab;
+    let rt = Arc::new(Runtime::simulated(spec));
+    let engine = Engine::new(
+        rt,
+        EngineConfig {
+            pair: "sim".into(),
+            batch,
+            method: Method::Exact,
+            backend: Backend::Native,
+            mode: Mode::Speculative,
+            gamma_init: 4,
+            gamma_pinned: false,
+            self_draft: false,
+            pipeline: specd::engine::PipelineMode::On,
+            seed: 13,
+        },
+    )
+    .unwrap();
+    let chars: Vec<char> = (' '..='~').collect();
+    let keep = chars.len().min(vocab - 3);
+    let tok = Tokenizer::from_chars(chars[..keep].to_vec(), vocab).unwrap();
+    Arc::new(
+        Server::start(
+            engine,
+            tok,
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                queue_limit,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    )
 }
 
 fn spawn_accept(server: &Arc<Server>) -> std::thread::JoinHandle<()> {
@@ -337,6 +388,128 @@ fn admission_rejects_overlong_prompts_with_structured_error() {
         .unwrap();
     assert_eq!(event(&resp), "error", "{}", resp.dump());
     assert_eq!(resp.get("code").unwrap().as_str(), Some("rejected"));
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
+
+#[test]
+fn queued_request_cancel_removes_pending_entry() {
+    let server = start_sim_server(1, 8);
+    let addr = server.addr().to_string();
+    let accept_thread = spawn_accept(&server);
+
+    // (a) occupy the single slot and confirm decode started
+    let mut a = Client::connect(&addr).unwrap();
+    a.send_generate(
+        1,
+        "the scheduler accepts the drafted tokens",
+        &SamplingParams::default().with_max_new_tokens(150).with_seed(1),
+        true,
+    )
+    .unwrap();
+    let first = a.read_event().unwrap();
+    assert_eq!(event(&first), "delta", "{}", first.dump());
+
+    // (b) with the slot held, a second request necessarily sits in the
+    // server's admission queue; cancelling it must remove the pending
+    // entry and answer directly — the engine never sees the request
+    let mut b = Client::connect(&addr).unwrap();
+    b.send_generate(
+        2,
+        "a worker thread verifies",
+        &SamplingParams::default().with_max_new_tokens(8),
+        false,
+    )
+    .unwrap();
+    b.send_cancel(2).unwrap();
+    let done = b.read_event().unwrap();
+    assert_eq!(event(&done), "done", "{}", done.dump());
+    assert_eq!(finish(&done), "cancel", "{}", done.dump());
+    assert_eq!(done.get("tokens").unwrap().as_usize(), Some(0));
+    // queued-cancel done events carry the SLO block too
+    assert!(done.get("queue_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(done.get("queue_depth").is_some(), "{}", done.dump());
+    assert!(done.get("latency_percentiles_ms").is_some(), "{}", done.dump());
+
+    // (a) is unaffected and still finishes cleanly
+    a.send_cancel(1).unwrap();
+    let done_a = loop {
+        let ev = a.read_event().unwrap();
+        if event(&ev) != "delta" {
+            break ev;
+        }
+    };
+    assert_eq!(event(&done_a), "done", "{}", done_a.dump());
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
+
+#[test]
+fn bounded_queue_rejects_with_queue_full_and_refills_mid_flight() {
+    let server = start_sim_server(1, 1);
+    let addr = server.addr().to_string();
+    let accept_thread = spawn_accept(&server);
+
+    // saturate: one decoding request plus one queued request
+    let mut a = Client::connect(&addr).unwrap();
+    a.send_generate(
+        1,
+        "the scheduler accepts the drafted tokens",
+        &SamplingParams::default().with_max_new_tokens(150).with_seed(2),
+        true,
+    )
+    .unwrap();
+    let first = a.read_event().unwrap();
+    assert_eq!(event(&first), "delta", "{}", first.dump());
+    // both probes share one connection: its reader hands them to the
+    // engine thread in order, so "2 queued, then 3 rejected" is
+    // deterministic (across connections the arrival order would race)
+    let mut b = Client::connect(&addr).unwrap();
+    b.send_generate(
+        2,
+        "a worker thread verifies",
+        &SamplingParams::default().with_max_new_tokens(4),
+        false,
+    )
+    .unwrap();
+    b.send_generate(
+        3,
+        "the memory pool loads",
+        &SamplingParams::default().with_max_new_tokens(4),
+        false,
+    )
+    .unwrap();
+
+    // the queue is at its bound — request 3 is load-shed with a
+    // structured error, not silently stalled
+    let err = b.read_event().unwrap();
+    assert_eq!(event(&err), "error", "{}", err.dump());
+    assert_eq!(err.get("id").unwrap().as_i64(), Some(3));
+    assert_eq!(err.get("code").unwrap().as_str(), Some("queue_full"));
+
+    // free the slot: the queued request refills mid-flight and its done
+    // event reports the time it spent waiting
+    a.send_cancel(1).unwrap();
+    let done_a = loop {
+        let ev = a.read_event().unwrap();
+        if event(&ev) != "delta" {
+            break ev;
+        }
+    };
+    assert_eq!(event(&done_a), "done", "{}", done_a.dump());
+    let done_b = b.read_event().unwrap();
+    assert_eq!(event(&done_b), "done", "{}", done_b.dump());
+    assert_eq!(done_b.get("id").unwrap().as_i64(), Some(2));
+    assert!(done_b.get("tokens").unwrap().as_usize().unwrap() > 0);
+    assert!(done_b.get("queue_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // the connection whose request was shed stays healthy and can retry
+    let retry = b
+        .request_v2(4, "retry", &SamplingParams::default().with_max_new_tokens(4))
+        .unwrap();
+    assert_eq!(event(&retry), "done", "{}", retry.dump());
 
     server.shutdown();
     accept_thread.join().unwrap();

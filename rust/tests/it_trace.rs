@@ -216,6 +216,60 @@ fn wrong_method_is_flagged_even_on_all_accept_steps() {
 }
 
 #[test]
+fn ragged_mixed_gamma_trace_replays_and_validates_refills() {
+    // the PR 7 acceptance run: per-request γ pins {2,5,7} over a
+    // 3-slot batch with queue churn and mixed methods — the recorded
+    // steps must be genuinely ragged, replay with zero divergences,
+    // and carry refill-stamped admissions the checker validates
+    let case = FuzzCase {
+        batch: 3,
+        n_reqs: 6,
+        gmax: 8,
+        pin_gammas: vec![2, 5, 7],
+        mixed_methods: true,
+        seed: 9,
+        ..FuzzCase::default()
+    };
+    let trace = record(&case);
+    let ragged_step = trace.events.iter().any(|ev| {
+        matches!(ev, TraceEvent::Step(s)
+            if s.slots.iter().any(|sl| sl.gamma != s.slots[0].gamma))
+    });
+    assert!(ragged_step, "schedule never produced a ragged step");
+    let report = check(&trace).expect("replayable");
+    assert!(report.ok(), "{}", report.divergence.unwrap());
+    assert!(report.refills > 0, "queue churn must record refill admits");
+
+    // a flipped refill flag must be flagged against replayed occupancy
+    let mut bad = trace.clone();
+    for ev in &mut bad.events {
+        if let TraceEvent::Admit(a) = ev {
+            a.refill = !a.refill;
+            break;
+        }
+    }
+    let d = check(&bad)
+        .expect("replayable")
+        .divergence
+        .expect("refill flip missed");
+    assert_eq!(d.field, "refill", "{d}");
+}
+
+#[test]
+fn perturbed_slot_gamma_is_structurally_rejected() {
+    // SlotStep.gamma is authoritative for row addressing; a γ that
+    // disagrees with the recorded draft/output row sizes makes the
+    // trace unreplayable (error, not a silent mis-replay)
+    let mut trace = record(&busy_case(2));
+    let idx = nth_step(&trace, 1);
+    {
+        let s = step_mut(&mut trace, idx);
+        first_slot(s).gamma += 1;
+    }
+    assert!(check(&trace).is_err(), "inflated slot γ decoded anyway");
+}
+
+#[test]
 fn serial_and_pipelined_recordings_are_interchangeable() {
     // same schedule, pipelining on vs off: the step/admit/cancel event
     // streams must be identical (the trace is schedule-independent);
