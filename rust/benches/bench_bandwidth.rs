@@ -1,17 +1,49 @@
-//! Table 3 driver: realized-bandwidth cost-model sweep over the paper's
-//! model combinations on both device profiles, plus the kernel-launch /
-//! bytes breakdown per method.
+//! Roofline harness: measured realized bandwidth on the real verify
+//! path at production vocab scale, reported against the Table 3 cost
+//! model, plus the original analytic sweep over the paper's model
+//! combinations on both device profiles.
 //!
-//! `cargo bench --bench bench_bandwidth`
+//! ```text
+//! cargo bench --bench bench_bandwidth -- [--json <path>] [--smoke]
+//! ```
+//!
+//! The measured section drives `spec_step_batch_ws` (the serving-path
+//! kernels, SIMD off and on) over V ∈ {4k, 32k, 128k} × B ∈ {1, 4} ×
+//! method, converts mean wall-clock into realized GB/s with the traffic
+//! model below, and sets the cost model's realized bandwidth for the
+//! same shape next to it. The fp16-ingestion rows compare fused
+//! widen+construct against the f32 construction for one score matrix.
+//! `--smoke` restricts to V=32k, B=1 at single-iteration counts so CI
+//! can snapshot the schema cheaply; `--json <path>` writes the same
+//! `{"schema": 1, …}` envelope as the other benches (see
+//! `docs/PERF.md`, "Roofline methodology").
 
-use specd::sampling::Method;
+use specd::sampling::kernels::{self, KernelConfig, Logits, VerifyWorkspace};
+use specd::sampling::{f32_to_f16_bits, Method, SimdMode};
 use specd::simulator::{simulate_step, DeviceProfile, SimConfig};
-use specd::util::bench::Table;
+use specd::util::bench::{bench_report, black_box, snapshot_envelope, write_json, BenchOpts};
+use specd::util::json::{obj, Value};
+use specd::util::rng::Pcg32;
 
-fn main() {
+fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+}
+
+/// Bytes the verify step actually touches, per the traffic model in
+/// docs/PERF.md: read both logit matrices, write both prob matrices,
+/// then build + re-scan one residual row per slot.
+fn step_bytes(b: usize, g: usize, v: usize) -> f64 {
+    let elems = 2 * b * (g + 1) * v  // z_p read + p write
+        + 2 * b * g * v              // z_q read + q write
+        + 4 * b * v; // residual: read p and q rows, write it, re-read for the CDF scan
+    (elems * 4) as f64
+}
+
+fn cost_model_tables() {
+    use specd::util::bench::Table;
     for dev_name in ["a100", "2080ti"] {
         let dev = DeviceProfile::by_name(dev_name).unwrap();
-        println!("== device: {} (peak {:.0} GB/s) ==\n", dev.name, dev.peak_bw / 1e9);
+        println!("== cost model: {} (peak {:.0} GB/s) ==\n", dev.name, dev.peak_bw / 1e9);
         let mut table = Table::new(&[
             "combo",
             "method",
@@ -52,6 +84,161 @@ fn main() {
     }
     println!(
         "shape checks: sigmoid realized bandwidth highest per combo; all \
-         values far below peak (paper: memory transfer is not the limit)."
+         values far below peak (paper: memory transfer is not the limit).\n"
     );
+}
+
+fn main() {
+    let opts = BenchOpts::from_args();
+    let cfg = opts.config();
+    let g = 5usize;
+
+    if !opts.smoke {
+        cost_model_tables();
+    }
+
+    let vocabs: Vec<usize> =
+        if opts.smoke { vec![32_768] } else { vec![4_096, 32_768, 131_072] };
+    let batches: Vec<usize> = if opts.smoke { vec![1] } else { vec![1, 4] };
+    let dev = DeviceProfile::by_name("a100").unwrap();
+
+    println!("== measured roofline: native verify path, γ={g} (model = a100 cost model) ==\n");
+    let mut table = specd::util::bench::Table::new(&[
+        "vocab",
+        "B",
+        "method",
+        "simd",
+        "mean µs",
+        "bytes MB",
+        "GB/s",
+        "model GB/s",
+    ]);
+    let mut rows: Vec<Value> = Vec::new();
+    let mut rng = Pcg32::seeded(11);
+
+    for &v in &vocabs {
+        for &b in &batches {
+            let z_p = randn(&mut rng, b * (g + 1) * v, 3.0);
+            let z_q = randn(&mut rng, b * g * v, 3.0);
+            let draft: Vec<i32> = (0..b * g).map(|i| ((i * 97) % v) as i32).collect();
+            let u_acc = vec![0.5f32; b * g];
+            let u_res = vec![0.4f32; b];
+            let u_bonus = vec![0.6f32; b];
+            for (mname, method) in
+                [("exact", Method::Exact), ("sigmoid", Method::sigmoid(-1e3, 1e3))]
+            {
+                let methods = vec![method; b];
+                let model_gbs = simulate_step(
+                    dev,
+                    SimConfig { batch: b, gamma: g, vocab: v, dtype_bytes: 4 },
+                    method,
+                )
+                .realized_bandwidth()
+                    / 1e9;
+                // both lane paths; SimdMode::On degrades to the scalar
+                // lane loops off-AVX2 hosts (the label records reality)
+                for mode in [SimdMode::Off, SimdMode::On] {
+                    let simd_label = if mode.active() { "on" } else { "off" };
+                    let kcfg = KernelConfig {
+                        min_parallel_elems: 0,
+                        simd: mode,
+                        ..KernelConfig::default()
+                    };
+                    let mut ws = VerifyWorkspace::with_capacity(kcfg, b, g, v);
+                    let mut accept = Vec::new();
+                    let mut tokens = Vec::new();
+                    let r = bench_report(
+                        &format!("verify/{mname}/v{v}/b{b}/simd-{simd_label}"),
+                        cfg,
+                        || {
+                            kernels::spec_step_batch_ws(
+                                &mut ws, &z_p, &z_q, b, g, v, &draft, &u_acc, &u_res,
+                                &u_bonus, &methods, &mut accept, &mut tokens, None,
+                            );
+                            black_box((&accept, &tokens));
+                        },
+                    );
+                    let bytes = step_bytes(b, g, v);
+                    let gbs = bytes / r.mean_secs() / 1e9;
+                    table.row(vec![
+                        format!("{v}"),
+                        format!("{b}"),
+                        mname.into(),
+                        simd_label.into(),
+                        format!("{:.1}", r.mean_secs() * 1e6),
+                        format!("{:.2}", bytes / 1e6),
+                        format!("{gbs:.2}"),
+                        format!("{model_gbs:.2}"),
+                    ]);
+                    rows.push(obj(vec![
+                        ("vocab", v.into()),
+                        ("batch", b.into()),
+                        ("method", mname.into()),
+                        ("simd", simd_label.into()),
+                        ("bytes_mb", (bytes / 1e6).into()),
+                        ("gbs", gbs.into()),
+                        ("model_gbs", model_gbs.into()),
+                        ("timing", r.to_json()),
+                    ]));
+                }
+            }
+        }
+
+        // fp16 logit ingestion: fused widen+construct vs f32 construct
+        // over one (γ+1)-row score matrix (B=1, softmax)
+        let nrows = g + 1;
+        let logits32 = randn(&mut rng, nrows * v, 3.0);
+        let logits16: Vec<u16> = logits32.iter().map(|&x| f32_to_f16_bits(x)).collect();
+        let mut dst = vec![0f32; v];
+        for (dtype, src_bytes) in [("f32", 4usize), ("f16", 2usize)] {
+            let r = bench_report(&format!("ingest/{dtype}/v{v}"), cfg, || {
+                for row in 0..nrows {
+                    let off = row * v;
+                    let src = if dtype == "f16" {
+                        Logits::F16(&logits16[off..off + v])
+                    } else {
+                        Logits::F32(&logits32[off..off + v])
+                    };
+                    kernels::construct_prob_row_logits(src, &mut dst, Method::Exact);
+                    black_box(&dst);
+                }
+            });
+            let bytes = (nrows * v * (src_bytes + 4)) as f64;
+            let gbs = bytes / r.mean_secs() / 1e9;
+            table.row(vec![
+                format!("{v}"),
+                "1".into(),
+                format!("ingest-{dtype}"),
+                "n/a".into(),
+                format!("{:.1}", r.mean_secs() * 1e6),
+                format!("{:.2}", bytes / 1e6),
+                format!("{gbs:.2}"),
+                "-".into(),
+            ]);
+            rows.push(obj(vec![
+                ("vocab", v.into()),
+                ("batch", 1usize.into()),
+                ("method", format!("ingest-{dtype}").into()),
+                ("simd", "n/a".into()),
+                ("bytes_mb", (bytes / 1e6).into()),
+                ("gbs", gbs.into()),
+                ("timing", r.to_json()),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+
+    if let Some(path) = &opts.json {
+        let report = snapshot_envelope(
+            "bench_bandwidth",
+            opts.smoke,
+            vec![
+                ("gamma", g.into()),
+                ("device_model", "a100".into()),
+                ("rows", Value::Arr(rows)),
+            ],
+        );
+        write_json(path, &report).expect("writing bench json");
+        println!("wrote {}", path.display());
+    }
 }

@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use specd::runtime::{HostTensor, Runtime};
 use specd::sampling::kernels::{KernelConfig, VerifyWorkspace};
-use specd::sampling::{self, Method};
+use specd::sampling::{self, Method, SimdMode};
 use specd::util::bench::{bench_report, snapshot_envelope, write_json, BenchOpts, BenchResult};
 use specd::util::json::{obj, Value};
 use specd::util::rng::Pcg32;
@@ -26,8 +26,15 @@ fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
 }
 
-fn row_json(vocab: usize, r: &BenchResult) -> Value {
-    obj(vec![("vocab", vocab.into()), ("timing", r.to_json())])
+// schema-1 row: `vocab` and `simd` label every timing so the trajectory
+// can tell a V=4096 scalar row from a V=32k SIMD row ("n/a" = the lane
+// path does not apply, e.g. HLO artifact rows)
+fn row_json(vocab: usize, simd: &str, r: &BenchResult) -> Value {
+    obj(vec![
+        ("vocab", vocab.into()),
+        ("simd", simd.into()),
+        ("timing", r.to_json()),
+    ])
 }
 
 fn main() {
@@ -85,7 +92,7 @@ fn main() {
                     let out = exe.run(&inputs).unwrap();
                     specd::util::bench::black_box(out);
                 });
-                rows.push(row_json(v, &r));
+                rows.push(row_json(v, "n/a", &r));
             }
             // tile-size ablation artifacts (DESIGN §5), V=32768 only
             if v == 32768 {
@@ -96,7 +103,7 @@ fn main() {
                             let out = exe.run(&base_inputs).unwrap();
                             specd::util::bench::black_box(out);
                         });
-                        rows.push(row_json(v, &r));
+                        rows.push(row_json(v, "n/a", &r));
                     }
                 }
             }
@@ -110,7 +117,7 @@ fn main() {
             );
             specd::util::bench::black_box(out);
         });
-        rows.push(row_json(v, &r));
+        rows.push(row_json(v, "off", &r));
         let r = bench_report(&format!("native/sigmoid/v{v}"), cfg, || {
             let out = sampling::verify::spec_step_batch(
                 &z_p, &z_q, 1, g, v, &draft, &u_acc, &[0.4], &[0.6],
@@ -118,27 +125,38 @@ fn main() {
             );
             specd::util::bench::black_box(out);
         });
-        rows.push(row_json(v, &r));
+        rows.push(row_json(v, "off", &r));
         // segment-parallel kernel layer (zero-alloc workspace reuse; the
         // workspace's persistent pool spawns during warmup, once, so the
         // timed iterations see only the steady-state dispatch cost)
-        {
+        // both lane paths: SimdMode::On degrades to the scalar lane
+        // loops off-AVX2 hosts (the row label records what actually ran)
+        for mode in [SimdMode::Off, SimdMode::On] {
+            let simd_label = if mode.active() { "on" } else { "off" };
+            if mode == SimdMode::On && !mode.active() {
+                println!("kernels/exact/v{v}: no AVX2, SIMD row measures the scalar path");
+            }
             let kcfg = KernelConfig {
                 min_parallel_elems: 0,
+                simd: mode,
                 ..KernelConfig::default()
             };
             let threads = kcfg.threads;
             let mut ws = VerifyWorkspace::with_capacity(kcfg, 1, g, v);
             let mut accept = Vec::new();
             let mut tokens = Vec::new();
-            let r = bench_report(&format!("kernels/exact/v{v}/t{threads}"), cfg, || {
-                sampling::kernels::spec_step_batch_ws(
-                    &mut ws, &z_p, &z_q, 1, g, v, &draft, &u_acc, &[0.4], &[0.6],
-                    &[Method::Exact], &mut accept, &mut tokens, None,
-                );
-                specd::util::bench::black_box((&accept, &tokens));
-            });
-            rows.push(row_json(v, &r));
+            let r = bench_report(
+                &format!("kernels/exact/v{v}/t{threads}/simd-{simd_label}"),
+                cfg,
+                || {
+                    sampling::kernels::spec_step_batch_ws(
+                        &mut ws, &z_p, &z_q, 1, g, v, &draft, &u_acc, &[0.4], &[0.6],
+                        &[Method::Exact], &mut accept, &mut tokens, None,
+                    );
+                    specd::util::bench::black_box((&accept, &tokens));
+                },
+            );
+            rows.push(row_json(v, simd_label, &r));
         }
         println!();
     }

@@ -1,13 +1,20 @@
 //! Host-side tensors and conversion to/from `xla::Literal`.
 //!
-//! Only the dtypes the artifacts use (f32, i32) are supported; shapes are
-//! explicit so input validation against the manifest happens before PJRT
-//! sees anything.
+//! The dtypes the artifacts and the native verify path use (f32, i32,
+//! and fp16 logit storage) are supported; shapes are explicit so input
+//! validation against the manifest happens before PJRT sees anything.
+//!
+//! fp16 tensors carry raw IEEE binary16 bit patterns (`u16`) — the
+//! native sigmoid16 ingestion path widens them inside the kernel
+//! layer's fused prob-construction pass
+//! ([`crate::sampling::kernels::construct_prob_row_logits`]), so the
+//! half-width storage is what crosses the staging boundary and no f32
+//! widening copy is ever materialised.
 
 use anyhow::{bail, Context, Result};
 
-/// View a 4-byte-element slice as raw bytes (safe: f32/i32 are plain old
-/// data with alignment ≥ 1).
+/// View a plain-old-data element slice as raw bytes (safe: f32/i32/u16
+/// are POD with alignment ≥ 1).
 fn bytemuck_cast<T>(data: &[T]) -> &[u8] {
     unsafe {
         std::slice::from_raw_parts(
@@ -22,6 +29,8 @@ fn bytemuck_cast<T>(data: &[T]) -> &[u8] {
 pub enum HostTensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
     I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// Half-precision storage: raw IEEE binary16 bit patterns.
+    F16 { shape: Vec<usize>, data: Vec<u16> },
 }
 
 /// Borrowed tensor view — the zero-copy input form of [`HostTensor`].
@@ -32,6 +41,7 @@ pub enum HostTensor {
 pub enum TensorView<'a> {
     F32 { shape: &'a [usize], data: &'a [f32] },
     I32 { shape: &'a [usize], data: &'a [i32] },
+    F16 { shape: &'a [usize], data: &'a [u16] },
 }
 
 impl<'a> TensorView<'a> {
@@ -45,9 +55,16 @@ impl<'a> TensorView<'a> {
         TensorView::I32 { shape, data }
     }
 
+    pub fn f16(shape: &'a [usize], data: &'a [u16]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorView::F16 { shape, data }
+    }
+
     pub fn shape(&self) -> &[usize] {
         match self {
-            TensorView::F32 { shape, .. } | TensorView::I32 { shape, .. } => shape,
+            TensorView::F32 { shape, .. }
+            | TensorView::I32 { shape, .. }
+            | TensorView::F16 { shape, .. } => shape,
         }
     }
 
@@ -55,6 +72,7 @@ impl<'a> TensorView<'a> {
         match self {
             TensorView::F32 { .. } => "float32",
             TensorView::I32 { .. } => "int32",
+            TensorView::F16 { .. } => "float16",
         }
     }
 
@@ -62,6 +80,7 @@ impl<'a> TensorView<'a> {
         match self {
             TensorView::F32 { data, .. } => data.len(),
             TensorView::I32 { data, .. } => data.len(),
+            TensorView::F16 { data, .. } => data.len(),
         }
     }
 
@@ -70,7 +89,10 @@ impl<'a> TensorView<'a> {
     }
 
     pub fn size_bytes(&self) -> usize {
-        self.len() * 4
+        match self {
+            TensorView::F16 { data, .. } => data.len() * 2,
+            _ => self.len() * 4,
+        }
     }
 
     /// Convert to an XLA literal (the one unavoidable copy — PJRT owns
@@ -79,6 +101,10 @@ impl<'a> TensorView<'a> {
         let (ty, bytes): (xla::ElementType, &[u8]) = match self {
             TensorView::F32 { data, .. } => (xla::ElementType::F32, bytemuck_cast(data)),
             TensorView::I32 { data, .. } => (xla::ElementType::S32, bytemuck_cast(data)),
+            TensorView::F16 { .. } => bail!(
+                "float16 tensors are native-only logit staging; widen through the kernel \
+                 layer's fused ingestion before handing anything to PJRT"
+            ),
         };
         xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), bytes)
             .with_context(|| format!("creating literal {:?} {:?}", ty, self.shape()))
@@ -123,9 +149,32 @@ impl HostTensor {
         HostTensor::f32(&[], vec![x])
     }
 
+    /// fp16 tensor from raw binary16 bit patterns.
+    pub fn f16(shape: &[usize], data: Vec<u16>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F16 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// fp16 tensor narrowed from f32 values (IEEE round-to-nearest-even,
+    /// via [`crate::sampling::verify::f32_to_f16_bits`]) — how the
+    /// simulated model block emits half-precision logits.
+    pub fn f16_from_f32(shape: &[usize], data: &[f32]) -> Self {
+        HostTensor::f16(
+            shape,
+            data.iter()
+                .map(|&x| crate::sampling::verify::f32_to_f16_bits(x))
+                .collect(),
+        )
+    }
+
     pub fn shape(&self) -> &[usize] {
         match self {
-            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+            HostTensor::F32 { shape, .. }
+            | HostTensor::I32 { shape, .. }
+            | HostTensor::F16 { shape, .. } => shape,
         }
     }
 
@@ -133,6 +182,7 @@ impl HostTensor {
         match self {
             HostTensor::F32 { .. } => "float32",
             HostTensor::I32 { .. } => "int32",
+            HostTensor::F16 { .. } => "float16",
         }
     }
 
@@ -140,6 +190,7 @@ impl HostTensor {
         match self {
             HostTensor::F32 { data, .. } => data.len(),
             HostTensor::I32 { data, .. } => data.len(),
+            HostTensor::F16 { data, .. } => data.len(),
         }
     }
 
@@ -148,7 +199,10 @@ impl HostTensor {
     }
 
     pub fn size_bytes(&self) -> usize {
-        self.len() * 4
+        match self {
+            HostTensor::F16 { data, .. } => data.len() * 2,
+            _ => self.len() * 4,
+        }
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
@@ -165,6 +219,14 @@ impl HostTensor {
         }
     }
 
+    /// Raw binary16 bit patterns of an fp16 tensor.
+    pub fn as_f16_bits(&self) -> Result<&[u16]> {
+        match self {
+            HostTensor::F16 { data, .. } => Ok(data),
+            _ => bail!("expected f16 tensor, got {}", self.dtype()),
+        }
+    }
+
     /// Borrow as a [`TensorView`] (the form [`LoadedExecutable::run_views`]
     /// consumes; `run` goes through this adapter).
     ///
@@ -173,6 +235,7 @@ impl HostTensor {
         match self {
             HostTensor::F32 { shape, data } => TensorView::F32 { shape, data },
             HostTensor::I32 { shape, data } => TensorView::I32 { shape, data },
+            HostTensor::F16 { shape, data } => TensorView::F16 { shape, data },
         }
     }
 
@@ -279,6 +342,42 @@ mod tests {
         let v = TensorView::f32(&shape, &data);
         assert_eq!(v.shape(), &[3]);
         assert!(!v.is_empty());
+    }
+
+    #[test]
+    fn f16_storage_mode() {
+        use crate::sampling::verify::{f16_bits_to_f32, f32_to_f16_bits};
+
+        let vals = [0.0f32, 1.0, -2.5, 65504.0, 1e-5];
+        let t = HostTensor::f16_from_f32(&[5], &vals);
+        assert_eq!(t.dtype(), "float16");
+        assert_eq!(t.shape(), &[5]);
+        assert_eq!(t.len(), 5);
+        // the point of the storage mode: half the staging bytes
+        assert_eq!(t.size_bytes(), 10);
+        let bits = t.as_f16_bits().unwrap();
+        assert_eq!(bits.len(), 5);
+        for (&b, &x) in bits.iter().zip(&vals) {
+            assert_eq!(b, f32_to_f16_bits(x));
+            // every one of these survives the round trip within f16 ulp
+            let back = f16_bits_to_f32(b);
+            assert!((back - x).abs() <= (x.abs() * 1e-3).max(1e-7), "{x} -> {back}");
+        }
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_err());
+
+        let v = t.view();
+        assert_eq!(v.dtype(), "float16");
+        assert_eq!(v.size_bytes(), 10);
+        assert!(v.check_spec("float16", &[5], 0).is_ok());
+        assert!(v.check_spec("float32", &[5], 0).is_err());
+        // fp16 never crosses into PJRT — staging is native-only
+        assert!(v.to_literal().is_err());
+
+        let raw = HostTensor::f16(&[2], vec![0x7c00, 0xfc00]);
+        let b = raw.as_f16_bits().unwrap();
+        assert!(f16_bits_to_f32(b[0]).is_infinite());
+        assert!(f16_bits_to_f32(b[1]) < 0.0);
     }
 
     #[test]

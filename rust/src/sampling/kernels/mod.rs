@@ -44,6 +44,19 @@
 //! path and the multi-block (`V > VOCAB_CHUNK`) blocked-prefix-sum
 //! sampling path.
 //!
+//! PR 8 extends the contract one level down, to lane width: inside
+//! every [`verify::VOCAB_CHUNK`] block, sums and maxima accumulate on
+//! [`verify::LANE`] independent lanes folded in fixed lane order, and
+//! every exponential routes through the shared polynomial
+//! [`verify::exp_approx`]. The runtime-dispatched AVX2 twins in
+//! [`simd`] (`SPECD_SIMD`, default auto-detect) execute that identical
+//! arithmetic graph with one ymm register as the lane accumulator, so
+//! SIMD on/off is bit-identical by construction — see
+//! docs/ARCHITECTURE.md, "The lane-width reduction contract". Pool
+//! spans are rounded up to lane multiples ([`verify::LANE`]) so vector
+//! bodies see whole lane groups; that is scheduling only and cannot
+//! move a reduction boundary.
+//!
 //! ## Workspaces
 //!
 //! [`VerifyWorkspace`] owns every intermediate buffer (probability
@@ -91,6 +104,7 @@
 //! ```
 
 pub mod pool;
+pub mod simd;
 
 use crate::sampling::verify::{self, inverse_cdf_sample, Method, VOCAB_CHUNK};
 use crate::util::timer::Profiler;
@@ -113,6 +127,9 @@ pub struct KernelConfig {
     /// `SPECD_VERIFY_PIN=1`; best-effort, no-op where unsupported, and
     /// never affects results — placement only)
     pub pin_cores: bool,
+    /// which bit-identical implementation of the lane reduction graph
+    /// runs the inner loops (`SPECD_SIMD`; see [`simd::SimdMode`])
+    pub simd: simd::SimdMode,
 }
 
 impl Default for KernelConfig {
@@ -126,6 +143,7 @@ impl Default for KernelConfig {
             chunk: VOCAB_CHUNK,
             min_parallel_elems: 64 * 1024,
             pin_cores: false,
+            simd: simd::SimdMode::Auto,
         }
     }
 }
@@ -147,7 +165,9 @@ impl KernelConfig {
     }
 
     /// Default config with `SPECD_VERIFY_THREADS` / `SPECD_VERIFY_CHUNK`
-    /// / `SPECD_VERIFY_PIN` environment overrides applied.
+    /// / `SPECD_VERIFY_PIN` / `SPECD_SIMD` environment overrides
+    /// applied. Malformed values warn and keep the default instead of
+    /// being silently dropped.
     pub fn from_env() -> Self {
         let mut cfg = KernelConfig::default();
         if let Some(t) = env_usize("SPECD_VERIFY_THREADS") {
@@ -157,7 +177,16 @@ impl KernelConfig {
             cfg.chunk = c.max(1);
         }
         if let Ok(v) = std::env::var("SPECD_VERIFY_PIN") {
-            cfg.pin_cores = v == "1" || v == "true";
+            match v.trim() {
+                "" | "0" | "false" => {}
+                "1" | "true" => cfg.pin_cores = true,
+                other => crate::warn!(
+                    "ignoring malformed SPECD_VERIFY_PIN={other:?} (want 0 or 1); using default"
+                ),
+            }
+        }
+        if let Ok(v) = std::env::var("SPECD_SIMD") {
+            cfg.simd = simd::SimdMode::parse(&v);
         }
         cfg
     }
@@ -172,7 +201,37 @@ impl KernelConfig {
 }
 
 fn env_usize(key: &str) -> Option<usize> {
-    std::env::var(key).ok().and_then(|v| v.parse().ok())
+    match std::env::var(key) {
+        Ok(raw) => parse_env_usize(key, &raw),
+        Err(_) => None,
+    }
+}
+
+/// Parse one `SPECD_VERIFY_*` override: empty means unset, anything
+/// else must be an unsigned integer — malformed values warn once per
+/// read and fall back to the default rather than vanishing silently.
+fn parse_env_usize(key: &str, raw: &str) -> Option<usize> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return None;
+    }
+    match raw.parse::<usize>() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            crate::warn!(
+                "ignoring malformed {key}={raw:?} (want an unsigned integer); using default"
+            );
+            None
+        }
+    }
+}
+
+/// Round a scheduling chunk up to a [`verify::LANE`] multiple so pool
+/// spans hand vector bodies whole lane groups. Scheduling only: every
+/// span body is element-wise or reduces over [`VOCAB_CHUNK`] blocks, so
+/// span boundaries cannot move a reduction boundary.
+fn align_lane(chunk: usize) -> usize {
+    chunk.max(1).div_ceil(verify::LANE) * verify::LANE
 }
 
 /// Preallocated buffers + persistent worker pool for the batched
@@ -281,11 +340,15 @@ pub fn spec_step_batch_ws(
     out_tokens.resize(b * (gamma + 1), -1);
 
     // --- segment plan + workspace bookkeeping
-    let (threads, chunk) = {
+    let (threads, chunk, simd) = {
         let _g = profiler.map(|pr| pr.scope("verify/partition"));
         ws.ensure(b, gamma, v);
         let elems = b * (2 * gamma + 1) * v;
-        (ws.cfg.effective_threads(elems), ws.cfg.chunk.max(1))
+        (
+            ws.cfg.effective_threads(elems),
+            align_lane(ws.cfg.chunk),
+            ws.cfg.simd.active(),
+        )
     };
     let VerifyWorkspace {
         p, q, residual, partials, pool, ..
@@ -308,6 +371,7 @@ pub fn spec_step_batch_ws(
             v,
             &|r| methods[r / (gamma + 1)],
             &mut partials[..],
+            simd,
         );
         construct_matrix(
             pool,
@@ -318,6 +382,7 @@ pub fn spec_step_batch_ws(
             v,
             &|r| methods[r / gamma],
             &mut partials[..],
+            simd,
         );
     }
 
@@ -352,21 +417,24 @@ pub fn spec_step_batch_ws(
             out_tokens[..alen].copy_from_slice(&draft[..alen]);
             if alen == gamma {
                 let bonus = &p[gamma * v..][..v];
-                out_tokens[gamma] =
-                    inverse_cdf_sample_blocked(pool, threads, bonus, u_bonus[0], partials)
-                        as i32;
+                out_tokens[gamma] = inverse_cdf_sample_blocked(
+                    pool, threads, bonus, u_bonus[0], partials, simd,
+                ) as i32;
             } else {
                 let prow = &p[alen * v..][..v];
                 let qrow = &q[alen * v..][..v];
                 pool::for_each_span(pool, threads, &mut *residual, chunk, |first, span| {
                     let off = first * chunk;
-                    for (j, r) in span.iter_mut().enumerate() {
-                        *r = (prow[off + j] - qrow[off + j]).max(0.0);
-                    }
+                    residual_into(
+                        &prow[off..off + span.len()],
+                        &qrow[off..off + span.len()],
+                        span,
+                        simd,
+                    );
                 });
-                out_tokens[alen] =
-                    inverse_cdf_sample_blocked(pool, threads, residual, u_res[0], partials)
-                        as i32;
+                out_tokens[alen] = inverse_cdf_sample_blocked(
+                    pool, threads, residual, u_res[0], partials, simd,
+                ) as i32;
             }
         } else {
             // slot-parallel: each worker finishes a run of slots
@@ -391,11 +459,7 @@ pub fn spec_step_batch_ws(
                             let res = &mut res_span[k * v..][..v];
                             let prow = &p[(i * (gamma + 1) + alen) * v..][..v];
                             let qrow = &q[(i * gamma + alen) * v..][..v];
-                            for ((r, &pp), &qq) in
-                                res.iter_mut().zip(prow).zip(qrow)
-                            {
-                                *r = (pp - qq).max(0.0);
-                            }
+                            residual_into(prow, qrow, res, simd);
                             trow[alen] = inverse_cdf_sample(res, u_res[i]) as i32;
                         }
                     }
@@ -419,6 +483,7 @@ fn construct_matrix(
     v: usize,
     method_of: &(dyn Fn(usize) -> Method + Sync),
     partials: &mut [f32],
+    simd: bool,
 ) {
     let rows = dst.len() / v;
     if rows == 0 || v == 0 {
@@ -436,6 +501,7 @@ fn construct_matrix(
                 &mut dst[r * v..][..v],
                 method_of(r),
                 &mut *partials,
+                simd,
             );
         }
     } else {
@@ -444,7 +510,7 @@ fn construct_matrix(
         pool::for_each_span(pool, threads, dst, v, |first_row, span| {
             for (k, drow) in span.chunks_mut(v).enumerate() {
                 let r = first_row + k;
-                construct_row_from(&src[r * v..][..v], drow, method_of(r));
+                construct_row_from(&src[r * v..][..v], drow, method_of(r), simd);
             }
         });
     }
@@ -528,11 +594,15 @@ pub fn spec_step_ragged_ws(
 
     // --- segment plan + workspace bookkeeping
     let gmax = gammas.iter().copied().max().unwrap_or(0);
-    let (threads, chunk) = {
+    let (threads, chunk, simd) = {
         let _g = profiler.map(|pr| pr.scope("verify/partition"));
         ws.ensure(b, gmax, v);
         let elems = (total_p + total_q) * v;
-        (ws.cfg.effective_threads(elems), ws.cfg.chunk.max(1))
+        (
+            ws.cfg.effective_threads(elems),
+            align_lane(ws.cfg.chunk),
+            ws.cfg.simd.active(),
+        )
     };
     let VerifyWorkspace {
         p, q, residual, partials, pool, ..
@@ -554,6 +624,7 @@ pub fn spec_step_ragged_ws(
             v,
             &|r| methods[slot_of_row(p_off, r)],
             &mut partials[..],
+            simd,
         );
         construct_matrix(
             pool,
@@ -564,6 +635,7 @@ pub fn spec_step_ragged_ws(
             v,
             &|r| methods[slot_of_row(q_off, r)],
             &mut partials[..],
+            simd,
         );
     }
 
@@ -608,9 +680,7 @@ pub fn spec_step_ragged_ws(
                 let res = &mut residual[i * v..][..v];
                 let prow = &p[(p_off[i] + alen) * v..][..v];
                 let qrow = &q[(q_off[i] + alen) * v..][..v];
-                for ((r, &pp), &qq) in res.iter_mut().zip(prow).zip(qrow) {
-                    *r = (pp - qq).max(0.0);
-                }
+                residual_into(prow, qrow, res, simd);
                 trow[alen] = inverse_cdf_sample(res, u_res[i]) as i32;
             }
         }
@@ -626,19 +696,162 @@ pub fn spec_step_ragged_ws(
 /// [`crate::engine`]) share the exact arithmetic graph
 /// instead of reimplementing it.
 pub fn construct_prob_row(src: &[f32], dst: &mut [f32], method: Method) {
-    construct_row_from(src, dst, method)
+    construct_row_from(src, dst, method, env_simd_active())
 }
 
-fn construct_row_from(src: &[f32], dst: &mut [f32], method: Method) {
+/// A borrowed logit row in either storage precision. The half-precision
+/// variant carries raw IEEE binary16 bit patterns (the accelerator's
+/// native logit dtype for the sigmoid16 pipeline); ingestion widens
+/// exactly — every f16 value is representable in f32 — so constructing
+/// from `F16(h)` is bit-identical to widening first and constructing
+/// from the f32 row, without the staging copy.
+#[derive(Debug, Clone, Copy)]
+pub enum Logits<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+}
+
+impl Logits<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            Logits::F32(s) => s.len(),
+            Logits::F16(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<'a> From<&'a [f32]> for Logits<'a> {
+    fn from(s: &'a [f32]) -> Self {
+        Logits::F32(s)
+    }
+}
+
+impl<'a> From<&'a [u16]> for Logits<'a> {
+    fn from(s: &'a [u16]) -> Self {
+        Logits::F16(s)
+    }
+}
+
+/// [`construct_prob_row`] over either logit precision. fp16 rows fuse
+/// the widening into the probability-construction pass: bits are
+/// widened directly into `dst` and the in-place constructors run on
+/// top, so the f16→f32 conversion never materialises a second staging
+/// row (the ingestion bandwidth is the halved f16 read plus the write
+/// the construction pass performs anyway).
+pub fn construct_prob_row_logits(src: Logits<'_>, dst: &mut [f32], method: Method) {
+    match src {
+        Logits::F32(s) => construct_row_from(s, dst, method, env_simd_active()),
+        Logits::F16(s) => {
+            debug_assert_eq!(s.len(), dst.len());
+            for (d, &h) in dst.iter_mut().zip(s) {
+                *d = verify::f16_bits_to_f32(h);
+            }
+            match method {
+                Method::Baseline | Method::Exact => verify::softmax_row(dst),
+                Method::Sigmoid { .. } => {
+                    let (alpha, beta) = method.alpha_beta().unwrap();
+                    verify::sigmoid_approx(dst, alpha, beta);
+                }
+                Method::Sigmoid16 { .. } => {
+                    let (alpha, beta) = method.alpha_beta().unwrap();
+                    verify::sigmoid_approx_fp16(dst, alpha, beta);
+                }
+            }
+        }
+    }
+}
+
+/// `SPECD_SIMD` resolved once for the standalone row entry points
+/// (the engine's bonus prediction); the step kernels resolve their own
+/// [`KernelConfig::simd`] per workspace. Either resolution is
+/// bit-identical, so caching cannot cause divergence.
+fn env_simd_active() -> bool {
+    static ACTIVE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        std::env::var("SPECD_SIMD")
+            .map(|v| simd::SimdMode::parse(&v))
+            .unwrap_or(simd::SimdMode::Auto)
+            .active()
+    })
+}
+
+fn construct_row_from(src: &[f32], dst: &mut [f32], method: Method, simd: bool) {
     match method {
-        Method::Baseline | Method::Exact => verify::softmax_row_from(src, dst),
+        Method::Baseline | Method::Exact => {
+            if simd {
+                simd::softmax_row_from(src, dst);
+            } else {
+                verify::softmax_row_from(src, dst);
+            }
+        }
         Method::Sigmoid { .. } => {
             let (alpha, beta) = method.alpha_beta().unwrap();
-            verify::sigmoid_row_from(src, dst, alpha, beta);
+            if simd {
+                simd::sigmoid_row_from(src, dst, alpha, beta);
+            } else {
+                verify::sigmoid_row_from(src, dst, alpha, beta);
+            }
         }
         Method::Sigmoid16 { .. } => {
+            // the fp16 τ chain narrows through f16_round per element;
+            // it stays scalar on every path (never the bottleneck, and
+            // one implementation is easier to keep bit-exact)
             let (alpha, beta) = method.alpha_beta().unwrap();
             verify::sigmoid16_row_from(src, dst, alpha, beta);
+        }
+    }
+}
+
+/// `dst = max(p - q, 0)` — one residual block on the dispatched lane
+/// path. Element-wise, so span partitioning cannot affect results.
+fn residual_into(p: &[f32], q: &[f32], dst: &mut [f32], simd: bool) {
+    if simd {
+        simd::residual_block(p, q, dst);
+    } else {
+        for ((r, &pp), &qq) in dst.iter_mut().zip(p).zip(q) {
+            *r = (pp - qq).max(0.0);
+        }
+    }
+}
+
+/// Block max on the dispatched lane path ([`verify::lane_max`] twin).
+fn block_max(xs: &[f32], simd: bool) -> f32 {
+    if simd {
+        simd::lane_max_block(xs)
+    } else {
+        verify::lane_max(xs)
+    }
+}
+
+/// Block sum on the dispatched lane path ([`verify::lane_sum`] twin).
+fn block_sum(xs: &[f32], simd: bool) -> f32 {
+    if simd {
+        simd::lane_sum_block(xs)
+    } else {
+        verify::lane_sum(xs)
+    }
+}
+
+/// `dst = exp(src - max)` + block sum on the dispatched lane path.
+fn exp_sub_sum(src: &[f32], dst: &mut [f32], max: f32, simd: bool) -> f32 {
+    if simd {
+        simd::exp_sub_sum_block(src, dst, max)
+    } else {
+        verify::exp_sub_sum_block(src, dst, max)
+    }
+}
+
+/// `dst *= inv` on the dispatched lane path (element-wise).
+fn scale_span(dst: &mut [f32], inv: f32, simd: bool) {
+    if simd {
+        simd::scale_block(dst, inv);
+    } else {
+        for e in dst.iter_mut() {
+            *e *= inv;
         }
     }
 }
@@ -648,6 +861,7 @@ fn construct_row_from(src: &[f32], dst: &mut [f32], method: Method) {
 /// parallel block maxima, parallel exp + block sums, parallel scale —
 /// with the [`VOCAB_CHUNK`] partials folded in fixed order between
 /// phases, reproducing the scalar reduction graph exactly.
+#[allow(clippy::too_many_arguments)]
 fn construct_row_subrow(
     pool: &pool::WorkerPool,
     threads: usize,
@@ -656,6 +870,7 @@ fn construct_row_subrow(
     dst: &mut [f32],
     method: Method,
     partials: &mut [f32],
+    simd: bool,
 ) {
     match method {
         Method::Sigmoid { .. } | Method::Sigmoid16 { .. } => {
@@ -666,6 +881,8 @@ fn construct_row_subrow(
                 let sblk = &src[off..off + span.len()];
                 if fp16 {
                     verify::sigmoid16_row_from(sblk, span, alpha, beta);
+                } else if simd {
+                    simd::sigmoid_row_from(sblk, span, alpha, beta);
                 } else {
                     verify::sigmoid_row_from(sblk, span, alpha, beta);
                 }
@@ -675,16 +892,23 @@ fn construct_row_subrow(
             let v = src.len();
             let nblk = v.div_ceil(VOCAB_CHUNK);
             let parts = &mut partials[..nblk];
-            // phase 1: block maxima (max is exact under any association)
+            // phase 1: per-block lane-graph maxima (max over the lane
+            // graph is exact under any block association — NaN never
+            // wins a comparison, so block maxima compose)
             pool::for_each_span(pool, threads, &mut *parts, 1, |first, span| {
                 for (k, m) in span.iter_mut().enumerate() {
                     let off = (first + k) * VOCAB_CHUNK;
                     let blk = &src[off..(off + VOCAB_CHUNK).min(v)];
-                    *m = blk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    *m = block_max(blk, simd);
                 }
             });
-            let max = parts.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            // phase 2: exp + per-block partial sums
+            let mut max = f32::NEG_INFINITY;
+            for &part in parts.iter() {
+                if part > max {
+                    max = part;
+                }
+            }
+            // phase 2: exp + per-block lane-graph partial sums
             pool::for_each_span2(
                 pool,
                 threads,
@@ -698,12 +922,7 @@ fn construct_row_subrow(
                         let len = VOCAB_CHUNK.min(v - off);
                         let d = &mut dspan[k * VOCAB_CHUNK..][..len];
                         let s = &src[off..off + len];
-                        let mut sum = 0.0f32;
-                        for (dd, &ss) in d.iter_mut().zip(s) {
-                            *dd = (ss - max).exp();
-                            sum += *dd;
-                        }
-                        *part = sum;
+                        *part = exp_sub_sum(s, d, max, simd);
                     }
                 },
             );
@@ -716,9 +935,7 @@ fn construct_row_subrow(
             let inv = 1.0 / sum;
             // phase 3: scale
             pool::for_each_span(pool, threads, &mut *dst, VOCAB_CHUNK, |_, span| {
-                for e in span.iter_mut() {
-                    *e *= inv;
-                }
+                scale_span(span, inv, simd);
             });
         }
     }
@@ -741,6 +958,7 @@ pub(crate) fn inverse_cdf_sample_blocked(
     weights: &[f32],
     u: f32,
     partials: &mut [f32],
+    simd: bool,
 ) -> usize {
     let v = weights.len();
     if v <= VOCAB_CHUNK || threads <= 1 {
@@ -750,16 +968,13 @@ pub(crate) fn inverse_cdf_sample_blocked(
     }
     let nblk = v.div_ceil(VOCAB_CHUNK);
     let parts = &mut partials[..nblk];
-    // stage 1: parallel per-block partial sums
+    // stage 1: parallel per-block lane-graph partial sums — the same
+    // [`verify::lane_sum`] graph the scalar reference folds per block
     pool::for_each_span(pool, threads, &mut *parts, 1, |first, span| {
         for (k, s) in span.iter_mut().enumerate() {
             let off = (first + k) * VOCAB_CHUNK;
             let blk = &weights[off..(off + VOCAB_CHUNK).min(v)];
-            let mut part = 0.0f32;
-            for &w in blk {
-                part += w;
-            }
-            *s = part;
+            *s = block_sum(blk, simd);
         }
     });
     // stages 2-3: shared with the scalar reference
@@ -1081,17 +1296,23 @@ mod tests {
                 for u in [0.0f32, 0.25, 0.5, 0.999, rng.uniform_f32()] {
                     let expect = inverse_cdf_sample(&w, u);
                     for threads in [2usize, 3, 8] {
-                        let got = inverse_cdf_sample_blocked(
-                            &pool,
-                            threads,
-                            &w,
-                            u,
-                            &mut partials,
-                        );
-                        assert_eq!(
-                            got, expect,
-                            "v={v} case={case} u={u} threads={threads}"
-                        );
+                        // both lane paths: scalar always, AVX2 when the
+                        // host has it (simd::have_avx2() is false
+                        // elsewhere, collapsing to the scalar case)
+                        for simd in [false, simd::have_avx2()] {
+                            let got = inverse_cdf_sample_blocked(
+                                &pool,
+                                threads,
+                                &w,
+                                u,
+                                &mut partials,
+                                simd,
+                            );
+                            assert_eq!(
+                                got, expect,
+                                "v={v} case={case} u={u} threads={threads} simd={simd}"
+                            );
+                        }
                     }
                 }
             }
@@ -1329,7 +1550,127 @@ mod tests {
         let cfg = KernelConfig::default();
         assert!(cfg.threads >= 1);
         assert_eq!(cfg.chunk, VOCAB_CHUNK);
+        assert_eq!(cfg.simd, simd::SimdMode::Auto);
         assert!(KernelConfig::scalar().threads == 1);
         assert_eq!(KernelConfig::with_threads(0).threads, 1);
+    }
+
+    #[test]
+    fn malformed_env_overrides_warn_and_fall_back() {
+        // the parser itself: empty means unset, junk means default
+        assert_eq!(parse_env_usize("SPECD_VERIFY_THREADS", "3"), Some(3));
+        assert_eq!(parse_env_usize("SPECD_VERIFY_THREADS", " 7 "), Some(7));
+        assert_eq!(parse_env_usize("SPECD_VERIFY_THREADS", ""), None);
+        assert_eq!(parse_env_usize("SPECD_VERIFY_THREADS", "lots"), None);
+        assert_eq!(parse_env_usize("SPECD_VERIFY_CHUNK", "-4"), None);
+        assert_eq!(parse_env_usize("SPECD_VERIFY_CHUNK", "4k"), None);
+        // a malformed environment yields the defaults, not a panic or a
+        // silently wrong config (malformed → default also means any
+        // test running concurrently observes defaults, nothing else)
+        std::env::set_var("SPECD_VERIFY_THREADS", "many");
+        std::env::set_var("SPECD_VERIFY_CHUNK", "4k");
+        std::env::set_var("SPECD_VERIFY_PIN", "sideways");
+        std::env::set_var("SPECD_SIMD", "fast");
+        let cfg = KernelConfig::from_env();
+        std::env::remove_var("SPECD_VERIFY_THREADS");
+        std::env::remove_var("SPECD_VERIFY_CHUNK");
+        std::env::remove_var("SPECD_VERIFY_PIN");
+        std::env::remove_var("SPECD_SIMD");
+        let def = KernelConfig::default();
+        assert_eq!(cfg.threads, def.threads);
+        assert_eq!(cfg.chunk, def.chunk);
+        assert_eq!(cfg.pin_cores, def.pin_cores);
+        assert_eq!(cfg.simd, simd::SimdMode::Auto);
+    }
+
+    #[test]
+    fn lane_tail_parity_at_ragged_vocab_sizes() {
+        // V not a multiple of LANE or VOCAB_CHUNK: the lane tails and
+        // the ragged final block must stay bit-identical to the scalar
+        // oracle on every schedule × lane path. 4095/4097 straddle the
+        // chunk boundary; 32771 is a prime-ish production-scale vocab
+        // (8 full blocks + a 3-element tail block).
+        let mut rng = Pcg32::seeded(90);
+        for v in [4095usize, 4097, 32771] {
+            for method in [
+                Method::Baseline,
+                Method::Exact,
+                Method::sigmoid(-1e3, 1e3),
+                Method::sigmoid16(-1e3, 1e3),
+            ] {
+                let mut case = make_case(&mut rng, 1, 2, v);
+                case.methods = vec![method];
+                let expect = run_oracle(&case);
+                for mode in [simd::SimdMode::Off, simd::SimdMode::On] {
+                    for threads in [1usize, 4] {
+                        let mut cfg = force_parallel(KernelConfig::with_threads(threads));
+                        cfg.simd = mode;
+                        let got = run_ws(&case, cfg);
+                        assert_eq!(
+                            got,
+                            expect,
+                            "v={v} method={} simd={mode:?} threads={threads}",
+                            method.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f16_ingestion_is_fused_and_matches_widen_then_construct() {
+        // Logits::F16 must equal widening to f32 first and running the
+        // f32 constructors — bit for bit, including across the chunk
+        // boundary and for the SIMD-dispatched f32 entry point
+        let mut rng = Pcg32::seeded(91);
+        for v in [33usize, VOCAB_CHUNK + 17] {
+            let z = randn(&mut rng, v, 8.0);
+            let h: Vec<u16> = z.iter().map(|&x| verify::f32_to_f16_bits(x)).collect();
+            let wide: Vec<f32> = h.iter().map(|&b| verify::f16_bits_to_f32(b)).collect();
+            for method in [
+                Method::Baseline,
+                Method::Exact,
+                Method::sigmoid(-1e3, 1e3),
+                Method::sigmoid16(-1e3, 1e3),
+            ] {
+                let mut a = vec![0.0f32; v];
+                let mut b = vec![0.0f32; v];
+                construct_prob_row(&wide, &mut a, method);
+                construct_prob_row_logits(Logits::F16(&h), &mut b, method);
+                let (ab, bb): (Vec<u32>, Vec<u32>) = (
+                    a.iter().map(|x| x.to_bits()).collect(),
+                    b.iter().map(|x| x.to_bits()).collect(),
+                );
+                assert_eq!(ab, bb, "v={v} method={}", method.name());
+            }
+            // the From impls round-trip the slice lengths
+            assert_eq!(Logits::from(&h[..]).len(), v);
+            assert_eq!(Logits::from(&wide[..]).len(), v);
+            assert!(!Logits::from(&h[..]).is_empty());
+        }
+    }
+
+    #[test]
+    fn sigmoid16_overflow_rejects_all_through_f16_ingestion() {
+        // the Table 2 fp16-overflow row arriving the production way:
+        // logits as raw f16 bit patterns (±inf = 0x7c00/0xfc00, NaN =
+        // 0x7e00) through the fused ingestion path; the NaN τ from the
+        // overflowed (β−α) must still reject every draft even at u = 0
+        let method = Method::sigmoid16(-1e5, 1e5);
+        let h: [u16; 8] = [0x7c00, 0xfc00, 0x7e00, 0x3c00, 0x0000, 0x8000, 0x5640, 0xc000];
+        let v = h.len();
+        let mut p = vec![0.0f32; v];
+        let mut q = vec![0.0f32; v];
+        construct_prob_row_logits(Logits::F16(&h), &mut p, method);
+        construct_prob_row_logits(Logits::F16(&h), &mut q, method);
+        for x in 0..v {
+            assert!(
+                !verify::accept_decision(p[x], q[x], 0.0, method),
+                "NaN τ must reject token {x} (p={}, q={})",
+                p[x],
+                q[x]
+            );
+        }
     }
 }

@@ -1,0 +1,501 @@
+//! Runtime-dispatched AVX2 twins of the scalar lane-graph primitives.
+//!
+//! The scalar reference in [`crate::sampling::verify`] already executes
+//! the [`verify::LANE`]-wide reduction graph (8 independent f32
+//! accumulators folded in lane order) and routes every exponential
+//! through the fixed polynomial [`verify::exp_approx`]. The functions
+//! here re-implement those primitives with `std::arch::x86_64`
+//! intrinsics, **operation for operation**:
+//!
+//! * one ymm register *is* the 8-lane accumulator array — `vaddps` /
+//!   `vmaxps` per group of 8 elements are exactly the scalar per-lane
+//!   `+=` / compare-and-replace (IEEE single ops are exactly rounded,
+//!   so element-wise vectorization cannot change a bit);
+//! * block tails (fewer than 8 elements) spill the accumulator to an
+//!   array and continue with the *scalar* code, then both paths share
+//!   the same lane-order fold (`verify::lane_fold_sum` /
+//!   `lane_fold_max`);
+//! * [`exp8`] is `exp_approx` transcribed to intrinsics: same clamp,
+//!   same magic-number round-to-nearest-even, same Cody–Waite
+//!   reduction, same polynomial with plain `mul`/`add` (no FMA — it
+//!   rounds differently), same exponent-field bit assembly, and NaN
+//!   lanes blended back from the input (the scalar early return);
+//! * `maxps` operand order is chosen so NaN never replaces an
+//!   accumulator, matching the scalar comparison form.
+//!
+//! Because the two implementations compute literally the same IEEE
+//! operation sequence, SIMD on/off is **bit-identical** by
+//! construction, and the kernel parity suites assert it empirically
+//! (see `simd_rows_match_scalar_lane_graph_bitwise` and the
+//! `SPECD_SIMD` CI parity step).
+//!
+//! On non-x86-64 targets every entry point falls back to the scalar
+//! lane-graph implementation (same results, by the same argument).
+
+#[cfg(not(target_arch = "x86_64"))]
+use crate::sampling::verify;
+
+/// SIMD dispatch mode for the kernel layer (`SPECD_SIMD`). Never
+/// affects results — only which bit-identical implementation of the
+/// lane graph executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use the AVX2 path when the host supports it (default).
+    Auto,
+    /// Force the scalar lane-graph loops (`SPECD_SIMD=0`).
+    Off,
+    /// Request the AVX2 path (`SPECD_SIMD=1`); still falls back to
+    /// scalar when the host lacks AVX2 — the request cannot change
+    /// results, so degrading is safe.
+    On,
+}
+
+impl SimdMode {
+    /// Parse a `SPECD_SIMD` value. Malformed values log a warning and
+    /// fall back to [`SimdMode::Auto`] instead of being silently
+    /// ignored.
+    pub fn parse(raw: &str) -> SimdMode {
+        match raw.trim() {
+            "" | "auto" => SimdMode::Auto,
+            "0" | "off" | "false" => SimdMode::Off,
+            "1" | "on" | "true" => SimdMode::On,
+            other => {
+                crate::warn!("ignoring malformed SPECD_SIMD={other:?} (want 0, 1, or auto); using auto");
+                SimdMode::Auto
+            }
+        }
+    }
+
+    /// Resolve the mode against the host: `true` means the AVX2 path
+    /// runs, `false` means the scalar lane-graph loops run.
+    pub fn active(self) -> bool {
+        match self {
+            SimdMode::Off => false,
+            SimdMode::Auto | SimdMode::On => have_avx2(),
+        }
+    }
+}
+
+/// Runtime AVX2 detection (cached by `std`; never true off x86-64).
+pub fn have_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// --- dispatch wrappers -----------------------------------------------------
+//
+// Callers (the kernel schedules in `kernels::mod`) resolve SimdMode to
+// a bool once per step and route per-block work through these. Each has
+// the same contract as its scalar twin in `verify`.
+
+/// AVX2 twin of [`verify::softmax_row_from`].
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn softmax_row_from(src: &[f32], dst: &mut [f32]) {
+    debug_assert!(have_avx2());
+    unsafe { avx2::softmax_row_from(src, dst) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn softmax_row_from(src: &[f32], dst: &mut [f32]) {
+    verify::softmax_row_from(src, dst);
+}
+
+/// AVX2 twin of [`verify::sigmoid_row_from`].
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn sigmoid_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta: f32) {
+    debug_assert!(have_avx2());
+    unsafe { avx2::sigmoid_row_from(src, dst, alpha, beta) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn sigmoid_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta: f32) {
+    verify::sigmoid_row_from(src, dst, alpha, beta);
+}
+
+/// AVX2 twin of the scalar block max ([`verify::lane_max`]).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn lane_max_block(xs: &[f32]) -> f32 {
+    debug_assert!(have_avx2());
+    unsafe { avx2::lane_max_block(xs) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn lane_max_block(xs: &[f32]) -> f32 {
+    verify::lane_max(xs)
+}
+
+/// AVX2 twin of the scalar block sum ([`verify::lane_sum`]).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn lane_sum_block(xs: &[f32]) -> f32 {
+    debug_assert!(have_avx2());
+    unsafe { avx2::lane_sum_block(xs) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn lane_sum_block(xs: &[f32]) -> f32 {
+    verify::lane_sum(xs)
+}
+
+/// AVX2 twin of [`verify::exp_sub_sum_block`].
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn exp_sub_sum_block(src: &[f32], dst: &mut [f32], max: f32) -> f32 {
+    debug_assert!(have_avx2());
+    unsafe { avx2::exp_sub_sum_block(src, dst, max) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn exp_sub_sum_block(src: &[f32], dst: &mut [f32], max: f32) -> f32 {
+    verify::exp_sub_sum_block(src, dst, max)
+}
+
+/// AVX2 twin of the scalar residual loop `dst = max(p - q, 0)`.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn residual_block(p: &[f32], q: &[f32], dst: &mut [f32]) {
+    debug_assert!(have_avx2());
+    unsafe { avx2::residual_block(p, q, dst) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn residual_block(p: &[f32], q: &[f32], dst: &mut [f32]) {
+    for ((r, &pp), &qq) in dst.iter_mut().zip(p).zip(q) {
+        *r = (pp - qq).max(0.0);
+    }
+}
+
+/// AVX2 twin of the scalar scale loop `dst *= inv`.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn scale_block(dst: &mut [f32], inv: f32) {
+    debug_assert!(have_avx2());
+    unsafe { avx2::scale_block(dst, inv) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn scale_block(dst: &mut [f32], inv: f32) {
+    for e in dst.iter_mut() {
+        *e *= inv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::sampling::verify::{
+        self, EXP_HI, EXP_LN2_HI, EXP_LN2_LO, EXP_LO, EXP_LOG2E, EXP_P0, EXP_P1, EXP_P2,
+        EXP_P3, EXP_P4, EXP_P5, EXP_RND, LANE, VOCAB_CHUNK,
+    };
+    use std::arch::x86_64::*;
+
+    /// `verify::exp_approx` over 8 lanes, operation for operation: the
+    /// scalar `if x.is_nan()` early return becomes the final blend,
+    /// everything else is the identical exactly-rounded op sequence.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn exp8(x: __m256) -> __m256 {
+        let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+        // x.min(EXP_HI).max(EXP_LO)
+        let xc = _mm256_max_ps(
+            _mm256_min_ps(x, _mm256_set1_ps(EXP_HI)),
+            _mm256_set1_ps(EXP_LO),
+        );
+        // n = (xc*log2e + RND) - RND  (round-to-nearest-even)
+        let rnd = _mm256_set1_ps(EXP_RND);
+        let n = _mm256_sub_ps(
+            _mm256_add_ps(_mm256_mul_ps(xc, _mm256_set1_ps(EXP_LOG2E)), rnd),
+            rnd,
+        );
+        // r = (xc - n*LN2_HI) - n*LN2_LO
+        let r = _mm256_sub_ps(
+            _mm256_sub_ps(xc, _mm256_mul_ps(n, _mm256_set1_ps(EXP_LN2_HI))),
+            _mm256_mul_ps(n, _mm256_set1_ps(EXP_LN2_LO)),
+        );
+        let z = _mm256_mul_ps(r, r);
+        let mut y = _mm256_set1_ps(EXP_P0);
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P1));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P2));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P3));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P4));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P5));
+        y = _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(y, z), r), _mm256_set1_ps(1.0));
+        // pow2 = from_bits((n as i32 + 127) << 23); n is integral, so
+        // cvtps (round-to-nearest) equals the scalar truncating cast
+        let ni = _mm256_cvtps_epi32(n);
+        let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+            ni,
+            _mm256_set1_epi32(127),
+        )));
+        let res = _mm256_mul_ps(y, pow2);
+        _mm256_blendv_ps(res, x, nan)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn lane_max_block(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let full = n - n % LANE;
+        // maxps(x, acc): NaN never replaces the accumulator, ties keep
+        // it — the scalar comparison form
+        let mut accv = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut k = 0;
+        while k < full {
+            accv = _mm256_max_ps(_mm256_loadu_ps(xs.as_ptr().add(k)), accv);
+            k += LANE;
+        }
+        let mut acc = [f32::NEG_INFINITY; LANE];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        for (j, &x) in xs[full..].iter().enumerate() {
+            if x > acc[j] {
+                acc[j] = x;
+            }
+        }
+        verify::lane_fold_max(&acc)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn lane_sum_block(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let full = n - n % LANE;
+        let mut accv = _mm256_setzero_ps();
+        let mut k = 0;
+        while k < full {
+            accv = _mm256_add_ps(accv, _mm256_loadu_ps(xs.as_ptr().add(k)));
+            k += LANE;
+        }
+        let mut acc = [0.0f32; LANE];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        for (j, &x) in xs[full..].iter().enumerate() {
+            acc[j] += x;
+        }
+        verify::lane_fold_sum(&acc)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn exp_sub_sum_block(src: &[f32], dst: &mut [f32], max: f32) -> f32 {
+        debug_assert_eq!(src.len(), dst.len());
+        let n = src.len();
+        let full = n - n % LANE;
+        let maxv = _mm256_set1_ps(max);
+        let mut accv = _mm256_setzero_ps();
+        let mut k = 0;
+        while k < full {
+            let e = exp8(_mm256_sub_ps(_mm256_loadu_ps(src.as_ptr().add(k)), maxv));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(k), e);
+            accv = _mm256_add_ps(accv, e);
+            k += LANE;
+        }
+        let mut acc = [0.0f32; LANE];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        for j in 0..(n - full) {
+            let e = verify::exp_approx(src[full + j] - max);
+            dst[full + j] = e;
+            acc[j] += e;
+        }
+        verify::lane_fold_sum(&acc)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn softmax_row_from(src: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let max = lane_max_block(src);
+        let mut sum = 0.0f32;
+        for (sb, db) in src.chunks(VOCAB_CHUNK).zip(dst.chunks_mut(VOCAB_CHUNK)) {
+            sum += exp_sub_sum_block(sb, db, max);
+        }
+        let inv = 1.0 / sum;
+        scale_block(dst, inv);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sigmoid_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta: f32) {
+        debug_assert_eq!(src.len(), dst.len());
+        let inv = 1.0 / (beta - alpha);
+        let n = src.len();
+        let full = n - n % LANE;
+        let av = _mm256_set1_ps(alpha);
+        let iv = _mm256_set1_ps(inv);
+        let one = _mm256_set1_ps(1.0);
+        // -z as a sign-bit flip, exactly the scalar unary minus
+        let signbit = _mm256_set1_ps(-0.0);
+        let mut k = 0;
+        while k < full {
+            let s = _mm256_loadu_ps(src.as_ptr().add(k));
+            let z = _mm256_mul_ps(_mm256_sub_ps(s, av), iv);
+            let e = exp8(_mm256_xor_ps(z, signbit));
+            let d = _mm256_div_ps(one, _mm256_add_ps(one, e));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(k), d);
+            k += LANE;
+        }
+        for j in full..n {
+            let z = (src[j] - alpha) * inv;
+            dst[j] = 1.0 / (1.0 + verify::exp_approx(-z));
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn residual_block(p: &[f32], q: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(p.len(), dst.len());
+        debug_assert_eq!(q.len(), dst.len());
+        let n = dst.len();
+        let full = n - n % LANE;
+        let zero = _mm256_setzero_ps();
+        let mut k = 0;
+        while k < full {
+            let d = _mm256_sub_ps(
+                _mm256_loadu_ps(p.as_ptr().add(k)),
+                _mm256_loadu_ps(q.as_ptr().add(k)),
+            );
+            // maxps(diff, 0): a NaN difference (inf - inf, NaN inputs)
+            // clamps to 0, the f32::max(NaN, 0.0) semantics
+            _mm256_storeu_ps(dst.as_mut_ptr().add(k), _mm256_max_ps(d, zero));
+            k += LANE;
+        }
+        for j in full..n {
+            dst[j] = (p[j] - q[j]).max(0.0);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_block(dst: &mut [f32], inv: f32) {
+        let n = dst.len();
+        let full = n - n % LANE;
+        let iv = _mm256_set1_ps(inv);
+        let mut k = 0;
+        while k < full {
+            let d = _mm256_mul_ps(_mm256_loadu_ps(dst.as_ptr().add(k)), iv);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(k), d);
+            k += LANE;
+        }
+        for e in dst[full..].iter_mut() {
+            *e *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::verify::{exp_approx, LANE, VOCAB_CHUNK};
+    use crate::util::rng::Pcg32;
+
+    fn randn(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+    }
+
+    /// Poison a buffer with the special values the contract must
+    /// survive: NaN, ±inf, ±0, subnormals.
+    fn poison(rng: &mut Pcg32, xs: &mut [f32]) {
+        let specials = [
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE / 2.0,
+        ];
+        for _ in 0..(xs.len() / 16).max(1) {
+            let i = rng.below(xs.len() as u32) as usize;
+            xs[i] = specials[rng.below(specials.len() as u32) as usize];
+        }
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn simd_mode_parses_and_degrades_safely() {
+        assert_eq!(SimdMode::parse("0"), SimdMode::Off);
+        assert_eq!(SimdMode::parse("off"), SimdMode::Off);
+        assert_eq!(SimdMode::parse("1"), SimdMode::On);
+        assert_eq!(SimdMode::parse(" on "), SimdMode::On);
+        assert_eq!(SimdMode::parse("auto"), SimdMode::Auto);
+        // malformed values warn and fall back to auto, never panic
+        assert_eq!(SimdMode::parse("sideways"), SimdMode::Auto);
+        assert!(!SimdMode::Off.active());
+        // On degrades to scalar off-AVX2 hosts instead of crashing
+        assert_eq!(SimdMode::On.active(), have_avx2());
+        assert_eq!(SimdMode::Auto.active(), have_avx2());
+    }
+
+    #[test]
+    fn simd_rows_match_scalar_lane_graph_bitwise() {
+        if !have_avx2() {
+            return; // the dispatch layer never routes here without AVX2
+        }
+        let mut rng = Pcg32::seeded(41);
+        // lane tails, chunk boundaries, multi-block rows
+        for v in [1usize, 7, 8, 9, 64, 97, 4095, 4096, 4097, 2 * VOCAB_CHUNK + 13] {
+            let mut src = randn(&mut rng, v, 4.0);
+            poison(&mut rng, &mut src);
+            let mut a = vec![0.0f32; v];
+            let mut b = vec![0.0f32; v];
+
+            crate::sampling::verify::softmax_row_from(&src, &mut a);
+            softmax_row_from(&src, &mut b);
+            assert_eq!(bits(&a), bits(&b), "softmax v={v}");
+
+            for (alpha, beta) in [(-1e3f32, 1e3f32), (-4.0, 4.0)] {
+                crate::sampling::verify::sigmoid_row_from(&src, &mut a, alpha, beta);
+                sigmoid_row_from(&src, &mut b, alpha, beta);
+                assert_eq!(bits(&a), bits(&b), "sigmoid v={v} α={alpha}");
+            }
+
+            assert_eq!(
+                crate::sampling::verify::lane_sum(&src).to_bits(),
+                lane_sum_block(&src).to_bits(),
+                "sum v={v}"
+            );
+            assert_eq!(
+                crate::sampling::verify::lane_max(&src).to_bits(),
+                lane_max_block(&src).to_bits(),
+                "max v={v}"
+            );
+
+            let q = randn(&mut rng, v, 4.0);
+            let mut ra = vec![0.0f32; v];
+            let mut rb = vec![0.0f32; v];
+            for ((r, &pp), &qq) in ra.iter_mut().zip(&src).zip(&q) {
+                *r = (pp - qq).max(0.0);
+            }
+            residual_block(&src, &q, &mut rb);
+            assert_eq!(bits(&ra), bits(&rb), "residual v={v}");
+        }
+    }
+
+    #[test]
+    fn simd_exp_matches_scalar_polynomial_bitwise() {
+        if !have_avx2() {
+            return;
+        }
+        let mut rng = Pcg32::seeded(42);
+        let mut xs = randn(&mut rng, 4096, 30.0);
+        xs.extend_from_slice(&[
+            0.0,
+            -0.0,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            88.0,
+            -87.0,
+            1000.0,
+            -1000.0,
+        ]);
+        while xs.len() % LANE != 0 {
+            xs.push(0.5);
+        }
+        // exp(x - 0) through the block primitive == scalar exp_approx
+        let mut out = vec![0.0f32; xs.len()];
+        exp_sub_sum_block(&xs, &mut out, 0.0);
+        for (&x, &e) in xs.iter().zip(&out) {
+            assert_eq!(
+                e.to_bits(),
+                exp_approx(x).to_bits(),
+                "exp({x}) simd {e} vs scalar {}",
+                exp_approx(x)
+            );
+        }
+    }
+}

@@ -23,7 +23,9 @@ pub mod kernels;
 pub mod verify;
 
 pub use filter::{mask_logits_top_k_top_p, MASKED_LOGIT};
-pub use kernels::{KernelConfig, VerifyWorkspace};
+pub use kernels::simd::SimdMode;
+pub use kernels::{KernelConfig, Logits, VerifyWorkspace};
 pub use verify::{
-    inverse_cdf_sample, sigmoid_approx, softmax_rows, spec_step, Method, StepOutput,
+    exp_approx, f16_bits_to_f32, f32_to_f16_bits, inverse_cdf_sample, sigmoid_approx,
+    softmax_rows, spec_step, Method, StepOutput,
 };

@@ -9,11 +9,16 @@
 //! allocation-happy, optimised for auditability. The serving hot path
 //! runs the segment-parallel, zero-alloc implementation in
 //! [`crate::sampling::kernels`], which reuses the per-row primitives
-//! below and is bit-identical to this oracle for every thread count and
-//! chunk size (row reductions here — softmax sums *and* the inverse-CDF
-//! totals/prefixes — are already expressed as fixed-order folds over
-//! [`VOCAB_CHUNK`] blocks, the same reduction graph the parallel
-//! kernels execute).
+//! below and is bit-identical to this oracle for every thread count,
+//! chunk size, and SIMD mode. Two levels of reduction structure make
+//! that possible: row reductions — softmax sums *and* the inverse-CDF
+//! totals/prefixes — are fixed-order folds over [`VOCAB_CHUNK`] blocks
+//! (the graph the thread-parallel kernels execute), and *within* each
+//! block the fold runs over [`LANE`] independent accumulators folded in
+//! lane order (the graph an 8-wide vector unit executes). Exponentials
+//! go through the shared polynomial [`exp_approx`] rather than libm, so
+//! a vectorized twin can reproduce them operation-for-operation. See
+//! `docs/ARCHITECTURE.md` ("the lane-width reduction contract").
 //!
 //! ## Worked example
 //!
@@ -57,6 +62,202 @@ use crate::util::timer::Profiler;
 /// `v <= VOCAB_CHUNK` (every model vocab in the artifact set) this
 /// degenerates to the plain sequential sum.
 pub const VOCAB_CHUNK: usize = 4096;
+
+/// Lane width (f32 elements) of the in-block reduction graph. Inside
+/// each [`VOCAB_CHUNK`] block, sums and maxima run over `LANE`
+/// independent accumulators — element `k` of a block lands on lane
+/// `k % LANE`, tail elements continue on lanes `0..tail` — and the
+/// accumulators are folded in lane order at the end. This is the PR 3
+/// move one level down: the scalar reference executes the exact
+/// arithmetic graph an 8-wide vector unit (AVX2 ymm, or the compiler's
+/// autovectorizer) produces, so the SIMD kernel paths stay bit-identical
+/// to this oracle. 8 lanes of f32 = one 256-bit register.
+pub const LANE: usize = 8;
+
+// ---------------------------------------------------------------------------
+// shared exp polynomial + lane-graph reduction primitives
+//
+// `f32::exp` routes through libm, whose last-ulp behaviour is
+// implementation-defined and has no 8-wide twin — a vectorized kernel
+// could never reproduce it bit-for-bit. Every exponential on the verify
+// path instead uses this fixed polynomial, built only from exactly
+// rounded IEEE single ops (mul/add/sub, min/max, integer bit shifts) so
+// the scalar reference and the `std::arch` AVX2 path in
+// `sampling::kernels::simd` compute literally the same operation
+// sequence per element. No `mul_add`: FMA rounds once where mul+add
+// rounds twice, and the two differ in the last ulp.
+
+/// Clamp bounds: 2^n stays a normal f32 scale factor (n ∈ [-126, 127]),
+/// so the bit-shift reconstruction below never has to handle the
+/// subnormal/overflow exponent range. exp saturates at ~1.65e38 /
+/// ~1.6e-38 instead of ±inf/0 — indistinguishable through the softmax
+/// normalisation and sigmoid denominators this feeds.
+pub(crate) const EXP_HI: f32 = 88.0;
+pub(crate) const EXP_LO: f32 = -87.0;
+pub(crate) const EXP_LOG2E: f32 = std::f32::consts::LOG2_E;
+/// Cody–Waite split of ln 2: `LN2_HI` holds the top bits exactly, so
+/// `x - n·LN2_HI` is exact for |n| ≤ 128 and the reduced argument keeps
+/// full precision.
+pub(crate) const EXP_LN2_HI: f32 = 0.693_359_375;
+pub(crate) const EXP_LN2_LO: f32 = -2.121_944_4e-4;
+/// 1.5·2^23: adding and subtracting it rounds to the nearest integer
+/// under round-nearest-even — the same rounding `_mm256_cvtps_epi32`
+/// and `_mm256_round_ps` apply (`f32::round` would round half away
+/// from zero and disagree with the vector unit on exact halves).
+pub(crate) const EXP_RND: f32 = 12_582_912.0;
+pub(crate) const EXP_P0: f32 = 1.987_569_15e-4;
+pub(crate) const EXP_P1: f32 = 1.398_199_95e-3;
+pub(crate) const EXP_P2: f32 = 8.333_451_9e-3;
+pub(crate) const EXP_P3: f32 = 4.166_579_6e-2;
+pub(crate) const EXP_P4: f32 = 1.666_666_5e-1;
+pub(crate) const EXP_P5: f32 = 5.000_000_1e-1;
+
+/// e^x by range reduction + degree-6 polynomial (Cephes coefficients),
+/// accurate to ~1 ulp over the clamped range. Every operation is an
+/// exactly rounded IEEE f32 op with an AVX2 twin, which is what makes
+/// the vectorized kernels bit-identical to this scalar form (see the
+/// section comment above). NaN passes through (the Sigmoid16 fp16
+/// overflow semantics depend on it); ±inf saturate via the clamp.
+#[inline]
+pub fn exp_approx(x: f32) -> f32 {
+    if x.is_nan() {
+        return x; // the AVX2 twin blends NaN lanes back in at the end
+    }
+    let xc = x.min(EXP_HI).max(EXP_LO);
+    // n = round_even(x / ln 2) via the magic-number trick
+    let n = (xc * EXP_LOG2E + EXP_RND) - EXP_RND;
+    // r = x - n·ln2, Cody-Waite two-term split
+    let r = (xc - n * EXP_LN2_HI) - n * EXP_LN2_LO;
+    let z = r * r;
+    let mut y = EXP_P0;
+    y = y * r + EXP_P1;
+    y = y * r + EXP_P2;
+    y = y * r + EXP_P3;
+    y = y * r + EXP_P4;
+    y = y * r + EXP_P5;
+    y = (y * z + r) + 1.0;
+    // 2^n assembled directly in the exponent field (n is integral and
+    // clamped into the normal range)
+    let pow2 = f32::from_bits((((n as i32) + 127) as u32) << 23);
+    y * pow2
+}
+
+/// Fold the lane accumulators in lane order — the last stage of every
+/// lane-graph reduction, shared (as code) by the scalar reference and
+/// the AVX2 path, which stores its ymm accumulator to an array and
+/// calls this.
+#[inline]
+pub(crate) fn lane_fold_sum(acc: &[f32; LANE]) -> f32 {
+    let mut s = acc[0];
+    for &a in &acc[1..] {
+        s += a;
+    }
+    s
+}
+
+/// Lane-order fold for maxima. The comparison form `if a > m` (not
+/// `f32::max`) is the semantics of the `maxps` instruction with the
+/// accumulator in the second operand: NaN never wins, an existing
+/// accumulator survives ties.
+#[inline]
+pub(crate) fn lane_fold_max(acc: &[f32; LANE]) -> f32 {
+    let mut m = acc[0];
+    for &a in &acc[1..] {
+        if a > m {
+            m = a;
+        }
+    }
+    m
+}
+
+/// Max over a slice on the [`LANE`]-wide reduction graph. NaN elements
+/// are ignored (comparison semantics, matching both the old
+/// `f32::max` fold and `maxps(x, acc)`), so a poisoned logit row still
+/// produces the max of its ordered elements.
+pub(crate) fn lane_max(xs: &[f32]) -> f32 {
+    let mut acc = [f32::NEG_INFINITY; LANE];
+    let mut groups = xs.chunks_exact(LANE);
+    for g in groups.by_ref() {
+        for j in 0..LANE {
+            if g[j] > acc[j] {
+                acc[j] = g[j];
+            }
+        }
+    }
+    for (j, &x) in groups.remainder().iter().enumerate() {
+        if x > acc[j] {
+            acc[j] = x;
+        }
+    }
+    lane_fold_max(&acc)
+}
+
+/// Sum over one block on the [`LANE`]-wide reduction graph: element `k`
+/// accumulates on lane `k % LANE`, lanes fold in order. Callers fold
+/// per-[`VOCAB_CHUNK`] block results in chunk order, exactly as before —
+/// only the *inside* of a block changed shape.
+pub(crate) fn lane_sum(xs: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANE];
+    let mut groups = xs.chunks_exact(LANE);
+    for g in groups.by_ref() {
+        for j in 0..LANE {
+            acc[j] += g[j];
+        }
+    }
+    for (j, &x) in groups.remainder().iter().enumerate() {
+        acc[j] += x;
+    }
+    lane_fold_sum(&acc)
+}
+
+/// `dst = exp(src - max)` over one block, returning the block's
+/// lane-graph sum — the fused phase-2 softmax primitive. The AVX2 twin
+/// (`kernels::simd`) keeps the accumulators in one ymm register and
+/// reproduces this graph exactly.
+pub(crate) fn exp_sub_sum_block(src: &[f32], dst: &mut [f32], max: f32) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let full = n - n % LANE;
+    let mut acc = [0.0f32; LANE];
+    let mut k = 0;
+    while k < full {
+        for j in 0..LANE {
+            let e = exp_approx(src[k + j] - max);
+            dst[k + j] = e;
+            acc[j] += e;
+        }
+        k += LANE;
+    }
+    for j in 0..(n - full) {
+        let e = exp_approx(src[full + j] - max);
+        dst[full + j] = e;
+        acc[j] += e;
+    }
+    lane_fold_sum(&acc)
+}
+
+/// In-place twin of [`exp_sub_sum_block`] (same graph: the borrow
+/// checker just cannot express `src == dst` through two slices).
+pub(crate) fn exp_sub_sum_block_inplace(blk: &mut [f32], max: f32) -> f32 {
+    let n = blk.len();
+    let full = n - n % LANE;
+    let mut acc = [0.0f32; LANE];
+    let mut k = 0;
+    while k < full {
+        for j in 0..LANE {
+            let e = exp_approx(blk[k + j] - max);
+            blk[k + j] = e;
+            acc[j] += e;
+        }
+        k += LANE;
+    }
+    for j in 0..(n - full) {
+        let e = exp_approx(blk[full + j] - max);
+        blk[full + j] = e;
+        acc[j] += e;
+    }
+    lane_fold_sum(&acc)
+}
 
 /// Verification method (§3.2). `Baseline` and `Exact` are semantically
 /// identical here (the distinction is kernel structure, which only exists
@@ -123,47 +324,87 @@ impl Method {
 
 // ---------------------------------------------------------------------------
 // fp16 emulation (no half type in the vendored crate set)
+//
+// Exact IEEE binary16 conversions at the bit level. These back both the
+// paper's Sigmoid16 rescale (`f16_round`) and the half-precision logit
+// ingestion path (`HostTensor::F16` staging widened inside the kernels'
+// probability-construction pass — see `sampling::kernels::Logits`).
 
-/// Round an f32 to the nearest IEEE binary16 and back (round-to-nearest-
-/// even, overflow to ±inf) — enough to emulate the paper's fp16 rescale.
-pub fn f16_round(x: f32) -> f32 {
+/// Convert an f32 to IEEE binary16 bits: round-to-nearest-even, proper
+/// subnormals, overflow to ±inf, NaN quietened with its top payload
+/// bits kept (the behaviour of hardware `vcvtps2ph`).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
     let bits = x.to_bits();
-    let sign = bits >> 31;
+    let sign = ((bits >> 16) & 0x8000) as u16;
     let exp = ((bits >> 23) & 0xff) as i32;
     let frac = bits & 0x7f_ffff;
     if exp == 0xff {
-        // inf / nan pass through
-        return x;
+        return if frac != 0 {
+            sign | 0x7e00 | ((frac >> 13) as u16 & 0x3ff) // NaN, quiet bit set
+        } else {
+            sign | 0x7c00 // ±inf
+        };
+    }
+    if exp == 0 {
+        // f32 subnormals (< 2^-126) are far below the smallest f16
+        // subnormal (2^-24): round to signed zero
+        return sign;
     }
     let e16 = exp - 127 + 15;
     if e16 >= 0x1f {
-        // overflow -> ±inf
-        return f32::from_bits((sign << 31) | 0x7f80_0000);
+        return sign | 0x7c00; // overflow -> ±inf
     }
     if e16 <= 0 {
-        // subnormal-or-zero in f16; flush tiny values through a scaled
-        // round (adequate here: logits scaled by 1e-3..1e-5 stay normal)
+        // f16 subnormal target: |x| < 2^-25 rounds to zero (ties-to-even
+        // lands on zero at exactly 2^-25, which has e16 = -10)
         if e16 < -10 {
-            return if sign == 1 { -0.0 } else { 0.0 };
+            return sign;
         }
-        let shift = (14 - e16) as u32; // bits to drop from the 24-bit sig
+        // drop bits from the full 24-bit significand onto the 2^-24
+        // grid; a carry to 1024 is the minimum normal and its bit
+        // pattern (exp field 1, mantissa 0) falls out of the addition
         let sig = frac | 0x80_0000;
-        let rounded = round_even(sig, shift);
-        let val = rounded as f32 * (0.5f32).powi(24 - shift as i32 - 1 + 15 + 10);
-        return if sign == 1 { -val } else { val };
+        return sign | round_even(sig, (14 - e16) as u32) as u16;
     }
-    // normal: keep 10 fraction bits of the 23
-    let rounded = round_even(frac, 13);
-    let (frac16, e16) = if rounded >= 1 << 10 {
-        (0u32, e16 + 1)
-    } else {
-        (rounded, e16)
-    };
-    if e16 >= 0x1f {
-        return f32::from_bits((sign << 31) | 0x7f80_0000);
+    // normal: keep 10 of the 23 fraction bits; a mantissa carry
+    // propagates into the exponent field arithmetically, and a carry
+    // out of e16 == 30 lands exactly on the inf pattern 0x7c00
+    let k = ((e16 as u32) << 10) + round_even(frac, 13);
+    if k >= 0x7c00 {
+        return sign | 0x7c00;
     }
-    let exp32 = (e16 - 15 + 127) as u32;
-    f32::from_bits((sign << 31) | (exp32 << 23) | (frac16 << 13))
+    sign | k as u16
+}
+
+/// Widen IEEE binary16 bits to the exactly representable f32 (every
+/// binary16 value is). Signalling NaNs come back quietened (payload
+/// kept, quiet bit set) — the behaviour of hardware `vcvtph2ps`.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        let quiet = if frac != 0 { 0x40_0000 } else { 0 };
+        return f32::from_bits(sign | 0x7f80_0000 | quiet | (frac << 13));
+    }
+    if exp == 0 {
+        if frac == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // subnormal: normalise frac·2^-24 into f32's normal range
+        let p = 31 - frac.leading_zeros(); // msb position, 0..=9
+        let exp32 = p + 103; // p - 24 + 127
+        let mant = (frac << (23 - p)) & 0x7f_ffff;
+        return f32::from_bits(sign | (exp32 << 23) | mant);
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (frac << 13))
+}
+
+/// Round an f32 to the nearest IEEE binary16 and back (round-to-nearest-
+/// even, overflow to ±inf) — the paper's fp16 rescale, emulated exactly.
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
 }
 
 fn round_even(sig: u32, shift: u32) -> u32 {
@@ -199,17 +440,14 @@ pub fn softmax_rows(x: &mut [f32], v: usize) {
 }
 
 /// One softmax row with the fixed-order chunked reduction (shared by the
-/// scalar reference and every parallel schedule).
+/// scalar reference and every parallel schedule): row max and per-block
+/// exp-sums both on the [`LANE`] graph, block partials folded in chunk
+/// order.
 pub(crate) fn softmax_row(row: &mut [f32]) {
-    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let max = lane_max(row);
     let mut sum = 0.0f32;
     for blk in row.chunks_mut(VOCAB_CHUNK) {
-        let mut part = 0.0f32;
-        for e in blk.iter_mut() {
-            *e = (*e - max).exp();
-            part += *e;
-        }
-        sum += part;
+        sum += exp_sub_sum_block_inplace(blk, max);
     }
     let inv = 1.0 / sum;
     for e in row.iter_mut() {
@@ -222,15 +460,10 @@ pub(crate) fn softmax_row(row: &mut [f32]) {
 /// so the result is bit-identical).
 pub(crate) fn softmax_row_from(src: &[f32], dst: &mut [f32]) {
     debug_assert_eq!(src.len(), dst.len());
-    let max = src.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let max = lane_max(src);
     let mut sum = 0.0f32;
     for (sb, db) in src.chunks(VOCAB_CHUNK).zip(dst.chunks_mut(VOCAB_CHUNK)) {
-        let mut part = 0.0f32;
-        for (d, &s) in db.iter_mut().zip(sb) {
-            *d = (s - max).exp();
-            part += *d;
-        }
-        sum += part;
+        sum += exp_sub_sum_block(sb, db, max);
     }
     let inv = 1.0 / sum;
     for e in dst.iter_mut() {
@@ -239,11 +472,15 @@ pub(crate) fn softmax_row_from(src: &[f32], dst: &mut [f32]) {
 }
 
 /// Element-wise sigmoid approximation of softmax (Eq. 5), in place.
+/// Element-wise ops need no lane structure — IEEE mul/add/div are
+/// exactly rounded, so any vectorization is bit-identical for free; the
+/// exponential routes through the shared [`exp_approx`] so the AVX2
+/// twin matches it too.
 pub fn sigmoid_approx(x: &mut [f32], alpha: f32, beta: f32) {
     let inv = 1.0 / (beta - alpha);
     for e in x.iter_mut() {
         let z = (*e - alpha) * inv;
-        *e = 1.0 / (1.0 + (-z).exp());
+        *e = 1.0 / (1.0 + exp_approx(-z));
     }
 }
 
@@ -254,7 +491,7 @@ pub(crate) fn sigmoid_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta: f
     let inv = 1.0 / (beta - alpha);
     for (d, &s) in dst.iter_mut().zip(src) {
         let z = (s - alpha) * inv;
-        *d = 1.0 / (1.0 + (-z).exp());
+        *d = 1.0 / (1.0 + exp_approx(-z));
     }
 }
 
@@ -266,7 +503,7 @@ pub fn sigmoid_approx_fp16(x: &mut [f32], alpha: f32, beta: f32) {
     let denom = f16_round(f16_round(beta) - a16);
     for e in x.iter_mut() {
         let z = f16_round(f16_round(f16_round(*e) - a16) / denom);
-        *e = 1.0 / (1.0 + (-z).exp());
+        *e = 1.0 / (1.0 + exp_approx(-z));
     }
 }
 
@@ -278,7 +515,7 @@ pub(crate) fn sigmoid16_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta:
     let denom = f16_round(f16_round(beta) - a16);
     for (d, &s) in dst.iter_mut().zip(src) {
         let z = f16_round(f16_round(f16_round(s) - a16) / denom);
-        *d = 1.0 / (1.0 + (-z).exp());
+        *d = 1.0 / (1.0 + exp_approx(-z));
     }
 }
 
@@ -309,12 +546,12 @@ pub(crate) fn sigmoid16_row_from(src: &[f32], dst: &mut [f32], alpha: f32, beta:
 #[allow(clippy::neg_cmp_op_on_partial_ord)]
 pub fn inverse_cdf_sample(weights: &[f32], u: f32) -> usize {
     if weights.len() <= VOCAB_CHUNK {
-        // single block: the blocked graph degenerates to the plain
-        // one-pass scan bit-for-bit (a sequential sum IS the lone block
-        // partial, and the in-block scan starts from prefix 0.0), so
-        // take the cheap path — this is the hot slot-parallel case,
-        // every artifact vocab fits in one block
-        let total: f32 = weights.iter().sum();
+        // single block: the blocked graph degenerates to the one-block
+        // case bit-for-bit (the lane-graph sum of the whole slice IS
+        // the lone block partial, and the in-block scan starts from
+        // prefix 0.0), so take the cheap path — this is the hot
+        // slot-parallel case, every artifact vocab fits in one block
+        let total = lane_sum(weights);
         if !(total > 0.0) {
             return argmax_first(weights);
         }
@@ -328,19 +565,10 @@ pub fn inverse_cdf_sample(weights: &[f32], u: f32) -> usize {
         }
         return weights.len() - 1;
     }
-    // multi-block: per-block partials (each a sequential sum of its own
-    // block, the arithmetic every parallel schedule reproduces), then
-    // the shared fold/lookup/scan stages
-    let parts: Vec<f32> = weights
-        .chunks(VOCAB_CHUNK)
-        .map(|blk| {
-            let mut part = 0.0f32;
-            for &w in blk {
-                part += w;
-            }
-            part
-        })
-        .collect();
+    // multi-block: per-block partials (each the lane-graph sum of its
+    // own block, the arithmetic every parallel/SIMD schedule
+    // reproduces), then the shared fold/lookup/scan stages
+    let parts: Vec<f32> = weights.chunks(VOCAB_CHUNK).map(lane_sum).collect();
     inverse_cdf_from_partials(weights, &parts, u)
 }
 
@@ -603,14 +831,15 @@ mod tests {
 
     #[test]
     fn inverse_cdf_blocked_degenerates_to_sequential_for_small_v() {
-        // for v <= VOCAB_CHUNK the blocked graph must reproduce the plain
-        // sequential scan bit-for-bit (one block, prefix 0.0)
+        // for v <= VOCAB_CHUNK the blocked graph must reproduce the
+        // one-block form bit-for-bit: lane-graph total, then the plain
+        // sequential scan from prefix 0.0
         let mut rng = Pcg32::seeded(31);
         for _ in 0..50 {
             let v = 1 + rng.below(VOCAB_CHUNK as u32) as usize;
             let w: Vec<f32> = (0..v).map(|_| rng.uniform_f32()).collect();
             let u = rng.uniform_f32();
-            let total: f32 = w.iter().sum();
+            let total = lane_sum(&w);
             let thresh = u * total;
             let mut cdf = 0.0f32;
             let mut expect = v - 1;
@@ -788,27 +1017,112 @@ mod tests {
     }
 
     #[test]
-    fn softmax_chunked_reduction_matches_plain_sum_for_small_v() {
-        // for v <= VOCAB_CHUNK the chunked fold degenerates to the plain
-        // sequential sum bit-for-bit
+    fn softmax_chunked_reduction_matches_lane_graph_for_small_v() {
+        // for v <= VOCAB_CHUNK the chunked fold degenerates to a single
+        // block, and inside the block the reduction is the pinned 8-lane
+        // accumulator graph: element k sums on lane k % LANE (the tail
+        // continues lanes 0..tail since a full group is LANE-aligned),
+        // lanes folded in lane order
         let mut rng = Pcg32::seeded(21);
-        let v = 97;
+        let v = 97; // deliberately not a multiple of LANE
         let mut chunked = randn(&mut rng, 3 * v, 4.0);
-        let mut plain = chunked.clone();
+        let plain = chunked.clone();
         softmax_rows(&mut chunked, v);
-        for row in plain.chunks_mut(v) {
-            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0f32;
-            for e in row.iter_mut() {
-                *e = (*e - max).exp();
-                sum += *e;
+        for (got, src) in chunked.chunks(v).zip(plain.chunks(v)) {
+            let mut macc = [f32::NEG_INFINITY; LANE];
+            for (k, &s) in src.iter().enumerate() {
+                if s > macc[k % LANE] {
+                    macc[k % LANE] = s;
+                }
             }
-            let inv = 1.0 / sum;
-            for e in row.iter_mut() {
-                *e *= inv;
+            let max = lane_fold_max(&macc);
+            let mut e = vec![0.0f32; v];
+            let mut acc = [0.0f32; LANE];
+            for (k, &s) in src.iter().enumerate() {
+                e[k] = exp_approx(s - max);
+                acc[k % LANE] += e[k];
+            }
+            let inv = 1.0 / lane_fold_sum(&acc);
+            let expect: Vec<f32> = e.iter().map(|x| x * inv).collect();
+            assert_eq!(got, &expect[..]);
+        }
+    }
+
+    #[test]
+    fn exp_approx_tracks_libm_and_handles_specials() {
+        let mut rng = Pcg32::seeded(11);
+        for _ in 0..4000 {
+            let x = (rng.uniform_f32() - 0.5) * 40.0;
+            let got = exp_approx(x);
+            let want = x.exp();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 1e-6, "exp({x}) = {got}, libm {want}");
+        }
+        assert_eq!(exp_approx(0.0), 1.0);
+        assert!(exp_approx(f32::NAN).is_nan());
+        // saturation instead of overflow/underflow: stays finite,
+        // positive, and ordered — indistinguishable through the softmax
+        // normalisation and sigmoid denominators
+        assert!(exp_approx(1000.0).is_finite());
+        assert!(exp_approx(f32::INFINITY) > 1e38);
+        let tiny = exp_approx(-1000.0);
+        assert!(tiny > 0.0 && tiny < 1e-37);
+        assert_eq!(exp_approx(f32::NEG_INFINITY), tiny);
+    }
+
+    #[test]
+    fn lane_reductions_degenerate_to_flat_for_tiny_inputs() {
+        // fewer elements than LANE: every element lands on its own lane,
+        // the fold visits them in order — equal to the flat sum/max
+        let xs = [0.125f32, -2.0, 3.5];
+        assert_eq!(lane_sum(&xs), 0.125 - 2.0 + 3.5);
+        assert_eq!(lane_max(&xs), 3.5);
+        assert_eq!(lane_sum(&[]), 0.0);
+        assert_eq!(lane_max(&[f32::NAN, 1.0]), 1.0); // NaN never wins
+        assert_eq!(lane_max(&[f32::NAN]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_bits_round_trip_exhaustively() {
+        // every binary16 value widens exactly, so narrowing the widened
+        // value must reproduce the original bits; signalling NaNs come
+        // back with the quiet bit set (vcvtph2ps semantics)
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(x);
+            let exp = (h >> 10) & 0x1f;
+            let frac = h & 0x3ff;
+            if exp == 0x1f && frac != 0 {
+                assert!(x.is_nan());
+                assert_eq!(back, h | 0x200, "nan {h:#06x}");
+            } else {
+                assert_eq!(back, h, "{h:#06x} -> {x} -> {back:#06x}");
             }
         }
-        assert_eq!(chunked, plain);
+    }
+
+    #[test]
+    fn f32_to_f16_rounds_to_nearest_even_at_the_edges() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // tie at the inf boundary
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e5), 0xfc00);
+        // subnormal grid: 2^-24 is the smallest f16 subnormal; half of
+        // it ties to even (zero), three quarters rounds up
+        assert_eq!(f32_to_f16_bits(2f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16_bits(1.5 * 2f32.powi(-25)), 0x0001);
+        // f32 subnormals are below half the f16 subnormal ulp
+        assert_eq!(f32_to_f16_bits(f32::from_bits(1)), 0x0000);
+        assert_eq!(f16_bits_to_f32(0x0001), 2f32.powi(-24));
+        assert_eq!(f16_bits_to_f32(0x03ff), 1023.0 * 2f32.powi(-24));
+        assert_eq!(f16_bits_to_f32(0x3555), {
+            // 0.333... in f16: 0x3555 = 2^-2 · (1 + 341/1024)
+            (1.0 + 341.0 / 1024.0) * 0.25
+        });
     }
 
     #[test]
