@@ -344,6 +344,14 @@ impl Engine {
         }
     }
 
+    /// Replace the verifier's kernel scheduling config (threads, chunk
+    /// size, SIMD mode). A test/bench knob: every config is bit-identical
+    /// by contract, and setting it explicitly avoids racing on the
+    /// `SPECD_SIMD` / `SPECD_VERIFY_*` env vars from parallel tests.
+    pub fn set_kernel_config(&mut self, cfg: kernels::KernelConfig) {
+        self.verifier.set_kernel_config(cfg);
+    }
+
     /// The trace header describing this engine's exact configuration —
     /// what a [`crate::trace::TraceRecorder`] is constructed with.
     pub fn trace_header(&self) -> TraceHeader {

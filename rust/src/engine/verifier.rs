@@ -203,8 +203,15 @@ impl Verifier {
     /// Replace the kernel scheduling config (bench/test knob; results
     /// are identical for every config).
     pub fn with_kernel_config(mut self, cfg: KernelConfig) -> Self {
-        self.ws = VerifyWorkspace::new(cfg);
+        self.set_kernel_config(cfg);
         self
+    }
+
+    /// In-place variant of [`Verifier::with_kernel_config`] for callers
+    /// that only hold the verifier through an engine (e.g. SIMD on/off
+    /// parity tests that must not race on `SPECD_SIMD`).
+    pub fn set_kernel_config(&mut self, cfg: KernelConfig) {
+        self.ws = VerifyWorkspace::new(cfg);
     }
 
     /// γ values this verifier can serve for its default method.

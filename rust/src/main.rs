@@ -61,7 +61,7 @@ fn help_text() -> &'static str {
      \x20 eval    --task asr|sum       workload evaluation (WER / ROUGE-1)\n\
      \x20 table   --id t1..t8|all      regenerate a paper table\n\
      \x20 figure  --id f3|f4|f5        regenerate a paper figure's data\n\
-     \x20 trace   record|check|export|fuzz   deterministic execution traces:\n\
+     \x20 trace   record|check|export|fuzz|corpus   deterministic execution traces:\n\
      \x20         record a pipelined sim decode, replay it offline against\n\
      \x20         the scalar oracle, convert binary<->JSON-lines, or fuzz\n\
      \x20         randomized schedules through record-then-check\n\
@@ -456,14 +456,18 @@ fn table(rest: &[String]) -> Result<()> {
 }
 
 fn trace_cmd(rest: &[String]) -> Result<()> {
-    const USAGE: &str = "usage: specd trace record|check|export|fuzz [flags]\n\
+    const USAGE: &str = "usage: specd trace record|check|export|fuzz|corpus [flags]\n\
          \x20 record  --out t.bin [--jsonl --batch N --requests N --max-new N\n\
          \x20         --seed S --agreement A --method M --gamma G --gmax G\n\
          \x20         --gammas \"2,5,7\" --mixed-methods\n\
          \x20         --pipeline on|off --cancel-at step:id[,step:id]]\n\
          \x20 check   --trace t.bin        replay against the scalar oracle\n\
          \x20 export  --trace t.bin --out t.jsonl   binary <-> JSON-lines\n\
-         \x20 fuzz    [--cases N --seed S --smoke]  randomized record-then-check";
+         \x20 fuzz    [--cases N --seed S --case K --serve --smoke]\n\
+         \x20         randomized record-then-check (--serve: real server +\n\
+         \x20         socket client schedules; --case K: re-run one case)\n\
+         \x20 corpus  [--dir D --name N --regen]  gate the committed\n\
+         \x20         trace regression corpus (rust/tests/corpus)";
     let (sub, rest) = match rest.split_first() {
         Some((s, r)) if !s.starts_with('-') => (s.as_str(), r.to_vec()),
         _ => bail!("{USAGE}"),
@@ -473,6 +477,7 @@ fn trace_cmd(rest: &[String]) -> Result<()> {
         "check" => trace_check(&rest),
         "export" => trace_export(&rest),
         "fuzz" => trace_fuzz(&rest),
+        "corpus" => trace_corpus(&rest),
         other => bail!("unknown trace subcommand {other:?}\n{USAGE}"),
     }
 }
@@ -641,15 +646,68 @@ fn trace_fuzz(rest: &[String]) -> Result<()> {
         "randomized pipelined schedules through record-then-check",
     )
     .opt("cases", "20", "number of derived cases")
-    .opt("seed", "7", "fuzz run seed (a failing case number reproduces)")
-    .flag("smoke", "quick 3-case run for CI");
+    .opt("seed", "7", "fuzz run seed (a failing case reproduces from it)")
+    .opt("case", "", "re-derive and re-run exactly this case index, then exit")
+    .flag(
+        "serve",
+        "fuzz the serve layer: a real server over the sim backend, driven \
+         by randomized client schedules through actual sockets",
+    )
+    .flag("smoke", "quick smoke run for CI");
     let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let seed = p.u64("seed").map_err(|e| anyhow!(e))?;
+    let serve = p.flag("serve");
+
+    // reproduction path: exactly one derived case
+    if !p.str("case").is_empty() {
+        let idx: u64 = p
+            .str("case")
+            .parse()
+            .map_err(|_| anyhow!("bad --case {:?} (want a case index)", p.str("case")))?;
+        if serve {
+            let rep = specd::trace::serve_fuzz::run_derived_serve_case(seed, idx)?;
+            println!(
+                "serve case {idx} (seed {seed}) — ok ({} reqs, {} dones, {} overloads, \
+                 {} checked steps)",
+                rep.reqs,
+                rep.dones,
+                rep.queue_full + rep.shed,
+                rep.checked_steps
+            );
+        } else {
+            let label = specd::trace::fuzz::case_label(seed, idx);
+            let report = specd::trace::fuzz::run_derived_case(seed, idx)?;
+            if let Some(d) = report.divergence {
+                bail!("{label} — DIVERGED: {d}");
+            }
+            println!("{label} — ok ({} steps, {} tokens)", report.steps, report.tokens);
+        }
+        return Ok(());
+    }
+
+    if serve {
+        let cases = if p.flag("smoke") {
+            2
+        } else {
+            p.usize("cases").map_err(|e| anyhow!(e))?
+        };
+        let report = specd::trace::serve_fuzz::fuzz_serve(cases, seed, |line| println!("{line}"))?;
+        if let Some(f) = report.failure {
+            bail!("trace fuzz --serve FAILED (seed {seed}): {f}");
+        }
+        println!(
+            "trace fuzz --serve: {} cases clean ({} reqs, {} dones, {} overloads, \
+             {} checked steps)",
+            report.cases, report.reqs, report.dones, report.overloads, report.checked_steps
+        );
+        return Ok(());
+    }
+
     let cases = if p.flag("smoke") {
         3
     } else {
         p.usize("cases").map_err(|e| anyhow!(e))?
     };
-    let seed = p.u64("seed").map_err(|e| anyhow!(e))?;
     let report = specd::trace::fuzz::fuzz(cases, seed, |line| println!("{line}"))?;
     if let Some(f) = report.failure {
         bail!("trace fuzz FAILED (seed {seed}): {f}");
@@ -658,5 +716,59 @@ fn trace_fuzz(rest: &[String]) -> Result<()> {
         "trace fuzz: {} cases clean ({} steps, {} tokens, {} pipeline events)",
         report.cases, report.steps, report.tokens, report.pipeline_events
     );
+    Ok(())
+}
+
+fn trace_corpus(rest: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "trace corpus",
+        "gate the committed trace regression corpus (oracle replay + \
+         byte-exact re-record of every entry)",
+    )
+    .opt(
+        "dir",
+        "",
+        "corpus directory (default: rust/tests/corpus under the crate root)",
+    )
+    .opt("name", "", "gate only the entry with this name")
+    .flag(
+        "regen",
+        "re-record every selected entry in place (intentional semantic \
+         changes only — see docs/TESTING.md)",
+    );
+    let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
+    let dir = if p.str("dir").is_empty() {
+        specd::trace::corpus::default_dir()
+    } else {
+        std::path::PathBuf::from(p.str("dir"))
+    };
+    let name = Some(p.str("name")).filter(|n| !n.is_empty());
+    let regen = p.flag("regen");
+    let report = specd::trace::corpus::run(&dir, name, regen, |line| println!("{line}"))?;
+    if !report.ok() {
+        bail!(
+            "trace corpus FAILED ({}/{} entries):\n{}",
+            report.failures.len(),
+            report.failures.len() + report.entries,
+            report.failures.join("\n")
+        );
+    }
+    if regen {
+        println!(
+            "trace corpus: regenerated {} entries -> {}",
+            report.entries,
+            dir.display()
+        );
+    } else {
+        let seeded = if report.seeded > 0 {
+            format!(", {} seeded — commit the new .sptr files", report.seeded)
+        } else {
+            String::new()
+        };
+        println!(
+            "trace corpus: {} entries clean ({} steps, {} tokens replayed{seeded})",
+            report.entries, report.steps, report.tokens
+        );
+    }
     Ok(())
 }

@@ -170,13 +170,18 @@ impl Server {
         Ok(())
     }
 
-    /// Signal shutdown (in-flight requests finish; accept loop exits on
-    /// the next connection attempt).
+    /// Signal shutdown and join the engine thread (in-flight requests
+    /// finish first; the accept loop exits on the next connection
+    /// attempt). Joining makes post-shutdown reads of shared state —
+    /// e.g. a [`crate::trace::TraceRecorder`] snapshot — race-free: once
+    /// this returns, the engine has recorded its last event.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
         // unblock the accept loop
         let _ = TcpStream::connect(self.addr);
-        let _ = self.engine_handle.lock().unwrap().take();
+        if let Some(h) = self.engine_handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -555,6 +560,14 @@ impl Client {
     /// Send one raw protocol line.
     pub fn send_line(&mut self, line: &str) -> Result<()> {
         writeln!(self.stream, "{line}")?;
+        Ok(())
+    }
+
+    /// Bound how long [`Client::read_event`] blocks (`None` = forever).
+    /// Test harnesses set this so a missing event fails instead of
+    /// hanging the run.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
         Ok(())
     }
 

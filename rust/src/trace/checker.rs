@@ -624,3 +624,172 @@ fn div(step: usize, ts: &SlotStep, field: &'static str, detail: String) -> Diver
         detail,
     }
 }
+
+/// Summary of a structural serve-layer validation ([`serve_check`]).
+#[derive(Debug, Clone, Default)]
+pub struct ServeCheckReport {
+    /// requests admitted into slots
+    pub admits: usize,
+    /// admissions stamped as mid-flight refills
+    pub refills: usize,
+    /// decode steps seen
+    pub steps: usize,
+    /// terminal events (finishing steps + in-slot cancels)
+    pub terminals: usize,
+    /// queue-side cancels (request cancelled before reaching a slot)
+    pub queue_cancels: usize,
+}
+
+/// Validate the serve-layer invariants of a **complete** trace — the
+/// properties the oracle replay ([`check`]) asserts only as a side
+/// effect, plus the lifecycle coverage it cannot: every admitted
+/// request reaches **exactly one** terminal (a finishing step or an
+/// in-slot cancel), admissions land in free slots, refill flags match
+/// slot occupancy, and no slot is still occupied at end of trace.
+///
+/// Purely structural (no model replay), so it works on any backend's
+/// trace — and unlike [`check`] it does not need the `sim` header.
+/// "Complete" means recorded from engine start to quiesce: a trace with
+/// a live `record`-toggle gap will legitimately fail here.
+pub fn serve_check(trace: &Trace) -> Result<ServeCheckReport, String> {
+    let b = trace.header.batch as usize;
+    let mut slots: Vec<Option<u64>> = vec![None; b];
+    // admission order preserved for the end-of-trace sweep
+    let mut admitted: Vec<u64> = Vec::new();
+    let mut terminals: std::collections::HashMap<u64, usize> =
+        std::collections::HashMap::new();
+    let mut report = ServeCheckReport::default();
+
+    for (ev_idx, ev) in trace.events.iter().enumerate() {
+        match ev {
+            TraceEvent::Admit(a) => {
+                let i = a.slot as usize;
+                if i >= b {
+                    return Err(format!(
+                        "event {ev_idx}: admit slot {i} out of range (batch {b})"
+                    ));
+                }
+                if let Some(occ) = slots[i] {
+                    return Err(format!(
+                        "event {ev_idx}: request {} admitted into slot {i} \
+                         still occupied by request {occ}",
+                        a.id
+                    ));
+                }
+                if terminals.contains_key(&a.id) {
+                    return Err(format!(
+                        "event {ev_idx}: request {} admitted twice",
+                        a.id
+                    ));
+                }
+                let mid_flight = slots.iter().any(Option::is_some);
+                if a.refill != mid_flight {
+                    return Err(format!(
+                        "event {ev_idx}: admit of request {} has refill={} but {} \
+                         other slot(s) are occupied",
+                        a.id,
+                        a.refill,
+                        slots.iter().flatten().count()
+                    ));
+                }
+                slots[i] = Some(a.id);
+                admitted.push(a.id);
+                terminals.insert(a.id, 0);
+                report.admits += 1;
+                if a.refill {
+                    report.refills += 1;
+                }
+            }
+            TraceEvent::Step(step) => {
+                report.steps += 1;
+                for ts in &step.slots {
+                    let i = ts.slot as usize;
+                    if i >= b {
+                        return Err(format!(
+                            "event {ev_idx}: step slot {i} out of range"
+                        ));
+                    }
+                    match slots[i] {
+                        Some(id) if id == ts.id => {}
+                        Some(id) => {
+                            return Err(format!(
+                                "event {ev_idx} (step {}): slot {i} steps request {} \
+                                 but holds request {id}",
+                                report.steps, ts.id
+                            ));
+                        }
+                        None => {
+                            return Err(format!(
+                                "event {ev_idx} (step {}): step for request {} in \
+                                 empty slot {i} — the request already terminated",
+                                report.steps, ts.id
+                            ));
+                        }
+                    }
+                    if ts.finish.is_some() {
+                        slots[i] = None;
+                        *terminals.get_mut(&ts.id).expect("admitted above") += 1;
+                        report.terminals += 1;
+                    }
+                }
+            }
+            TraceEvent::Cancel { id, slot: Some(i) } => {
+                let i = *i as usize;
+                if i >= b {
+                    return Err(format!("event {ev_idx}: cancel slot {i} out of range"));
+                }
+                match slots[i].take() {
+                    Some(occ) if occ == *id => {}
+                    Some(occ) => {
+                        return Err(format!(
+                            "event {ev_idx}: cancel says slot {i} holds request {id}, \
+                             trace has request {occ}"
+                        ));
+                    }
+                    None => {
+                        return Err(format!(
+                            "event {ev_idx}: cancel of request {id} in empty slot {i} \
+                             — a second terminal"
+                        ));
+                    }
+                }
+                *terminals.get_mut(id).ok_or_else(|| {
+                    format!("event {ev_idx}: in-slot cancel of never-admitted request {id}")
+                })? += 1;
+                report.terminals += 1;
+            }
+            TraceEvent::Cancel { id, slot: None } => {
+                if slots.contains(&Some(*id)) {
+                    return Err(format!(
+                        "event {ev_idx}: queue-side cancel of request {id} which \
+                         occupies a slot"
+                    ));
+                }
+                report.queue_cancels += 1;
+            }
+            TraceEvent::Pipeline(_) | TraceEvent::Verify { .. } => {}
+        }
+    }
+
+    for id in &admitted {
+        match terminals[id] {
+            1 => {}
+            0 => {
+                return Err(format!(
+                    "request {id} was admitted but never reached a terminal \
+                     (no finishing step, no cancel)"
+                ));
+            }
+            n => {
+                return Err(format!("request {id} reached {n} terminals"));
+            }
+        }
+    }
+    if let Some(i) = slots.iter().position(Option::is_some) {
+        return Err(format!(
+            "slot {i} still occupied by request {} at end of trace",
+            slots[i].unwrap()
+        ));
+    }
+    Ok(report)
+}

@@ -1,0 +1,358 @@
+//! The committed trace regression corpus (`specd trace corpus`).
+//!
+//! A fixed registry of named [`FuzzCase`]s spanning the feature matrix
+//! — mixed methods, ragged γ with mid-flight refill, pipelined on/off,
+//! mid-decode cancels, the fp16-overflow sigmoid τ — each with a
+//! recording committed at `rust/tests/corpus/<name>.sptr`. For every
+//! entry the gate does two independent checks:
+//!
+//! 1. **oracle replay** — [`super::check`] re-executes the *committed*
+//!    trace against the scalar oracle; a change to the sampling
+//!    kernels, the verifier or the commit state machine that would
+//!    alter a historical run is flagged at the exact step/slot/field;
+//! 2. **re-record compare** — the same case is recorded fresh on
+//!    today's engine and diffed against the committed bytes
+//!    ([`super::format::first_difference`]); a change to the engine,
+//!    scheduler or trace layer that perturbs the event stream — an RNG
+//!    stream position, a refill flag, an accept length — is flagged at
+//!    the first differing event.
+//!
+//! Recordings are byte-deterministic for a fixed case (the CI SIMD gate
+//! `cmp`s recordings from independent processes), and the SIMD lane
+//! paths are bit-identical by contract — so one committed file covers
+//! `SPECD_SIMD` on and off. Regeneration (`--regen`) is for
+//! *intentional* semantic changes only and should be called out in
+//! review; see `docs/TESTING.md`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::PipelineMode;
+use crate::sampling::Method;
+
+use super::checker::check;
+use super::format::{self, first_difference};
+use super::fuzz::{record_case, FuzzCase};
+
+/// One named corpus recording.
+pub struct CorpusEntry {
+    /// file stem of the committed recording (`<name>.sptr`)
+    pub name: &'static str,
+    /// one-line description of what the entry pins down
+    pub what: &'static str,
+    /// the deterministic schedule that produced (and reproduces) it
+    pub case: FuzzCase,
+}
+
+/// The corpus registry. Append-only by convention: new feature axes get
+/// new entries; existing entries change only with an intentional
+/// `--regen` (a semantic change to historical runs).
+pub fn entries() -> Vec<CorpusEntry> {
+    vec![
+        CorpusEntry {
+            name: "mixed_methods_pipelined",
+            what: "pipelined batch-2 decode, per-request method overrides, queue churn",
+            case: FuzzCase {
+                batch: 2,
+                n_reqs: 4,
+                mixed_methods: true,
+                seed: 7,
+                ..FuzzCase::default()
+            },
+        },
+        CorpusEntry {
+            name: "ragged_gamma_refill",
+            what: "genuinely ragged γ pins {2,5,7} over 3 slots with mid-flight refill",
+            case: FuzzCase {
+                batch: 3,
+                n_reqs: 6,
+                gmax: 8,
+                pin_gammas: vec![2, 5, 7],
+                mixed_methods: true,
+                seed: 9,
+                ..FuzzCase::default()
+            },
+        },
+        CorpusEntry {
+            name: "serial_baseline",
+            what: "same shape as mixed_methods_pipelined with the pipeline off",
+            case: FuzzCase {
+                batch: 2,
+                n_reqs: 4,
+                mixed_methods: true,
+                pipeline: PipelineMode::Off,
+                seed: 7,
+                ..FuzzCase::default()
+            },
+        },
+        CorpusEntry {
+            name: "cancel_churn",
+            what: "mid-decode cancels landing on live slots during queue churn",
+            case: FuzzCase {
+                batch: 2,
+                n_reqs: 6,
+                mixed_methods: true,
+                cancels: vec![(1, 0), (3, 2)],
+                seed: 21,
+                ..FuzzCase::default()
+            },
+        },
+        CorpusEntry {
+            name: "single_slot_stops",
+            what: "batch-1 decode with token-level stop sequences and γ overrides",
+            case: FuzzCase {
+                batch: 1,
+                n_reqs: 3,
+                max_new: 24,
+                seed: 33,
+                ..FuzzCase::default()
+            },
+        },
+        CorpusEntry {
+            name: "sigmoid16_tau_overflow",
+            what: "fp16-overflow sigmoid τ (NaN rejects every draft) as the engine default",
+            case: FuzzCase {
+                batch: 2,
+                n_reqs: 4,
+                method: Method::sigmoid16(-1e5, 1e5),
+                seed: 12,
+                ..FuzzCase::default()
+            },
+        },
+    ]
+}
+
+/// Where the committed corpus lives in this repository. The CLI default
+/// resolves relative to the crate root at build time; checkouts running
+/// an installed binary pass `--dir`.
+pub fn default_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/corpus")
+}
+
+/// One entry's gate outcome.
+#[derive(Debug, Clone, Default)]
+pub struct EntryOutcome {
+    pub name: String,
+    /// decode steps oracle-replayed from the committed trace
+    pub steps: usize,
+    /// committed tokens verified during replay
+    pub tokens: usize,
+    /// the committed file was absent and has been seeded from a fresh
+    /// (determinism-checked, oracle-replayed) recording
+    pub bootstrapped: bool,
+    /// why the entry failed, pinned to the exact step/field (replay
+    /// divergence) or first differing event (re-record mismatch)
+    pub failure: Option<String>,
+}
+
+/// Seed a missing committed file. Snapshot-test bootstrap semantics:
+/// record the case twice (proving the byte-compare gate is sound for
+/// this case), oracle-replay the recording, then write it. Every later
+/// run byte-compares against the seeded file.
+fn bootstrap_entry(entry: &CorpusEntry, dir: &Path, out: &mut EntryOutcome) {
+    out.bootstrapped = true;
+    let fresh = match record_case(&entry.case) {
+        Ok((t, _rec)) => t,
+        Err(e) => {
+            out.failure = Some(format!("seed recording failed: {e:#}"));
+            return;
+        }
+    };
+    let again = match record_case(&entry.case) {
+        Ok((t, _rec)) => t,
+        Err(e) => {
+            out.failure = Some(format!("seed re-recording failed: {e:#}"));
+            return;
+        }
+    };
+    if let Some(diff) = first_difference(&fresh, &again) {
+        out.failure = Some(format!("case is not record-deterministic: {diff}"));
+        return;
+    }
+    match check(&fresh) {
+        Ok(report) => {
+            out.steps = report.steps;
+            out.tokens = report.tokens;
+            if let Some(d) = report.divergence {
+                out.failure = Some(format!("oracle replay of seed recording: {d}"));
+                return;
+            }
+        }
+        Err(e) => {
+            out.failure = Some(format!("seed recording unreplayable: {e}"));
+            return;
+        }
+    }
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        out.failure = Some(format!("creating {}: {e}", dir.display()));
+        return;
+    }
+    let path = dir.join(format!("{}.sptr", entry.name));
+    if let Err(e) = format::save_binary(&fresh, &path) {
+        out.failure = Some(format!("writing {}: {e}", path.display()));
+    }
+}
+
+/// Gate one entry: oracle-replay the committed recording, then
+/// re-record the case and diff. A missing committed file is seeded
+/// (see [`bootstrap_entry`]) rather than failed, so a fresh checkout
+/// converges to a pinned corpus on first run.
+pub fn verify_entry(entry: &CorpusEntry, dir: &Path) -> EntryOutcome {
+    let mut out = EntryOutcome {
+        name: entry.name.to_string(),
+        ..EntryOutcome::default()
+    };
+    let path = dir.join(format!("{}.sptr", entry.name));
+    if !path.exists() {
+        bootstrap_entry(entry, dir, &mut out);
+        return out;
+    }
+    let committed = match format::load(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            out.failure = Some(format!("cannot load {}: {e}", path.display()));
+            return out;
+        }
+    };
+
+    // 1. the committed historical run must still replay bit-identically
+    match check(&committed) {
+        Ok(report) => {
+            out.steps = report.steps;
+            out.tokens = report.tokens;
+            if let Some(d) = report.divergence {
+                out.failure = Some(format!("oracle replay of committed trace: {d}"));
+                return out;
+            }
+        }
+        Err(e) => {
+            out.failure = Some(format!("committed trace unreplayable: {e}"));
+            return out;
+        }
+    }
+
+    // 2. today's engine must still produce the identical recording
+    let fresh = match record_case(&entry.case) {
+        Ok((t, _rec)) => t,
+        Err(e) => {
+            out.failure = Some(format!("re-recording failed: {e:#}"));
+            return out;
+        }
+    };
+    if let Some(diff) = first_difference(&committed, &fresh) {
+        out.failure = Some(format!("re-record differs from committed trace: {diff}"));
+    }
+    out
+}
+
+/// (Re)record one entry's committed file.
+pub fn regen_entry(entry: &CorpusEntry, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let (trace, _rec) = record_case(&entry.case)
+        .with_context(|| format!("recording corpus entry {}", entry.name))?;
+    let path = dir.join(format!("{}.sptr", entry.name));
+    format::save_binary(&trace, &path).map_err(|e| anyhow::anyhow!(e))?;
+    Ok(())
+}
+
+/// Corpus-gate summary.
+#[derive(Debug, Clone, Default)]
+pub struct CorpusReport {
+    pub entries: usize,
+    pub steps: usize,
+    pub tokens: usize,
+    /// entries whose committed file was absent and has been seeded
+    pub seeded: usize,
+    /// every failing entry (the gate checks all entries before failing)
+    pub failures: Vec<String>,
+}
+
+impl CorpusReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Run the corpus gate (or `--regen` it). `name` filters to a single
+/// entry; `log` receives one line per entry.
+pub fn run(
+    dir: &Path,
+    name: Option<&str>,
+    regen: bool,
+    mut log: impl FnMut(String),
+) -> Result<CorpusReport> {
+    let all = entries();
+    let selected: Vec<&CorpusEntry> = match name {
+        Some(n) => {
+            let found: Vec<_> = all.iter().filter(|e| e.name == n).collect();
+            if found.is_empty() {
+                bail!(
+                    "no corpus entry named {n:?} (have: {})",
+                    all.iter().map(|e| e.name).collect::<Vec<_>>().join(", ")
+                );
+            }
+            found
+        }
+        None => all.iter().collect(),
+    };
+    let mut report = CorpusReport::default();
+    for entry in selected {
+        if regen {
+            regen_entry(entry, dir)?;
+            log(format!("{} — regenerated ({})", entry.name, entry.what));
+            report.entries += 1;
+            continue;
+        }
+        let out = verify_entry(entry, dir);
+        match out.failure {
+            None => {
+                let verb = if out.bootstrapped { "seeded" } else { "ok" };
+                log(format!(
+                    "{} — {verb} ({} steps, {} tokens): {}",
+                    out.name, out.steps, out.tokens, entry.what
+                ));
+                report.entries += 1;
+                report.steps += out.steps;
+                report.tokens += out.tokens;
+                report.seeded += usize::from(out.bootstrapped);
+            }
+            Some(f) => {
+                let line = format!("{} — FAILED: {f}", out.name);
+                log(line.clone());
+                report.failures.push(line);
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_cases_deterministic() {
+        let a = entries();
+        let b = entries();
+        assert_eq!(a.len(), b.len());
+        let mut names: Vec<_> = a.iter().map(|e| e.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), a.len(), "duplicate corpus entry names");
+        for (ea, eb) in a.iter().zip(b.iter()) {
+            assert_eq!(format!("{:?}", ea.case), format!("{:?}", eb.case));
+        }
+    }
+
+    #[test]
+    fn entries_record_deterministically() {
+        // the byte-compare gate is sound only if the same case records
+        // the identical event stream twice — pipeline markers included
+        let entry = &entries()[0];
+        let (t1, _) = record_case(&entry.case).unwrap();
+        let (t2, _) = record_case(&entry.case).unwrap();
+        let diff = first_difference(&t1, &t2);
+        assert_eq!(diff, None, "corpus case is not record-deterministic");
+    }
+}

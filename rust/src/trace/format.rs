@@ -1136,6 +1136,107 @@ pub fn save_jsonl(t: &Trace, path: &Path) -> DecResult<()> {
     std::fs::write(path, to_jsonl(t)).map_err(|e| format!("cannot write {}: {e}", path.display()))
 }
 
+// ---------------------------------------------------------------------------
+// trace diffing
+
+/// Name of a slot-step field that differs between `a` and `b`, with
+/// both values — checked in recording order so the reported field is
+/// the first to disagree.
+fn slot_field_diff(a: &SlotStep, b: &SlotStep) -> Option<(&'static str, String)> {
+    macro_rules! diff {
+        ($field:ident) => {
+            if a.$field != b.$field {
+                return Some((
+                    stringify!($field),
+                    format!("{:?} vs {:?}", a.$field, b.$field),
+                ));
+            }
+        };
+    }
+    diff!(slot);
+    diff!(id);
+    diff!(len_before);
+    diff!(gamma);
+    diff!(method);
+    diff!(rng_state);
+    diff!(rng_inc);
+    diff!(draft);
+    diff!(zq_digest);
+    diff!(zp_digest);
+    diff!(accept_len);
+    diff!(out_row);
+    diff!(committed);
+    diff!(finish);
+    None
+}
+
+/// Locate the first difference between two traces, described down to
+/// the step/slot/field — how `specd trace corpus` reports a committed
+/// recording that a fresh re-record no longer matches.
+///
+/// Returns `None` when the traces are identical.
+pub fn first_difference(a: &Trace, b: &Trace) -> Option<String> {
+    if a.header != b.header {
+        return Some(format!(
+            "headers differ: {:?} vs {:?}",
+            a.header, b.header
+        ));
+    }
+    let mut step_no = 0usize;
+    for (i, (ea, eb)) in a.events.iter().zip(b.events.iter()).enumerate() {
+        if matches!(ea, TraceEvent::Step(_)) || matches!(eb, TraceEvent::Step(_)) {
+            step_no += 1;
+        }
+        if ea == eb {
+            continue;
+        }
+        return Some(match (ea, eb) {
+            (TraceEvent::Step(sa), TraceEvent::Step(sb)) => {
+                for (ta, tb) in sa.slots.iter().zip(sb.slots.iter()) {
+                    if let Some((field, detail)) = slot_field_diff(ta, tb) {
+                        return Some(format!(
+                            "step {step_no} slot {} (request {}): {field} differs — {detail}",
+                            ta.slot, ta.id
+                        ));
+                    }
+                }
+                format!(
+                    "step {step_no}: slot sets differ ({} vs {} slots)",
+                    sa.slots.len(),
+                    sb.slots.len()
+                )
+            }
+            (TraceEvent::Admit(aa), TraceEvent::Admit(ab)) => {
+                let field = if aa.refill != ab.refill {
+                    "refill"
+                } else if aa.rng_state != ab.rng_state || aa.rng_inc != ab.rng_inc {
+                    "rng"
+                } else if aa.params_digest != ab.params_digest {
+                    "params_digest"
+                } else {
+                    "fields"
+                };
+                format!(
+                    "event {i} (before step {}): admit of request {} differs in {field}: \
+                     {aa:?} vs {ab:?}",
+                    step_no + 1,
+                    aa.id
+                )
+            }
+            _ => format!("event {i} (before step {}): {ea:?} vs {eb:?}", step_no + 1),
+        });
+    }
+    if a.events.len() != b.events.len() {
+        return Some(format!(
+            "event counts differ: {} vs {} (first {} identical)",
+            a.events.len(),
+            b.events.len(),
+            a.events.len().min(b.events.len())
+        ));
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

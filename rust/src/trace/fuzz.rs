@@ -261,22 +261,42 @@ impl FuzzReport {
     }
 }
 
+/// One-line description of derived case `idx` — printed per case and
+/// embedded in failure reports so the parameters a seed reproduces are
+/// visible.
+pub fn case_label(run_seed: u64, idx: u64) -> String {
+    let case = derive_case(run_seed, idx);
+    format!(
+        "case {idx}: b={} v={} agree={} method={} mixed={} reqs={} cancels={}",
+        case.batch,
+        case.vocab,
+        case.agreement,
+        case.method.name(),
+        case.mixed_methods,
+        case.n_reqs,
+        case.cancels.len()
+    )
+}
+
+/// Re-derive and re-run exactly one case of a fuzz run — the
+/// `specd trace fuzz --seed N --case K` reproduction path.
+pub fn run_derived_case(run_seed: u64, idx: u64) -> Result<CheckReport> {
+    run_case(&derive_case(run_seed, idx))
+}
+
 /// Record-then-check `n_cases` derived schedules; stops at the first
-/// failure. `log` receives one progress line per case.
+/// failure, whose report carries the `--seed N --case K` line that
+/// reproduces it. `log` receives one progress line per case.
 pub fn fuzz(n_cases: usize, run_seed: u64, mut log: impl FnMut(String)) -> Result<FuzzReport> {
     let mut report = FuzzReport::default();
     for idx in 0..n_cases as u64 {
         let case = derive_case(run_seed, idx);
-        let label = format!(
-            "case {idx}: b={} v={} agree={} method={} mixed={} reqs={} cancels={}",
-            case.batch,
-            case.vocab,
-            case.agreement,
-            case.method.name(),
-            case.mixed_methods,
-            case.n_reqs,
-            case.cancels.len()
-        );
+        let label = case_label(run_seed, idx);
+        let failed = |what: String| {
+            format!(
+                "{label} — {what}\n  reproduce: specd trace fuzz --seed {run_seed} --case {idx}"
+            )
+        };
         match run_case(&case) {
             Ok(cr) if cr.ok() => {
                 log(format!(
@@ -290,12 +310,12 @@ pub fn fuzz(n_cases: usize, run_seed: u64, mut log: impl FnMut(String)) -> Resul
             }
             Ok(cr) => {
                 let d = cr.divergence.expect("not ok");
-                report.failure = Some(format!("{label} — DIVERGED: {d}"));
+                report.failure = Some(failed(format!("DIVERGED: {d}")));
                 log(report.failure.clone().unwrap());
                 return Ok(report);
             }
             Err(e) => {
-                report.failure = Some(format!("{label} — ERROR: {e}"));
+                report.failure = Some(failed(format!("ERROR: {e}")));
                 log(report.failure.clone().unwrap());
                 return Ok(report);
             }
@@ -342,5 +362,24 @@ mod tests {
         let a = derive_case(42, 3);
         let b = derive_case(42, 3);
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn reported_seed_and_case_reproduce_the_same_parameters() {
+        // a failure line names (run_seed, idx); the repro path
+        // (`trace fuzz --seed N --case K`) must re-derive the identical
+        // case AND the identical request schedule from those two values
+        let (run_seed, idx) = (0xFEED_u64, 5u64);
+        let reported = derive_case(run_seed, idx);
+        let reproduced = derive_case(run_seed, idx);
+        assert_eq!(format!("{reported:?}"), format!("{reproduced:?}"));
+        let reqs_a = reported.requests();
+        let reqs_b = reproduced.requests();
+        assert_eq!(format!("{reqs_a:?}"), format!("{reqs_b:?}"));
+        // and the printed label matches what the derived case actually is
+        assert!(
+            case_label(run_seed, idx).contains(&format!("b={}", reported.batch)),
+            "label does not describe the derived case"
+        );
     }
 }

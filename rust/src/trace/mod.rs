@@ -21,6 +21,15 @@
 //!   first divergent step with full context.
 //! * [`fuzz`] — randomized record-then-check schedules
 //!   (methods × γ × batch × cancel/churn) behind `specd trace fuzz`.
+//! * [`serve_fuzz`] — randomized *client* schedules driven through the
+//!   real socket stack ([`crate::server`]) with server-side recording,
+//!   behind `specd trace fuzz --serve`; validates serve-layer
+//!   invariants ([`serve_check`]) on top of the oracle replay.
+//! * [`corpus`] — the committed trace regression corpus
+//!   (`rust/tests/corpus/*.sptr`) behind `specd trace corpus`: named
+//!   recordings spanning the feature matrix, each oracle-replayed and
+//!   byte-compared against a fresh re-record so any change to a
+//!   historical run is caught at the exact step/slot/field.
 //!
 //! The key trick that keeps traces compact and exact: uniforms are
 //! recorded as **RNG stream positions** (`(state, inc)` of the
@@ -28,11 +37,13 @@
 //! bit-for-bit in the engine's draw order.
 
 pub mod checker;
+pub mod corpus;
 pub mod format;
 pub mod fuzz;
 pub mod recorder;
+pub mod serve_fuzz;
 
-pub use checker::{check, CheckReport, Divergence};
+pub use checker::{check, serve_check, CheckReport, Divergence, ServeCheckReport};
 pub use format::{
     digest_f32, digest_i32, params_digest, AdmitEvent, PipelineEv, SimHeader, SlotStep,
     StepEvent, Trace, TraceEvent, TraceHeader, TRACE_VERSION,

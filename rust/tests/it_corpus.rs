@@ -1,0 +1,197 @@
+//! Integration: the committed trace regression corpus.
+//!
+//! Exercises the `specd trace corpus` gate end to end: seeding a fresh
+//! corpus directory (snapshot-test bootstrap), the steady-state verify
+//! pass, `--regen`, and — the point of the gate — mutation tests
+//! proving that perturbing a committed historical run (a flipped
+//! committed token, a flipped refill flag, a shifted RNG stream
+//! position) is flagged at the exact step, slot and field. Runs
+//! artifact-free over the simulated model pair, so it is always on.
+
+use std::path::{Path, PathBuf};
+
+use specd::trace::corpus::{self, entries, regen_entry, verify_entry, CorpusEntry};
+use specd::trace::format::{self, StepEvent};
+use specd::trace::{Trace, TraceEvent};
+
+/// A scratch corpus directory unique to one test (tests run in
+/// parallel within this binary).
+fn scratch(tag: &str) -> PathBuf {
+    let name = format!("specd_it_corpus_{}_{tag}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The first registry entry, seeded into `dir`, with its committed
+/// trace loaded back for mutation.
+fn seeded_entry(dir: &Path) -> (CorpusEntry, Trace) {
+    let entry = entries().remove(0);
+    regen_entry(&entry, dir).expect("seed entry");
+    let trace = format::load(&dir.join(format!("{}.sptr", entry.name))).expect("load seed");
+    (entry, trace)
+}
+
+fn save(trace: &Trace, entry: &CorpusEntry, dir: &Path) {
+    format::save_binary(trace, &dir.join(format!("{}.sptr", entry.name))).expect("save mutant");
+}
+
+/// 1-based decode-step number of event index `idx` (matching the
+/// checker's numbering).
+fn step_number(trace: &Trace, idx: usize) -> usize {
+    trace.events[..=idx]
+        .iter()
+        .filter(|ev| matches!(ev, TraceEvent::Step(_)))
+        .count()
+}
+
+/// Index + step number of the first step whose first slot committed a
+/// token (so a token flip is observable).
+fn step_with_commit(trace: &Trace) -> (usize, usize) {
+    for (idx, ev) in trace.events.iter().enumerate() {
+        if let TraceEvent::Step(s) = ev {
+            if s.slots.first().is_some_and(|sl| !sl.committed.is_empty()) {
+                return (idx, step_number(trace, idx));
+            }
+        }
+    }
+    panic!("no step committed tokens");
+}
+
+fn step_mut(trace: &mut Trace, idx: usize) -> &mut StepEvent {
+    match &mut trace.events[idx] {
+        TraceEvent::Step(s) => s,
+        _ => panic!("event {idx} is not a step"),
+    }
+}
+
+#[test]
+fn gate_seeds_a_fresh_dir_then_verifies_clean() {
+    let dir = scratch("seed");
+    let report = corpus::run(&dir, None, false, |_| {}).expect("seed run");
+    assert!(report.ok(), "seed run failed: {:?}", report.failures);
+    assert_eq!(report.seeded, report.entries, "every entry should seed");
+    assert_eq!(report.entries, entries().len());
+    assert!(report.steps > 0 && report.tokens > 0);
+
+    // steady state: the seeded files now gate byte-exactly
+    let report = corpus::run(&dir, None, false, |_| {}).expect("verify run");
+    assert!(report.ok(), "verify run failed: {:?}", report.failures);
+    assert_eq!(report.seeded, 0, "second run must verify, not re-seed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn regen_overwrites_and_the_next_verify_is_clean() {
+    let dir = scratch("regen");
+    let name = entries()[1].name;
+    let report = corpus::run(&dir, Some(name), true, |_| {}).expect("regen");
+    assert!(report.ok());
+    assert_eq!(report.entries, 1);
+    let out = verify_entry(&entries()[1], &dir);
+    assert!(out.failure.is_none(), "{:?}", out.failure);
+    assert!(!out.bootstrapped, "regen should have left a file to verify");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_entry_name_lists_the_registry() {
+    let dir = scratch("name");
+    let err = corpus::run(&dir, Some("nope"), false, |_| {}).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("nope"), "{msg}");
+    for entry in entries() {
+        assert!(msg.contains(entry.name), "{msg} missing {}", entry.name);
+    }
+}
+
+#[test]
+fn flipped_committed_token_in_corpus_file_is_flagged_at_exact_step() {
+    let dir = scratch("flip_commit");
+    let (entry, mut trace) = seeded_entry(&dir);
+    let (idx, step_no) = step_with_commit(&trace);
+    let slot = {
+        let s = step_mut(&mut trace, idx);
+        let sl = s.slots.first_mut().unwrap();
+        sl.committed[0] ^= 1;
+        sl.slot
+    };
+    save(&trace, &entry, &dir);
+    let out = verify_entry(&entry, &dir);
+    let failure = out.failure.expect("mutation missed");
+    assert!(failure.contains("oracle replay of committed trace"), "{failure}");
+    assert!(failure.contains(&format!("step {step_no} ")), "{failure}");
+    assert!(failure.contains(&format!("slot {slot} ")), "{failure}");
+    assert!(failure.contains("committed diverged"), "{failure}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flipped_refill_flag_in_corpus_file_is_flagged() {
+    let dir = scratch("flip_refill");
+    // ragged_gamma_refill has queue churn, so refill-stamped admits exist
+    let entry = entries().remove(1);
+    regen_entry(&entry, &dir).expect("seed entry");
+    let path = dir.join(format!("{}.sptr", entry.name));
+    let mut trace = format::load(&path).expect("load seed");
+    let mut flipped = false;
+    for ev in &mut trace.events {
+        if let TraceEvent::Admit(a) = ev {
+            a.refill = !a.refill;
+            flipped = true;
+            break;
+        }
+    }
+    assert!(flipped, "trace has no admit events");
+    save(&trace, &entry, &dir);
+    let out = verify_entry(&entry, &dir);
+    let failure = out.failure.expect("mutation missed");
+    assert!(failure.contains("refill diverged"), "{failure}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn perturbed_rng_position_in_corpus_file_is_flagged() {
+    let dir = scratch("rng");
+    let (entry, mut trace) = seeded_entry(&dir);
+    let (idx, step_no) = step_with_commit(&trace);
+    {
+        let s = step_mut(&mut trace, idx);
+        let sl = s.slots.first_mut().unwrap();
+        sl.rng_state = sl.rng_state.wrapping_add(1);
+    }
+    save(&trace, &entry, &dir);
+    let out = verify_entry(&entry, &dir);
+    let failure = out.failure.expect("mutation missed");
+    assert!(failure.contains(&format!("step {step_no} ")), "{failure}");
+    assert!(failure.contains("rng diverged"), "{failure}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_corpus_file_does_not_verify() {
+    // dropping the trailing event may or may not matter to the oracle,
+    // but the byte-exact re-record compare must still refuse it
+    let dir = scratch("trunc");
+    let (entry, mut trace) = seeded_entry(&dir);
+    trace.events.pop().expect("non-empty trace");
+    save(&trace, &entry, &dir);
+    let out = verify_entry(&entry, &dir);
+    let failure = out.failure.expect("truncation missed");
+    let caught = failure.contains("differ")
+        || failure.contains("diverged")
+        || failure.contains("unreplayable");
+    assert!(caught, "{failure}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn committed_repo_corpus_is_green() {
+    // the real gate over the real directory: seeds `rust/tests/corpus`
+    // on a fresh checkout (files are then committed), verifies the
+    // committed recordings byte-exactly thereafter
+    let dir = corpus::default_dir();
+    let report = corpus::run(&dir, None, false, |_| {}).expect("corpus run");
+    assert!(report.ok(), "committed corpus failed: {:?}", report.failures);
+    assert_eq!(report.entries, entries().len());
+}

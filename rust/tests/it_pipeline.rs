@@ -431,6 +431,57 @@ fn ragged_refill_is_deterministic() {
 }
 
 #[test]
+fn ragged_mixed_gamma_simd_on_off_parity() {
+    // the SIMD verify kernels are bit-identical to scalar by contract;
+    // this pins the contract where the lanes are hardest — ragged
+    // per-slot γ pins {2,5,7} with lane-tail γ·V row shapes (V not a
+    // multiple of the lane width) and queue-churn refills, under both
+    // schedulers. SIMD is forced per engine via the verifier's kernel
+    // config, not `SPECD_SIMD`, so parallel tests cannot race the env.
+    use specd::sampling::kernels::{simd::SimdMode, KernelConfig};
+    forall(
+        "ragged γ × SIMD on/off parity",
+        Config { cases: 12, ..Config::default() },
+        |rng, size| {
+            let vocab = [61usize, 67, 97][size % 3]; // lane-tail shapes
+            let agreement = [0.5f32, 0.9, 0.97][rng.below(3) as usize];
+            let spec = sim_spec_g(vocab, agreement, 8);
+            let batch = 1 + size % 3;
+            let max_new = 8 + rng.below(10) as usize;
+            let seed0 = 200 + rng.below(900) as u64;
+            let pipeline = if rng.below(2) == 0 {
+                PipelineMode::On
+            } else {
+                PipelineMode::Off
+            };
+            let n = batch as u64 + rng.below(3) as u64;
+            let reqs = || {
+                let mut rs = base_reqs(n, max_new, seed0);
+                for (k, r) in rs.iter_mut().enumerate() {
+                    r.params = r.params.clone().pin_gamma([2usize, 5, 7][k % 3]);
+                    if k % 2 == 0 {
+                        let m = Method::sigmoid16(-1e3, 1e3);
+                        r.params = r.params.clone().with_method(m);
+                    }
+                }
+                rs
+            };
+            let run = |simd: SimdMode| {
+                let mut e = engine(&spec, batch, Method::Exact, pipeline);
+                e.set_kernel_config(KernelConfig { simd, ..KernelConfig::default() });
+                run_observed(e, reqs())
+            };
+            if run(SimdMode::On) != run(SimdMode::Off) {
+                return Err(format!(
+                    "SIMD on/off diverged: V={vocab} batch={batch} pipeline={pipeline:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn deterministic_across_repeat_runs() {
     // the pipelined engine is deterministic with itself (hit/miss
     // scheduling noise must never leak into outputs)

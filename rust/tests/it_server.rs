@@ -58,6 +58,17 @@ fn start_server() -> Option<Arc<Server>> {
 /// so a single in-flight request saturates the engine and admission
 /// queueing is deterministic from the client's point of view.
 fn start_sim_server(batch: usize, queue_limit: usize) -> Arc<Server> {
+    start_sim_server_cfg(batch, queue_limit, None, None).0
+}
+
+/// Variant with a trace recorder streaming to `trace_path` and/or a
+/// load-shedding deadline for queued requests.
+fn start_sim_server_cfg(
+    batch: usize,
+    queue_limit: usize,
+    trace_path: Option<&std::path::Path>,
+    shed_after: Option<Duration>,
+) -> (Arc<Server>, Option<Arc<specd::trace::TraceRecorder>>) {
     let spec = SimSpec {
         vocab: 128,
         seq_len: 192,
@@ -85,21 +96,27 @@ fn start_sim_server(batch: usize, queue_limit: usize) -> Arc<Server> {
         },
     )
     .unwrap();
+    let rec = trace_path.map(|p| {
+        let r = specd::trace::TraceRecorder::to_file(engine.trace_header(), p).unwrap();
+        Arc::new(r)
+    });
     let chars: Vec<char> = (' '..='~').collect();
     let keep = chars.len().min(vocab - 3);
     let tok = Tokenizer::from_chars(chars[..keep].to_vec(), vocab).unwrap();
-    Arc::new(
+    let server = Arc::new(
         Server::start(
             engine,
             tok,
             ServerConfig {
                 addr: "127.0.0.1:0".into(),
+                trace: rec.clone(),
                 queue_limit,
-                ..Default::default()
+                shed_after,
             },
         )
         .unwrap(),
-    )
+    );
+    (server, rec)
 }
 
 fn spawn_accept(server: &Arc<Server>) -> std::thread::JoinHandle<()> {
@@ -510,6 +527,188 @@ fn bounded_queue_rejects_with_queue_full_and_refills_mid_flight() {
         .request_v2(4, "retry", &SamplingParams::default().with_max_new_tokens(4))
         .unwrap();
     assert_eq!(event(&retry), "done", "{}", retry.dump());
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
+
+#[test]
+fn live_record_toggle_mid_stream_with_active_trace_file() {
+    use specd::server::protocol::render_record;
+    let path = std::env::temp_dir()
+        .join(format!("specd_it_server_toggle_{}.sptr", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let (server, rec) = start_sim_server_cfg(1, 8, Some(&path), None);
+    let rec = rec.expect("recorder attached");
+    let addr = server.addr().to_string();
+    let accept_thread = spawn_accept(&server);
+
+    // a long streaming decode holds the slot while the gate flips
+    let mut c = Client::connect(&addr).unwrap();
+    c.send_generate(
+        1,
+        "the scheduler accepts the drafted tokens",
+        &SamplingParams::default().with_max_new_tokens(150).with_seed(5),
+        true,
+    )
+    .unwrap();
+    let first = c.read_event().unwrap();
+    assert_eq!(event(&first), "delta", "{}", first.dump());
+
+    // flip off, then back on, mid-stream: each flip is acked in order
+    // with the resulting gate state, and deltas keep flowing around the
+    // acks on the same connection
+    let ack_after = |c: &mut Client| loop {
+        let ev = c.read_event().unwrap();
+        match event(&ev) {
+            "record" => break ev,
+            "delta" => {}
+            other => panic!("unexpected event {other:?}: {}", ev.dump()),
+        }
+    };
+    c.send_line(&render_record(900, false)).unwrap();
+    let ack = ack_after(&mut c);
+    assert_eq!(ack.get("id").unwrap().as_i64(), Some(900));
+    assert_eq!(ack.get("enabled").unwrap().as_bool(), Some(false));
+    assert!(!rec.is_enabled(), "gate still on after the off ack");
+    c.send_line(&render_record(901, true)).unwrap();
+    let ack = ack_after(&mut c);
+    assert_eq!(ack.get("id").unwrap().as_i64(), Some(901));
+    assert_eq!(ack.get("enabled").unwrap().as_bool(), Some(true));
+    assert!(rec.is_enabled(), "gate still off after the on ack");
+
+    // the interrupted stream still reaches its terminal, and the
+    // connection serves another request afterwards
+    c.send_cancel(1).unwrap();
+    let done = loop {
+        let ev = c.read_event().unwrap();
+        if event(&ev) != "delta" {
+            break ev;
+        }
+    };
+    assert_eq!(event(&done), "done", "{}", done.dump());
+    assert_eq!(finish(&done), "cancel", "{}", done.dump());
+    let ok = c
+        .request_v2(2, "still healthy", &SamplingParams::default().with_max_new_tokens(4))
+        .unwrap();
+    assert_eq!(event(&ok), "done", "{}", ok.dump());
+
+    // shutdown joins the engine thread, so the file is complete after a
+    // flush — and must decode as a trace that recorded the admit before
+    // the gap (the gate was on when request 1 was admitted)
+    server.shutdown();
+    accept_thread.join().unwrap();
+    rec.flush().unwrap();
+    let trace = specd::trace::format::load(&path).unwrap();
+    let admits = trace
+        .events
+        .iter()
+        .filter(|e| matches!(e, specd::trace::TraceEvent::Admit(_)))
+        .count();
+    assert!(admits >= 1, "trace file lost the pre-toggle admit");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn record_toggle_without_recorder_is_a_structured_error() {
+    use specd::server::protocol::render_record;
+    let server = start_sim_server(1, 4);
+    let addr = server.addr().to_string();
+    let accept_thread = spawn_accept(&server);
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.send_line(&render_record(5, true)).unwrap();
+    let err = c.read_event().unwrap();
+    assert_eq!(event(&err), "error", "{}", err.dump());
+    assert_eq!(err.get("code").unwrap().as_str(), Some("no_recorder"));
+    assert_eq!(err.get("id").unwrap().as_i64(), Some(5));
+
+    // the connection stays usable after the refused toggle
+    let ok = c
+        .request_v2(1, "still healthy", &SamplingParams::default().with_max_new_tokens(4))
+        .unwrap();
+    assert_eq!(event(&ok), "done", "{}", ok.dump());
+
+    server.shutdown();
+    accept_thread.join().unwrap();
+}
+
+#[test]
+fn shed_deadline_racing_queued_cancel_yields_exactly_one_terminal() {
+    let (server, _) = start_sim_server_cfg(1, 8, None, Some(Duration::from_millis(40)));
+    let addr = server.addr().to_string();
+    let accept_thread = spawn_accept(&server);
+
+    // hold the single slot with a long decode
+    let mut a = Client::connect(&addr).unwrap();
+    a.send_generate(
+        1,
+        "the scheduler accepts the drafted tokens",
+        &SamplingParams::default().with_max_new_tokens(150).with_seed(3),
+        true,
+    )
+    .unwrap();
+    let first = a.read_event().unwrap();
+    assert_eq!(event(&first), "delta", "{}", first.dump());
+
+    // queue a second request, then cancel it right at the shed
+    // deadline. Any interleaving is legal — shed first, cancel first,
+    // or (if the slot freed early) a mid-decode cancel — but request 2
+    // must reach EXACTLY one terminal event with a correct code
+    let mut b = Client::connect(&addr).unwrap();
+    b.send_generate(
+        2,
+        "a worker thread verifies",
+        &SamplingParams::default().with_max_new_tokens(8),
+        false,
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(40));
+    b.send_cancel(2).unwrap();
+
+    let term = b.read_event().unwrap();
+    assert_eq!(term.get("id").unwrap().as_i64(), Some(2), "{}", term.dump());
+    match event(&term) {
+        "done" => {
+            // cancel won (queued or mid-decode) or the decode finished
+            // before the cancel landed; all carry the SLO block
+            assert!(matches!(finish(&term), "cancel" | "length"), "{}", term.dump());
+            assert!(term.get("queue_ms").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(term.get("latency_percentiles_ms").is_some(), "{}", term.dump());
+        }
+        "error" => {
+            // shed won: the message carries the server's own wait
+            // accounting, which must honor the configured deadline
+            assert_eq!(term.get("code").unwrap().as_str(), Some("shed"), "{}", term.dump());
+            let msg = term.get("error").unwrap().as_str().unwrap();
+            let nums: Vec<u64> = msg
+                .split(|ch: char| !ch.is_ascii_digit())
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.parse().ok())
+                .collect();
+            assert_eq!(nums.len(), 2, "shed message should carry waited+deadline: {msg}");
+            assert!(nums[0] >= nums[1], "shed before its deadline: {msg}");
+        }
+        other => panic!("unexpected terminal {other:?}: {}", term.dump()),
+    }
+
+    // free the slot so follow-up work can decode un-shed
+    a.send_cancel(1).unwrap();
+    let done_a = loop {
+        let ev = a.read_event().unwrap();
+        if event(&ev) != "delta" {
+            break ev;
+        }
+    };
+    assert_eq!(event(&done_a), "done", "{}", done_a.dump());
+
+    // exactly-one-terminal, observed: the next event on b's connection
+    // is the fresh request's done — not a second terminal for id 2
+    let follow = b
+        .request_v2(3, "follow up", &SamplingParams::default().with_max_new_tokens(4))
+        .unwrap();
+    assert_eq!(event(&follow), "done", "{}", follow.dump());
+    assert_eq!(follow.get("id").unwrap().as_i64(), Some(3));
 
     server.shutdown();
     accept_thread.join().unwrap();
