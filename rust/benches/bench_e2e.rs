@@ -131,11 +131,13 @@ fn verify_path_section(cfg: BenchConfig) -> (Value, f64) {
     (section, speedup)
 }
 
-/// The PR 5 tentpole quantity: the same decode workload through the
-/// serial loop and the pipelined scheduler, over the simulated model
-/// pair (no artifacts needed) on the native verify path. Outputs are
-/// asserted bit-identical before anything is timed; the speedup is pure
-/// scheduling.
+/// The PR 5 tentpole quantity, generalized by PR 10 to a depth-k
+/// speculation window with per-slot partial-hit adoption: the same
+/// decode workload through the serial loop and the pipelined scheduler
+/// at window depths k ∈ {1,2,3}, over the simulated model pair (no
+/// artifacts needed) on the native verify path. Outputs are asserted
+/// bit-identical for every (k, salvage) cell before anything is timed;
+/// the speedups are pure scheduling.
 fn pipeline_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
     let spec = SimSpec {
         vocab: 4096,
@@ -145,9 +147,11 @@ fn pipeline_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
         seed: 0xC0FF_EE11,
         // high draft/target agreement + a short pinned γ keep the
         // all-accept rate (and so the prefetch hit rate) high — the
-        // regime speculative decoding is deployed in; the speculation
-        // is all-or-nothing per step, so its win scales with
-        // P(all B·γ drafts accepted)
+        // regime speculative decoding is deployed in. A full barrier
+        // hit still needs all B·γ drafts accepted, but partial-hit
+        // adoption salvages the slots whose prediction held when the
+        // barrier misses, so the effective per-slot hit rate sits well
+        // above the all-or-nothing block rate at B=4
         agreement: 0.99,
         // emulated device-dispatch latency per model call — the wall
         // time the pipeline exists to hide verification behind
@@ -174,7 +178,7 @@ fn pipeline_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
             })
             .collect()
     };
-    let engine = |b: usize, pipeline: PipelineMode| -> Engine {
+    let engine = |b: usize, pipeline: PipelineMode, depth: usize, salvage: bool| -> Engine {
         let rt = Arc::new(Runtime::simulated(spec.clone()));
         Engine::new(
             rt,
@@ -188,62 +192,100 @@ fn pipeline_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
                 gamma_pinned: true,
                 self_draft: false,
                 pipeline,
+                pipeline_depth: depth,
+                pipeline_salvage: salvage,
                 seed: 7,
             },
         )
         .expect("sim engine")
     };
 
+    // window depths timed per batch; the headline speedup (and the
+    // `pipeline_speedups` gate series) uses the default depth
+    const DEPTHS: [usize; 3] = [1, 2, 3];
+    const HEADLINE_K: usize = 2;
+
     let mut rows: Vec<Value> = Vec::new();
     let mut speedups: Vec<(usize, f64)> = Vec::new();
     for b in [1usize, 2, 4] {
-        // correctness first: identical outputs, token for token
-        let serial_out = engine(b, PipelineMode::Off).generate(reqs(b)).unwrap();
-        let mut pipe_engine = engine(b, PipelineMode::On);
-        let pipe_out = pipe_engine.generate(reqs(b)).unwrap();
-        assert_eq!(serial_out.len(), pipe_out.len());
-        for (x, y) in serial_out.iter().zip(&pipe_out) {
-            assert_eq!(
-                x.token_ids, y.token_ids,
-                "pipelined decode must be bit-identical to serial (B={b})"
-            );
+        // correctness first: identical outputs, token for token, for
+        // every window depth × salvage mode that gets timed below
+        let serial_out = engine(b, PipelineMode::Off, 1, true)
+            .generate(reqs(b))
+            .unwrap();
+        let tokens: usize = serial_out.iter().map(|r| r.token_ids.len()).sum();
+        let mut headline_stats = None;
+        for depth in DEPTHS {
+            for salvage in [true, false] {
+                let mut pipe_engine = engine(b, PipelineMode::On, depth, salvage);
+                let pipe_out = pipe_engine.generate(reqs(b)).unwrap();
+                assert_eq!(serial_out.len(), pipe_out.len());
+                for (x, y) in serial_out.iter().zip(&pipe_out) {
+                    assert_eq!(
+                        x.token_ids, y.token_ids,
+                        "pipelined decode must be bit-identical to serial \
+                         (B={b} k={depth} salvage={salvage})"
+                    );
+                }
+                if depth == HEADLINE_K && salvage {
+                    headline_stats = pipe_engine.pipeline_stats();
+                }
+            }
         }
-        let (launched, hits) = pipe_engine.pipeline_stats().unwrap();
-        let hit_rate = if launched > 0 {
-            hits as f64 / launched as f64
+        let stats = headline_stats.expect("pipeline enabled");
+        let full_hit_rate = if stats.blocks > 0 {
+            stats.full_hits as f64 / stats.blocks as f64
         } else {
             0.0
         };
-        let tokens: usize = serial_out.iter().map(|r| r.token_ids.len()).sum();
+        let effective_hit_rate = stats.effective_hit_rate();
 
-        let mut serial_engine = engine(b, PipelineMode::Off);
+        let mut serial_engine = engine(b, PipelineMode::Off, 1, true);
         let serial = bench(&format!("decode/serial-b{b}"), cfg, || {
             let out = serial_engine.generate(reqs(b)).unwrap();
             black_box(out);
         });
         println!("{}", serial.row());
-        let mut pipe_engine = engine(b, PipelineMode::On);
-        let pipelined = bench(&format!("decode/pipelined-b{b}"), cfg, || {
-            let out = pipe_engine.generate(reqs(b)).unwrap();
-            black_box(out);
-        });
-        println!("{}", pipelined.row());
-
-        let speedup = serial.mean_secs() / pipelined.mean_secs();
+        let mut depth_rows: Vec<Value> = Vec::new();
+        for depth in DEPTHS {
+            let mut pipe_engine = engine(b, PipelineMode::On, depth, true);
+            let pipelined = bench(&format!("decode/pipelined-b{b}-k{depth}"), cfg, || {
+                let out = pipe_engine.generate(reqs(b)).unwrap();
+                black_box(out);
+            });
+            println!("{}", pipelined.row());
+            let speedup = serial.mean_secs() / pipelined.mean_secs();
+            if depth == HEADLINE_K {
+                speedups.push((b, speedup));
+            }
+            depth_rows.push(obj(vec![
+                ("depth", depth.into()),
+                ("pipelined", pipelined.to_json()),
+                ("speedup", Value::Num(speedup)),
+            ]));
+        }
         println!(
-            "  B={b}: {tokens} tokens/run, prefetch hit rate {:.0}%, \
-             pipeline speedup {speedup:.2}x\n",
-            hit_rate * 100.0
+            "  B={b}: {tokens} tokens/run, full-hit rate {:.0}%, effective \
+             (full + salvaged) hit rate {:.0}%, {} slot-rows salvaged / {} \
+             redone over {} partial hits\n",
+            full_hit_rate * 100.0,
+            effective_hit_rate * 100.0,
+            stats.slots_salvaged,
+            stats.slots_redone,
+            stats.partial_hits
         );
         rows.push(obj(vec![
             ("batch", b.into()),
             ("tokens_per_run", tokens.into()),
-            ("hit_rate", Value::Num(hit_rate)),
+            ("hit_rate", Value::Num(full_hit_rate)),
+            ("effective_hit_rate", Value::Num(effective_hit_rate)),
+            ("full_hits", (stats.full_hits as i64).into()),
+            ("partial_hits", (stats.partial_hits as i64).into()),
+            ("slots_salvaged", (stats.slots_salvaged as i64).into()),
+            ("slots_redone", (stats.slots_redone as i64).into()),
             ("serial", serial.to_json()),
-            ("pipelined", pipelined.to_json()),
-            ("speedup", Value::Num(speedup)),
+            ("depths", Value::Arr(depth_rows)),
         ]));
-        speedups.push((b, speedup));
     }
 
     let section = obj(vec![
@@ -253,6 +295,11 @@ fn pipeline_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
             "model_delay_us",
             (spec.model_delay.as_micros() as i64).into(),
         ),
+        (
+            "window_depths",
+            Value::Arr(DEPTHS.iter().map(|d| (*d).into()).collect()),
+        ),
+        ("headline_depth", HEADLINE_K.into()),
         ("rows", Value::Arr(rows)),
     ]);
     (section, speedups)
@@ -309,6 +356,8 @@ fn trace_overhead_section(cfg: BenchConfig) -> (Value, Vec<(usize, f64)>) {
                 gamma_pinned: true,
                 self_draft: false,
                 pipeline: PipelineMode::On,
+                pipeline_depth: 2,
+                pipeline_salvage: true,
                 seed: 7,
             },
         )

@@ -1,55 +1,75 @@
 //! Figure 3 (kernel level): verification time vs γ at a paper-scale
 //! vocabulary, per method. Prints a CSV series (measured PJRT-CPU) plus
-//! the simulated A100 series.
+//! the simulated A100 series, and emits the shared schema-1 snapshot
+//! envelope on `--json <path>`.
 //!
-//! `cargo bench --bench bench_gamma_sweep`
+//! `cargo bench --bench bench_gamma_sweep [-- --smoke] [--json out.json]`
+//!
+//! The measured series needs the AOT verify artifacts (`make
+//! artifacts`); without them it skips itself with a notice and only the
+//! simulated-A100 series (pure analytical model, no artifacts) is
+//! produced — so the CI `--smoke` run works on an artifact-free
+//! checkout.
 
 use std::sync::Arc;
 
 use specd::runtime::{HostTensor, Runtime};
 use specd::sampling::Method;
 use specd::simulator::{simulate_step, DeviceProfile, SimConfig};
-use specd::util::bench::{bench, BenchConfig};
+use specd::util::bench::{bench, snapshot_envelope, write_json, BenchOpts};
+use specd::util::json::{obj, Value};
 use specd::util::rng::Pcg32;
 
+const GAMMAS: [usize; 8] = [1, 2, 3, 5, 8, 10, 15, 20];
+const METHODS: [&str; 3] = ["baseline", "exact", "sigmoid"];
+/// Whisper-scale vocabulary for the simulated-A100 series (paper Fig. 3).
+const SIM_VOCAB: usize = 51865;
+
 fn main() {
-    let rt = Arc::new(Runtime::open_default().expect("run `make artifacts` first"));
+    let opts = BenchOpts::from_args();
+    let cfg = opts.config();
     let dev = DeviceProfile::by_name("a100").unwrap();
+
+    let rt = match Runtime::open_default() {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            println!("skipping measured series: artifacts unavailable ({e:#})");
+            None
+        }
+    };
     // prefer the paper-scale 32k vocab artifacts; fall back to 4096 (quick set)
-    let v = if rt.manifest.verify("baseline", 1, 5, 32768).is_ok() {
-        32768
-    } else {
-        4096
+    let v = match &rt {
+        Some(rt) if rt.manifest.verify("baseline", 1, 5, 32768).is_ok() => 32768,
+        _ => 4096,
     };
-    let cfg = BenchConfig {
-        warmup_iters: 2,
-        min_iters: 10,
-        max_iters: 60,
-        max_time: std::time::Duration::from_millis(1200),
-    };
+
     println!("gamma,method,meas_ms,sim_a100_ms   (V={v}, B=1)");
-    for g in [1usize, 2, 3, 5, 8, 10, 15, 20] {
-        for method in ["baseline", "exact", "sigmoid"] {
-            let Ok(exe) = rt.load_verify(method, 1, g, v) else {
-                continue;
-            };
-            let mut rng = Pcg32::seeded(g as u64);
-            let z_p: Vec<f32> = (0..(g + 1) * v).map(|_| rng.gaussian() as f32 * 3.0).collect();
-            let z_q: Vec<f32> = (0..g * v).map(|_| rng.gaussian() as f32 * 3.0).collect();
-            let mut inputs = vec![
-                HostTensor::f32(&[1, g + 1, v], z_p),
-                HostTensor::f32(&[1, g, v], z_q),
-                HostTensor::i32(&[1, g], (0..g as i32).collect()),
-                HostTensor::f32(&[1, g], vec![0.5; g]),
-                HostTensor::f32(&[1], vec![0.4]),
-                HostTensor::f32(&[1], vec![0.6]),
-            ];
-            if method == "sigmoid" {
-                inputs.push(HostTensor::f32(&[2], vec![-1e3, 1e3]));
-            }
-            let r = bench(&format!("{method}/g{g}"), cfg, || {
-                let out = exe.run(&inputs).unwrap();
-                specd::util::bench::black_box(out);
+    let mut rows: Vec<Value> = Vec::new();
+    for g in GAMMAS {
+        for method in METHODS {
+            let meas_ms = rt.as_ref().and_then(|rt| {
+                let exe = rt.load_verify(method, 1, g, v).ok()?;
+                let mut rng = Pcg32::seeded(g as u64);
+                let z_p: Vec<f32> = (0..(g + 1) * v)
+                    .map(|_| rng.gaussian() as f32 * 3.0)
+                    .collect();
+                let z_q: Vec<f32> = (0..g * v).map(|_| rng.gaussian() as f32 * 3.0).collect();
+                let mut inputs = vec![
+                    HostTensor::f32(&[1, g + 1, v], z_p),
+                    HostTensor::f32(&[1, g, v], z_q),
+                    HostTensor::i32(&[1, g], (0..g as i32).collect()),
+                    HostTensor::f32(&[1, g], vec![0.5; g]),
+                    HostTensor::f32(&[1], vec![0.4]),
+                    HostTensor::f32(&[1], vec![0.6]),
+                ];
+                if method == "sigmoid" {
+                    inputs.push(HostTensor::f32(&[2], vec![-1e3, 1e3]));
+                }
+                let r = bench(&format!("{method}/g{g}"), cfg, || {
+                    let out = exe.run(&inputs).unwrap();
+                    specd::util::bench::black_box(out);
+                });
+                Some(r.summary.mean * 1e3)
             });
             let m = match method {
                 "baseline" => Method::Baseline,
@@ -58,14 +78,36 @@ fn main() {
             };
             let sim = simulate_step(
                 dev,
-                SimConfig { batch: 1, gamma: g, vocab: 51865, dtype_bytes: 2 },
+                SimConfig { batch: 1, gamma: g, vocab: SIM_VOCAB, dtype_bytes: 2 },
                 m,
             );
-            println!(
-                "{g},{method},{:.4},{:.3}",
-                r.summary.mean * 1e3,
-                sim.step_time * 1e3
-            );
+            let sim_ms = sim.step_time * 1e3;
+            match meas_ms {
+                Some(ms) => println!("{g},{method},{ms:.4},{sim_ms:.3}"),
+                None => println!("{g},{method},,{sim_ms:.3}"),
+            }
+            rows.push(obj(vec![
+                ("gamma", (g as i64).into()),
+                ("method", method.into()),
+                ("meas_ms", meas_ms.map_or(Value::Null, Value::Num)),
+                ("sim_a100_ms", Value::Num(sim_ms)),
+            ]));
         }
+    }
+
+    if let Some(path) = &opts.json {
+        let report = snapshot_envelope(
+            "bench_gamma_sweep",
+            opts.smoke,
+            vec![
+                ("measured", Value::Bool(rt.is_some())),
+                ("vocab", (v as i64).into()),
+                ("sim_vocab", (SIM_VOCAB as i64).into()),
+                ("sim_device", "a100".into()),
+                ("rows", Value::Arr(rows)),
+            ],
+        );
+        write_json(path, &report).expect("writing bench json");
+        println!("wrote {}", path.display());
     }
 }

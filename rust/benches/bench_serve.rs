@@ -59,6 +59,8 @@ fn sim_engine(seed: u64) -> (Engine, Tokenizer) {
             gamma_pinned: false,
             self_draft: false,
             pipeline: PipelineMode::On,
+            pipeline_depth: 2,
+            pipeline_salvage: true,
             seed,
         },
     )

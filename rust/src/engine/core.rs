@@ -37,21 +37,24 @@
 //! ## The pipelined scheduler
 //!
 //! With [`PipelineMode`] enabled (the default on the native verify
-//! backend), phases 1–2 of step N+1 run **concurrently** with phase 3
-//! of step N: after step N's logits are staged and its verification
-//! uniforms drawn, the engine predicts step N's commit under the
-//! all-accept assumption (the γ drafts plus a bonus token computed with
-//! the verifier's exact arithmetic), ships step N+1's model block to a
-//! dedicated dispatcher lane against that speculative state, and only
-//! then runs step N's verification kernels on the worker pool. Step N's
-//! commit is the pipeline barrier: a correct prediction lets step N+1
-//! adopt the prefetched buffers and RNG streams wholesale; any
-//! mismatch discards them and step N+1 dispatches serially from
-//! untouched state. Either way the observable outputs — committed
-//! tokens, streaming deltas, stats counters, per-slot RNG streams — are
-//! **bit-identical** to the serial loop for any seed (asserted by the
-//! `it_pipeline` parity suite). The machinery lives in
-//! [`crate::engine::pipeline`].
+//! backend), model dispatch of the next up-to-k steps runs
+//! **concurrently** with this step's CPU verification: after step N's
+//! logits are staged and its verification uniforms drawn, the engine
+//! predicts step N's commit under the all-accept assumption (the γ
+//! drafts plus a bonus token computed with the verifier's exact
+//! arithmetic) and ships a **chain job** to a dedicated dispatcher
+//! lane, which computes the model blocks of steps N+1..N+k against
+//! successively deeper predictions (`--pipeline-depth`, default 2).
+//! Each step's commit is a **per-slot** pipeline barrier: a slot whose
+//! prediction held adopts its prefetched rows and RNG stream; a missed
+//! slot is redone in a reduced serial block whose rows are spliced
+//! into the adopted generation at the final γ-prefix offsets, and its
+//! chain predictions are invalidated through every deeper block
+//! (cascade-cancel when no slot survives). Either way the observable
+//! outputs — committed tokens, streaming deltas, stats counters,
+//! per-slot RNG streams — are **bit-identical** to the serial loop for
+//! any seed, schedule, and depth (asserted by the `it_pipeline` parity
+//! suite). The machinery lives in [`crate::engine::pipeline`].
 //!
 //! Per-request policy lives in [`SamplingParams`] and is honored
 //! per-slot: target/draft temperatures, top-k/top-p truncation of the
@@ -94,7 +97,8 @@ use crate::util::rng::Pcg32;
 
 use super::gamma::GammaController;
 use super::pipeline::{
-    run_model_block, BlockDims, BlockSlot, PipelineCtl, PipelineMode, StepBuffers,
+    self, run_model_block, BlockDims, BlockSlot, ChainBlock, ChainSlotInfo, PipelineCtl,
+    PipelineMode, PipelineStats, StepBuffers,
 };
 use super::request::{
     match_stop_suffix, FinishReason, GenRequest, GenResult, SamplingParams,
@@ -129,6 +133,16 @@ pub struct EngineConfig {
     /// overlap next-step model dispatch with CPU verification
     /// (`auto` = on for [`Backend::Native`] speculative decoding)
     pub pipeline: PipelineMode,
+    /// speculation-window depth k: how many future steps' model blocks
+    /// the chain job may run ahead of the commit barrier (clamped to
+    /// 1..=8; forced to 1 on the HLO backend, whose rectangular verify
+    /// programs the lane-side γ planner does not model)
+    pub pipeline_depth: usize,
+    /// per-slot partial-hit adoption: on a barrier miss, keep the
+    /// prefetched rows of every slot whose prediction held and redo
+    /// only the missed slots. `false` restores the all-or-nothing
+    /// barrier (one missed slot discards the whole window)
+    pub pipeline_salvage: bool,
     pub seed: u64,
 }
 
@@ -144,6 +158,8 @@ impl Default for EngineConfig {
             gamma_pinned: false,
             self_draft: false,
             pipeline: PipelineMode::Auto,
+            pipeline_depth: 2,
+            pipeline_salvage: true,
             seed: 0,
         }
     }
@@ -244,10 +260,16 @@ pub struct Engine {
     verify_out: VerifyOutput,
     /// pipelined-scheduler state; `None` = strict serial loop
     pipeline: Option<PipelineCtl>,
-    /// bumped on every slot-set mutation (admit fill, finish, cancel);
-    /// an in-flight prefetch launched under an older epoch is discarded
-    /// at the barrier
-    slot_epoch: u64,
+    /// scratch: per-slot barrier verdicts for the pending chain
+    /// prediction of this step
+    verdict_buf: Vec<bool>,
+    /// scratch: per-slot salvage decisions when consuming a prefetched
+    /// chain block
+    salv_buf: Vec<bool>,
+    /// scratch: the reduced redo block's packed γ-prefix offsets, saved
+    /// before the final ragged layout is rebuilt for splicing
+    redo_q: Vec<usize>,
+    redo_p: Vec<usize>,
     /// scratch row for the bonus-token prediction (V elements)
     bonus_row: Vec<f32>,
     /// scratch tail for predicted stop-sequence matching
@@ -295,8 +317,16 @@ impl Engine {
             );
         }
         let b = config.batch;
+        // effective speculation-window depth: the HLO backend's
+        // rectangular verify programs are not modelled by the lane-side
+        // γ planner, so the chain never runs deeper than one block there
+        let depth = if config.backend == Backend::Hlo {
+            1
+        } else {
+            config.pipeline_depth.clamp(1, 8)
+        };
         let pipeline = if config.pipeline.enabled(config.mode, config.backend) {
-            Some(PipelineCtl::new())
+            Some(PipelineCtl::new(depth))
         } else {
             None
         };
@@ -323,7 +353,10 @@ impl Engine {
             methods_buf: vec![config.method; b],
             verify_out: VerifyOutput::default(),
             pipeline,
-            slot_epoch: 0,
+            verdict_buf: Vec::with_capacity(b),
+            salv_buf: Vec::with_capacity(b),
+            redo_q: Vec::with_capacity(b + 1),
+            redo_p: Vec::with_capacity(b + 1),
             bonus_row: vec![0.0; vocab],
             stop_scratch: Vec::new(),
             trace: Arc::new(NullSink),
@@ -375,6 +408,7 @@ impl Engine {
             }
             .into(),
             pipeline: self.config.pipeline.name().into(),
+            pipeline_depth: self.pipeline.as_ref().map_or(1, |ctl| ctl.depth() as u32),
             gamma_init: self.config.gamma_init as u32,
             gamma_pinned: self.config.gamma_pinned,
             self_draft: self.config.self_draft,
@@ -517,11 +551,12 @@ impl Engine {
                     latency: s.started.elapsed().as_secs_f64(),
                 });
                 self.stats.finished += 1;
-                // the slot set changed: any in-flight prefetch was built
-                // against the old set — invalidate it at the barrier
-                self.slot_epoch += 1;
-                if let Some(ctl) = &self.pipeline {
-                    ctl.cancel_inflight();
+                // the slot's chain predictions were built against the
+                // cancelled request — invalidate them through every
+                // in-flight generation (cascade-cancels when it was the
+                // last valid slot)
+                if let Some(ctl) = &mut self.pipeline {
+                    ctl.invalidate_slot(i);
                 }
                 if self.trace.enabled() {
                     self.trace.record(TraceEvent::Cancel {
@@ -564,10 +599,11 @@ impl Engine {
             .collect()
     }
 
-    /// Pipelined-scheduler counters `(prefetches launched, barrier
-    /// hits)`; `None` when the pipeline is disabled.
-    pub fn pipeline_stats(&self) -> Option<(u64, u64)> {
-        self.pipeline.as_ref().map(|ctl| (ctl.launched, ctl.hits))
+    /// Pipelined-scheduler counters (chains launched, blocks consumed,
+    /// full/partial barrier hits, per-slot salvage totals, per-depth
+    /// breakdown); `None` when the pipeline is disabled.
+    pub fn pipeline_stats(&self) -> Option<PipelineStats> {
+        self.pipeline.as_ref().map(|ctl| ctl.stats.clone())
     }
 
     /// Submit-all + run-to-completion convenience.
@@ -685,7 +721,11 @@ impl Engine {
                 accepted: 0,
                 started: Instant::now(),
             });
-            self.slot_epoch += 1;
+            // note: no chain invalidation here — a prefetched chain only
+            // ever covers slots that were active at launch, and request
+            // ids are assumed unique per engine lifetime, so a refilled
+            // slot can never alias a chain prediction (the per-slot
+            // `chain_slot_ok` id check enforces it)
         }
     }
 
@@ -733,13 +773,12 @@ impl Engine {
         headroom: usize,
         method: Method,
     ) -> usize {
-        let mut want = ctl.effective(headroom);
-        if !slot.req.params.gamma_pinned {
-            if let Some(cap) = slot.req.params.gamma {
-                want = want.min(cap).max(1);
-            }
-        }
-        Self::snap_gamma(&verifier.available_gammas_for(method), want)
+        let cap = if slot.req.params.gamma_pinned {
+            None
+        } else {
+            slot.req.params.gamma
+        };
+        pipeline::plan_gamma(&verifier.available_gammas_for(method), ctl, headroom, cap)
     }
 
     /// HLO verify artifacts are rectangular `(method, B, γ)` programs —
@@ -763,7 +802,7 @@ impl Engine {
             );
         }
         if let Some(w) = plan.iter().copied().filter(|&g| g > 0).min() {
-            let g = Self::snap_gamma(&avail, w);
+            let g = pipeline::snap_gamma(&avail, w);
             for x in plan.iter_mut() {
                 if *x > 0 {
                     *x = g;
@@ -771,17 +810,6 @@ impl Engine {
             }
         }
         Ok(())
-    }
-
-    /// Snap a wanted γ down to artifact availability (the γ set common
-    /// to every active slot's verification method).
-    fn snap_gamma(avail: &[usize], want: usize) -> usize {
-        avail
-            .iter()
-            .copied()
-            .filter(|&g| g <= want)
-            .max()
-            .unwrap_or_else(|| avail.first().copied().unwrap_or(1))
     }
 
     /// Execute one decode step across all active slots.
@@ -863,6 +891,224 @@ impl Engine {
             }
         }
         res.map(|_| ())
+    }
+
+    /// Consume one prefetched chain block as this step's model block.
+    /// Per-slot salvage decision: a slot adopts its prefetched rows iff
+    /// its chain predictions have held at every barrier so far
+    /// (`chain_slot_ok`) and the block's shape matches this step's
+    /// replan (same request id, committed length, and γ — on the native
+    /// backend these are implied by chain validity; the explicit guards
+    /// make adoption fail safe rather than fail wrong). A full hit
+    /// swaps the whole generation in; a partial hit redoes the missed
+    /// slots in a reduced serial block and splices; zero salvageable
+    /// slots fall back to the plain serial dispatch.
+    fn consume_chain_block(&mut self, block: ChainBlock) -> Result<()> {
+        let b = self.config.batch;
+        let ChainBlock {
+            depth,
+            bufs: bbufs,
+            slots: bslots,
+            predicted_next,
+        } = block;
+        let mut salv = std::mem::take(&mut self.salv_buf);
+        salv.clear();
+        let mut full = true;
+        let mut any_active = false;
+        let (mut rows_salv, mut rows_redo, mut n_redo) = (0u64, 0u64, 0u64);
+        for i in 0..b {
+            let ok = match &self.slots[i] {
+                Some(slot) => {
+                    any_active = true;
+                    let ok = bslots[i].active
+                        && self
+                            .pipeline
+                            .as_ref()
+                            .is_some_and(|ctl| ctl.chain_slot_ok(i, slot.req.id))
+                        && bslots[i].len == slot.len
+                        && bslots[i].gamma == self.gammas_buf[i];
+                    if ok {
+                        rows_salv += self.gammas_buf[i] as u64;
+                    } else {
+                        rows_redo += self.gammas_buf[i] as u64;
+                        n_redo += 1;
+                        full = false;
+                    }
+                    ok
+                }
+                None => {
+                    if bslots[i].active {
+                        full = false;
+                    }
+                    false
+                }
+            };
+            salv.push(ok);
+        }
+        full = full && any_active;
+        let any_salvaged = salv.iter().any(|&x| x);
+        if let Some(ctl) = &mut self.pipeline {
+            ctl.note_consumed(
+                &salv,
+                full,
+                rows_salv,
+                rows_redo,
+                predicted_next,
+                &bbufs.p_off,
+                &bslots,
+            );
+            ctl.note_slots_redone(depth, n_redo);
+        }
+        if full {
+            // wholesale adoption: the block's drafts ARE this step's
+            // drafts and its RNG clones ARE the post-draft streams
+            for (i, bs) in bslots.iter().enumerate() {
+                if let Some(slot) = &mut self.slots[i] {
+                    slot.rng = bs.rng.clone();
+                }
+            }
+            let old = std::mem::replace(&mut self.bufs, *bbufs);
+            if let Some(ctl) = &mut self.pipeline {
+                ctl.park(Box::new(old));
+                ctl.park_slots(bslots);
+            }
+        } else if !any_salvaged {
+            if let Some(ctl) = &mut self.pipeline {
+                ctl.park(bbufs);
+                ctl.park_slots(bslots);
+            }
+            self.dispatch_block_serial()?;
+        } else {
+            self.splice_block(&bbufs, &bslots, &salv)?;
+            if let Some(ctl) = &mut self.pipeline {
+                ctl.park(bbufs);
+                ctl.park_slots(bslots);
+            }
+        }
+        self.salv_buf = salv;
+        Ok(())
+    }
+
+    /// Partial-hit adoption: redo the missed slots' draft/score rows in
+    /// a reduced model block, then assemble this step's generation by
+    /// splicing the salvaged slots' prefetched rows and the redone rows
+    /// into the final γ-prefix-table layout in `self.bufs`.
+    fn splice_block(
+        &mut self,
+        bbufs: &StepBuffers,
+        bslots: &[BlockSlot],
+        salv: &[bool],
+    ) -> Result<()> {
+        let (b, v) = (self.config.batch, self.vocab);
+        let any_missed = (0..b).any(|i| self.slots[i].is_some() && !salv[i]);
+        if any_missed {
+            // --- 1. reduced redo block: only the missed slots run model
+            // calls (salvaged slots are marked inactive — per-batch-row
+            // independence of the model artifacts makes their rows
+            // identical either way, which is what licenses the splice)
+            self.fill_model_inputs(0);
+            self.block_slots.clear();
+            for i in 0..b {
+                match &self.slots[i] {
+                    Some(slot) if !salv[i] => self.block_slots.push(BlockSlot {
+                        active: true,
+                        len: slot.len,
+                        rng: slot.rng.clone(),
+                        draft_temp: Self::effective_temp(slot.req.params.draft_temp()),
+                        gamma: self.gammas_buf[i],
+                    }),
+                    _ => self.block_slots.push(BlockSlot::inactive()),
+                }
+            }
+            let dims = BlockDims {
+                b,
+                s: self.seq_len,
+                v,
+                gmax: self.gmax,
+            };
+            run_model_block(
+                &self.draft_step,
+                &self.target_score,
+                &self.runtime.profiler,
+                &mut self.bufs,
+                &mut self.block_slots,
+                dims,
+                false,
+                None,
+            )?;
+            // persist ONLY the missed slots' advanced RNG streams — the
+            // salvaged slots adopt the chain's post-draft clones below
+            // (the redo block never drew for them)
+            for i in 0..b {
+                if !salv[i] {
+                    if let Some(slot) = &mut self.slots[i] {
+                        slot.rng = self.block_slots[i].rng.clone();
+                    }
+                }
+            }
+            // the redo block's packed offsets, before the final layout
+            self.redo_q.clear();
+            self.redo_q.extend_from_slice(&self.bufs.q_off);
+            self.redo_p.clear();
+            self.redo_p.extend_from_slice(&self.bufs.p_off);
+        }
+        // --- 2. the final ragged layout of the full step (salvaged +
+        // redone slots share one γ-prefix table)
+        let (mut qo, mut po) = (0usize, 0usize);
+        self.bufs.q_off.clear();
+        self.bufs.p_off.clear();
+        for i in 0..b {
+            self.bufs.q_off.push(qo);
+            self.bufs.p_off.push(po);
+            if self.slots[i].is_some() {
+                qo += self.gammas_buf[i];
+                po += self.gammas_buf[i] + 1;
+            }
+        }
+        self.bufs.q_off.push(qo);
+        self.bufs.p_off.push(po);
+        // --- 3. shift the redone rows up to their final offsets,
+        // highest slot first: the final layout also reserves room for
+        // the salvaged slots, so dst ≥ src for every missed slot and
+        // reverse order never clobbers a not-yet-moved source
+        // (copy_within handles residual self-overlap)
+        if any_missed {
+            for i in (0..b).rev() {
+                if salv[i] || self.slots[i].is_none() {
+                    continue;
+                }
+                let g = self.gammas_buf[i];
+                let (sq, dq) = (self.redo_q[i], self.bufs.q_off[i]);
+                debug_assert!(dq >= sq);
+                if sq != dq {
+                    self.bufs.zq.copy_within(sq * v..(sq + g) * v, dq * v);
+                    self.bufs.draft.copy_within(sq..sq + g, dq);
+                }
+                let (sp, dp) = (self.redo_p[i], self.bufs.p_off[i]);
+                if sp != dp {
+                    self.bufs.zp.copy_within(sp * v..(sp + g + 1) * v, dp * v);
+                }
+            }
+        }
+        // --- 4. splice the salvaged rows in from the prefetched
+        // generation and adopt those slots' post-draft RNG streams
+        for i in 0..b {
+            if !salv[i] {
+                continue;
+            }
+            let g = self.gammas_buf[i];
+            let (sq, dq) = (bbufs.q_off[i], self.bufs.q_off[i]);
+            self.bufs.zq[dq * v..(dq + g) * v]
+                .copy_from_slice(&bbufs.zq[sq * v..(sq + g) * v]);
+            self.bufs.draft[dq..dq + g].copy_from_slice(&bbufs.draft[sq..sq + g]);
+            let (sp, dp) = (bbufs.p_off[i], self.bufs.p_off[i]);
+            self.bufs.zp[dp * v..(dp + g + 1) * v]
+                .copy_from_slice(&bbufs.zp[sp * v..(sp + g + 1) * v]);
+            if let Some(slot) = &mut self.slots[i] {
+                slot.rng = bslots[i].rng.clone();
+            }
+        }
+        Ok(())
     }
 
     /// Per-request temperature scaling + top-k/top-p truncation of the
@@ -967,8 +1213,12 @@ impl Engine {
     }
 
     /// Predict this step's commit under the all-accept assumption and,
-    /// when every active slot would keep decoding, ship the next step's
-    /// model block to the dispatcher lane against the speculative state.
+    /// when every active slot would keep decoding, ship a depth-k
+    /// speculation chain to the dispatcher lane against the speculative
+    /// state: the lane job runs the next step's model block, then
+    /// predicts *that* step's commit itself (from per-slot snapshots,
+    /// never live engine state) and keeps extending up to
+    /// `pipeline_depth` blocks ahead of the commit barrier.
     ///
     /// The bonus token is computed with the verifier's exact arithmetic
     /// ([`kernels::construct_prob_row`] + [`verify::inverse_cdf_sample`]
@@ -976,16 +1226,16 @@ impl Engine {
     /// fully-accepted step emits *bit-for-bit* the predicted row and the
     /// barrier can adopt the prefetch. Refuses to launch when any
     /// predicted token would finish a slot (EOS / stop sequence / length
-    /// / context), when γ would hit slot headroom, or when a prefetch is
-    /// already in flight.
+    /// / context), when γ would hit slot headroom, or while a chain is
+    /// already live.
     fn maybe_launch_prefetch(&mut self) {
         let (b, s, v) = (self.config.batch, self.seq_len, self.vocab);
         {
             let Some(ctl) = &mut self.pipeline else { return };
-            // lane_free also reclaims a drained miss's buffers; a lane
-            // still busy with a cancelled block means no spare
-            // generation — skip this step's launch rather than queue
-            if ctl.has_inflight() || !ctl.lane_free() {
+            // lane_free also reclaims a cancelled chain's buffers; a
+            // lane still draining means no spare generation — skip this
+            // step's launch rather than queue behind it
+            if ctl.chain_alive() || !ctl.lane_free() {
                 return;
             }
         }
@@ -1024,25 +1274,75 @@ impl Engine {
         }
 
         // --- plan each slot's next-step γ against the speculative
-        // state: its controller after an all-accept update, its
-        // headroom after the predicted (γᵢ+1)-token commit
+        // state (its controller after an all-accept update, its
+        // headroom after the predicted (γᵢ+1)-token commit) and build
+        // the per-slot chain snapshot the lane job extends deeper
+        // blocks from: everything prediction needs — sampling knobs,
+        // finish-check state, the γ planner's controller/caps — frozen
+        // at launch so the job never reads live engine state
+        let mut infos = self
+            .pipeline
+            .as_mut()
+            .expect("pipeline checked above")
+            .take_infos();
         for i in 0..b {
-            let g = match &self.slots[i] {
+            match &self.slots[i] {
                 Some(slot) => {
-                    let committed = self.gammas_buf[i] + 1;
+                    let g = self.gammas_buf[i];
+                    let committed = g + 1;
                     let mut ctl2 = slot.gamma.clone();
                     ctl2.update(true);
-                    Self::plan_slot_gamma(
+                    self.gnext_buf[i] = Self::plan_slot_gamma(
                         &self.verifier,
                         slot,
                         &ctl2,
                         s.saturating_sub(slot.len + committed),
                         self.methods_buf[i],
-                    )
+                    );
+                    let p0 = self.bufs.p_off[i];
+                    let row = &predicted[p0..p0 + g + 1];
+                    // stop-matching tail: the last max_stop−1 tokens of
+                    // (generated + predicted commit), mirroring the
+                    // engine's own cross-step suffix window
+                    let max_stop =
+                        slot.req.stop_ids.iter().map(Vec::len).max().unwrap_or(0);
+                    let keep = max_stop.saturating_sub(1);
+                    let mut tail = Vec::with_capacity(keep);
+                    if keep > 0 {
+                        if row.len() >= keep {
+                            tail.extend_from_slice(&row[row.len() - keep..]);
+                        } else {
+                            let need = keep - row.len();
+                            let from = slot.generated.len().saturating_sub(need);
+                            tail.extend_from_slice(&slot.generated[from..]);
+                            tail.extend_from_slice(row);
+                        }
+                    }
+                    infos.push(ChainSlotInfo {
+                        active: true,
+                        id: slot.req.id,
+                        temp: Self::effective_temp(slot.req.params.temperature),
+                        top_k: slot.req.params.top_k,
+                        top_p: slot.req.params.top_p,
+                        method: self.methods_buf[i],
+                        max_new_tokens: slot.req.params.max_new_tokens,
+                        gen_len: slot.generated.len() + committed,
+                        stop_ids: slot.req.stop_ids.clone(),
+                        tail,
+                        ctrl: ctl2,
+                        cap: if slot.req.params.gamma_pinned {
+                            None
+                        } else {
+                            slot.req.params.gamma
+                        },
+                        avail: self.verifier.available_gammas_for(self.methods_buf[i]),
+                    });
                 }
-                None => 0,
-            };
-            self.gnext_buf[i] = g;
+                None => {
+                    self.gnext_buf[i] = 0;
+                    infos.push(ChainSlotInfo::inactive());
+                }
+            }
         }
         if self.config.backend == Backend::Hlo
             && Self::collapse_hlo_plan(&self.verifier, &self.methods_buf, &mut self.gnext_buf)
@@ -1050,10 +1350,9 @@ impl Engine {
         {
             // no runnable shared γ next step — don't prefetch; the next
             // step's own plan reports the conflict
-            self.pipeline
-                .as_mut()
-                .expect("pipeline checked above")
-                .recycle_predicted(predicted);
+            let ctl = self.pipeline.as_mut().expect("pipeline checked above");
+            ctl.recycle_predicted(predicted);
+            ctl.recycle_infos(infos);
             return;
         }
 
@@ -1100,18 +1399,22 @@ impl Engine {
             bufs,
             bslots,
             dims,
+            infos,
             predicted,
-            self.slot_epoch,
+            &self.bufs.p_off,
+            &self.gammas_buf,
         );
     }
 
     fn step_speculative(&mut self, step_started: Instant) -> Result<()> {
         let (b, s, v) = (self.config.batch, self.seq_len, self.vocab);
 
-        // --- 0. pipeline barrier reclaim: a hit prefetch from the
-        // previous step hands this step its whole model block
-        let adopted = match &mut self.pipeline {
-            Some(ctl) => ctl.resolve(self.slot_epoch),
+        // --- 0. chain handoff: a live speculation chain hands this
+        // step its next prefetched model block (blocking recv — the
+        // lane job streams blocks ahead of the barrier, so on a hit
+        // this only waits out the overlap tail)
+        let chain_block = match &mut self.pipeline {
+            Some(ctl) => ctl.next_block(),
             None => None,
         };
 
@@ -1169,45 +1472,13 @@ impl Engine {
             }
         }
 
-        // --- 2. model block: adopt the prefetched generation (its
-        // drafts ARE this step's drafts and its RNG clones ARE the
-        // post-draft streams), or dispatch serially. Adoption requires
-        // the prefetch's per-slot γ plan to match this step's replan
-        // exactly (on a true hit it does: the commit was all-accept, so
-        // the live controllers took the same `update(true)` the plan
-        // was cloned against).
-        let mut have_block = false;
-        if let Some((pbufs, pslots)) = adopted {
-            let plan_matches = (0..b).all(|i| {
-                pslots[i].active == self.slots[i].is_some()
-                    && pslots[i].gamma == self.gammas_buf[i]
-            });
-            if plan_matches {
-                for (i, bs) in pslots.iter().enumerate() {
-                    if let Some(slot) = &mut self.slots[i] {
-                        slot.rng = bs.rng.clone();
-                    }
-                }
-                let old = std::mem::replace(&mut self.bufs, *pbufs);
-                if let Some(ctl) = &mut self.pipeline {
-                    ctl.park(Box::new(old));
-                    ctl.park_slots(pslots);
-                }
-                have_block = true;
-            } else {
-                // defensive: an unchanged slot set replans the same γ
-                // today, but if a future controller/headroom change ever
-                // diverges the replan from the prefetch's plan, the
-                // correct behaviour is exactly this — discard and redo
-                // serially from untouched state
-                if let Some(ctl) = &mut self.pipeline {
-                    ctl.park(pbufs);
-                    ctl.park_slots(pslots);
-                }
-            }
-        }
-        if !have_block {
-            self.dispatch_block_serial()?;
+        // --- 2. model block: consume the prefetched chain block
+        // (wholesale on a full hit, per-slot splice on a partial hit,
+        // serial fallback when nothing is salvageable), or dispatch
+        // serially when no chain is live
+        match chain_block {
+            Some(block) => self.consume_chain_block(block)?,
+            None => self.dispatch_block_serial()?,
         }
 
         // --- temperature scaling + per-request filtering, then this
@@ -1253,25 +1524,47 @@ impl Engine {
             &mut self.verify_out,
         )?;
 
-        // --- pipeline barrier verdict: the prefetch survives iff every
-        // active slot accepted all γᵢ drafts AND emitted exactly the
-        // predicted rows (native: guaranteed equal on all-accept; HLO:
-        // the bonus draw may differ in the last ulp — a miss)
-        let hit = match self.pipeline.as_ref().and_then(PipelineCtl::inflight_predicted) {
-            Some(pred) => {
-                let mut h = pred.len() == total_p
-                    && self.verify_out.out_tokens[..total_p] == *pred;
-                if h {
-                    for i in 0..b {
-                        if self.slots[i].is_some()
-                            && self.verify_out.accept_len[i] as usize != self.gammas_buf[i]
-                        {
-                            h = false;
-                            break;
+        // --- pipeline barrier verdict (computed before the commit loop
+        // mutates slot state): a slot's chain prediction of this step
+        // held iff the slot is still chain-valid, the chain planned the
+        // same γ this step's replan chose, verification accepted every
+        // draft, and the emitted row is bit-identical to the predicted
+        // row (native: guaranteed equal on all-accept; HLO: the bonus
+        // draw may differ in the last ulp — a per-slot miss)
+        let mut vb = std::mem::take(&mut self.verdict_buf);
+        vb.clear();
+        let barrier = match self.pipeline.as_ref().and_then(PipelineCtl::pending) {
+            Some((prows, poff, pgam)) => {
+                let ctl = self.pipeline.as_ref().expect("pending implies pipeline");
+                let mut full = true;
+                let mut any_active = false;
+                for i in 0..b {
+                    let ok = match &self.slots[i] {
+                        Some(slot) => {
+                            any_active = true;
+                            let g = self.gammas_buf[i];
+                            let p0 = self.bufs.p_off[i];
+                            let ok = ctl.chain_slot_ok(i, slot.req.id)
+                                && pgam[i] == g
+                                && self.verify_out.accept_len[i] as usize == g
+                                && prows[poff[i]..poff[i] + g + 1]
+                                    == self.verify_out.out_tokens[p0..p0 + g + 1];
+                            if !ok {
+                                full = false;
+                            }
+                            ok
                         }
-                    }
+                        None => false,
+                    };
+                    vb.push(ok);
                 }
-                Some(h)
+                full = full && any_active;
+                if !self.config.pipeline_salvage && !full {
+                    // all-or-nothing barrier: without partial adoption a
+                    // single missed slot discards the whole window
+                    vb.fill(false);
+                }
+                Some(full)
             }
             None => None,
         };
@@ -1349,15 +1642,17 @@ impl Engine {
                     latency: slot.started.elapsed().as_secs_f64(),
                 });
                 self.stats.finished += 1;
-                self.slot_epoch += 1;
             }
         }
 
-        // record the barrier verdict (a miss raises the prefetch's
-        // cancel flag so it abandons remaining model calls)
-        if let (Some(ctl), Some(h)) = (&mut self.pipeline, hit) {
-            ctl.note_outcome(h);
+        // apply the barrier verdicts: AND them into the chain's
+        // cumulative per-slot validity (a fully-missed window raises
+        // the chain's cancel flag so the lane job abandons its
+        // remaining model calls)
+        if let (Some(ctl), Some(full)) = (&mut self.pipeline, barrier) {
+            ctl.apply_barrier(&vb, full);
         }
+        self.verdict_buf = vb;
 
         if tracing {
             self.trace.record(TraceEvent::Step(StepEvent { slots: tr_slots }));
@@ -1445,7 +1740,6 @@ impl Engine {
                     latency: slot.started.elapsed().as_secs_f64(),
                 });
                 self.stats.finished += 1;
-                self.slot_epoch += 1;
             }
         }
         self.stats

@@ -12,9 +12,9 @@
 //!   methods (`baseline` / `exact` / `sigmoid`) plus a pure-rust `native`
 //!   oracle backend
 //! * [`core`] — continuous-batching decode loop over the PJRT artifacts
-//! * [`pipeline`] — the pipelined decode scheduler: double-buffered step
-//!   staging and the speculative prefetch that overlaps next-step model
-//!   dispatch with CPU verification (bit-identical to the serial loop)
+//! * [`pipeline`] — the pipelined decode scheduler: a depth-k chain of
+//!   speculatively prefetched step blocks with per-slot partial-hit
+//!   adoption at the commit barrier (bit-identical to the serial loop)
 //! * [`stats`] — acceptance/time accounting for the paper's tables
 
 pub mod core;
@@ -26,7 +26,7 @@ pub mod verifier;
 
 pub use core::{AdmitError, Engine, EngineConfig, Mode};
 pub use gamma::GammaController;
-pub use pipeline::PipelineMode;
+pub use pipeline::{PipelineMode, PipelineStats};
 pub use request::{
     match_stop_suffix, FinishReason, GenRequest, GenResult, SamplingParams,
 };

@@ -1,7 +1,7 @@
-//! The pipelined decode scheduler's moving parts: double-buffered step
-//! staging, the shared model-block dispatch, and the speculative
-//! prefetch control that overlaps step *N*'s CPU verification with step
-//! *N+1*'s model dispatch.
+//! The pipelined decode scheduler's moving parts: multi-generation step
+//! staging, the shared model-block dispatch, and the depth-k speculation
+//! window that overlaps CPU verification with the next k steps' model
+//! dispatch.
 //!
 //! ## Why this exists
 //!
@@ -16,59 +16,86 @@
 //! will be accepted**, predicts step N's full commit (the γ drafted
 //! tokens plus the bonus token, computed with the *exact* verification
 //! arithmetic so a correct prediction is bit-for-bit the verifier's
-//! output), and ships step N+1's whole model block — γ draft calls plus
-//! the score call, reading speculative post-commit state — onto the
-//! [`DispatchLane`]. The engine thread then runs step N's verification
-//! kernels as usual. At the pipeline barrier (step N's commit):
+//! output), and ships a **chain job** onto the [`DispatchLane`]. The
+//! chain job computes step N+1's whole model block — γ draft calls plus
+//! the score call, reading speculative post-commit state — and then,
+//! instead of stopping, **predicts step N+1's commit itself** (same
+//! arithmetic, against cloned RNG streams) and keeps going: up to k
+//! blocks (N+1 .. N+k) stream back to the engine, each computed while
+//! the engine is still verifying earlier steps.
 //!
-//! * **hit** — verification accepted everything and emitted exactly the
-//!   predicted tokens: step N+1 adopts the prefetched buffers and the
-//!   advanced RNG clones, skipping its entire draft/score phase;
-//! * **miss** — any rejection, token mismatch, or slot-set change: the
-//!   prefetch is cancelled and discarded, and step N+1 dispatches
-//!   serially from untouched state.
+//! ## Per-slot partial-hit adoption
+//!
+//! The commit barrier is per-slot. Each decode step while a chain is
+//! alive, the engine compares every slot's actual verification outcome
+//! against the chain's prediction for that slot: full acceptance and a
+//! bit-identical emitted row keep the slot **valid**; any mismatch
+//! invalidates that slot *only*. When a prefetched block arrives, every
+//! valid slot's rows (draft tokens, z_q, z_p, advanced RNG stream) are
+//! **salvaged**; only the missed slots' rows are redone, in a reduced
+//! model block whose rows are then spliced into the adopted generation
+//! at the step's final γ-prefix offsets. This works because the model
+//! contract is per-batch-row independent (`rows_are_batch_independent`
+//! in `runtime/sim.rs`) and per-slot RNG streams advance independently
+//! (PR 7): a slot whose predictions all held has rows that are
+//! bit-identical to what a serial step would compute, regardless of
+//! what its batch neighbours did.
+//!
+//! The chain's validity is **cumulative**: a slot salvages rows from
+//! block d only if *every* barrier since the chain launched confirmed
+//! its predictions — deeper blocks were computed from the shallower
+//! predictions, so one miss poisons that slot's whole remaining window
+//! (the cascade-cancel invariant). When every slot is invalid the chain
+//! is cancelled outright and the lane job abandons its remaining model
+//! calls.
 //!
 //! Observable state is **never** mutated speculatively — predictions
-//! live in their own buffer generation and RNG clones, and are adopted
-//! only after the barrier proves them equal to the serial outcome — so
-//! committed tokens, deltas, stats counters, and every per-slot RNG
-//! stream are bit-identical to the serial engine for any seed, hit or
-//! miss (the `it_pipeline` parity suite asserts this across methods ×
-//! seeds × batch sizes, including mid-decode cancellation).
+//! live in their own buffer generations and RNG clones, and rows are
+//! adopted only after the barrier proves them equal to the serial
+//! outcome — so committed tokens, deltas, stats counters, and every
+//! per-slot RNG stream are bit-identical to the serial engine for any
+//! seed, schedule, and window depth (the `it_pipeline` parity suite
+//! asserts this across k × salvage × methods × seeds × batch sizes,
+//! including mid-decode cancellation).
 //!
 //! ## Workspace generations
 //!
-//! Two [`StepBuffers`] generations ping-pong: the engine verifies out of
-//! the *current* generation while the lane's job fills the *spare* one.
-//! Ownership transfers wholesale (boxed moves through the job channel),
-//! so there is no sharing to synchronise; a generation is reused every
-//! other step, and the prediction-row / block-slot scratch round-trips
-//! through [`PipelineCtl`] the same way. Steady-state prefetches
+//! A pool of [`StepBuffers`] generations rotates through the lane: the
+//! engine verifies out of the *current* generation while the chain job
+//! fills up to k more. Ownership transfers wholesale (boxed moves
+//! through the job channel), so there is no sharing to synchronise; a
+//! consumed generation parks back in the pool, and the block-slot /
+//! chain-info scratch round-trips the same way. Steady-state chains
 //! therefore allocate nothing proportional to γ·V — what remains per
-//! launch is O(1) plumbing (the result channel and the boxed lane
-//! job).
+//! *launch* (not per step) is O(B) plumbing (the channel, chain-state
+//! vectors, per-slot stop-sequence clones).
 //!
 //! ## The dispatcher-lane invariant
 //!
 //! Verify regions are only ever dispatched by the engine thread; the
-//! lane's job runs executable calls against buffers it owns and never
-//! touches the worker pool. The pool's single-dispatcher invariant
-//! therefore holds with the pipeline on, and the two substrates overlap
-//! freely. See `kernels/pool.rs` for the lane's contract.
+//! lane's chain job runs executable calls against buffers it owns and
+//! never touches the worker pool. The pool's single-dispatcher
+//! invariant therefore holds with the pipeline on, and the two
+//! substrates overlap freely. See `kernels/pool.rs` for the lane's
+//! contract.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::runtime::{HostTensor, LoadedExecutable, TensorView};
 use crate::sampling::kernels::pool::DispatchLane;
+use crate::sampling::{self, kernels, verify, Method};
+use crate::tokenizer;
 use crate::trace::{NullSink, PipelineEv, TraceEvent, TraceSink};
 use crate::util::rng::Pcg32;
 use crate::util::timer::Profiler;
 
 use super::core::Mode;
+use super::gamma::GammaController;
+use super::request::match_stop_suffix;
 use super::verifier::Backend;
 
 /// Whether the engine overlaps model dispatch with CPU verification.
@@ -116,9 +143,9 @@ impl PipelineMode {
 /// One generation of per-step staging: model inputs, staged model
 /// outputs, and the verification logit matrices for one speculative
 /// block. The engine owns one *current* generation; the pipeline
-/// ping-pongs a second *spare* through the dispatcher lane. Buffers are
-/// sized at construction for the engine's fixed `(B, S, GMAX, V)` —
-/// those dimensions are engine-constant, which is what lets a parked
+/// rotates up to k more through the dispatcher lane. Buffers are sized
+/// at construction for the engine's fixed `(B, S, GMAX, V)` — those
+/// dimensions are engine-constant, which is what lets a parked
 /// generation be reused verbatim ([`PipelineCtl::take_spare`]
 /// debug-asserts it) — and are refilled in place every block.
 ///
@@ -197,9 +224,9 @@ pub struct BlockDims {
 }
 
 /// Per-slot inputs to one model block. The serial path builds these
-/// views of live slots; the prefetch path builds them from speculative
+/// views of live slots; the chain job builds them from speculative
 /// post-commit state with **cloned** RNGs (adopted into the live slots
-/// only on a barrier hit).
+/// only when the barrier proves the slot's predictions correct).
 #[derive(Debug)]
 pub struct BlockSlot {
     pub active: bool,
@@ -224,6 +251,36 @@ impl BlockSlot {
     }
 }
 
+/// Snap a wanted γ down to artifact availability (the γ set common to
+/// every active slot's verification method).
+pub(crate) fn snap_gamma(avail: &[usize], want: usize) -> usize {
+    avail
+        .iter()
+        .copied()
+        .filter(|&g| g <= want)
+        .max()
+        .unwrap_or_else(|| avail.first().copied().unwrap_or(1))
+}
+
+/// γ wanted by one slot for one step: the controller value clamped by
+/// context headroom, capped by a non-pinned per-request override,
+/// snapped down to the slot method's artifact γ set. One implementation
+/// shared by the engine's per-step plan, the launch-time next-step
+/// plan, and the chain job's deeper plans — shared by construction so
+/// the three cannot drift.
+pub(crate) fn plan_gamma(
+    avail: &[usize],
+    ctl: &GammaController,
+    headroom: usize,
+    cap: Option<usize>,
+) -> usize {
+    let mut want = ctl.effective(headroom);
+    if let Some(cap) = cap {
+        want = want.min(cap).max(1);
+    }
+    snap_gamma(avail, want)
+}
+
 /// Run one speculative block's model dispatch — `max γᵢ` sequential
 /// `draft_step` calls and one `target_score` call — staging the draft
 /// tokens, the raw draft logits (`zq`), and the sliced raw score window
@@ -234,18 +291,18 @@ impl BlockSlot {
 /// crucially — **does not consume its RNG stream**, so a slot's draws
 /// depend only on its own γ, never on its batch neighbours'. The γ-prefix
 /// tables `bufs.q_off` / `bufs.p_off` are rebuilt here from the block's
-/// slots, so the serial path, the prefetch path, and the trace checker
-/// all derive identical row addressing from the same code.
+/// slots, so the serial path, the chain job, and the trace checker all
+/// derive identical row addressing from the same code.
 ///
 /// Token rows of `bufs.tokens` must be pre-filled with each slot's
 /// context (PAD rows for inactive slots); drafted tokens are appended in
 /// place as they are sampled, so the model sees exactly the token stream
 /// the serial engine would feed it.
 ///
-/// This is the one implementation both the serial path and the
-/// prefetch job execute — shared by construction so the two cannot
-/// drift. Temperature scaling and top-k/top-p filtering of the staged
-/// logits deliberately stay on the engine thread (one code path, after
+/// This is the one implementation both the serial path and the chain
+/// job execute — shared by construction so the two cannot drift.
+/// Temperature scaling and top-k/top-p filtering of the staged logits
+/// deliberately stay on the engine thread (one code path, after
 /// adoption), keeping this function a pure function of
 /// `(slot contexts, RNG states, executables)`.
 ///
@@ -378,50 +435,393 @@ pub fn run_model_block(
     Ok(true)
 }
 
-/// What the lane's prefetch job sends back at the barrier.
-pub(crate) struct PrefetchResult {
-    pub bufs: Box<StepBuffers>,
-    pub slots: Vec<BlockSlot>,
-    /// `Ok(true)` = full block staged; `Ok(false)` = cancelled early;
-    /// `Err` = a model call failed (the serial redo will resurface it)
-    pub outcome: Result<bool>,
+/// Per-slot request/controller snapshot the chain job needs to extend
+/// the window past depth 1: everything the engine would consult to
+/// predict a commit, check finish conditions, and plan the next γ —
+/// captured at launch against the *speculative* post-launch-step state
+/// so the job never reads live engine state.
+pub(crate) struct ChainSlotInfo {
+    pub active: bool,
+    pub id: u64,
+    /// effective target temperature (engine clamp applied)
+    pub temp: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+    pub method: Method,
+    pub max_new_tokens: usize,
+    /// predicted generated-token count after the launching step's commit
+    pub gen_len: usize,
+    pub stop_ids: Vec<Vec<i32>>,
+    /// rolling tail of the predicted generated stream (last `max_stop-1`
+    /// tokens) for stop-suffix matching across predicted step boundaries
+    pub tail: Vec<i32>,
+    /// controller state after the launching step's predicted all-accept
+    pub ctrl: GammaController,
+    /// non-pinned per-request γ cap
+    pub cap: Option<usize>,
+    /// the slot method's artifact γ set
+    pub avail: Vec<usize>,
 }
 
-/// A prefetch in flight on the dispatcher lane.
-pub(crate) struct InFlight {
-    rx: Receiver<PrefetchResult>,
+impl ChainSlotInfo {
+    pub fn inactive() -> Self {
+        ChainSlotInfo {
+            active: false,
+            id: 0,
+            temp: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            method: Method::Exact,
+            max_new_tokens: 0,
+            gen_len: 0,
+            stop_ids: Vec::new(),
+            tail: Vec::new(),
+            ctrl: GammaController::pinned(1),
+            cap: None,
+            avail: Vec::new(),
+        }
+    }
+}
+
+/// One prefetched block streaming back from the chain job.
+pub(crate) struct ChainBlock {
+    /// 1-based position in the window (block d serves step launch+d)
+    pub depth: usize,
+    pub bufs: Box<StepBuffers>,
+    pub slots: Vec<BlockSlot>,
+    /// the lane's prediction of the commit of the step this block
+    /// serves — ragged rows addressed by this block's `p_off` table —
+    /// which gates block `depth+1` at that step's barrier. Empty when
+    /// the chain ends at this block (window exhausted, predicted
+    /// finish, or cancellation).
+    pub predicted_next: Vec<i32>,
+}
+
+/// Messages from the chain job to the engine: up to k blocks in depth
+/// order, then exactly one `Done` returning the unused scratch.
+pub(crate) enum ChainMsg {
+    Block(ChainBlock),
+    Done {
+        gens: Vec<Box<StepBuffers>>,
+        slots: Vec<Vec<BlockSlot>>,
+        infos: Vec<ChainSlotInfo>,
+    },
+}
+
+/// The lane-side body of a chain launch: run block 1, then repeatedly
+/// predict the just-computed block's commit, build the next block's
+/// speculative inputs, ship the finished block to the engine, and run
+/// the next one — up to `depth` blocks. The prediction replays the
+/// engine's exact bonus arithmetic (scale → filter → prob row →
+/// inverse-CDF with the slot's own `u_bonus`) on a scratch copy, and
+/// the per-slot RNG bookkeeping mirrors the verify-draw order (γ
+/// acceptance, resample, bonus), so every shipped [`BlockSlot::rng`]
+/// is exactly the post-draft stream the serial engine would hold.
+#[allow(clippy::too_many_arguments)]
+fn run_chain_job(
+    draft_step: &LoadedExecutable,
+    target_score: &LoadedExecutable,
+    profiler: &Profiler,
+    dims: BlockDims,
+    depth: usize,
+    mut infos: Vec<ChainSlotInfo>,
+    mut bufs: Box<StepBuffers>,
+    mut slots: Vec<BlockSlot>,
+    mut spares: Vec<Box<StepBuffers>>,
+    mut slot_pool: Vec<Vec<BlockSlot>>,
+    cancel: &AtomicBool,
+    tx: &Sender<ChainMsg>,
+) {
+    let BlockDims { b, s, v, .. } = dims;
+    // prediction scratch (per chain, not per step)
+    let mut zrow = vec![0.0f32; v];
+    let mut prob = vec![0.0f32; v];
+    let mut sims: Vec<Pcg32> = vec![Pcg32::seeded(0); b];
+    let mut d = 1usize;
+    loop {
+        let completed = matches!(
+            run_model_block(
+                draft_step,
+                target_score,
+                profiler,
+                &mut bufs,
+                &mut slots,
+                dims,
+                true,
+                Some(cancel),
+            ),
+            Ok(true)
+        );
+        if !completed {
+            // cancelled mid-block or a model call failed: the engine's
+            // serial redo resurfaces any real failure
+            spares.push(bufs);
+            slot_pool.push(slots);
+            let _ = tx.send(ChainMsg::Done {
+                gens: spares,
+                slots: slot_pool,
+                infos,
+            });
+            return;
+        }
+        if d == depth || spares.is_empty() || cancel.load(Ordering::Relaxed) {
+            let _ = tx.send(ChainMsg::Block(ChainBlock {
+                depth: d,
+                bufs,
+                slots,
+                predicted_next: Vec::new(),
+            }));
+            let _ = tx.send(ChainMsg::Done {
+                gens: spares,
+                slots: slot_pool,
+                infos,
+            });
+            return;
+        }
+
+        // --- predict this block's step commit, slot by slot
+        let total_p = bufs.total_p(b);
+        let mut predicted = vec![-1i32; total_p];
+        for i in 0..b {
+            let info = &infos[i];
+            if !info.active || !slots[i].active {
+                continue;
+            }
+            let sl = &slots[i];
+            let g = sl.gamma;
+            let (q0, p0) = (bufs.q_off[i], bufs.p_off[i]);
+            // the slot's verify draws for this step, in draw order:
+            // γ acceptance thresholds, one resample, one bonus — the
+            // shipped BlockSlot keeps the post-draft stream untouched
+            let mut sim = sl.rng.clone();
+            for _ in 0..g + 1 {
+                let _ = sim.uniform_f32();
+            }
+            let ubonus = sim.uniform_f32();
+            // engine-exact bonus arithmetic on a scratch copy of the
+            // raw bonus logit row
+            zrow.copy_from_slice(&bufs.zp[(p0 + g) * v..(p0 + g + 1) * v]);
+            if (info.temp - 1.0).abs() > 1e-6 {
+                let inv = 1.0 / info.temp;
+                for x in zrow.iter_mut() {
+                    *x *= inv;
+                }
+            }
+            if info.top_k != 0 || info.top_p < 1.0 {
+                sampling::filter::mask_logits_top_k_top_p(&mut zrow, info.top_k, info.top_p);
+            }
+            kernels::construct_prob_row(&zrow, &mut prob, info.method);
+            let row = &mut predicted[p0..p0 + g + 1];
+            row[..g].copy_from_slice(&bufs.draft[q0..q0 + g]);
+            row[g] = verify::inverse_cdf_sample(&prob, ubonus) as i32;
+            sims[i] = sim; // post-bonus = the next block's pre-draft stream
+        }
+
+        // --- would the predicted commit finish any slot? The window
+        // cannot model a slot-set change, so the chain ends here.
+        let mut finishes = false;
+        'check: for i in 0..b {
+            let info = &mut infos[i];
+            if !info.active || !slots[i].active {
+                continue;
+            }
+            let sl = &slots[i];
+            let g = sl.gamma;
+            if s.saturating_sub(sl.len + g + 1) < 2 {
+                finishes = true;
+                break;
+            }
+            let max_stop = info.stop_ids.iter().map(Vec::len).max().unwrap_or(0);
+            for &tok in &predicted[bufs.p_off[i]..bufs.p_off[i] + g + 1] {
+                if tok == tokenizer::EOS {
+                    finishes = true;
+                    break 'check;
+                }
+                if max_stop > 0 {
+                    info.tail.push(tok);
+                    if match_stop_suffix(&info.tail, &info.stop_ids).is_some() {
+                        finishes = true;
+                        break 'check;
+                    }
+                }
+                info.gen_len += 1;
+                if info.gen_len >= info.max_new_tokens {
+                    finishes = true;
+                    break 'check;
+                }
+            }
+            if max_stop > 1 && info.tail.len() > max_stop - 1 {
+                let cut = info.tail.len() - (max_stop - 1);
+                info.tail.drain(..cut);
+            }
+        }
+        if finishes {
+            let _ = tx.send(ChainMsg::Block(ChainBlock {
+                depth: d,
+                bufs,
+                slots,
+                predicted_next: Vec::new(),
+            }));
+            let _ = tx.send(ChainMsg::Done {
+                gens: spares,
+                slots: slot_pool,
+                infos,
+            });
+            return;
+        }
+
+        // --- plan the next block: γ from the all-accept-updated
+        // controller clone, token rows = this block's rows (context +
+        // drafts already appended) completed with the predicted bonus
+        let mut nbufs = spares.pop().expect("checked non-empty above");
+        let mut nslots = slot_pool.pop().unwrap_or_default();
+        nslots.clear();
+        for i in 0..b {
+            let info = &mut infos[i];
+            let dst = &mut nbufs.tokens[i * s..(i + 1) * s];
+            if !info.active || !slots[i].active {
+                dst.fill(tokenizer::PAD);
+                nslots.push(BlockSlot::inactive());
+                continue;
+            }
+            let sl = &slots[i];
+            let g = sl.gamma;
+            let newlen = sl.len + g + 1;
+            info.ctrl.update(true);
+            let ng = plan_gamma(
+                &info.avail,
+                &info.ctrl,
+                s.saturating_sub(newlen),
+                info.cap,
+            );
+            dst.copy_from_slice(&bufs.tokens[i * s..(i + 1) * s]);
+            dst[sl.len + g] = predicted[bufs.p_off[i] + g];
+            nslots.push(BlockSlot {
+                active: true,
+                len: newlen,
+                rng: sims[i].clone(),
+                draft_temp: sl.draft_temp,
+                gamma: ng,
+            });
+        }
+        let _ = tx.send(ChainMsg::Block(ChainBlock {
+            depth: d,
+            bufs,
+            slots,
+            predicted_next: predicted,
+        }));
+        bufs = nbufs;
+        slots = nslots;
+        d += 1;
+    }
+}
+
+/// Per-depth slice of [`PipelineStats`], indexed by window depth − 1.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DepthStats {
+    /// blocks of this depth consumed at a step start
+    pub consumed: u64,
+    /// of those, adopted wholesale
+    pub full_hits: u64,
+    pub slots_salvaged: u64,
+    pub slots_redone: u64,
+}
+
+/// Pipelined-scheduler counters ([`super::core::Engine::pipeline_stats`]).
+///
+/// Slot-level counters are the primary signal: `slots_salvaged /
+/// (slots_salvaged + slots_redone)` is the **effective hit rate** —
+/// the fraction of slot-steps served from prefetched work, counting
+/// partial adoptions (the whole-block hit rate of PR 5 under-counted
+/// exactly these).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// chain launches onto the dispatcher lane
+    pub chains: u64,
+    /// prefetched blocks consumed at a step start
+    pub blocks: u64,
+    /// blocks adopted wholesale (every active slot salvaged)
+    pub full_hits: u64,
+    /// blocks spliced: some slots salvaged, the rest redone
+    pub partial_hits: u64,
+    /// blocks that arrived but contributed nothing (all slots redone)
+    pub misses: u64,
+    /// slot-steps whose rows were taken from a prefetched block
+    pub slots_salvaged: u64,
+    /// slot-steps redone serially while a prefetched block was at hand
+    pub slots_redone: u64,
+    /// draft rows (Σγ) salvaged from prefetched blocks
+    pub rows_salvaged: u64,
+    /// draft rows recomputed by redo blocks
+    pub rows_redone: u64,
+    /// chains cancelled by the cascade before exhausting their window
+    pub cancelled: u64,
+    /// per-depth consumption counters, `per_depth[d-1]` = depth d
+    pub per_depth: Vec<DepthStats>,
+}
+
+impl PipelineStats {
+    /// Fraction of slot-steps served from prefetched work (full +
+    /// salvaged) — the bench gate's effective hit rate.
+    pub fn effective_hit_rate(&self) -> f64 {
+        let total = self.slots_salvaged + self.slots_redone;
+        if total == 0 {
+            0.0
+        } else {
+            self.slots_salvaged as f64 / total as f64
+        }
+    }
+}
+
+/// Engine-side state of one live chain: the channel to the lane job,
+/// the per-slot cumulative validity, and the prediction gating the next
+/// block.
+pub(crate) struct ChainState {
+    rx: Receiver<ChainMsg>,
     cancel: Arc<AtomicBool>,
-    /// slot-set epoch at launch: any admit/cancel/finish invalidates
-    epoch: u64,
-    /// predicted commit rows of the *launching* step, ragged per-slot
-    /// spans addressed by that step's `p_off` table
-    pub predicted: Vec<i32>,
-    /// barrier verdict, set by the launching step's commit
-    resolved: Option<bool>,
+    /// depth of the next block to consume (1-based)
+    next_depth: usize,
+    /// per-slot request id at launch (meaningful where `valid` started true)
+    ids: Vec<u64>,
+    /// cumulative per-slot prediction validity since launch: ANDed with
+    /// every barrier verdict and every salvage outcome; deeper blocks
+    /// were computed from shallower predictions, so one miss poisons
+    /// the slot's whole remaining window
+    valid: Vec<bool>,
+    /// prediction gating block `next_depth`: ragged rows plus the
+    /// layout (p_off prefix, per-slot γ) of the step it predicts
+    pred_rows: Vec<i32>,
+    pred_off: Vec<usize>,
+    pred_gammas: Vec<usize>,
+    /// a prediction is staged and awaits its barrier verdict
+    has_pending: bool,
 }
 
 /// Pipeline control state owned by the engine (present only when the
-/// pipeline is enabled): the dispatcher lane, the spare buffer
-/// generation, and the in-flight prefetch.
+/// pipeline is enabled): the dispatcher lane, the generation pool, and
+/// the live chain.
 pub(crate) struct PipelineCtl {
     lane: DispatchLane,
-    spare: Option<Box<StepBuffers>>,
-    inflight: Option<InFlight>,
-    /// a discarded prefetch whose lane job had not finished when the
-    /// barrier resolved: the serial redo must not wait for it, so it
-    /// parks here (cancel flag raised) and its buffers are reclaimed —
-    /// without blocking — before the next launch
-    draining: Option<InFlight>,
-    /// recycled prediction-row scratch (`B · (γ+1)`), round-tripped
-    /// through [`InFlight`] so steady-state launches allocate nothing
+    /// configured window depth k (≥ 1)
+    depth: usize,
+    /// parked buffer generations (up to k at steady state)
+    spares: Vec<Box<StepBuffers>>,
+    /// parked block-slot scratch vectors
+    slot_pool: Vec<Vec<BlockSlot>>,
+    /// parked chain-info scratch
+    info_pool: Vec<ChainSlotInfo>,
+    chain: Option<ChainState>,
+    /// a cancelled (or exhausted) chain whose lane job may still be
+    /// running: the serial redo must not wait for it, so it parks here
+    /// and its generations are reclaimed — without blocking — before
+    /// the next launch
+    draining: Option<(Receiver<ChainMsg>, Arc<AtomicBool>)>,
+    /// recycled prediction-row scratch (`B · (γ+1)`) for the engine's
+    /// launch-step prediction
     predicted_spare: Vec<i32>,
-    /// recycled block-slot scratch, round-tripped through the job
-    slots_spare: Vec<BlockSlot>,
-    /// prefetches launched / adopted (observability + tests)
-    pub launched: u64,
-    pub hits: u64,
-    /// trace hook for scheduler events (launch / hit / miss / discard /
-    /// lane cancel) — [`NullSink`] unless the engine attached a recorder
+    pub stats: PipelineStats,
+    /// trace hook for scheduler events — [`NullSink`] unless the engine
+    /// attached a recorder
     trace: Arc<dyn TraceSink>,
 }
 
@@ -430,25 +830,32 @@ impl Drop for PipelineCtl {
         // engine teardown with work in flight: raise the cancel flags
         // so the lane job abandons its remaining model calls and the
         // lane's own Drop (which joins after the queue drains) returns
-        // after at most one in-progress call instead of a whole block
-        self.cancel_inflight();
-        if let Some(d) = &self.draining {
-            d.cancel.store(true, Ordering::Relaxed);
+        // after at most one in-progress call instead of a whole window
+        if let Some(chain) = &self.chain {
+            chain.cancel.store(true, Ordering::Relaxed);
+        }
+        if let Some((_, cancel)) = &self.draining {
+            cancel.store(true, Ordering::Relaxed);
         }
     }
 }
 
 impl PipelineCtl {
-    pub fn new() -> Self {
+    pub fn new(depth: usize) -> Self {
+        let depth = depth.max(1);
         PipelineCtl {
             lane: DispatchLane::new(),
-            spare: None,
-            inflight: None,
+            depth,
+            spares: Vec::new(),
+            slot_pool: Vec::new(),
+            info_pool: Vec::new(),
+            chain: None,
             draining: None,
             predicted_spare: Vec::new(),
-            slots_spare: Vec::new(),
-            launched: 0,
-            hits: 0,
+            stats: PipelineStats {
+                per_depth: vec![DepthStats::default(); depth],
+                ..PipelineStats::default()
+            },
             trace: Arc::new(NullSink),
         }
     }
@@ -459,9 +866,13 @@ impl PipelineCtl {
         self.trace = sink;
     }
 
+    /// Configured window depth k.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
     /// Take the prediction-row scratch (cleared; returned via
-    /// [`PipelineCtl::recycle_predicted`] or a launch + barrier
-    /// round-trip).
+    /// [`PipelineCtl::recycle_predicted`] or a launch round-trip).
     pub fn take_predicted(&mut self) -> Vec<i32> {
         let mut p = std::mem::take(&mut self.predicted_spare);
         p.clear();
@@ -473,35 +884,47 @@ impl PipelineCtl {
         self.predicted_spare = predicted;
     }
 
-    /// Take the block-slot scratch (cleared; round-trips through the
-    /// lane job and back via [`PipelineCtl::resolve`] /
-    /// [`PipelineCtl::park_slots`]).
-    pub fn take_slots(&mut self) -> Vec<BlockSlot> {
-        let mut s = std::mem::take(&mut self.slots_spare);
-        s.clear();
-        s
+    /// Take the chain-info scratch (cleared) for a launch.
+    pub fn take_infos(&mut self) -> Vec<ChainSlotInfo> {
+        let mut v = std::mem::take(&mut self.info_pool);
+        v.clear();
+        v
     }
 
-    /// Hand back the block-slot scratch after a hit adoption.
-    pub fn park_slots(&mut self, slots: Vec<BlockSlot>) {
-        self.slots_spare = slots;
+    /// Hand back chain-info scratch from an aborted launch attempt.
+    pub fn recycle_infos(&mut self, infos: Vec<ChainSlotInfo>) {
+        self.info_pool = infos;
     }
 
-    pub fn has_inflight(&self) -> bool {
-        self.inflight.is_some()
+    pub fn chain_alive(&self) -> bool {
+        self.chain.is_some()
     }
 
-    /// Predicted commit rows of the in-flight prefetch (barrier
-    /// compare; ragged spans addressed by the launching step's `p_off`).
-    pub fn inflight_predicted(&self) -> Option<&[i32]> {
-        self.inflight.as_ref().map(|inf| inf.predicted.as_slice())
+    /// Whether slot `i`, currently owned by request `id`, is still
+    /// chain-valid: every prediction for it since the launch held, and
+    /// the launch snapshot was taken against this same request.
+    pub fn chain_slot_ok(&self, i: usize, id: u64) -> bool {
+        self.chain
+            .as_ref()
+            .is_some_and(|c| c.valid[i] && c.ids[i] == id)
     }
 
-    /// The spare buffer generation (allocating on first use / after a
+    /// The staged prediction awaiting its barrier verdict: ragged rows,
+    /// the `p_off` prefix of the step they predict, and that step's
+    /// per-slot γ.
+    pub fn pending(&self) -> Option<(&[i32], &[usize], &[usize])> {
+        let c = self.chain.as_ref()?;
+        if !c.has_pending {
+            return None;
+        }
+        Some((&c.pred_rows, &c.pred_off, &c.pred_gammas))
+    }
+
+    /// A spare buffer generation (allocating on first use / after a
     /// lost generation). Dimensions are engine-constant, so a parked
     /// generation is reused verbatim.
     pub fn take_spare(&mut self, b: usize, s: usize, gmax: usize, v: usize) -> Box<StepBuffers> {
-        match self.spare.take() {
+        match self.spares.pop() {
             Some(bufs) => {
                 debug_assert_eq!(bufs.tokens.len(), b * s, "engine dims are constant");
                 debug_assert_eq!(bufs.zp.len(), b * (gmax + 1) * v);
@@ -511,193 +934,321 @@ impl PipelineCtl {
         }
     }
 
-    /// Park a buffer generation for the next prefetch.
+    /// Park a buffer generation for the next launch.
     pub fn park(&mut self, bufs: Box<StepBuffers>) {
-        self.spare = Some(bufs);
+        self.spares.push(bufs);
     }
 
-    /// Ship a speculative model block onto the dispatcher lane.
+    /// Take a block-slot scratch vector (cleared).
+    pub fn take_slots(&mut self) -> Vec<BlockSlot> {
+        let mut s = self.slot_pool.pop().unwrap_or_default();
+        s.clear();
+        s
+    }
+
+    /// Hand back block-slot scratch after adoption.
+    pub fn park_slots(&mut self, slots: Vec<BlockSlot>) {
+        self.slot_pool.push(slots);
+    }
+
+    /// Ship a chain job onto the dispatcher lane: block 1's assembled
+    /// inputs plus the per-slot snapshots that let the job extend the
+    /// window to `depth` blocks. `predicted` / `pred_off` /
+    /// `pred_gammas` describe the engine-side prediction of the
+    /// *launching* step's commit, which gates block 1.
     #[allow(clippy::too_many_arguments)]
     pub fn launch(
         &mut self,
         draft_step: Arc<LoadedExecutable>,
         target_score: Arc<LoadedExecutable>,
         profiler: Arc<Profiler>,
-        mut bufs: Box<StepBuffers>,
-        mut slots: Vec<BlockSlot>,
+        bufs: Box<StepBuffers>,
+        slots: Vec<BlockSlot>,
         dims: BlockDims,
+        infos: Vec<ChainSlotInfo>,
         predicted: Vec<i32>,
-        epoch: u64,
+        pred_off: &[usize],
+        pred_gammas: &[usize],
     ) {
-        debug_assert!(self.inflight.is_none(), "one prefetch in flight at a time");
+        debug_assert!(self.chain.is_none(), "one chain in flight at a time");
+        debug_assert!(self.draining.is_none(), "launch requires a drained lane");
+        let depth = self.depth;
         let cancel = Arc::new(AtomicBool::new(false));
         let cancel_job = cancel.clone();
-        let (tx, rx) = channel::<PrefetchResult>();
-        // traced launch γ = the block's largest per-slot γ (the number
-        // of draft calls the lane job will make)
+        let (tx, rx) = channel::<ChainMsg>();
+        let b = dims.b;
+        let mut ids = vec![0u64; b];
+        let mut valid = vec![false; b];
+        for (i, info) in infos.iter().enumerate() {
+            if info.active {
+                ids[i] = info.id;
+                valid[i] = true;
+            }
+        }
+        // spare generations + slot scratch for blocks 2..k
+        let mut gens: Vec<Box<StepBuffers>> = Vec::with_capacity(depth - 1);
+        for _ in 1..depth {
+            gens.push(self.take_spare(dims.b, dims.s, dims.gmax, dims.v));
+        }
+        let mut pool: Vec<Vec<BlockSlot>> = Vec::with_capacity(depth - 1);
+        for _ in 1..depth {
+            pool.push(self.slot_pool.pop().unwrap_or_default());
+        }
+        // traced launch γ = block 1's largest per-slot γ
         let gamma_max = slots.iter().map(|sl| sl.gamma).max().unwrap_or(0);
         self.lane.submit(Box::new(move || {
-            let outcome = run_model_block(
+            run_chain_job(
                 &draft_step,
                 &target_score,
                 &profiler,
-                &mut bufs,
-                &mut slots,
                 dims,
-                true,
-                Some(&cancel_job),
-            );
-            let _ = tx.send(PrefetchResult {
+                depth,
+                infos,
                 bufs,
                 slots,
-                outcome,
-            });
+                gens,
+                pool,
+                &cancel_job,
+                &tx,
+            );
         }));
-        self.inflight = Some(InFlight {
+        self.chain = Some(ChainState {
             rx,
             cancel,
-            epoch,
-            predicted,
-            resolved: None,
+            next_depth: 1,
+            ids,
+            valid,
+            pred_rows: predicted,
+            pred_off: pred_off.to_vec(),
+            pred_gammas: pred_gammas.to_vec(),
+            has_pending: true,
         });
-        self.launched += 1;
+        self.stats.chains += 1;
+        if self.trace.enabled() {
+            self.trace.record(TraceEvent::Pipeline(PipelineEv::Launch {
+                gamma: gamma_max as u32,
+                depth: depth as u32,
+            }));
+        }
+    }
+
+    /// Apply a barrier verdict to the live chain: AND the per-slot
+    /// verdicts into the cumulative validity, record the trace event
+    /// (depth = the block this prediction gates), and cascade-cancel
+    /// the chain when no slot remains salvageable. `full` = every
+    /// engine-active slot's verdict held.
+    pub fn apply_barrier(&mut self, verdicts: &[bool], full: bool) {
+        let Some(chain) = &mut self.chain else { return };
+        debug_assert!(chain.has_pending, "barrier without a staged prediction");
+        chain.has_pending = false;
+        for (vi, &v) in chain.valid.iter_mut().zip(verdicts) {
+            *vi = *vi && v;
+        }
+        let depth = chain.next_depth as u32;
+        if self.trace.enabled() {
+            self.trace.record(TraceEvent::Pipeline(if full {
+                PipelineEv::BarrierHit { depth }
+            } else {
+                PipelineEv::BarrierMiss {
+                    depth,
+                    slot_hits: chain.valid.clone(),
+                }
+            }));
+        }
+        if !chain.valid.iter().any(|&x| x) {
+            self.cancel_chain();
+        }
+    }
+
+    /// A mid-decode request cancellation freed slot `i`: its chain
+    /// predictions are void, but its batch neighbours' remain
+    /// salvageable — only when *no* slot is left does the chain cancel.
+    pub fn invalidate_slot(&mut self, i: usize) {
+        let Some(chain) = &mut self.chain else { return };
+        chain.valid[i] = false;
+        if !chain.valid.iter().any(|&x| x) {
+            self.cancel_chain();
+        }
+    }
+
+    /// Cascade-cancel: raise the job's cancel flag, count it, and move
+    /// the channel to the draining slot so remaining blocks are
+    /// reclaimed without ever blocking the serial redo.
+    fn cancel_chain(&mut self) {
+        let Some(chain) = self.chain.take() else { return };
+        chain.cancel.store(true, Ordering::Relaxed);
+        self.stats.cancelled += 1;
         if self.trace.enabled() {
             self.trace
-                .record(TraceEvent::Pipeline(PipelineEv::Launch {
-                    gamma: gamma_max as u32,
-                }));
+                .record(TraceEvent::Pipeline(PipelineEv::CancelInflight));
+        }
+        self.drain_now(chain.rx, chain.cancel);
+        self.predicted_spare = chain.pred_rows;
+    }
+
+    /// Receive the chain's next block at a step start. Blocks until the
+    /// lane hands it over — the wait is the tail of the overlap, and it
+    /// only happens when at least one slot is still valid (a fully
+    /// invalid chain was cascade-cancelled at the barrier). Returns
+    /// `None` when no chain is alive or the job ended early.
+    pub fn next_block(&mut self) -> Option<ChainBlock> {
+        let chain = self.chain.as_mut()?;
+        match chain.rx.recv() {
+            Ok(ChainMsg::Block(blk)) => {
+                debug_assert_eq!(blk.depth, chain.next_depth, "blocks arrive in depth order");
+                Some(blk)
+            }
+            Ok(ChainMsg::Done { gens, slots, infos }) => {
+                // early stop (cancel raced the window, or a model call
+                // failed): reclaim and fall back to serial
+                self.spares.extend(gens);
+                self.slot_pool.extend(slots);
+                self.info_pool = infos;
+                self.chain = None;
+                None
+            }
+            Err(_) => {
+                // job panicked: generations lost (reallocated on the
+                // next launch), lane itself survives
+                self.chain = None;
+                None
+            }
         }
     }
 
-    /// Record the barrier verdict for the in-flight prefetch (called by
-    /// the launching step's commit). A miss raises the cancel flag so
-    /// the job abandons remaining model calls.
-    pub fn note_outcome(&mut self, hit: bool) {
-        if let Some(inf) = &mut self.inflight {
-            inf.resolved = Some(hit);
-            if !hit {
-                inf.cancel.store(true, Ordering::Relaxed);
-            }
-            if self.trace.enabled() {
-                self.trace.record(TraceEvent::Pipeline(if hit {
-                    PipelineEv::BarrierHit
-                } else {
-                    PipelineEv::BarrierMiss
-                }));
-            }
+    /// Bookkeeping after the engine consumed a block: fold the salvage
+    /// outcome into the cumulative validity, account stats, record the
+    /// `Adopt` trace event, and stage the lane's prediction of this
+    /// step's commit (gating the next block). An empty prediction means
+    /// the chain ended at this block — the job's `Done` follows
+    /// immediately, so it is reclaimed with a (bounded) blocking recv
+    /// to keep the schedule deterministic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn note_consumed(
+        &mut self,
+        salv: &[bool],
+        full: bool,
+        rows_salvaged: u64,
+        rows_redone: u64,
+        pred_rows: Vec<i32>,
+        pred_off: &[usize],
+        block_slots: &[BlockSlot],
+    ) {
+        let n_salv = salv.iter().filter(|&&x| x).count() as u64;
+        let Some(chain) = &mut self.chain else { return };
+        let d = chain.next_depth;
+        self.stats.blocks += 1;
+        self.stats.slots_salvaged += n_salv;
+        self.stats.rows_salvaged += rows_salvaged;
+        self.stats.rows_redone += rows_redone;
+        let dstats = &mut self.stats.per_depth[d - 1];
+        dstats.consumed += 1;
+        dstats.slots_salvaged += n_salv;
+        if full {
+            self.stats.full_hits += 1;
+            dstats.full_hits += 1;
+        } else if n_salv > 0 {
+            self.stats.partial_hits += 1;
+        } else {
+            self.stats.misses += 1;
         }
-    }
-
-    /// Raise the cancel flag on any in-flight prefetch (slot-set
-    /// changes between steps; the epoch check would discard it anyway —
-    /// this just stops it burning model time).
-    pub fn cancel_inflight(&self) {
-        if let Some(inf) = &self.inflight {
-            inf.cancel.store(true, Ordering::Relaxed);
-            if self.trace.enabled() {
-                self.trace
-                    .record(TraceEvent::Pipeline(PipelineEv::CancelInflight));
-            }
+        if self.trace.enabled() {
+            self.trace.record(TraceEvent::Pipeline(PipelineEv::Adopt {
+                depth: d as u32,
+                salvaged: salv.to_vec(),
+            }));
         }
-    }
-
-    /// Barrier reclaim at the next step's start. For a recorded **hit**
-    /// with an unchanged slot set, blocks until the lane job hands its
-    /// buffers back (the step needs that block anyway — the wait *is*
-    /// the tail of the overlap) and returns them for adoption iff the
-    /// block completed cleanly. For a **miss** (or stale epoch, or
-    /// unresolved error path), raises the cancel flag and reclaims
-    /// **without blocking**: a still-running job parks in the draining
-    /// slot so the serial redo starts immediately — misses never wait
-    /// on the lane.
-    pub fn resolve(&mut self, current_epoch: u64) -> Option<(Box<StepBuffers>, Vec<BlockSlot>)> {
-        let inf = self.inflight.take()?;
-        let adopt = inf.resolved == Some(true) && inf.epoch == current_epoch;
-        if !adopt {
-            inf.cancel.store(true, Ordering::Relaxed);
-            // a barrier miss was already recorded at the verdict; this
-            // distinguishes the verdict-hit-but-stale-epoch discard
-            if inf.resolved != Some(false) && self.trace.enabled() {
-                self.trace.record(TraceEvent::Pipeline(PipelineEv::Discard));
-            }
-            self.stash_draining(inf);
-            return None;
+        for (vi, &sv) in chain.valid.iter_mut().zip(salv) {
+            *vi = *vi && sv;
         }
-        let InFlight { rx, predicted, .. } = inf;
-        self.predicted_spare = predicted;
-        match rx.recv() {
-            Ok(r) => {
-                if matches!(r.outcome, Ok(true)) {
-                    // counted at the adoption point (not the verdict),
-                    // so a verdict-hit discarded by a slot-set change
-                    // between steps never inflates the hit rate
-                    self.hits += 1;
-                    Some((r.bufs, r.slots))
-                } else {
-                    // model error / cancelled: the serial redo will
-                    // resurface any real failure
-                    self.spare = Some(r.bufs);
-                    self.slots_spare = r.slots;
-                    None
+        if pred_rows.is_empty() {
+            // window exhausted at this block: the job sent `Done` right
+            // after it — reclaim now (deterministic, near-zero wait)
+            let chain = self.chain.take().expect("checked above");
+            loop {
+                match chain.rx.recv() {
+                    Ok(ChainMsg::Done { gens, slots, infos }) => {
+                        self.spares.extend(gens);
+                        self.slot_pool.extend(slots);
+                        self.info_pool = infos;
+                        break;
+                    }
+                    Ok(ChainMsg::Block(blk)) => {
+                        // defensive: a deeper block raced the early stop
+                        self.spares.push(blk.bufs);
+                        self.slot_pool.push(blk.slots);
+                    }
+                    Err(_) => break,
                 }
             }
-            // the job panicked: the lane survives, this generation's
-            // buffers are lost (reallocated on the next launch)
-            Err(_) => None,
+        } else {
+            chain.pred_rows = pred_rows;
+            chain.pred_off.clear();
+            chain.pred_off.extend_from_slice(pred_off);
+            chain.pred_gammas.clear();
+            chain
+                .pred_gammas
+                .extend(block_slots.iter().map(|sl| sl.gamma));
+            chain.has_pending = true;
+            chain.next_depth += 1;
         }
     }
 
-    /// Move a discarded in-flight prefetch to the draining slot,
-    /// reclaiming its buffers right away when the job already finished.
-    fn stash_draining(&mut self, inf: InFlight) {
-        debug_assert!(self.draining.is_none(), "at most one draining prefetch");
-        match inf.rx.try_recv() {
-            Ok(r) => {
-                self.predicted_spare = inf.predicted;
-                self.spare = Some(r.bufs);
-                self.slots_spare = r.slots;
-            }
-            Err(std::sync::mpsc::TryRecvError::Empty) => self.draining = Some(inf),
-            // job panicked: buffers lost, scratch still reclaimable
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                self.predicted_spare = inf.predicted;
+    /// Count an engine-active slot-step that was redone serially while
+    /// a chain block was at hand (the per-slot complement of
+    /// `slots_salvaged`, accumulated by the engine at consumption).
+    pub fn note_slots_redone(&mut self, depth: usize, n: u64) {
+        self.stats.slots_redone += n;
+        if depth >= 1 && depth <= self.stats.per_depth.len() {
+            self.stats.per_depth[depth - 1].slots_redone += n;
+        }
+    }
+
+    /// Move a finished-or-cancelled chain's channel to the draining
+    /// slot, reclaiming immediately when the job already sent `Done`.
+    fn drain_now(&mut self, rx: Receiver<ChainMsg>, cancel: Arc<AtomicBool>) {
+        loop {
+            match rx.try_recv() {
+                Ok(ChainMsg::Block(blk)) => {
+                    self.spares.push(blk.bufs);
+                    self.slot_pool.push(blk.slots);
+                }
+                Ok(ChainMsg::Done { gens, slots, infos }) => {
+                    self.spares.extend(gens);
+                    self.slot_pool.extend(slots);
+                    self.info_pool = infos;
+                    return;
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    self.draining = Some((rx, cancel));
+                    return;
+                }
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
             }
         }
     }
 
-    /// Reclaim the draining prefetch's buffers if its job has finished;
+    /// Reclaim the draining chain's buffers if its job has finished;
     /// returns whether the lane is free for a new launch (a launch
     /// while the old job still runs would queue behind it and tie up
-    /// both buffer generations, so the caller skips that step instead).
+    /// the buffer generations, so the caller skips that step instead).
     pub fn lane_free(&mut self) -> bool {
-        let Some(d) = self.draining.take() else {
+        let Some((rx, cancel)) = self.draining.take() else {
             return true;
         };
-        match d.rx.try_recv() {
-            Ok(r) => {
-                self.predicted_spare = d.predicted;
-                self.spare = Some(r.bufs);
-                self.slots_spare = r.slots;
-                true
-            }
-            Err(std::sync::mpsc::TryRecvError::Empty) => {
-                self.draining = Some(d);
-                false
-            }
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                self.predicted_spare = d.predicted;
-                true
-            }
-        }
+        self.drain_now(rx, cancel);
+        self.draining.is_none()
     }
 }
 
 impl std::fmt::Debug for PipelineCtl {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("PipelineCtl")
-            .field("inflight", &self.inflight.is_some())
-            .field("launched", &self.launched)
-            .field("hits", &self.hits)
+            .field("depth", &self.depth)
+            .field("chain", &self.chain.is_some())
+            .field("chains", &self.stats.chains)
+            .field("blocks", &self.stats.blocks)
+            .field("full_hits", &self.stats.full_hits)
             .finish()
     }
 }
@@ -732,8 +1283,8 @@ mod tests {
     }
 
     #[test]
-    fn ctl_spare_ping_pongs_and_reallocates_when_lost() {
-        let mut ctl = PipelineCtl::new();
+    fn ctl_spares_round_trip_and_reallocate_when_lost() {
+        let mut ctl = PipelineCtl::new(2);
         let a = ctl.take_spare(1, 8, 2, 4);
         let ptr = a.tokens.as_ptr();
         ctl.park(a);
@@ -746,11 +1297,42 @@ mod tests {
     }
 
     #[test]
-    fn resolve_without_inflight_is_none() {
-        let mut ctl = PipelineCtl::new();
-        assert!(ctl.resolve(0).is_none());
-        ctl.note_outcome(true); // no-op without an in-flight prefetch
-        assert!(!ctl.has_inflight());
+    fn ctl_without_chain_is_inert() {
+        let mut ctl = PipelineCtl::new(3);
+        assert_eq!(ctl.depth(), 3);
+        assert!(ctl.next_block().is_none());
+        assert!(ctl.pending().is_none());
+        assert!(!ctl.chain_alive());
+        assert!(!ctl.chain_slot_ok(0, 7));
+        ctl.apply_barrier(&[true, false], false); // no-op without a chain
+        ctl.invalidate_slot(0);
         assert!(ctl.lane_free(), "nothing draining on a fresh ctl");
+        assert_eq!(ctl.stats, PipelineStats {
+            per_depth: vec![DepthStats::default(); 3],
+            ..PipelineStats::default()
+        });
+    }
+
+    #[test]
+    fn plan_gamma_snaps_caps_and_clamps() {
+        let avail = [1usize, 2, 4, 8];
+        let ctl = GammaController::new(5, 1, 8);
+        // controller wants 5, snapped down to 4
+        assert_eq!(plan_gamma(&avail, &ctl, 100, None), 4);
+        // non-pinned cap 3 → snapped to 2
+        assert_eq!(plan_gamma(&avail, &ctl, 100, Some(3)), 2);
+        // headroom 3 → effective 2
+        assert_eq!(plan_gamma(&avail, &ctl, 3, None), 2);
+        // nothing small enough → smallest artifact
+        assert_eq!(snap_gamma(&[4, 8], 2), 4);
+    }
+
+    #[test]
+    fn effective_hit_rate_counts_partial_adoptions() {
+        let mut st = PipelineStats::default();
+        assert_eq!(st.effective_hit_rate(), 0.0);
+        st.slots_salvaged = 3;
+        st.slots_redone = 1;
+        assert!((st.effective_hit_rate() - 0.75).abs() < 1e-12);
     }
 }

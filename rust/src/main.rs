@@ -93,7 +93,10 @@ fn help_text() -> &'static str {
      common options: --method baseline|exact|sigmoid, --backend hlo|native|sim,\n\
      --pair base|large, --batch N, --alpha/--beta, --n <examples>, --seed,\n\
      --pipeline on|off|auto (overlap next-step model dispatch with CPU\n\
-     verification; auto = on for --backend native; bit-identical outputs);\n\
+     verification; auto = on for --backend native; bit-identical outputs),\n\
+     --pipeline-depth K (speculation window: prefetched step blocks in\n\
+     flight, 1-8; partial barrier hits adopt per slot — --no-salvage\n\
+     reverts to the all-or-nothing barrier);\n\
      --backend sim runs the artifact-free simulated model pair (native\n\
      verification, synthetic tokenizer — no `make artifacts` needed), and\n\
      SPECD_SIM=1 does the same for subcommands without the flag;\n\
@@ -136,6 +139,15 @@ fn engine_opts(cmd: Command) -> Command {
             "pipeline",
             "auto",
             "pipelined decode scheduler (on|off|auto; auto = native backend only)",
+        )
+        .opt(
+            "pipeline-depth",
+            "2",
+            "speculation-window depth k: prefetched step blocks in flight (1-8)",
+        )
+        .flag(
+            "no-salvage",
+            "all-or-nothing commit barrier (disable per-slot partial-hit adoption)",
         )
         .opt("seed", "0", "rng seed")
 }
@@ -192,6 +204,8 @@ fn build_engine(p: &specd::util::cli::Parsed, mode: Mode) -> Result<(Engine, Tok
         self_draft: p.flag("self-draft"),
         pipeline: PipelineMode::parse(p.str("pipeline"))
             .ok_or_else(|| anyhow!("bad --pipeline (want on|off|auto)"))?,
+        pipeline_depth: p.usize("pipeline-depth").map_err(|e| anyhow!(e))?,
+        pipeline_salvage: !p.flag("no-salvage"),
         seed: p.u64("seed").map_err(|e| anyhow!(e))?,
     };
     Ok((Engine::new(runtime, config)?, tokenizer))
@@ -223,6 +237,8 @@ fn build_sim_engine(p: &specd::util::cli::Parsed, mode: Mode) -> Result<(Engine,
         self_draft: false,
         pipeline: PipelineMode::parse(p.str("pipeline"))
             .ok_or_else(|| anyhow!("bad --pipeline (want on|off|auto)"))?,
+        pipeline_depth: p.usize("pipeline-depth").map_err(|e| anyhow!(e))?,
+        pipeline_salvage: !p.flag("no-salvage"),
         seed: p.u64("seed").map_err(|e| anyhow!(e))?,
     };
     Ok((Engine::new(runtime, config)?, tokenizer))
@@ -500,6 +516,8 @@ fn trace_case(p: &specd::util::cli::Parsed) -> Result<specd::trace::fuzz::FuzzCa
             "off" => PipelineMode::Off,
             other => bail!("bad --pipeline {other:?} (want on|off)"),
         },
+        pipeline_depth: p.usize("pipeline-depth").map_err(|e| anyhow!(e))?,
+        pipeline_salvage: !p.flag("no-salvage"),
         gmax: p.usize("gmax").map_err(|e| anyhow!(e))?,
         pin_gammas: parse_gammas(p.str("gammas"))?,
         cancels: parse_cancels(p.str("cancel-at"))?,
@@ -566,6 +584,8 @@ fn trace_record(rest: &[String]) -> Result<()> {
     )
     .flag("mixed-methods", "sprinkle per-request method overrides")
     .opt("pipeline", "on", "pipelined decode scheduler (on|off)")
+    .opt("pipeline-depth", "2", "speculation-window depth k (1-8)")
+    .flag("no-salvage", "all-or-nothing barrier (disable partial-hit adoption)")
     .opt("cancel-at", "", "mid-decode cancels, \"step:id[,step:id]\"");
     let p = cmd.parse(rest).map_err(|e| anyhow!(e))?;
     let case = trace_case(&p)?;
@@ -598,14 +618,17 @@ fn trace_check(rest: &[String]) -> Result<()> {
     let report = specd::trace::check(&trace).map_err(|e| anyhow!("trace unreplayable: {e}"))?;
     println!(
         "replayed {} steps / {} events: {} requests, {} cancels, {} tokens, \
-         {} pipeline events, {} verify dispatches",
+         {} pipeline events, {} verify dispatches, {} adopted blocks \
+         ({} slot-rows salvaged)",
         report.steps,
         report.events,
         report.requests,
         report.cancels,
         report.tokens,
         report.pipeline_events,
-        report.verify_events
+        report.verify_events,
+        report.pipeline_adopts,
+        report.pipeline_salvaged
     );
     match report.divergence {
         None => {
@@ -713,8 +736,14 @@ fn trace_fuzz(rest: &[String]) -> Result<()> {
         bail!("trace fuzz FAILED (seed {seed}): {f}");
     }
     println!(
-        "trace fuzz: {} cases clean ({} steps, {} tokens, {} pipeline events)",
-        report.cases, report.steps, report.tokens, report.pipeline_events
+        "trace fuzz: {} cases clean ({} steps, {} tokens, {} pipeline events, \
+         {} adopted blocks, {} slot-rows salvaged)",
+        report.cases,
+        report.steps,
+        report.tokens,
+        report.pipeline_events,
+        report.pipeline_adopts,
+        report.pipeline_salvaged
     );
     Ok(())
 }

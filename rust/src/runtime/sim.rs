@@ -206,6 +206,15 @@ impl SimExec {
             return;
         }
         let t0 = Instant::now();
+        // Hybrid wait: sleep off the bulk of long delays (with a ~100µs
+        // guard for scheduler wakeup slop), then spin the remainder so
+        // the simulated step time stays accurate to a few µs without
+        // burning a core for the whole delay. Matters once a depth-k
+        // pipeline keeps several simulated forward passes in flight.
+        const SLEEP_GUARD: Duration = Duration::from_micros(100);
+        if self.spec.model_delay >= Duration::from_micros(150) {
+            std::thread::sleep(self.spec.model_delay - SLEEP_GUARD);
+        }
         while t0.elapsed() < self.spec.model_delay {
             std::hint::spin_loop();
         }

@@ -37,7 +37,11 @@
 //! request's admission-queue wait), `queue_depth` (queue length at
 //! completion), `latency_percentiles_ms` and
 //! `queue_wait_percentiles_ms` (p50/p90/p95/p99 over every request
-//! finished so far).
+//! finished so far). When the engine decodes with the pipelined
+//! scheduler it also carries a `pipeline` block: speculation-window
+//! `depth`, chain/block counters, `full_hits`/`partial_hits`, the
+//! per-slot `slots_salvaged`/`slots_redone` totals and the resulting
+//! `effective_hit_rate`.
 //!
 //! `params` keys map 1:1 onto [`SamplingParams`] (absent keys take the
 //! shared defaults). v2 parsing is strict: unknown envelope or params
@@ -65,7 +69,7 @@
 //! mapped onto [`SamplingParams::default`] and answered with the
 //! original single response line — unchanged for old clients.
 
-use crate::engine::{FinishReason, GenResult, SamplingParams};
+use crate::engine::{FinishReason, GenResult, PipelineStats, SamplingParams};
 use crate::sampling::Method;
 use crate::util::json::{self, obj, Value};
 
@@ -531,15 +535,37 @@ fn percentiles_ms(s: &crate::util::stats::Summary) -> Value {
     ])
 }
 
+/// The engine-wide pipelined-scheduler block attached to v2 `done`
+/// events when the engine runs with the pipeline on: speculation-window
+/// depth, chain/block counters, full and partial barrier hits, and the
+/// per-slot salvage totals behind `effective_hit_rate`.
+fn pipeline_block(p: &PipelineStats) -> Value {
+    obj(vec![
+        ("depth", p.per_depth.len().into()),
+        ("chains", (p.chains as i64).into()),
+        ("blocks", (p.blocks as i64).into()),
+        ("full_hits", (p.full_hits as i64).into()),
+        ("partial_hits", (p.partial_hits as i64).into()),
+        ("slots_salvaged", (p.slots_salvaged as i64).into()),
+        ("slots_redone", (p.slots_redone as i64).into()),
+        ("effective_hit_rate", Value::Num(p.effective_hit_rate())),
+    ])
+}
+
 /// v2 final summary event.
 pub fn render_done(resp: &WireResponse) -> String {
-    render_done_with(resp, None)
+    render_done_with(resp, None, None)
 }
 
 /// v2 final summary event, optionally carrying the serve loop's SLO
 /// block (queue wait + queue depth for this request, latency and
-/// queue-wait percentiles over every request finished so far).
-pub fn render_done_with(resp: &WireResponse, slo: Option<&SloStats>) -> String {
+/// queue-wait percentiles over every request finished so far) and the
+/// engine-wide pipelined-scheduler counters ([`pipeline_block`]).
+pub fn render_done_with(
+    resp: &WireResponse,
+    slo: Option<&SloStats>,
+    pipeline: Option<&PipelineStats>,
+) -> String {
     let mut fields = vec![("v", 2i64.into()), ("event", "done".into())];
     fields.extend(summary_fields(resp));
     if let Some(s) = slo {
@@ -547,6 +573,9 @@ pub fn render_done_with(resp: &WireResponse, slo: Option<&SloStats>) -> String {
         fields.push(("queue_depth", s.queue_depth.into()));
         fields.push(("latency_percentiles_ms", percentiles_ms(&s.latency)));
         fields.push(("queue_wait_percentiles_ms", percentiles_ms(&s.queue)));
+    }
+    if let Some(p) = pipeline {
+        fields.push(("pipeline", pipeline_block(p)));
     }
     obj(fields).dump()
 }
@@ -937,7 +966,7 @@ mod tests {
             latency: latency.summary(),
             queue: queue.summary(),
         };
-        let line = render_done_with(&sample_response(), Some(&slo));
+        let line = render_done_with(&sample_response(), Some(&slo), None);
         let v = json::parse(&line).unwrap();
         assert!((v.get("queue_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
         assert_eq!(v.get("queue_depth").unwrap().as_usize(), Some(7));
@@ -952,6 +981,35 @@ mod tests {
         let plain = render_done(&sample_response());
         assert!(!plain.contains("latency_percentiles"));
         assert!(!plain.contains("queue_ms"));
+    }
+
+    #[test]
+    fn done_event_carries_pipeline_block() {
+        let stats = PipelineStats {
+            chains: 4,
+            blocks: 9,
+            full_hits: 6,
+            partial_hits: 2,
+            misses: 1,
+            slots_salvaged: 15,
+            slots_redone: 5,
+            per_depth: vec![Default::default(); 2],
+            ..PipelineStats::default()
+        };
+        let line = render_done_with(&sample_response(), None, Some(&stats));
+        let v = json::parse(&line).unwrap();
+        let p = v.get("pipeline").expect("pipeline block");
+        assert_eq!(p.get("depth").unwrap().as_usize(), Some(2));
+        assert_eq!(p.get("chains").unwrap().as_i64(), Some(4));
+        assert_eq!(p.get("full_hits").unwrap().as_i64(), Some(6));
+        assert_eq!(p.get("partial_hits").unwrap().as_i64(), Some(2));
+        assert_eq!(p.get("slots_salvaged").unwrap().as_i64(), Some(15));
+        assert_eq!(p.get("slots_redone").unwrap().as_i64(), Some(5));
+        let eff = p.get("effective_hit_rate").unwrap().as_f64().unwrap();
+        assert!((eff - 0.75).abs() < 1e-9);
+        // a serial engine renders no pipeline block
+        let plain = render_done_with(&sample_response(), None, None);
+        assert!(!plain.contains("\"pipeline\""));
     }
 
     #[test]

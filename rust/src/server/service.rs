@@ -424,7 +424,12 @@ fn engine_loop(
                         let line = if q.job.v1 {
                             render_response(&resp)
                         } else {
-                            render_done_with(&resp, Some(&slo.stats(wait, queue.len())))
+                            let pstats = engine.pipeline_stats();
+                            render_done_with(
+                                &resp,
+                                Some(&slo.stats(wait, queue.len())),
+                                pstats.as_ref(),
+                            )
                         };
                         send_line(&q.job.stream, &line);
                         crate::debug!("cancelled queued request {wire_id}");
@@ -523,6 +528,9 @@ fn flush_results(
     slo: &mut SloSeries,
     queue_depth: usize,
 ) {
+    // engine-wide scheduler counters, snapshotted once per drain (the
+    // pipeline block every done event of this flush carries)
+    let pstats = engine.pipeline_stats();
     for result in engine.take_results() {
         if let Some(f) = inflight.remove(&result.id) {
             slo.latency.push(result.latency);
@@ -537,7 +545,11 @@ fn flush_results(
             } else {
                 // percentiles over every request finished so far,
                 // including this one (so the first done already has n=1)
-                render_done_with(&resp, Some(&slo.stats(f.queue_wait, queue_depth)))
+                render_done_with(
+                    &resp,
+                    Some(&slo.stats(f.queue_wait, queue_depth)),
+                    pstats.as_ref(),
+                )
             };
             send_line(&f.stream, &line);
         }

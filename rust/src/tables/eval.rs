@@ -94,6 +94,8 @@ pub fn run_method(
         gamma_pinned,
         self_draft: false,
         pipeline: PipelineMode::Auto,
+        pipeline_depth: 2,
+        pipeline_salvage: true,
         seed: ctx.seed,
     };
     let mut engine = Engine::new(ctx.runtime.clone(), config)?;

@@ -10,12 +10,21 @@
 //! recorded run (serial *or* pipelined) was bit-identical to the
 //! oracle.
 //!
-//! Traces are ragged (format v2): every recorded slot carries its own
+//! Traces are ragged (format v2+): every recorded slot carries its own
 //! γ, so replay rebuilds the step's γ-prefix tables exactly as the
 //! engine does and addresses draft/logit rows through them. A slot's
 //! uniforms depend only on its own RNG stream and its own γ, which is
 //! what lets the per-slot scalar oracle stand in for the batched
 //! ragged kernel.
+//!
+//! Pipelined recordings (format v3) additionally carry the scheduler's
+//! chain bookkeeping — launch / barrier / adopt events with per-slot
+//! validity and salvage flags. The checker replays a [`ChainModel`]
+//! alongside the oracle and re-derives every per-slot verdict: a
+//! recorded barrier hit or salvage flag the oracle refutes is a
+//! divergence (the scheduler adopted a row the serial engine would
+//! have recomputed differently), while a conservatively dropped slot
+//! (salvage disabled, cascade cancel) is accepted.
 //!
 //! What is recorded vs re-derived:
 //!
@@ -44,7 +53,7 @@ use crate::sampling::{self, verify};
 use crate::tokenizer;
 use crate::util::rng::Pcg32;
 
-use super::format::{digest_f32, finish_name, SlotStep, Trace, TraceEvent};
+use super::format::{digest_f32, finish_name, PipelineEv, SlotStep, Trace, TraceEvent};
 
 /// First point where the trace and the oracle replay disagree.
 #[derive(Debug, Clone, PartialEq)]
@@ -87,8 +96,12 @@ pub struct CheckReport {
     pub cancels: usize,
     /// committed tokens verified
     pub tokens: usize,
-    /// pipeline scheduler events seen (launch/hit/miss/discard/cancel)
+    /// pipeline scheduler events seen (launch/hit/miss/adopt/cancel)
     pub pipeline_events: usize,
+    /// prefetched blocks adopted (fully or partially) at a step start
+    pub pipeline_adopts: usize,
+    /// slot-rows salvaged across all adopt events (partial-hit wins)
+    pub pipeline_salvaged: usize,
     /// verifier dispatch markers seen
     pub verify_events: usize,
     pub divergence: Option<Divergence>,
@@ -120,6 +133,36 @@ struct ReplaySlot {
 
 fn finish_str(f: Option<FinishReason>) -> &'static str {
     f.map(finish_name).unwrap_or("-")
+}
+
+/// Replay-side model of the in-flight speculation chain. The scheduler
+/// records which slots it believed salvageable ([`PipelineEv`] events);
+/// the checker re-derives the same per-slot verdicts from the oracle
+/// replay and refuses a trace whose scheduler adopted a row the serial
+/// engine would have recomputed differently.
+struct ChainModel {
+    /// request id per slot at launch (0 = slot was empty)
+    ids: Vec<u64>,
+    /// cumulative per-slot validity — false once any barrier missed
+    /// for the slot (or the slot was empty at launch)
+    valid: Vec<bool>,
+    /// 1-based depth of the next block to adopt / barrier to judge
+    next_depth: u32,
+    /// configured window k recorded at launch
+    window: u32,
+}
+
+/// A barrier event stashed until its step arrives: barrier events are
+/// recorded after verification but *before* the step event, so the
+/// oracle outcome they must be judged against is the next `Step` in
+/// the stream.
+struct PendingBarrier {
+    /// `None` = recorded full hit; `Some` = recorded per-slot survivors
+    slot_hits: Option<Vec<bool>>,
+    depth: u32,
+    /// chain validity / ids snapshot when the barrier fired
+    valid: Vec<bool>,
+    ids: Vec<u64>,
 }
 
 /// Replay `trace` against the scalar oracle. `Err` means the trace is
@@ -182,6 +225,8 @@ pub fn check(trace: &Trace) -> Result<CheckReport, String> {
     let mut slots: Vec<Option<ReplaySlot>> = (0..b).map(|_| None).collect();
     let mut report = CheckReport::default();
     let mut last_verify_rows: Option<u32> = None;
+    let mut chain: Option<ChainModel> = None;
+    let mut barrier: Option<PendingBarrier> = None;
 
     for ev in &trace.events {
         report.events += 1;
@@ -266,7 +311,138 @@ pub fn check(trace: &Trace) -> Result<CheckReport, String> {
                 }
                 // queue-side cancels never reached a slot: nothing to do
             }
-            TraceEvent::Pipeline(_) => report.pipeline_events += 1,
+            TraceEvent::Pipeline(p) => {
+                report.pipeline_events += 1;
+                match p {
+                    PipelineEv::Launch { depth, .. } => {
+                        if *depth != h.pipeline_depth {
+                            return Err(format!(
+                                "pipeline launch records window depth {depth} but the \
+                                 header says {}",
+                                h.pipeline_depth
+                            ));
+                        }
+                        // v2 traces launch a fresh single-block chain every
+                        // step with no adopt events, so a live model here is
+                        // legitimate and simply replaced
+                        chain = Some(ChainModel {
+                            ids: slots
+                                .iter()
+                                .map(|sl| sl.as_ref().map_or(0, |sl| sl.id))
+                                .collect(),
+                            valid: slots.iter().map(Option::is_some).collect(),
+                            next_depth: 1,
+                            window: *depth,
+                        });
+                    }
+                    PipelineEv::BarrierHit { depth }
+                    | PipelineEv::BarrierMiss { depth, .. } => {
+                        let Some(c) = &chain else {
+                            return Err(format!(
+                                "step {}: barrier event with no chain in flight",
+                                report.steps + 1
+                            ));
+                        };
+                        if barrier.is_some() {
+                            return Err(format!(
+                                "step {}: two barrier events before the step",
+                                report.steps + 1
+                            ));
+                        }
+                        if *depth != c.next_depth {
+                            return Err(format!(
+                                "step {}: barrier at depth {depth} but the chain \
+                                 gates block {}",
+                                report.steps + 1,
+                                c.next_depth
+                            ));
+                        }
+                        let slot_hits = match p {
+                            PipelineEv::BarrierMiss { slot_hits, .. } => {
+                                if slot_hits.is_empty() {
+                                    // v2 misses carry no per-slot vector: the
+                                    // whole window was discarded
+                                    Some(vec![false; b])
+                                } else if slot_hits.len() != b {
+                                    return Err(format!(
+                                        "step {}: barrier miss carries {} slot \
+                                         flags for batch {b}",
+                                        report.steps + 1,
+                                        slot_hits.len()
+                                    ));
+                                } else {
+                                    Some(slot_hits.clone())
+                                }
+                            }
+                            _ => None,
+                        };
+                        barrier = Some(PendingBarrier {
+                            slot_hits,
+                            depth: *depth,
+                            valid: c.valid.clone(),
+                            ids: c.ids.clone(),
+                        });
+                    }
+                    PipelineEv::Adopt { depth, salvaged } => {
+                        let Some(c) = &mut chain else {
+                            return Err(format!(
+                                "step {}: adopt event with no chain in flight",
+                                report.steps + 1
+                            ));
+                        };
+                        if *depth != c.next_depth {
+                            return Err(format!(
+                                "step {}: adopt of block depth {depth} but the \
+                                 chain is at block {}",
+                                report.steps + 1,
+                                c.next_depth
+                            ));
+                        }
+                        if salvaged.len() != b {
+                            return Err(format!(
+                                "step {}: adopt carries {} slot flags for batch {b}",
+                                report.steps + 1,
+                                salvaged.len()
+                            ));
+                        }
+                        for (i, &sv) in salvaged.iter().enumerate() {
+                            // a slot's prefetched rows are salvageable iff
+                            // every barrier so far held for it and the same
+                            // request still occupies it
+                            let expect = c.valid[i]
+                                && slots[i].as_ref().is_some_and(|sl| sl.id == c.ids[i]);
+                            if sv != expect {
+                                report.divergence = Some(Divergence {
+                                    step: report.steps + 1,
+                                    slot: i as u32,
+                                    id: if c.ids[i] != 0 {
+                                        c.ids[i]
+                                    } else {
+                                        slots[i].as_ref().map_or(0, |sl| sl.id)
+                                    },
+                                    field: "salvaged",
+                                    detail: format!(
+                                        "adopt at depth {depth} records {sv}, oracle \
+                                         chain replay expects {expect}"
+                                    ),
+                                });
+                                return Ok(report);
+                            }
+                        }
+                        report.pipeline_adopts += 1;
+                        report.pipeline_salvaged +=
+                            salvaged.iter().filter(|&&x| x).count();
+                        for (v, &sv) in c.valid.iter_mut().zip(salvaged) {
+                            *v = *v && sv;
+                        }
+                        c.next_depth += 1;
+                        if c.next_depth > c.window {
+                            chain = None;
+                        }
+                    }
+                    PipelineEv::Discard | PipelineEv::CancelInflight => chain = None,
+                }
+            }
             TraceEvent::Verify { rows, .. } => {
                 report.verify_events += 1;
                 last_verify_rows = Some(*rows);
@@ -292,6 +468,77 @@ pub fn check(trace: &Trace) -> Result<CheckReport, String> {
                 if let Some(d) = diverged {
                     report.divergence = Some(d);
                     return Ok(report);
+                }
+                if let Some(pb) = barrier.take() {
+                    // judge the stashed barrier against the step the oracle
+                    // just replayed: a slot's prediction held iff the chain
+                    // still tracked it, the same request occupied it, and
+                    // every draft row was accepted (full acceptance is what
+                    // makes the predicted bonus token exact)
+                    let mut expected = vec![false; b];
+                    let mut active = vec![false; b];
+                    for ts in &step.slots {
+                        let i = ts.slot as usize;
+                        active[i] = true;
+                        expected[i] = pb.valid[i]
+                            && pb.ids[i] == ts.id
+                            && ts.accept_len == ts.gamma;
+                    }
+                    match &pb.slot_hits {
+                        None => {
+                            // recorded full hit: every engine-active slot
+                            // must have proven out
+                            for ts in &step.slots {
+                                if !expected[ts.slot as usize] {
+                                    report.divergence = Some(div(
+                                        report.steps,
+                                        ts,
+                                        "barrier",
+                                        format!(
+                                            "recorded a full hit at depth {}, oracle \
+                                             replay shows this slot missed",
+                                            pb.depth
+                                        ),
+                                    ));
+                                    return Ok(report);
+                                }
+                            }
+                        }
+                        Some(hits) => {
+                            // one-sided: a recorded hit the oracle refutes
+                            // means the scheduler adopted a wrong row; a
+                            // recorded miss where the oracle would have hit
+                            // is merely conservative (the all-or-nothing
+                            // collapse with salvage disabled)
+                            for (i, &hit) in hits.iter().enumerate() {
+                                if hit && !(active[i] && expected[i]) {
+                                    report.divergence = Some(Divergence {
+                                        step: report.steps,
+                                        slot: i as u32,
+                                        id: pb.ids[i],
+                                        field: "slot_hits",
+                                        detail: format!(
+                                            "barrier miss at depth {} keeps slot \
+                                             {i}, oracle replay refutes the \
+                                             prediction",
+                                            pb.depth
+                                        ),
+                                    });
+                                    return Ok(report);
+                                }
+                            }
+                        }
+                    }
+                    if let Some(c) = &mut chain {
+                        // mirror the engine: the barrier ANDs the verdict
+                        // into the cumulative validity (recorded misses are
+                        // authoritative — the scheduler may conservatively
+                        // drop more than the oracle requires)
+                        let verdict = pb.slot_hits.as_deref().unwrap_or(&expected);
+                        for (i, v) in c.valid.iter_mut().enumerate() {
+                            *v = *v && verdict[i] && active[i];
+                        }
+                    }
                 }
             }
         }

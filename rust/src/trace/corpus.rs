@@ -2,8 +2,9 @@
 //!
 //! A fixed registry of named [`FuzzCase`]s spanning the feature matrix
 //! — mixed methods, ragged γ with mid-flight refill, pipelined on/off,
-//! mid-decode cancels, the fp16-overflow sigmoid τ — each with a
-//! recording committed at `rust/tests/corpus/<name>.sptr`. For every
+//! depth-3 windows with per-slot partial adoption, mid-decode cancels,
+//! the fp16-overflow sigmoid τ — each with a recording committed at
+//! `rust/tests/corpus/<name>.sptr`. For every
 //! entry the gate does two independent checks:
 //!
 //! 1. **oracle replay** — [`super::check`] re-executes the *committed*
@@ -117,6 +118,19 @@ pub fn entries() -> Vec<CorpusEntry> {
                 n_reqs: 4,
                 method: Method::sigmoid16(-1e5, 1e5),
                 seed: 12,
+                ..FuzzCase::default()
+            },
+        },
+        CorpusEntry {
+            name: "partial_adoption_depth3",
+            what: "depth-3 window at low agreement: per-slot salvage, cascade cancels, churn",
+            case: FuzzCase {
+                batch: 3,
+                n_reqs: 5,
+                agreement: 0.7,
+                pipeline_depth: 3,
+                mixed_methods: true,
+                seed: 17,
                 ..FuzzCase::default()
             },
         },

@@ -29,6 +29,14 @@
 //! `gamma` (the step event has no shared γ), admit events record
 //! whether the admission was a mid-flight `refill`, and the verify
 //! marker counts ragged `rows` (Σ γᵢ) instead of a γ.
+//! **v3** — depth-k pipeline window with per-slot partial-hit
+//! adoption: the header records the configured `pipeline_depth`,
+//! launch/barrier events carry the window depth, barrier misses carry
+//! the surviving per-slot validity, and a new `adopt` event records
+//! which slots salvaged rows from each consumed prefetched block. v2
+//! traces still load: their pipeline events map onto the v3 shapes at
+//! depth 1 (the loader normalizes the header version in memory, so a
+//! re-save round-trips as v3).
 
 use std::path::Path;
 
@@ -40,7 +48,11 @@ use crate::util::json::{self, obj, Value};
 pub const TRACE_MAGIC: [u8; 4] = *b"SPTR";
 /// Current trace format version (see module docs for the bump rule and
 /// version history).
-pub const TRACE_VERSION: u32 = 2;
+pub const TRACE_VERSION: u32 = 3;
+
+/// Oldest trace version the loader still accepts (older versions are
+/// mapped onto the current event shapes at load time).
+pub const TRACE_VERSION_MIN: u32 = 2;
 
 /// FNV-1a over the raw bit patterns of an f32 slice, mixed 8 bytes at a
 /// time. One shared digest for recorder and checker — the exact hash is
@@ -137,6 +149,9 @@ pub struct TraceHeader {
     pub mode: String,
     /// pipeline mode name (`on` / `off` / `auto`)
     pub pipeline: String,
+    /// configured speculation-window depth k (1 = single-block
+    /// prefetch; v2 traces load as depth 1)
+    pub pipeline_depth: u32,
     pub gamma_init: u32,
     pub gamma_pinned: bool,
     pub self_draft: bool,
@@ -212,21 +227,33 @@ pub struct StepEvent {
     pub slots: Vec<SlotStep>,
 }
 
-/// Pipelined-scheduler events — informational for replay (the trace is
-/// schedule-independent by construction) but exactly what you want
-/// when diagnosing a divergence that only appears pipelined.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Pipelined-scheduler events. The checker replays the chain model
+/// against them ([`super::checker`]): `depth` is the 1-based window
+/// position, and the per-slot boolean vectors are validated against
+/// the oracle's own accept/commit replay — a flipped salvage flag in
+/// either direction is a divergence, so the scheduler cannot silently
+/// adopt a row the serial engine would have recomputed differently.
+#[derive(Debug, Clone, PartialEq)]
 pub enum PipelineEv {
-    /// prefetch launched for the predicted next step (`gamma` = the
-    /// deepest per-slot γ planned for the prefetched block)
-    Launch { gamma: u32 },
-    /// barrier proved the all-accept prediction right; block adopted
-    BarrierHit,
-    /// prediction wrong; prefetched block discarded at the barrier
-    BarrierMiss,
+    /// chain launched onto the dispatcher lane (`gamma` = the largest
+    /// per-slot γ of block 1, `depth` = the configured window k)
+    Launch { gamma: u32, depth: u32 },
+    /// barrier proved the prediction gating block `depth` right for
+    /// every active slot
+    BarrierHit { depth: u32 },
+    /// prediction gating block `depth` missed for at least one slot;
+    /// `slot_hits` = per-slot chain validity surviving the barrier
+    /// (cumulative — a slot false here stays false for the rest of the
+    /// chain). Empty in traces loaded from v2 (all-or-nothing barrier).
+    BarrierMiss { depth: u32, slot_hits: Vec<bool> },
+    /// a prefetched block of depth `depth` was consumed at a step
+    /// start; `salvaged` = which slots adopted its rows (the rest were
+    /// redone serially)
+    Adopt { depth: u32, salvaged: Vec<bool> },
     /// prefetched block invalidated by slot-set change before adoption
+    /// (v2 traces only — v3 folds this into per-slot validity)
     Discard,
-    /// in-flight dispatch cancelled (slot cancel / engine drop)
+    /// in-flight chain cancelled (every slot invalid / engine drop)
     CancelInflight,
 }
 
@@ -291,6 +318,12 @@ impl Enc {
         self.u32(xs.len() as u32);
         for x in xs {
             self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn vec_bool(&mut self, xs: &[bool]) {
+        self.u32(xs.len() as u32);
+        for x in xs {
+            self.u8(*x as u8);
         }
     }
     fn method(&mut self, m: &Method) {
@@ -371,6 +404,10 @@ impl<'a> Dec<'a> {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+    fn vec_bool(&mut self) -> DecResult<Vec<bool>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.iter().map(|b| *b != 0).collect())
     }
     fn method(&mut self) -> DecResult<Method> {
         let kind = self.u8()?;
@@ -490,6 +527,7 @@ pub fn encode_prelude(h: &TraceHeader) -> Vec<u8> {
     e.str(&h.backend);
     e.str(&h.mode);
     e.str(&h.pipeline);
+    e.u32(h.pipeline_depth);
     e.u32(h.gamma_init);
     e.bool(h.gamma_pinned);
     e.bool(h.self_draft);
@@ -571,14 +609,27 @@ pub fn encode_event(ev: &TraceEvent) -> Vec<u8> {
         }
         TraceEvent::Pipeline(p) => {
             match p {
-                PipelineEv::Launch { gamma } => {
+                PipelineEv::Launch { gamma, depth } => {
                     e.u8(0);
                     e.u32(*gamma);
+                    e.u32(*depth);
                 }
-                PipelineEv::BarrierHit => e.u8(1),
-                PipelineEv::BarrierMiss => e.u8(2),
+                PipelineEv::BarrierHit { depth } => {
+                    e.u8(1);
+                    e.u32(*depth);
+                }
+                PipelineEv::BarrierMiss { depth, slot_hits } => {
+                    e.u8(2);
+                    e.u32(*depth);
+                    e.vec_bool(slot_hits);
+                }
                 PipelineEv::Discard => e.u8(3),
                 PipelineEv::CancelInflight => e.u8(4),
+                PipelineEv::Adopt { depth, salvaged } => {
+                    e.u8(5);
+                    e.u32(*depth);
+                    e.vec_bool(salvaged);
+                }
             }
             TAG_PIPELINE
         }
@@ -602,9 +653,11 @@ pub fn to_binary(t: &Trace) -> Vec<u8> {
     out
 }
 
-fn decode_header(d: &mut Dec, version: u32) -> DecResult<TraceHeader> {
+fn decode_header(d: &mut Dec, wire_version: u32) -> DecResult<TraceHeader> {
     Ok(TraceHeader {
-        version,
+        // normalized: a v2 trace loads as the current version (depth 1)
+        // so a re-save round-trips as a valid current-format trace
+        version: TRACE_VERSION,
         pair: d.str()?,
         batch: d.u32()?,
         seq_len: d.u32()?,
@@ -615,6 +668,7 @@ fn decode_header(d: &mut Dec, version: u32) -> DecResult<TraceHeader> {
         backend: d.str()?,
         mode: d.str()?,
         pipeline: d.str()?,
+        pipeline_depth: if wire_version >= 3 { d.u32()? } else { 1 },
         gamma_init: d.u32()?,
         gamma_pinned: d.bool()?,
         self_draft: d.bool()?,
@@ -629,7 +683,7 @@ fn decode_header(d: &mut Dec, version: u32) -> DecResult<TraceHeader> {
     })
 }
 
-fn decode_event(tag: u8, payload: &[u8]) -> DecResult<TraceEvent> {
+fn decode_event(tag: u8, payload: &[u8], wire_version: u32) -> DecResult<TraceEvent> {
     let mut d = Dec::new(payload);
     let ev = match tag {
         TAG_ADMIT => TraceEvent::Admit(AdmitEvent {
@@ -688,13 +742,33 @@ fn decode_event(tag: u8, payload: &[u8]) -> DecResult<TraceEvent> {
             id: d.u64()?,
             slot: if d.u8()? == 0 { None } else { Some(d.u32()?) },
         },
-        TAG_PIPELINE => TraceEvent::Pipeline(match d.u8()? {
-            0 => PipelineEv::Launch { gamma: d.u32()? },
-            1 => PipelineEv::BarrierHit,
-            2 => PipelineEv::BarrierMiss,
-            3 => PipelineEv::Discard,
-            4 => PipelineEv::CancelInflight,
-            k => return Err(format!("unknown pipeline event kind {k}")),
+        TAG_PIPELINE => TraceEvent::Pipeline(match (d.u8()?, wire_version) {
+            // v2 wire shapes: single-block window, all-or-nothing barrier
+            (0, 2) => PipelineEv::Launch {
+                gamma: d.u32()?,
+                depth: 1,
+            },
+            (1, 2) => PipelineEv::BarrierHit { depth: 1 },
+            (2, 2) => PipelineEv::BarrierMiss {
+                depth: 1,
+                slot_hits: Vec::new(),
+            },
+            (0, _) => PipelineEv::Launch {
+                gamma: d.u32()?,
+                depth: d.u32()?,
+            },
+            (1, _) => PipelineEv::BarrierHit { depth: d.u32()? },
+            (2, _) => PipelineEv::BarrierMiss {
+                depth: d.u32()?,
+                slot_hits: d.vec_bool()?,
+            },
+            (3, _) => PipelineEv::Discard,
+            (4, _) => PipelineEv::CancelInflight,
+            (5, v) if v >= 3 => PipelineEv::Adopt {
+                depth: d.u32()?,
+                salvaged: d.vec_bool()?,
+            },
+            (k, _) => return Err(format!("unknown pipeline event kind {k}")),
         }),
         TAG_VERIFY => TraceEvent::Verify {
             rows: d.u32()?,
@@ -716,9 +790,10 @@ pub fn from_binary(bytes: &[u8]) -> DecResult<Trace> {
         return Err("not a specd binary trace (bad magic)".into());
     }
     let version = d.u32()?;
-    if version != TRACE_VERSION {
+    if !(TRACE_VERSION_MIN..=TRACE_VERSION).contains(&version) {
         return Err(format!(
-            "trace version {version} not supported (checker knows version {TRACE_VERSION})"
+            "trace version {version} not supported (checker knows versions \
+             {TRACE_VERSION_MIN}..={TRACE_VERSION})"
         ));
     }
     let tag = d.u8()?;
@@ -733,7 +808,7 @@ pub fn from_binary(bytes: &[u8]) -> DecResult<Trace> {
         let tag = d.u8()?;
         let len = d.u32()? as usize;
         let payload = d.take(len)?;
-        events.push(decode_event(tag, payload)?);
+        events.push(decode_event(tag, payload, version)?);
     }
     Ok(Trace { header, events })
 }
@@ -844,6 +919,7 @@ fn header_json(h: &TraceHeader) -> Value {
         ("backend", Value::Str(h.backend.clone())),
         ("mode", Value::Str(h.mode.clone())),
         ("pipeline", Value::Str(h.pipeline.clone())),
+        ("pipeline_depth", num(h.pipeline_depth as f64)),
         ("gamma_init", num(h.gamma_init as f64)),
         ("gamma_pinned", Value::Bool(h.gamma_pinned)),
         ("self_draft", Value::Bool(h.self_draft)),
@@ -865,13 +941,14 @@ fn header_from_json(v: &Value) -> DecResult<TraceHeader> {
         return Err("trace json: not a specd trace".into());
     }
     let version = get_u32(v, "version")?;
-    if version != TRACE_VERSION {
+    if !(TRACE_VERSION_MIN..=TRACE_VERSION).contains(&version) {
         return Err(format!(
-            "trace version {version} not supported (checker knows version {TRACE_VERSION})"
+            "trace version {version} not supported (checker knows versions \
+             {TRACE_VERSION_MIN}..={TRACE_VERSION})"
         ));
     }
     Ok(TraceHeader {
-        version,
+        version: TRACE_VERSION,
         pair: get_str(v, "pair")?.to_string(),
         batch: get_u32(v, "batch")?,
         seq_len: get_u32(v, "seq_len")?,
@@ -882,6 +959,11 @@ fn header_from_json(v: &Value) -> DecResult<TraceHeader> {
         backend: get_str(v, "backend")?.to_string(),
         mode: get_str(v, "mode")?.to_string(),
         pipeline: get_str(v, "pipeline")?.to_string(),
+        pipeline_depth: if version >= 3 {
+            get_u32(v, "pipeline_depth")?
+        } else {
+            1
+        },
         gamma_init: get_u32(v, "gamma_init")?,
         gamma_pinned: get_bool(v, "gamma_pinned")?,
         self_draft: get_bool(v, "self_draft")?,
@@ -972,13 +1054,27 @@ fn event_json(ev: &TraceEvent) -> Value {
         ]),
         TraceEvent::Pipeline(p) => {
             let mut fields = vec![("ev", Value::Str("pipeline".into()))];
+            let bools = |xs: &[bool]| Value::Arr(xs.iter().map(|b| Value::Bool(*b)).collect());
             let kind = match p {
-                PipelineEv::Launch { gamma } => {
+                PipelineEv::Launch { gamma, depth } => {
                     fields.push(("gamma", num(*gamma as f64)));
+                    fields.push(("depth", num(*depth as f64)));
                     "launch"
                 }
-                PipelineEv::BarrierHit => "hit",
-                PipelineEv::BarrierMiss => "miss",
+                PipelineEv::BarrierHit { depth } => {
+                    fields.push(("depth", num(*depth as f64)));
+                    "hit"
+                }
+                PipelineEv::BarrierMiss { depth, slot_hits } => {
+                    fields.push(("depth", num(*depth as f64)));
+                    fields.push(("slot_hits", bools(slot_hits)));
+                    "miss"
+                }
+                PipelineEv::Adopt { depth, salvaged } => {
+                    fields.push(("depth", num(*depth as f64)));
+                    fields.push(("salvaged", bools(salvaged)));
+                    "adopt"
+                }
                 PipelineEv::Discard => "discard",
                 PipelineEv::CancelInflight => "cancel_inflight",
             };
@@ -1066,16 +1162,46 @@ fn event_from_json(v: &Value) -> DecResult<TraceEvent> {
                 s => Some(s.as_i64().ok_or("trace json: slot not a number")? as u32),
             },
         },
-        "pipeline" => TraceEvent::Pipeline(match get_str(v, "kind")? {
-            "launch" => PipelineEv::Launch {
-                gamma: get_u32(v, "gamma")?,
-            },
-            "hit" => PipelineEv::BarrierHit,
-            "miss" => PipelineEv::BarrierMiss,
-            "discard" => PipelineEv::Discard,
-            "cancel_inflight" => PipelineEv::CancelInflight,
-            k => return Err(format!("trace json: unknown pipeline kind {k:?}")),
-        }),
+        "pipeline" => {
+            // v2 JSON events carry no depth / per-slot fields: default
+            // to the single-block window they were recorded under
+            let depth = match v.get("depth") {
+                None => 1,
+                Some(d) => d.as_i64().ok_or("trace json: depth not a number")? as u32,
+            };
+            let bools = |key: &str| -> DecResult<Vec<bool>> {
+                match v.get(key) {
+                    None => Ok(Vec::new()),
+                    Some(arr) => arr
+                        .as_arr()
+                        .ok_or_else(|| format!("trace json: {key} not an array"))?
+                        .iter()
+                        .map(|b| {
+                            b.as_bool()
+                                .ok_or_else(|| format!("trace json: {key} holds a non-bool"))
+                        })
+                        .collect(),
+                }
+            };
+            TraceEvent::Pipeline(match get_str(v, "kind")? {
+                "launch" => PipelineEv::Launch {
+                    gamma: get_u32(v, "gamma")?,
+                    depth,
+                },
+                "hit" => PipelineEv::BarrierHit { depth },
+                "miss" => PipelineEv::BarrierMiss {
+                    depth,
+                    slot_hits: bools("slot_hits")?,
+                },
+                "adopt" => PipelineEv::Adopt {
+                    depth,
+                    salvaged: bools("salvaged")?,
+                },
+                "discard" => PipelineEv::Discard,
+                "cancel_inflight" => PipelineEv::CancelInflight,
+                k => return Err(format!("trace json: unknown pipeline kind {k:?}")),
+            })
+        }
         "verify" => TraceEvent::Verify {
             rows: get_u32(v, "rows")?,
             groups: get_u32(v, "groups")?,
@@ -1255,6 +1381,7 @@ mod tests {
                 backend: "native".into(),
                 mode: "speculative".into(),
                 pipeline: "on".into(),
+                pipeline_depth: 2,
                 gamma_init: 4,
                 gamma_pinned: false,
                 self_draft: false,
@@ -1283,7 +1410,7 @@ mod tests {
                     rng_inc: 15,
                     refill: true,
                 }),
-                TraceEvent::Pipeline(PipelineEv::Launch { gamma: 4 }),
+                TraceEvent::Pipeline(PipelineEv::Launch { gamma: 4, depth: 2 }),
                 TraceEvent::Step(StepEvent {
                     slots: vec![
                         SlotStep {
@@ -1321,7 +1448,14 @@ mod tests {
                         },
                     ],
                 }),
-                TraceEvent::Pipeline(PipelineEv::BarrierMiss),
+                TraceEvent::Pipeline(PipelineEv::Adopt {
+                    depth: 1,
+                    salvaged: vec![true, false],
+                }),
+                TraceEvent::Pipeline(PipelineEv::BarrierMiss {
+                    depth: 2,
+                    slot_hits: vec![true, false],
+                }),
                 TraceEvent::Verify { rows: 6, groups: 2 },
                 TraceEvent::Cancel { id: 9, slot: None },
                 TraceEvent::Cancel {
@@ -1374,6 +1508,64 @@ mod tests {
         bytes[4] = 99;
         let err = from_binary(&bytes).unwrap_err();
         assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn v2_binary_trace_still_loads() {
+        // hand-encode a v2 prelude + pipeline events in the v2 wire
+        // shapes and prove the loader maps them onto the v3 event
+        // model at depth 1 with a normalized header
+        let t = sample_trace();
+        let mut e = Enc::default();
+        e.str(&t.header.pair);
+        e.u32(t.header.batch);
+        e.u32(t.header.seq_len);
+        e.u32(t.header.vocab);
+        e.u32(t.header.gmax);
+        e.u64(t.header.engine_seed);
+        e.method(&t.header.method);
+        e.str(&t.header.backend);
+        e.str(&t.header.mode);
+        e.str(&t.header.pipeline);
+        // v2: no pipeline_depth field
+        e.u32(t.header.gamma_init);
+        e.bool(t.header.gamma_pinned);
+        e.bool(t.header.self_draft);
+        let sim = t.header.sim.as_ref().unwrap();
+        e.u8(1);
+        e.u64(sim.seed);
+        e.f32(sim.agreement);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&TRACE_MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        frame(&mut bytes, TAG_HEADER, &e.buf);
+        // v2 pipeline frames: launch (γ only), hit, miss — no payloads
+        let mut p = Enc::default();
+        p.u8(0);
+        p.u32(4);
+        frame(&mut bytes, TAG_PIPELINE, &p.buf);
+        frame(&mut bytes, TAG_PIPELINE, &[1]);
+        frame(&mut bytes, TAG_PIPELINE, &[2]);
+        frame(&mut bytes, TAG_PIPELINE, &[3]);
+
+        let back = from_binary(&bytes).unwrap();
+        assert_eq!(back.header.version, TRACE_VERSION, "header normalized");
+        assert_eq!(back.header.pipeline_depth, 1);
+        assert_eq!(
+            back.events,
+            vec![
+                TraceEvent::Pipeline(PipelineEv::Launch { gamma: 4, depth: 1 }),
+                TraceEvent::Pipeline(PipelineEv::BarrierHit { depth: 1 }),
+                TraceEvent::Pipeline(PipelineEv::BarrierMiss {
+                    depth: 1,
+                    slot_hits: vec![],
+                }),
+                TraceEvent::Pipeline(PipelineEv::Discard),
+            ]
+        );
+        // a normalized v2 trace re-saves as a valid current trace
+        let resaved = to_binary(&back);
+        assert_eq!(from_binary(&resaved).unwrap(), back);
     }
 
     #[test]

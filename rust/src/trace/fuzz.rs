@@ -66,6 +66,11 @@ pub struct FuzzCase {
     /// random per-request params
     pub pin_gammas: Vec<usize>,
     pub pipeline: PipelineMode,
+    /// speculation-window depth k (1 = single-block prefetch)
+    pub pipeline_depth: usize,
+    /// per-slot partial-hit adoption at the commit barrier (false =
+    /// all-or-nothing windows)
+    pub pipeline_salvage: bool,
     /// `(after step k, request id)` mid-decode cancellations
     pub cancels: Vec<(usize, u64)>,
     /// derivation seed for per-request params/stops
@@ -88,6 +93,8 @@ impl Default for FuzzCase {
             gmax: 6,
             pin_gammas: Vec::new(),
             pipeline: PipelineMode::On,
+            pipeline_depth: 2,
+            pipeline_salvage: true,
             cancels: Vec::new(),
             seed: 1,
         }
@@ -123,6 +130,8 @@ impl FuzzCase {
                 gamma_pinned: false,
                 self_draft: false,
                 pipeline: self.pipeline,
+                pipeline_depth: self.pipeline_depth,
+                pipeline_salvage: self.pipeline_salvage,
                 seed: self.engine_seed,
             },
         )
@@ -235,6 +244,10 @@ pub fn derive_case(run_seed: u64, idx: u64) -> FuzzCase {
             _ => Vec::new(),
         },
         pipeline: PipelineMode::On,
+        pipeline_depth: 1 + rng.below(3) as usize,
+        // mostly partial adoption (the new default); keep a tail of
+        // all-or-nothing windows so the legacy barrier stays fuzzed
+        pipeline_salvage: rng.below(10) != 0,
         cancels: match rng.below(3) {
             0 => Vec::new(),
             1 => vec![(2, 0)],
@@ -251,6 +264,10 @@ pub struct FuzzReport {
     pub steps: usize,
     pub tokens: usize,
     pub pipeline_events: usize,
+    /// prefetched blocks adopted across all cases
+    pub pipeline_adopts: usize,
+    /// slot-rows salvaged across all cases (partial-hit wins)
+    pub pipeline_salvaged: usize,
     /// description of the first failing case, if any
     pub failure: Option<String>,
 }
@@ -267,14 +284,16 @@ impl FuzzReport {
 pub fn case_label(run_seed: u64, idx: u64) -> String {
     let case = derive_case(run_seed, idx);
     format!(
-        "case {idx}: b={} v={} agree={} method={} mixed={} reqs={} cancels={}",
+        "case {idx}: b={} v={} agree={} method={} mixed={} reqs={} cancels={} k={} salvage={}",
         case.batch,
         case.vocab,
         case.agreement,
         case.method.name(),
         case.mixed_methods,
         case.n_reqs,
-        case.cancels.len()
+        case.cancels.len(),
+        case.pipeline_depth,
+        case.pipeline_salvage
     )
 }
 
@@ -307,6 +326,8 @@ pub fn fuzz(n_cases: usize, run_seed: u64, mut log: impl FnMut(String)) -> Resul
                 report.steps += cr.steps;
                 report.tokens += cr.tokens;
                 report.pipeline_events += cr.pipeline_events;
+                report.pipeline_adopts += cr.pipeline_adopts;
+                report.pipeline_salvaged += cr.pipeline_salvaged;
             }
             Ok(cr) => {
                 let d = cr.divergence.expect("not ok");

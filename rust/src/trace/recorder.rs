@@ -149,6 +149,7 @@ mod tests {
             backend: "native".into(),
             mode: "speculative".into(),
             pipeline: "off".into(),
+            pipeline_depth: 1,
             gamma_init: 2,
             gamma_pinned: false,
             self_draft: false,
@@ -159,9 +160,12 @@ mod tests {
     #[test]
     fn buffered_records_and_gates() {
         let r = TraceRecorder::buffered(header());
-        r.record(TraceEvent::Pipeline(PipelineEv::BarrierHit));
+        r.record(TraceEvent::Pipeline(PipelineEv::BarrierHit { depth: 1 }));
         r.set_enabled(false);
-        r.record(TraceEvent::Pipeline(PipelineEv::BarrierMiss));
+        r.record(TraceEvent::Pipeline(PipelineEv::BarrierMiss {
+            depth: 1,
+            slot_hits: vec![false],
+        }));
         r.set_enabled(true);
         r.record(TraceEvent::Cancel { id: 3, slot: None });
         let t = r.snapshot();
@@ -175,7 +179,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.bin");
         let r = TraceRecorder::to_file(header(), &path).unwrap();
-        r.record(TraceEvent::Pipeline(PipelineEv::Launch { gamma: 3 }));
+        r.record(TraceEvent::Pipeline(PipelineEv::Launch { gamma: 3, depth: 2 }));
         r.record(TraceEvent::Cancel { id: 9, slot: Some(0) });
         drop(r);
         let t = format::load(&path).unwrap();

@@ -151,6 +151,8 @@ impl ServeFuzzCase {
                 gamma_pinned: false,
                 self_draft: false,
                 pipeline: PipelineMode::On,
+                pipeline_depth: 2,
+                pipeline_salvage: true,
                 seed: self.engine_seed,
             },
         )

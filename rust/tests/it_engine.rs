@@ -37,6 +37,8 @@ fn config(method: Method, backend: Backend) -> EngineConfig {
         gamma_pinned: false,
         self_draft: false,
         pipeline: specd::engine::PipelineMode::Auto,
+        pipeline_depth: 2,
+        pipeline_salvage: true,
         seed: 7,
     }
 }

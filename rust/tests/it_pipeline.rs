@@ -1,16 +1,20 @@
-//! Pipelined-vs-serial parity: the PR 5 acceptance criterion.
+//! Pipelined-vs-serial parity: the PR 5 acceptance criterion,
+//! widened by PR 10 to the depth-k speculation window.
 //!
-//! The pipelined decode scheduler overlaps step N+1's model dispatch
-//! with step N's CPU verification by *speculating* on the commit —
-//! which is only admissible because its observable outputs are
-//! **bit-identical** to the serial loop for any seed. These tests
-//! assert exactly that, over the simulated model pair
+//! The pipelined decode scheduler overlaps future model dispatches
+//! with the current step's CPU verification by *speculating* on
+//! commits — up to `pipeline_depth` blocks ahead, salvaging per-slot
+//! rows on partial barrier hits — which is only admissible because
+//! its observable outputs are **bit-identical** to the serial loop
+//! for any seed, window depth, and salvage mode. These tests assert
+//! exactly that, over the simulated model pair
 //! ([`Runtime::simulated`], no artifacts needed): committed tokens,
 //! finish reasons, per-request step/draft/accept counters, the
 //! per-step streaming delta sequence, and the engine-level stats —
 //! across verification methods × seeds × batch sizes × draft/target
-//! agreement levels, with stop sequences, per-request overrides, and
-//! mid-decode cancellation in the mix.
+//! agreement levels × k ∈ {1,2,3} × salvage on/off, with stop
+//! sequences, ragged γ pins, per-request overrides, and mid-decode
+//! cancellation in the mix.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -50,6 +54,20 @@ fn engine_gamma(
     gamma_init: usize,
     gamma_pinned: bool,
 ) -> Engine {
+    engine_full(spec, batch, method, pipeline, gamma_init, gamma_pinned, 2, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn engine_full(
+    spec: &SimSpec,
+    batch: usize,
+    method: Method,
+    pipeline: PipelineMode,
+    gamma_init: usize,
+    gamma_pinned: bool,
+    pipeline_depth: usize,
+    pipeline_salvage: bool,
+) -> Engine {
     let rt = Arc::new(Runtime::simulated(spec.clone()));
     Engine::new(
         rt,
@@ -63,10 +81,24 @@ fn engine_gamma(
             gamma_pinned,
             self_draft: false,
             pipeline,
+            pipeline_depth,
+            pipeline_salvage,
             seed: 11,
         },
     )
     .expect("sim engine")
+}
+
+/// Engine with an explicit speculation-window depth / salvage policy.
+fn engine_depth(
+    spec: &SimSpec,
+    batch: usize,
+    method: Method,
+    pipeline: PipelineMode,
+    depth: usize,
+    salvage: bool,
+) -> Engine {
+    engine_full(spec, batch, method, pipeline, 4, false, depth, salvage)
 }
 
 /// Everything observable about one decode run: per-request results,
@@ -221,9 +253,10 @@ fn pipelined_engine_actually_pipelines() {
     let mut e = engine(&spec, 2, Method::Exact, PipelineMode::On);
     let results = e.generate(base_reqs(4, 24, 500)).unwrap();
     assert_eq!(results.len(), 4);
-    let (launched, hits) = e.pipeline_stats().expect("pipeline enabled");
-    assert!(launched > 0, "no prefetch was ever launched");
-    assert!(hits > 0, "no prefetch ever hit at 0.99 agreement");
+    let stats = e.pipeline_stats().expect("pipeline enabled");
+    assert!(stats.chains > 0, "no chain was ever launched");
+    assert!(stats.full_hits > 0, "no prefetch ever fully hit at 0.99 agreement");
+    assert!(stats.blocks > 0, "no prefetched block was ever consumed");
     // and the serial engine reports no pipeline stats
     let off = engine(&spec, 2, Method::Exact, PipelineMode::Off);
     assert!(off.pipeline_stats().is_none());
@@ -493,4 +526,116 @@ fn deterministic_across_repeat_runs() {
         )
     };
     assert_eq!(run(), run());
+}
+
+#[test]
+fn depth_k_salvage_matrix_bit_identical_to_serial() {
+    // the PR 10 acceptance matrix: window depth k ∈ {1,2,3} × partial
+    // adoption on/off × ragged γ pins × mid-decode cancel + queue
+    // churn × methods — every cell bit-identical to the serial loop
+    let spec = sim_spec_g(64, 0.9, 8);
+    for method in [Method::Exact, Method::sigmoid16(-1e3, 1e3)] {
+        let reqs = || {
+            let mut rs = base_reqs(6, 14, 910);
+            for (k, r) in rs.iter_mut().enumerate() {
+                r.params = r.params.clone().pin_gamma([2usize, 5, 7][k % 3]);
+            }
+            rs[1].stop_ids = vec![vec![9, 4]];
+            rs
+        };
+        let run = |pipeline: PipelineMode, depth: usize, salvage: bool| {
+            let mut e = engine_depth(&spec, 3, method, pipeline, depth, salvage);
+            for r in reqs() {
+                e.submit(r);
+            }
+            let mut deltas = Vec::new();
+            let mut guard = 0;
+            let mut cancels = (false, false);
+            while e.active() > 0 || e.pending() > 0 {
+                e.step().expect("step");
+                deltas.push(e.take_deltas());
+                if guard == 2 {
+                    // one live slot, one queued request — outcomes are
+                    // part of the parity comparison
+                    cancels = (e.cancel(0), e.cancel(5));
+                }
+                guard += 1;
+                assert!(guard < 10_000, "decode did not terminate");
+            }
+            let mut results: Vec<_> = e
+                .take_results()
+                .into_iter()
+                .map(|r| (r.id, r.token_ids, format!("{:?}", r.finish)))
+                .collect();
+            results.sort_by_key(|r| r.0);
+            (results, deltas, cancels)
+        };
+        let serial = run(PipelineMode::Off, 1, true);
+        for depth in [1usize, 2, 3] {
+            for salvage in [true, false] {
+                assert_eq!(
+                    serial,
+                    run(PipelineMode::On, depth, salvage),
+                    "k={depth} salvage={salvage} method={} diverged",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_adoption_salvages_slots() {
+    // at moderate agreement a batch-3 barrier regularly splits — some
+    // slots full-accept while others miss. Partial adoption must
+    // actually salvage the surviving slots' rows (not silently fall
+    // back to all-or-nothing), and with salvage disabled a miss must
+    // never partially adopt.
+    let spec = sim_spec(64, 0.9);
+    let mut e = engine_depth(&spec, 3, Method::Exact, PipelineMode::On, 2, true);
+    let results = e.generate(base_reqs(6, 24, 330)).unwrap();
+    assert_eq!(results.len(), 6);
+    let stats = e.pipeline_stats().expect("pipeline enabled");
+    assert!(
+        stats.partial_hits > 0,
+        "no barrier ever partially hit: {stats:?}"
+    );
+    assert!(
+        stats.slots_salvaged > 0,
+        "no slot rows were ever salvaged: {stats:?}"
+    );
+    // salvage counts into the slot-level effective rate: with both
+    // salvaged and redone slots observed, the rate is strictly interior
+    let eff = stats.effective_hit_rate();
+    assert!(eff > 0.0 && eff < 1.0, "degenerate effective rate: {stats:?}");
+
+    let mut off = engine_depth(&spec, 3, Method::Exact, PipelineMode::On, 2, false);
+    off.generate(base_reqs(6, 24, 330)).unwrap();
+    let stats = off.pipeline_stats().expect("pipeline enabled");
+    assert_eq!(
+        stats.partial_hits, 0,
+        "salvage disabled must never partially adopt: {stats:?}"
+    );
+    assert_eq!(stats.slots_salvaged, 0, "{stats:?}");
+}
+
+#[test]
+fn deeper_windows_consume_multiple_blocks_per_chain() {
+    // at high agreement a depth-3 chain should regularly deliver all
+    // three blocks: the per-depth counters prove the ring actually
+    // runs past depth 1
+    let spec = sim_spec(64, 0.99);
+    let mut e = engine_depth(&spec, 2, Method::Exact, PipelineMode::On, 3, true);
+    e.generate(base_reqs(4, 28, 510)).unwrap();
+    let stats = e.pipeline_stats().expect("pipeline enabled");
+    assert_eq!(stats.per_depth.len(), 3);
+    assert!(
+        stats.per_depth[1].consumed > 0,
+        "no depth-2 block was ever consumed: {stats:?}"
+    );
+    assert!(
+        stats.per_depth[2].consumed > 0,
+        "no depth-3 block was ever consumed: {stats:?}"
+    );
+    assert!(stats.blocks >= stats.chains, "{stats:?}");
 }

@@ -37,6 +37,8 @@ fn start_server() -> Option<Arc<Server>> {
             gamma_pinned: false,
             self_draft: false,
             pipeline: specd::engine::PipelineMode::Auto,
+            pipeline_depth: 2,
+            pipeline_salvage: true,
             seed: 3,
         },
     )
@@ -92,6 +94,8 @@ fn start_sim_server_cfg(
             gamma_pinned: false,
             self_draft: false,
             pipeline: specd::engine::PipelineMode::On,
+            pipeline_depth: 2,
+            pipeline_salvage: true,
             seed: 13,
         },
     )
@@ -458,6 +462,14 @@ fn queued_request_cancel_removes_pending_entry() {
         }
     };
     assert_eq!(event(&done_a), "done", "{}", done_a.dump());
+    // the pipelined engine surfaces its scheduler counters on done
+    let p = done_a
+        .get("pipeline")
+        .unwrap_or_else(|| panic!("no pipeline block: {}", done_a.dump()));
+    assert!(p.get("depth").unwrap().as_usize().unwrap() >= 1);
+    assert!(p.get("slots_salvaged").is_some(), "{}", done_a.dump());
+    assert!(p.get("slots_redone").is_some(), "{}", done_a.dump());
+    assert!(p.get("effective_hit_rate").unwrap().as_f64().is_some());
 
     server.shutdown();
     accept_thread.join().unwrap();

@@ -94,7 +94,66 @@ fn pipelined_runs_replay_with_zero_divergence_across_batches() {
             "batch {batch}: pipelined run recorded no scheduler events"
         );
         assert!(report.verify_events > 0, "batch {batch}");
+        assert!(
+            report.pipeline_adopts > 0,
+            "batch {batch}: depth-2 run never adopted a prefetched block"
+        );
     }
+}
+
+#[test]
+fn flipped_adopt_salvage_flag_is_flagged_both_ways() {
+    // the checker replays the speculation chain alongside the oracle:
+    // an Adopt that claims a salvage the chain replay refutes — or
+    // drops a slot the replay proves was adoptable — is a divergence
+    // pinned to the `salvaged` field
+    use specd::trace::format::PipelineEv;
+    let trace = record(&busy_case(3));
+    let adopts: Vec<usize> = trace
+        .events
+        .iter()
+        .enumerate()
+        .filter_map(|(i, ev)| {
+            matches!(ev, TraceEvent::Pipeline(PipelineEv::Adopt { .. })).then_some(i)
+        })
+        .collect();
+    assert!(!adopts.is_empty(), "no Adopt events recorded");
+    let flip = |want: bool| -> Option<Trace> {
+        for &idx in &adopts {
+            if let TraceEvent::Pipeline(PipelineEv::Adopt { salvaged, .. }) = &trace.events[idx] {
+                if let Some(pos) = salvaged.iter().position(|&s| s == want) {
+                    let mut bad = trace.clone();
+                    if let TraceEvent::Pipeline(PipelineEv::Adopt { salvaged, .. }) =
+                        &mut bad.events[idx]
+                    {
+                        salvaged[pos] = !want;
+                    }
+                    return Some(bad);
+                }
+            }
+        }
+        None
+    };
+    let mut directions = 0;
+    // salvaged -> redone: the chain replay proves the slot was adoptable
+    if let Some(bad) = flip(true) {
+        let d = check(&bad)
+            .expect("replayable")
+            .divergence
+            .expect("dropped salvage missed");
+        assert_eq!(d.field, "salvaged", "{d}");
+        directions += 1;
+    }
+    // redone -> salvaged: a claimed salvage the chain replay refutes
+    if let Some(bad) = flip(false) {
+        let d = check(&bad)
+            .expect("replayable")
+            .divergence
+            .expect("fabricated salvage missed");
+        assert_eq!(d.field, "salvaged", "{d}");
+        directions += 1;
+    }
+    assert!(directions > 0, "trace had no flippable salvage flags");
 }
 
 #[test]
